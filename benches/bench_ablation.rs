@@ -1,0 +1,12 @@
+//! A1 bench: the cost-model ablation study (one mechanism off per row).
+use ipumm::arch::IpuArch;
+use ipumm::experiments::ablation;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("ablation").with_iters(1, 3);
+    let mut rows = None;
+    b.run("seven_configs", || rows = Some(black_box(ablation::run(&IpuArch::gc200()))));
+    println!("\n{}", ablation::to_table(&rows.unwrap()).to_ascii());
+    b.dump_csv();
+}

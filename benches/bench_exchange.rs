@@ -1,0 +1,26 @@
+//! Exchange-fabric micro-bench (perf target L3): plan build + pricing.
+use ipumm::arch::IpuArch;
+use ipumm::exchange::{ExchangeFabric, ExchangePlan};
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let arch = IpuArch::gc200();
+    let fabric = ExchangeFabric::new(&arch);
+    let mut b = Bench::new("exchange").with_iters(3, 20);
+
+    b.run("build_full_chip_scatter", || {
+        let tiles: Vec<usize> = (1..1472).collect();
+        black_box(ExchangePlan::scatter("s", 0, &tiles, 1024))
+    });
+    let tiles: Vec<usize> = (1..1472).collect();
+    let big = ExchangePlan::scatter("s", 0, &tiles, 1024);
+    b.run("price_full_chip_scatter", || black_box(fabric.cost(&big)));
+    b.run("validate_full_chip", || big.validate(1472).unwrap());
+
+    let mut pairwise = ExchangePlan::new("p", ipumm::exchange::ExchangePattern::AllToAll);
+    for i in 0..736 {
+        pairwise.add(i, 736 + i, 4096);
+    }
+    b.run("price_pairwise_736", || black_box(fabric.cost(&pairwise)));
+    b.dump_csv();
+}

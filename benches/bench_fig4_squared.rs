@@ -1,0 +1,22 @@
+//! F4 bench: regenerates Fig. 4 (squared MM, IPU vs GPU vs peaks) and
+//! times the full sweep.
+use ipumm::arch::{GpuArch, IpuArch};
+use ipumm::experiments::fig4;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig4_squared").with_iters(1, 5);
+    let mut last = None;
+    b.run("sweep_to_5120", || {
+        let r = fig4::run(&IpuArch::gc200(), &GpuArch::a30(), 5120, 4);
+        last = Some(black_box(r));
+    });
+    let r = last.unwrap();
+    b.throughput(r.ipu_best_tflops, "IPU TFlop/s (model)");
+    println!("\n{}", r.to_table().to_ascii());
+    println!(
+        "paper: IPU 44.2/62.5 at 3584 wall, GPU 9.7/10.3 -> ours: IPU {:.1}/{:.1} at {} wall, GPU {:.1}/{:.1}",
+        r.ipu_best_tflops, r.ipu_peak, r.ipu_max_square, r.gpu_best_tflops, r.gpu_peak
+    );
+    b.dump_csv();
+}

@@ -1,0 +1,29 @@
+//! F5 bench: regenerates Fig. 5 (skewed MM ladder, both devices, 3 k's).
+use ipumm::arch::{GpuArch, IpuArch};
+use ipumm::coordinator::device::Backend;
+use ipumm::experiments::fig5;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fig5_skewed").with_iters(1, 5);
+    let mut last = None;
+    b.run("ladder_3k", || {
+        let r = fig5::run(&IpuArch::gc200(), &GpuArch::a30(), 22, 4, &[1024, 2048, 4096], 4);
+        last = Some(black_box(r));
+    });
+    let r = last.unwrap();
+    println!("\n{}", r.to_table().to_ascii());
+    let ipu = Backend::IpuSim(IpuArch::gc200()).name();
+    let gpu = Backend::GpuModel(GpuArch::a30()).name();
+    for k in [1024usize, 2048, 4096] {
+        if let (Some((il, ir)), Some((gl, gr))) =
+            (fig5::drops(&r, &ipu, k, None), fig5::drops(&r, &gpu, k, None))
+        {
+            println!(
+                "k={k}: IPU drop L{:.0}%/R{:.0}% (asym, paper Fig.5 left) | GPU L{:.0}%/R{:.0}% (sym, right)",
+                il * 100.0, ir * 100.0, gl * 100.0, gr * 100.0
+            );
+        }
+    }
+    b.dump_csv();
+}

@@ -1,0 +1,12 @@
+//! X3 bench: FP16 extension sweep (AMP fp16.16 vs the paper's FP32).
+use ipumm::arch::IpuArch;
+use ipumm::experiments::fp16;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("fp16").with_iters(1, 3);
+    let mut r = None;
+    b.run("fp32_vs_fp16_sweep", || r = Some(black_box(fp16::run(&IpuArch::gc200(), &fp16::default_sizes()))));
+    println!("\n{}", fp16::to_table(&r.unwrap()).to_ascii());
+    b.dump_csv();
+}

@@ -1,0 +1,13 @@
+//! M1 bench: regenerates the §2.4 memory study (max squares + fractions).
+use ipumm::experiments::memory_study;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("memory").with_iters(1, 3);
+    let mut rows = None;
+    b.run("max_square_both_archs", || {
+        rows = Some(black_box(memory_study::run(&memory_study::default_archs())));
+    });
+    println!("\n{}", memory_study::to_table(&rows.unwrap()).to_ascii());
+    b.dump_csv();
+}

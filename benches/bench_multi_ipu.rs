@@ -1,0 +1,16 @@
+//! X2 bench: multi-IPU scaling table (§6 future work).
+use ipumm::arch::IpuArch;
+use ipumm::experiments::multi_ipu_x;
+use ipumm::planner::MmShape;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("multi_ipu").with_iters(1, 3);
+    let shape = MmShape::square(3584);
+    let mut rows = None;
+    b.run("pod_scaling_1_2_4", || {
+        rows = Some(black_box(multi_ipu_x::run(&IpuArch::gc200(), shape, &[1, 2, 4])));
+    });
+    println!("\n{}", multi_ipu_x::to_table(&rows.unwrap(), shape).to_ascii());
+    b.dump_csv();
+}

@@ -1,0 +1,23 @@
+//! Planner micro-bench (perf target L3): plan-search latency per shape
+//! class. The search runs inside every simulated job, so its latency
+//! bounds sweep throughput.
+use ipumm::arch::IpuArch;
+use ipumm::planner::{search, MmShape};
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let arch = IpuArch::gc200();
+    let mut b = Bench::new("planner").with_iters(2, 15);
+    for (name, shape) in [
+        ("squared_1024", MmShape::square(1024)),
+        ("squared_3584", MmShape::square(3584)),
+        ("left_skew", MmShape::new(16384, 512, 2048)),
+        ("right_skew", MmShape::new(512, 16384, 2048)),
+        ("oom_probe_6144", MmShape::square(6144)),
+    ] {
+        b.run(name, || black_box(search(&arch, shape).map(|p| p.cost.total_cycles)));
+    }
+    let evals = search(&arch, MmShape::square(3584)).unwrap().candidates_evaluated;
+    b.throughput(evals as f64, "candidates/search");
+    b.dump_csv();
+}

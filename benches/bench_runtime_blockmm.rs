@@ -1,0 +1,36 @@
+//! Real-path bench (perf target L3 hot path): PJRT block-matmul executor
+//! throughput at several block sizes and shapes. Requires `make artifacts`.
+use std::path::Path;
+
+use ipumm::runtime::BlockMmExecutor;
+use ipumm::util::bench::{black_box, Bench};
+use ipumm::util::matrix::Matrix;
+use ipumm::util::units::mm_flops;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("bench_runtime_blockmm: artifacts/ missing; run `make artifacts` first");
+        return;
+    }
+    let mut b = Bench::new("runtime_blockmm").with_iters(1, 5);
+    for block in [64usize, 128, 256] {
+        let mut ex = BlockMmExecutor::load(dir, block).expect("artifacts load");
+        if ex.block != block {
+            continue; // artifact set lacks this block size
+        }
+        for (name, m, n, k) in [
+            ("squared_512", 512usize, 512usize, 512usize),
+            ("left_1024x128x256", 1024, 128, 256),
+            ("right_128x1024x256", 128, 1024, 256),
+        ] {
+            let a = Matrix::random(m, n, 1);
+            let bm = Matrix::random(n, k, 2);
+            let label = format!("b{block}_{name}");
+            b.run(&label, || black_box(ex.mm(&a, &bm).unwrap()));
+            let mean = b.results().last().unwrap().summary.mean;
+            b.throughput(mm_flops(m, n, k) as f64 / mean / 1e9, "GFlop/s real");
+        }
+    }
+    b.dump_csv();
+}

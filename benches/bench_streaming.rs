@@ -1,0 +1,14 @@
+//! X1 bench: streaming-memory extension table (§6 future work).
+use ipumm::arch::IpuArch;
+use ipumm::experiments::streaming;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("streaming").with_iters(1, 5);
+    let mut rows = None;
+    b.run("resident_vs_streamed", || {
+        rows = Some(black_box(streaming::run(&IpuArch::gc200(), &streaming::default_sizes())));
+    });
+    println!("\n{}", streaming::to_table(&rows.unwrap()).to_ascii());
+    b.dump_csv();
+}

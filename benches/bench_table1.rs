@@ -1,0 +1,13 @@
+//! T1 bench: regenerates the paper's Table 1 and times the arch-derivation
+//! path (trivially fast; exists so every paper artifact has a bench).
+use ipumm::arch::{GpuArch, IpuArch};
+use ipumm::experiments::table1::table1;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("table1");
+    b.run("gc200_vs_a30", || black_box(table1(&IpuArch::gc200(), &GpuArch::a30()).to_ascii()));
+    b.run("gc2_vs_v100", || black_box(table1(&IpuArch::gc2(), &GpuArch::v100()).to_ascii()));
+    println!("\n{}", table1(&IpuArch::gc200(), &GpuArch::a30()).to_ascii());
+    b.dump_csv();
+}

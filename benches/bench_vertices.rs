@@ -1,0 +1,12 @@
+//! V1 bench: regenerates the §5.1 vertex census triple (5542/5762/31743).
+use ipumm::arch::IpuArch;
+use ipumm::experiments::vertices;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("vertices").with_iters(1, 5);
+    let mut rows = None;
+    b.run("census_triple", || rows = Some(black_box(vertices::run(&IpuArch::gc200()))));
+    println!("\n{}", vertices::to_table(&rows.unwrap()).to_ascii());
+    b.dump_csv();
+}

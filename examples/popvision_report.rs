@@ -1,0 +1,34 @@
+//! PopVision-style profiling example: profile shapes across the skew
+//! spectrum and dump both the Fig. 3-style phase timeline and a JSON
+//! report per shape.
+//!
+//!     cargo run --release --example popvision_report -- [out_dir]
+
+use ipumm::arch::IpuArch;
+use ipumm::planner::MmShape;
+use ipumm::profiler::PopVisionReport;
+use ipumm::sim::SimEngine;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "target/profiles".into());
+    std::fs::create_dir_all(&out_dir)?;
+    let engine = SimEngine::new(IpuArch::gc200());
+    for (name, shape) in [
+        ("squared_3584", MmShape::square(3584)),
+        ("squared_1024", MmShape::square(1024)),
+        ("left_skewed", MmShape::new(16384, 512, 2048)),
+        ("right_skewed", MmShape::new(512, 16384, 2048)),
+    ] {
+        match engine.simulate_mm(shape) {
+            Ok(report) => {
+                let pv = PopVisionReport::new(&report);
+                println!("{}", pv.to_text());
+                let path = format!("{out_dir}/{name}.json");
+                std::fs::write(&path, pv.to_json().render())?;
+                println!("   (json -> {path})\n");
+            }
+            Err(e) => println!("{name}: {e}\n"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: plan and simulate one matrix multiplication on the GC200,
+//! print the plan and the cost/memory/vertex breakdown.
+//!
+//!     cargo run --release --example quickstart -- [m n k]
+
+use ipumm::arch::IpuArch;
+use ipumm::planner::{search, MmShape};
+use ipumm::util::units::{fmt_bytes, fmt_tflops};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<usize> = std::env::args()
+        .skip(1)
+        .map(|a| a.parse().expect("dims must be integers"))
+        .collect();
+    let (m, n, k) = match args.as_slice() {
+        [] => (2048, 2048, 2048),
+        [s] => (*s, *s, *s),
+        [m, n, k] => (*m, *n, *k),
+        _ => anyhow::bail!("usage: quickstart [s | m n k]"),
+    };
+
+    let arch = IpuArch::gc200();
+    let shape = MmShape::new(m, n, k);
+    println!(
+        "planning A[{m},{n}] x B[{n},{k}] on {} ({} tiles, peak {:.1} TFlop/s)\n",
+        arch.name,
+        arch.tiles,
+        arch.peak_fp32_tflops()
+    );
+
+    match search(&arch, shape) {
+        Ok(plan) => {
+            let p = plan.partition();
+            let c = &plan.cost;
+            println!("plan: pm={} pn={} pk={} cn={}  ({} tiles, {} supersteps)",
+                p.pm, p.pn, p.pk, p.cn, p.tiles_used(), c.supersteps);
+            println!("  cycles: compute={} exchange={} sync={} total={}",
+                c.compute_cycles, c.exchange_cycles, c.sync_cycles, c.total_cycles);
+            println!("  vertices: compute={} reduce={} total={}",
+                c.compute_vertices, c.reduce_vertices, c.total_vertices());
+            println!("  heaviest tile: {} of {} (tensors={} chunks={} exch-code={})",
+                fmt_bytes(c.tile_bytes_total),
+                fmt_bytes(arch.tile_sram_bytes),
+                fmt_bytes(c.tile_bytes_tensors),
+                fmt_bytes(c.tile_bytes_chunks),
+                fmt_bytes(c.tile_bytes_exchange_code));
+            println!("  efficiency: {:.1}%   throughput: {}",
+                c.efficiency() * 100.0,
+                fmt_tflops(plan.tflops(&arch)));
+            println!("  ({} candidates evaluated)", plan.candidates_evaluated);
+        }
+        Err(e) => println!("planner: {e} — the paper's §2.4 memory wall"),
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Smoke: load artifacts, run a verified block matmul on the PJRT path.
+use ipumm::runtime::BlockMmExecutor;
+use ipumm::util::matrix::Matrix;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let mut ex = BlockMmExecutor::load(Path::new("artifacts"), 128)?;
+    println!("platform={} block={} artifacts={:?}", ex.client.platform(), ex.block, ex.client.artifact_names());
+    let a = Matrix::random(300, 200, 1);
+    let b = Matrix::random(200, 150, 2);
+    let (_c, stats, err) = ex.mm_verified(&a, &b)?;
+    println!("300x200x150 via {} calls of {}^3 blocks in {:.3}s, max err {err:e}", stats.block_calls, stats.block, stats.seconds);
+    Ok(())
+}

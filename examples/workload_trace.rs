@@ -1,0 +1,21 @@
+//! Trace-driven study example: a mixed stream of squared/left/right
+//! requests (the paper's "skewed matrices are dominant in AI/ML" lens)
+//! through the coordinator, reporting per-class latency percentiles.
+//!
+//!     cargo run --release --example workload_trace -- [n_jobs] [seed]
+
+use ipumm::arch::{GpuArch, IpuArch};
+use ipumm::coordinator::trace::{run_trace, TraceSpec};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<u64> = std::env::args().skip(1).map(|a| a.parse().unwrap()).collect();
+    let n_jobs = *args.first().unwrap_or(&200) as usize;
+    let seed = *args.get(1).unwrap_or(&42);
+    let spec = TraceSpec::paper_mix(n_jobs, seed);
+    println!("dispatching {n_jobs} mixed MM requests (seed {seed}) to both devices...\n");
+    let r = run_trace(&IpuArch::gc200(), &GpuArch::a30(), &spec, 0);
+    println!("{}", r.to_table().to_ascii());
+    println!("reading: per-request model latency; the IPU's advantage persists across the mix,");
+    println!("with the right-skew class the narrowest margin (paper Finding 3).");
+    Ok(())
+}

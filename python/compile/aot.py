@@ -1,0 +1,112 @@
+"""AOT compile path: lower the L2 block-matmul to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Outputs (under --out-dir, default ../artifacts):
+  mm_block_<B>.hlo.txt   accumulating block matmul c + a@b for B in BLOCKS
+  mm_full_<S>.hlo.txt    small full matmuls for runtime smoke tests
+  manifest.tsv           one line per artifact:
+                         kind<TAB>name<TAB>file<TAB>m<TAB>n<TAB>k<TAB>dtype
+The manifest is TSV so the rust loader needs no JSON parser on the artifact
+path.  Python runs only here — never at runtime.
+
+Usage: cd python && python -m compile.aot [--out-dir DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Block sizes exported for the rust block executor. 128 is the default hot
+# path (MXU-aligned); 64 exists for small problems and tests; 256 lets the
+# executor amortize per-call overhead on large problems (see §Perf L3).
+BLOCKS = (64, 128, 256)
+FULL_SIZES = (32, 96)  # small full-matmul smoke artifacts (96: non-pow2)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(b: int) -> str:
+    spec = jax.ShapeDtypeStruct((b, b), jnp.float32)
+
+    def fn(a, x, c):
+        return (model.block_mm(a, x, c),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec, spec, spec))
+
+
+def lower_full(s: int) -> str:
+    spec = jax.ShapeDtypeStruct((s, s), jnp.float32)
+
+    def fn(a, x):
+        return (model.mm(a, x, bm=64, bn=64, bk=64),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    # kept for Makefile compatibility: --out <file> derives the dir
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_lines = []
+
+    for b in BLOCKS:
+        name = f"mm_block_{b}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_block(b)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f"block\t{name}\t{name}.hlo.txt\t{b}\t{b}\t{b}\tf32"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for s in FULL_SIZES:
+        name = f"mm_full_{s}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_full(s)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f"full\t{name}\t{name}.hlo.txt\t{s}\t{s}\t{s}\tf32"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Makefile stamp target artifacts/model.hlo.txt -> alias of the default
+    # block artifact so `make artifacts` has a single up-to-date check.
+    stamp = os.path.join(out_dir, "model.hlo.txt")
+    with open(os.path.join(out_dir, "mm_block_128.hlo.txt")) as f:
+        default_text = f.read()
+    with open(stamp, "w") as f:
+        f.write(default_text)
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {out_dir}/manifest.tsv ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

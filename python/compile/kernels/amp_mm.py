@@ -1,0 +1,130 @@
+"""L1 — Pallas blocked matrix-multiply kernel in the style of the IPU AMP unit.
+
+The GC200 tile's Accumulating Matrix Product (AMP) unit consumes small input
+blocks resident in In-Processor memory and accumulates FP32 partials.  The
+TPU analogue (per DESIGN.md §Hardware-Adaptation) is:
+
+  * BlockSpec-tiled A/B/C blocks resident in VMEM (the scratchpad analogue of
+    In-Processor memory),
+  * a grid walking (i, j) output blocks with an inner l (reduction) loop —
+    the analogue of the PopLin planner's pn reduction stages,
+  * MACs expressed as ``jnp.dot(..., preferred_element_type=f32)`` so real
+    hardware uses the MXU systolic array with FP32 accumulation (the AMP's
+    fp16-in/fp32-acc mode maps to bf16-in/f32-acc on the MXU).
+
+The kernel computes ``C_out = C_in + A @ B`` — the *accumulating* form.  This
+is deliberate: the rust runtime composes arbitrarily large multiplications
+out of fixed-shape block calls by threading C through repeated executions,
+exactly as the IPU accumulates partials across BSP supersteps.
+
+``interpret=True`` is mandatory in this environment: real-TPU lowering emits
+a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The AMP unit's native FP32 block is 16 accumulators wide; keeping pallas
+# block dims multiples of this keeps the structure faithful and, on a real
+# TPU, MXU-aligned (128 = 8 * 16).
+AMP_ALIGN = 16
+
+
+def _mm_kernel(a_ref, b_ref, c_ref, o_ref):
+    """One (i, j, l) grid step: o[i,j] (+)= a[i,l] @ b[l,j], seeded with c."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _seed():
+        o_ref[...] = c_ref[...].astype(jnp.float32)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    # FP32 accumulation regardless of input dtype — the AMP/MXU contract.
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _check_block(dim: int, block: int, name: str) -> None:
+    if block <= 0:
+        raise ValueError(f"{name}: block size must be positive, got {block}")
+    if dim % block != 0:
+        raise ValueError(
+            f"{name}: dimension {dim} not divisible by block {block}; "
+            "pad at the model layer (model.mm) before calling the kernel"
+        )
+    if block % AMP_ALIGN != 0:
+        raise ValueError(
+            f"{name}: block {block} not a multiple of AMP_ALIGN={AMP_ALIGN}"
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def amp_mm(
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """Accumulating blocked matmul: returns ``c + a @ b`` (FP32 result).
+
+    a: (m, k_red) — inputs may be float32 or bfloat16.
+    b: (k_red, n)
+    c: (m, n)     — FP32 accumulator (bf16 accepted, upcast on seed).
+    bm/bn/bk: VMEM block shape; every dim must divide its matrix dim and be
+    a multiple of AMP_ALIGN.
+    """
+    m, k_red = a.shape
+    k2, n = b.shape
+    if k_red != k2:
+        raise ValueError(f"reduction mismatch: a is {a.shape}, b is {b.shape}")
+    if c.shape != (m, n):
+        raise ValueError(f"accumulator shape {c.shape} != ({m}, {n})")
+    _check_block(m, bm, "m")
+    _check_block(n, bn, "n")
+    _check_block(k_red, bk, "k")
+
+    grid = (m // bm, n // bn, k_red // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b, c)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, in_dtype=jnp.float32) -> int:
+    """Estimated VMEM residency of one grid step (A, B, C-in, O blocks).
+
+    Used by DESIGN.md's L1 perf analysis: the structural analogue of the
+    IPU question 'does the working set fit in In-Processor memory'.
+    """
+    in_bytes = jnp.dtype(in_dtype).itemsize
+    return bm * bk * in_bytes + bk * bn * in_bytes + 2 * bm * bn * 4
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU 128x128x128 passes doing useful work for this block.
+
+    interpret=True gives CPU-numpy timings only, so L1 'performance' is this
+    structural estimate (see EXPERIMENTS.md §Perf L1): blocks that are not
+    multiples of the 128-wide systolic array waste the remainder lanes.
+    """
+    def eff(dim: int) -> float:
+        full = -(-dim // 128) * 128
+        return dim / full
+
+    return eff(bm) * eff(bn) * eff(bk)

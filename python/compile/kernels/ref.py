@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the L1 kernel — the correctness ground truth.
+
+Everything the pallas kernel (and transitively the rust runtime, which runs
+the AOT artifact of the same computation) produces is checked against this.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def amp_mm_ref(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """c + a @ b with FP32 accumulation, mirroring the AMP contract."""
+    acc = jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return c.astype(jnp.float32) + acc
+
+
+def mm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain a @ b in FP32."""
+    return amp_mm_ref(a, b, jnp.zeros((a.shape[0], b.shape[1]), jnp.float32))

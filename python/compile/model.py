@@ -1,0 +1,70 @@
+"""L2 — the JAX compute graph the rust runtime executes.
+
+The paper's workload is ``A[m, n] x B[n, k] = C[m, k]`` in FP32 (paper §2.4;
+note the paper calls the reduction dim *n*).  The rust coordinator composes
+arbitrary (m, n, k) out of fixed-shape *block* computations, so the unit the
+AOT path exports is the accumulating block matmul
+
+    block_mm(a, b, c) = c + a @ b        (one shape per artifact)
+
+built on the L1 pallas kernel so that the kernel lowers into the same HLO.
+A whole-matrix ``mm`` with padding is provided for python-side testing and
+for exporting small fixed-shape full multiplications.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.amp_mm import AMP_ALIGN, amp_mm
+
+
+def block_mm(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """One accumulating block step: c + a @ b, via the L1 kernel.
+
+    Block dims are the full operand dims (single grid step when the operands
+    are <= the kernel block), so the exported HLO is exactly one kernel tile.
+    """
+    m, k_red = a.shape
+    _, n = b.shape
+    return amp_mm(a, b, c, bm=m, bn=n, bk=k_red)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def mm(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+       bk: int = 128) -> jax.Array:
+    """Full matmul for arbitrary shapes: pads to block multiples, runs the
+    blocked kernel over the padded grid, slices the result back out.
+
+    This is the python mirror of what the rust block executor does with the
+    AOT artifact; tests assert the two agree through the oracle.
+    """
+    m, k_red = a.shape
+    k2, n = b.shape
+    if k_red != k2:
+        raise ValueError(f"reduction mismatch: {a.shape} @ {b.shape}")
+    bm = min(bm, _round_up(m, AMP_ALIGN))
+    bn = min(bn, _round_up(n, AMP_ALIGN))
+    bk = min(bk, _round_up(k_red, AMP_ALIGN))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k_red, bk)
+    a_p = _pad_to(a, mp, kp)
+    b_p = _pad_to(b, kp, np_)
+    c_p = jnp.zeros((mp, np_), jnp.float32)
+    out = amp_mm(a_p, b_p, c_p, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n]
+
+
+def flops(m: int, n: int, k: int) -> int:
+    """Paper's throughput convention: 2*m*n*k flops for A[m,n] @ B[n,k]."""
+    return 2 * m * n * k

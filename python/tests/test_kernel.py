@@ -1,0 +1,158 @@
+"""L1 correctness: pallas amp_mm vs the pure-jnp oracle.
+
+This is the core correctness signal for the whole stack — the rust runtime
+executes the AOT artifact of exactly this computation.  hypothesis sweeps
+shapes and dtypes per the repro contract.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.amp_mm import (
+    AMP_ALIGN,
+    amp_mm,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import amp_mm_ref
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+def check(m, n, k, bm, bn, bk, dtype=jnp.float32, key=0, atol=None):
+    a = rand(key, (m, k), dtype)
+    b = rand(key + 1, (k, n), dtype)
+    c = rand(key + 2, (m, n), jnp.float32)
+    got = amp_mm(a, b, c, bm=bm, bn=bn, bk=bk)
+    want = amp_mm_ref(a, b, c)
+    assert got.dtype == jnp.float32
+    if atol is None:
+        atol = 1e-5 * k if dtype == jnp.float32 else 0.15 * np.sqrt(k)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want),
+        atol=atol, rtol=1e-4 if dtype == jnp.float32 else 2e-2,
+    )
+
+
+class TestSingleBlock:
+    def test_one_block_identity_c(self):
+        check(32, 32, 32, 32, 32, 32)
+
+    def test_one_block_128(self):
+        check(128, 128, 128, 128, 128, 128)
+
+    def test_zero_c_is_plain_matmul(self):
+        a = rand(7, (64, 64))
+        b = rand(8, (64, 64))
+        got = amp_mm(a, b, jnp.zeros((64, 64), jnp.float32), bm=64, bn=64, bk=64)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(a @ b), atol=1e-4, rtol=1e-4
+        )
+
+    def test_accumulation_composes_like_runtime(self):
+        # The rust executor threads C through repeated block calls along the
+        # reduction dim; two chained 64-k steps must equal one 128-k matmul.
+        a = rand(1, (64, 128))
+        b = rand(2, (128, 64))
+        c0 = jnp.zeros((64, 64), jnp.float32)
+        step1 = amp_mm(a[:, :64], b[:64, :], c0, bm=64, bn=64, bk=64)
+        step2 = amp_mm(a[:, 64:], b[64:, :], step1, bm=64, bn=64, bk=64)
+        np.testing.assert_allclose(
+            np.asarray(step2), np.asarray(a @ b), atol=1e-4, rtol=1e-4
+        )
+
+
+class TestGridTiling:
+    def test_multi_block_grid(self):
+        check(256, 128, 192, 128, 64, 64)
+
+    def test_skewed_left_tall_a(self):
+        # left-skewed per the paper: A tall (m >> reduction dim)
+        check(512, 64, 32, 64, 32, 16)
+
+    def test_skewed_right_wide_a(self):
+        # right-skewed: A wide (reduction >> m) — the paper's pathological case
+        check(32, 64, 512, 16, 32, 128)
+
+    def test_rectangular_blocks(self):
+        check(96, 160, 64, 32, 32, 32)
+
+
+class TestDtypes:
+    def test_bf16_inputs_f32_accumulate(self):
+        check(64, 64, 64, 32, 32, 32, dtype=jnp.bfloat16)
+
+    def test_bf16_large_reduction_stays_accurate(self):
+        # f32 accumulation keeps error ~ bf16 input rounding, not O(k) drift.
+        check(32, 32, 512, 32, 32, 64, dtype=jnp.bfloat16)
+
+
+class TestValidation:
+    def test_rejects_indivisible_m(self):
+        a = jnp.zeros((100, 64))
+        b = jnp.zeros((64, 64))
+        c = jnp.zeros((100, 64))
+        with pytest.raises(ValueError, match="not divisible"):
+            amp_mm(a, b, c, bm=64, bn=64, bk=64)
+
+    def test_rejects_unaligned_block(self):
+        a = jnp.zeros((40, 40))
+        b = jnp.zeros((40, 40))
+        c = jnp.zeros((40, 40))
+        with pytest.raises(ValueError, match="AMP_ALIGN"):
+            amp_mm(a, b, c, bm=40, bn=40, bk=40)
+
+    def test_rejects_reduction_mismatch(self):
+        with pytest.raises(ValueError, match="reduction mismatch"):
+            amp_mm(
+                jnp.zeros((32, 32)), jnp.zeros((64, 32)), jnp.zeros((32, 32)),
+                bm=32, bn=32, bk=32,
+            )
+
+    def test_rejects_bad_accumulator_shape(self):
+        with pytest.raises(ValueError, match="accumulator"):
+            amp_mm(
+                jnp.zeros((32, 32)), jnp.zeros((32, 32)), jnp.zeros((32, 64)),
+                bm=32, bn=32, bk=32,
+            )
+
+
+# hypothesis sweep: random aligned shapes/blocks, both dtypes.
+aligned = st.integers(1, 6).map(lambda v: v * AMP_ALIGN)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    gm=st.integers(1, 3), gn=st.integers(1, 3), gk=st.integers(1, 3),
+    bm=aligned, bn=aligned, bk=aligned,
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    key=st.integers(0, 2**16),
+)
+def test_hypothesis_kernel_matches_ref(gm, gn, gk, bm, bn, bk, dtype, key):
+    check(gm * bm, gn * bn, gk * bk, bm, bn, bk, dtype=dtype, key=key)
+
+
+class TestPerfEstimators:
+    def test_vmem_footprint_128_under_16mb(self):
+        # DESIGN.md L1 target: the default block's working set fits VMEM.
+        assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20
+
+    def test_vmem_footprint_counts_all_blocks(self):
+        assert vmem_footprint_bytes(16, 16, 16) == 16 * 16 * 4 * 4
+
+    def test_mxu_utilization_full_tile(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+
+    def test_mxu_utilization_partial_tile(self):
+        assert abs(mxu_utilization_estimate(64, 128, 128) - 0.5) < 1e-9
+
+    def test_mxu_utilization_monotone_in_alignment(self):
+        full = mxu_utilization_estimate(128, 128, 128)
+        mid = mxu_utilization_estimate(96, 128, 128)
+        low = mxu_utilization_estimate(16, 128, 128)
+        assert full > mid > low

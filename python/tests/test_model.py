@@ -1,0 +1,96 @@
+"""L2 correctness: model.mm (padded blocked matmul) vs the oracle, and the
+shape/flops conventions the rust side depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import mm_ref
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def check_mm(m, n, k, key=0, **blocks):
+    a = rand(key, (m, k))
+    b = rand(key + 1, (k, n))
+    got = model.mm(a, b, **blocks)
+    want = mm_ref(a, b)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=1e-4 * max(1, k / 64), rtol=1e-4
+    )
+
+
+class TestMm:
+    def test_block_multiple_shapes(self):
+        check_mm(256, 256, 256)
+
+    def test_non_multiple_shapes_are_padded(self):
+        check_mm(100, 37, 211)
+
+    def test_tiny(self):
+        check_mm(1, 1, 1)
+
+    def test_row_vector(self):
+        check_mm(1, 300, 17)
+
+    def test_col_vector(self):
+        check_mm(300, 1, 17)
+
+    def test_paper_left_skewed(self):
+        # A tall: m >> n (paper's reduction dim), small k
+        check_mm(1024, 64, 16)
+
+    def test_paper_right_skewed(self):
+        # A wide: n >> m
+        check_mm(16, 64, 1024)
+
+    def test_custom_blocks(self):
+        check_mm(200, 200, 200, bm=64, bn=64, bk=64)
+
+    def test_reduction_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="reduction mismatch"):
+            model.mm(jnp.zeros((4, 5)), jnp.zeros((6, 4)))
+
+
+class TestBlockMm:
+    def test_single_block_form(self):
+        a, b = rand(3, (128, 128)), rand(4, (128, 128))
+        c = rand(5, (128, 128))
+        got = model.block_mm(a, b, c)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(c + a @ b), atol=2e-3, rtol=1e-4
+        )
+
+    def test_rectangular_single_block(self):
+        a, b = rand(6, (64, 128)), rand(7, (128, 32))
+        c = jnp.zeros((64, 32), jnp.float32)
+        got = model.block_mm(a, b, c)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(a @ b), atol=2e-3, rtol=1e-4
+        )
+
+
+class TestFlops:
+    def test_paper_convention(self):
+        # paper §2.4: A[m,n] x B[n,k]; throughput = 2mnk / time
+        assert model.flops(3584, 3584, 3584) == 2 * 3584**3
+
+    def test_skew_invariance(self):
+        # total work is skew-invariant at constant m*n*k — the property that
+        # makes Fig. 5's y-axis comparable across aspect ratios
+        assert model.flops(1024, 64, 256) == model.flops(64, 1024, 256)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 300), n=st.integers(1, 300), k=st.integers(1, 300),
+    key=st.integers(0, 2**16),
+)
+def test_hypothesis_mm_any_shape(m, n, k, key):
+    check_mm(m, n, k, key=key)

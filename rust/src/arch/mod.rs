@@ -1,0 +1,10 @@
+//! Hardware descriptions: the IPUs under study and the GPU baselines
+//! (paper Table 1), with derived quantities (theoretical peaks, SRAM
+//! totals) computed from first principles so the calibration tests can
+//! check them against the paper's figures.
+
+pub mod gpu;
+pub mod ipu;
+
+pub use gpu::GpuArch;
+pub use ipu::{IpuArch, IpuGeneration};

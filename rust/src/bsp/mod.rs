@@ -1,0 +1,14 @@
+//! Bulk-Synchronous Parallel execution engine (paper §2.5, Fig. 3).
+//!
+//! The IPU executes in supersteps: (1) local tile compute, (2) global
+//! cross-tile sync, (3) data exchange. `scheduler` walks a graph's program
+//! and prices each phase against the architecture's cycle models;
+//! `trace` records the phase timeline the profiler renders (the Fig. 3
+//! red/blue/yellow bars) and the tile-utilisation metric the paper reads
+//! off PopVision.
+
+pub mod scheduler;
+pub mod trace;
+
+pub use scheduler::BspEngine;
+pub use trace::{Phase, PhaseRecord, Trace};

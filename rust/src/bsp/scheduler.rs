@@ -1,0 +1,207 @@
+//! The BSP engine: walk a program, price each phase, emit a trace.
+//!
+//! Compute phases: each tile's cost is the sum of its vertices' cycle
+//! estimates divided by the worker-thread overlap factor (six time-sliced
+//! threads hide instruction latency; the AMP pipeline is already saturated
+//! by one supervisor vertex, so overlap applies to non-AMP codelets).
+//! The phase takes the *maximum* over tiles — BSP is lockstep — and the
+//! mean/max ratio is the tile balance the profiler reports.
+
+use crate::arch::IpuArch;
+use crate::bsp::trace::{Phase, PhaseRecord, Trace};
+use crate::exchange::fabric::ExchangeFabric;
+use crate::graph::builder::Graph;
+use crate::graph::program::ProgramStep;
+use crate::graph::vertex::VertexKind;
+
+pub struct BspEngine<'a> {
+    arch: &'a IpuArch,
+    fabric: ExchangeFabric,
+}
+
+impl<'a> BspEngine<'a> {
+    pub fn new(arch: &'a IpuArch) -> Self {
+        BspEngine { arch, fabric: ExchangeFabric::new(arch) }
+    }
+
+    /// Execute (price) the graph's program; returns the phase trace.
+    pub fn run(&self, graph: &Graph) -> Trace {
+        let mut trace = Trace::default();
+        for step in graph.program.steps() {
+            match step {
+                ProgramStep::Execute(cs_id) => {
+                    let cs = graph.compute_set(cs_id);
+                    let mut per_tile = vec![0u64; self.arch.tiles];
+                    for &vid in &cs.vertices {
+                        let v = graph.vertex(vid);
+                        per_tile[v.tile] += self.vertex_cycles(&v.kind);
+                    }
+                    let active: Vec<u64> =
+                        per_tile.iter().copied().filter(|&c| c > 0).collect();
+                    let max = active.iter().copied().max().unwrap_or(0);
+                    let mean = if active.is_empty() {
+                        0.0
+                    } else {
+                        active.iter().sum::<u64>() as f64 / active.len() as f64
+                    };
+                    trace.push(PhaseRecord {
+                        phase: Phase::Compute,
+                        label: cs.name.clone(),
+                        cycles: max,
+                        tile_balance: if max == 0 { 0.0 } else { mean / max as f64 },
+                        active_tiles: active.len(),
+                    });
+                }
+                ProgramStep::Sync => {
+                    trace.push(PhaseRecord {
+                        phase: Phase::Sync,
+                        label: "sync".to_string(),
+                        cycles: self.arch.sync_cycles,
+                        tile_balance: 0.0,
+                        active_tiles: self.arch.tiles,
+                    });
+                }
+                ProgramStep::Exchange(ex_id) => {
+                    let plan = graph.exchange(ex_id);
+                    let cost = self.fabric.cost(plan);
+                    trace.push(PhaseRecord {
+                        phase: Phase::Exchange,
+                        label: plan.name.clone(),
+                        cycles: cost.cycles,
+                        tile_balance: 0.0,
+                        active_tiles: plan.participants(),
+                    });
+                }
+            }
+        }
+        trace
+    }
+
+    /// Per-vertex cycles with worker-thread overlap for non-AMP codelets.
+    fn vertex_cycles(&self, kind: &VertexKind) -> u64 {
+        let raw = kind.cycles(self.arch.fp32_macs_per_tile_cycle);
+        match kind {
+            // the AMP pipeline is a per-tile resource: no thread speedup
+            VertexKind::AmpMacc { .. } => raw,
+            // memory-bound codelets overlap across the 6 hardware threads;
+            // model a conservative 2x effective overlap
+            _ => raw.div_ceil(2),
+        }
+    }
+
+    /// Seconds for a trace on this architecture.
+    pub fn trace_secs(&self, trace: &Trace) -> f64 {
+        self.arch.cycles_to_secs(trace.total_cycles())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exchange::plan::{ExchangePattern, ExchangePlan};
+    use crate::graph::program::Program;
+    use crate::graph::vertex::VertexKind;
+
+    fn arch() -> IpuArch {
+        IpuArch::gc200()
+    }
+
+    #[test]
+    fn empty_program_empty_trace() {
+        let g = Graph::new(arch().tiles);
+        let a = arch();
+        let t = BspEngine::new(&a).run(&g);
+        assert_eq!(t.total_cycles(), 0);
+    }
+
+    #[test]
+    fn compute_phase_is_max_over_tiles() {
+        let a = arch();
+        let mut g = Graph::new(a.tiles);
+        let cs = g.add_compute_set("mm");
+        // tile 0: one big vertex; tile 1: one small vertex
+        g.add_vertex(cs, VertexKind::AmpMacc { rows: 64, cols: 64, acc: 64 }, 0, vec![], vec![]);
+        g.add_vertex(cs, VertexKind::AmpMacc { rows: 16, cols: 16, acc: 16 }, 1, vec![], vec![]);
+        g.set_program(Program::Execute(cs));
+        let t = BspEngine::new(&a).run(&g);
+        let big = VertexKind::AmpMacc { rows: 64, cols: 64, acc: 64 }.cycles(16);
+        assert_eq!(t.total_cycles(), big);
+        // balance: (big + small)/2 / big < 1
+        assert!(t.records[0].tile_balance < 1.0);
+        assert_eq!(t.records[0].active_tiles, 2);
+    }
+
+    #[test]
+    fn balanced_tiles_have_unit_balance() {
+        let a = arch();
+        let mut g = Graph::new(a.tiles);
+        let cs = g.add_compute_set("mm");
+        for tile in 0..8 {
+            g.add_vertex(cs, VertexKind::AmpMacc { rows: 32, cols: 32, acc: 32 }, tile, vec![], vec![]);
+        }
+        g.set_program(Program::Execute(cs));
+        let t = BspEngine::new(&a).run(&g);
+        assert!((t.tile_utilization() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sync_costs_arch_sync_cycles() {
+        let a = arch();
+        let mut g = Graph::new(a.tiles);
+        g.set_program(Program::Sequence(vec![Program::Sync, Program::Sync]));
+        let t = BspEngine::new(&a).run(&g);
+        assert_eq!(t.total_cycles(), 2 * a.sync_cycles);
+        assert_eq!(t.phase_cycles(Phase::Sync), 2 * a.sync_cycles);
+    }
+
+    #[test]
+    fn exchange_priced_by_fabric() {
+        let a = arch();
+        let mut g = Graph::new(a.tiles);
+        let mut plan = ExchangePlan::new("x", ExchangePattern::AllToAll);
+        plan.add(0, 1, 8_000);
+        let ex = g.add_exchange(plan);
+        g.set_program(Program::Exchange(ex));
+        let t = BspEngine::new(&a).run(&g);
+        assert!(t.phase_cycles(Phase::Exchange) >= 1000);
+    }
+
+    #[test]
+    fn repeat_scales_cycles() {
+        let a = arch();
+        let mut g = Graph::new(a.tiles);
+        let cs = g.add_compute_set("mm");
+        g.add_vertex(cs, VertexKind::AmpMacc { rows: 32, cols: 32, acc: 32 }, 0, vec![], vec![]);
+        let once = {
+            let mut g1 = g.clone();
+            g1.set_program(Program::Execute(cs));
+            BspEngine::new(&a).run(&g1).total_cycles()
+        };
+        g.set_program(Program::Repeat(4, Box::new(Program::Execute(cs))));
+        let four = BspEngine::new(&a).run(&g).total_cycles();
+        assert_eq!(four, 4 * once);
+    }
+
+    #[test]
+    fn non_amp_codelets_get_thread_overlap() {
+        let a = arch();
+        let raw = VertexKind::Rearrange { bytes: 8_000 }.cycles(16);
+        let mut g = Graph::new(a.tiles);
+        let cs = g.add_compute_set("re");
+        g.add_vertex(cs, VertexKind::Rearrange { bytes: 8_000 }, 0, vec![], vec![]);
+        g.set_program(Program::Execute(cs));
+        let t = BspEngine::new(&a).run(&g);
+        assert_eq!(t.total_cycles(), raw.div_ceil(2));
+    }
+
+    #[test]
+    fn trace_secs_uses_clock() {
+        let a = arch();
+        let mut g = Graph::new(a.tiles);
+        g.set_program(Program::Sync);
+        let engine = BspEngine::new(&a);
+        let t = engine.run(&g);
+        let s = engine.trace_secs(&t);
+        assert!((s - a.sync_cycles as f64 / a.clock_hz).abs() < 1e-15);
+    }
+}

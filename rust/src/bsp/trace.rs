@@ -1,0 +1,139 @@
+//! Phase traces: the data behind the PopVision execution timeline.
+
+/// BSP phase kind, colour-coded as in the paper's Fig. 3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Local tile compute (red).
+    Compute,
+    /// Global synchronisation (blue).
+    Sync,
+    /// Data exchange (yellow).
+    Exchange,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Sync => "sync",
+            Phase::Exchange => "exchange",
+        }
+    }
+}
+
+/// One timeline entry.
+#[derive(Clone, Debug)]
+pub struct PhaseRecord {
+    pub phase: Phase,
+    pub label: String,
+    pub cycles: u64,
+    /// For compute phases: mean per-tile busy cycles / critical-path cycles
+    /// over *active* tiles — PopVision's "tile balance" within a step.
+    pub tile_balance: f64,
+    /// Tiles that did any work in this phase.
+    pub active_tiles: usize,
+}
+
+/// Full execution trace of one program run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub records: Vec<PhaseRecord>,
+}
+
+impl Trace {
+    pub fn push(&mut self, rec: PhaseRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.records.iter().map(|r| r.cycles).sum()
+    }
+
+    pub fn phase_cycles(&self, phase: Phase) -> u64 {
+        self.records
+            .iter()
+            .filter(|r| r.phase == phase)
+            .map(|r| r.cycles)
+            .sum()
+    }
+
+    /// (compute, sync, exchange) fractions of total cycles.
+    pub fn phase_fractions(&self) -> (f64, f64, f64) {
+        let total = self.total_cycles().max(1) as f64;
+        (
+            self.phase_cycles(Phase::Compute) as f64 / total,
+            self.phase_cycles(Phase::Sync) as f64 / total,
+            self.phase_cycles(Phase::Exchange) as f64 / total,
+        )
+    }
+
+    /// Cycle-weighted mean tile balance over compute phases — the trace's
+    /// aggregate "Tile Utilisation" figure.
+    pub fn tile_utilization(&self) -> f64 {
+        let (num, den) = self
+            .records
+            .iter()
+            .filter(|r| r.phase == Phase::Compute && r.cycles > 0)
+            .fold((0.0, 0u64), |(n, d), r| {
+                (n + r.tile_balance * r.cycles as f64, d + r.cycles)
+            });
+        if den == 0 {
+            0.0
+        } else {
+            num / den as f64
+        }
+    }
+
+    pub fn superstep_count(&self) -> usize {
+        self.records.iter().filter(|r| r.phase == Phase::Compute).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(phase: Phase, cycles: u64, balance: f64) -> PhaseRecord {
+        PhaseRecord { phase, label: String::new(), cycles, tile_balance: balance, active_tiles: 1 }
+    }
+
+    #[test]
+    fn totals_and_phase_sums() {
+        let mut t = Trace::default();
+        t.push(rec(Phase::Compute, 100, 0.9));
+        t.push(rec(Phase::Sync, 10, 0.0));
+        t.push(rec(Phase::Exchange, 40, 0.0));
+        assert_eq!(t.total_cycles(), 150);
+        assert_eq!(t.phase_cycles(Phase::Compute), 100);
+        let (c, s, e) = t.phase_fractions();
+        assert!((c - 100.0 / 150.0).abs() < 1e-12);
+        assert!((s - 10.0 / 150.0).abs() < 1e-12);
+        assert!((e - 40.0 / 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_is_cycle_weighted() {
+        let mut t = Trace::default();
+        t.push(rec(Phase::Compute, 100, 1.0));
+        t.push(rec(Phase::Compute, 300, 0.5));
+        // (100*1.0 + 300*0.5) / 400 = 0.625
+        assert!((t.tile_utilization() - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_defaults() {
+        let t = Trace::default();
+        assert_eq!(t.total_cycles(), 0);
+        assert_eq!(t.tile_utilization(), 0.0);
+        assert_eq!(t.superstep_count(), 0);
+    }
+
+    #[test]
+    fn superstep_count_counts_compute() {
+        let mut t = Trace::default();
+        t.push(rec(Phase::Compute, 1, 1.0));
+        t.push(rec(Phase::Sync, 1, 0.0));
+        t.push(rec(Phase::Compute, 1, 1.0));
+        assert_eq!(t.superstep_count(), 2);
+    }
+}

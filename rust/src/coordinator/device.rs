@@ -1,0 +1,139 @@
+//! Backends a benchmark job can target.
+
+use crate::arch::{GpuArch, IpuArch};
+use crate::gpu::cublas_model::GpuModel;
+use crate::planner::partition::MmShape;
+use crate::planner::search::PlannerError;
+use crate::sim::engine::SimEngine;
+
+/// What a job runs on.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// The calibrated IPU simulator.
+    IpuSim(IpuArch),
+    /// The analytical cuBLAS model.
+    GpuModel(GpuArch),
+}
+
+impl Backend {
+    pub fn name(&self) -> String {
+        match self {
+            Backend::IpuSim(a) => format!("ipu-sim/{}", a.name),
+            Backend::GpuModel(g) => format!("gpu-model/{}", g.name),
+        }
+    }
+
+    pub fn peak_tflops(&self) -> f64 {
+        match self {
+            Backend::IpuSim(a) => a.peak_fp32_tflops(),
+            Backend::GpuModel(g) => g.peak_fp32_tflops(),
+        }
+    }
+}
+
+/// Normalized result of one run.
+#[derive(Clone, Debug)]
+pub enum RunOutcome {
+    Ok {
+        seconds: f64,
+        tflops: f64,
+        efficiency: f64,
+        /// IPU only: vertex census total.
+        vertices: Option<usize>,
+        /// IPU only: heaviest-tile bytes.
+        max_tile_bytes: Option<u64>,
+    },
+    /// Shape does not fit this backend's memory (the Fig. 4 IPU wall /
+    /// GPU DRAM limit).
+    OutOfMemory,
+}
+
+impl RunOutcome {
+    pub fn tflops(&self) -> Option<f64> {
+        match self {
+            RunOutcome::Ok { tflops, .. } => Some(*tflops),
+            RunOutcome::OutOfMemory => None,
+        }
+    }
+
+    pub fn is_oom(&self) -> bool {
+        matches!(self, RunOutcome::OutOfMemory)
+    }
+}
+
+/// Execute one shape on a backend.
+pub fn run_shape(backend: &Backend, shape: MmShape) -> RunOutcome {
+    match backend {
+        Backend::IpuSim(arch) => {
+            let engine = SimEngine::new(arch.clone());
+            match engine.simulate_mm(shape) {
+                Ok(report) => RunOutcome::Ok {
+                    seconds: report.seconds,
+                    tflops: report.tflops,
+                    efficiency: report.efficiency,
+                    vertices: Some(report.total_vertices),
+                    max_tile_bytes: Some(report.memory.max_tile_used),
+                },
+                Err(PlannerError::OutOfMemory { .. }) => RunOutcome::OutOfMemory,
+            }
+        }
+        Backend::GpuModel(gpu) => {
+            let model = GpuModel::new(gpu.clone());
+            if !model.fits(shape) {
+                return RunOutcome::OutOfMemory;
+            }
+            let r = model.simulate_mm(shape);
+            RunOutcome::Ok {
+                seconds: r.seconds,
+                tflops: r.tflops,
+                efficiency: r.efficiency,
+                vertices: None,
+                max_tile_bytes: None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ipu_backend_runs() {
+        let out = run_shape(&Backend::IpuSim(IpuArch::gc200()), MmShape::square(1024));
+        match out {
+            RunOutcome::Ok { tflops, vertices, .. } => {
+                assert!(tflops > 0.0);
+                assert!(vertices.is_some());
+            }
+            _ => panic!("expected success"),
+        }
+    }
+
+    #[test]
+    fn gpu_backend_runs() {
+        let out = run_shape(&Backend::GpuModel(GpuArch::a30()), MmShape::square(1024));
+        assert!(out.tflops().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn ipu_oom_past_wall() {
+        let out = run_shape(&Backend::IpuSim(IpuArch::gc200()), MmShape::square(8192));
+        assert!(out.is_oom());
+    }
+
+    #[test]
+    fn gpu_survives_past_ipu_wall() {
+        let out = run_shape(&Backend::GpuModel(GpuArch::a30()), MmShape::square(8192));
+        assert!(!out.is_oom());
+    }
+
+    #[test]
+    fn names_and_peaks() {
+        let b = Backend::IpuSim(IpuArch::gc200());
+        assert_eq!(b.name(), "ipu-sim/GC200");
+        assert!((b.peak_tflops() - 62.6).abs() < 0.2);
+        let g = Backend::GpuModel(GpuArch::a30());
+        assert_eq!(g.name(), "gpu-model/A30");
+    }
+}

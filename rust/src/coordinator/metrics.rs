@@ -1,0 +1,214 @@
+//! Metrics records and table emission.
+
+use crate::coordinator::device::RunOutcome;
+use crate::planner::partition::MmShape;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// One (backend, shape) measurement.
+#[derive(Clone, Debug)]
+pub struct MetricsRecord {
+    pub backend: String,
+    pub label: String,
+    pub shape: MmShape,
+    pub outcome: RunOutcome,
+}
+
+impl MetricsRecord {
+    pub fn tflops_cell(&self) -> String {
+        match self.outcome.tflops() {
+            Some(t) => format!("{t:.2}"),
+            None => "OOM".to_string(),
+        }
+    }
+}
+
+/// Ordered collection with emitters.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsTable {
+    pub records: Vec<MetricsRecord>,
+}
+
+impl MetricsTable {
+    pub fn push(&mut self, rec: MetricsRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records for one backend, in insertion order.
+    pub fn for_backend(&self, backend: &str) -> Vec<&MetricsRecord> {
+        self.records.iter().filter(|r| r.backend == backend).collect()
+    }
+
+    pub fn backends(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.records.iter().map(|r| r.backend.clone()).collect();
+        names.dedup();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Wide table: one row per label, one TFlop/s column per backend.
+    pub fn to_table(&self, title: &str) -> Table {
+        let backends = self.backends();
+        let mut headers: Vec<&str> = vec!["shape"];
+        let backend_headers: Vec<String> =
+            backends.iter().map(|b| format!("{b} TFlop/s")).collect();
+        headers.extend(backend_headers.iter().map(|s| s.as_str()));
+        let mut table = Table::new(title, &headers);
+
+        let mut labels: Vec<String> = Vec::new();
+        for r in &self.records {
+            if !labels.contains(&r.label) {
+                labels.push(r.label.clone());
+            }
+        }
+        for label in &labels {
+            let mut cells = vec![label.clone()];
+            for b in &backends {
+                let cell = self
+                    .records
+                    .iter()
+                    .find(|r| &r.label == label && &r.backend == b)
+                    .map(|r| r.tflops_cell())
+                    .unwrap_or_else(|| "-".to_string());
+                cells.push(cell);
+            }
+            table.row(&cells);
+        }
+        table
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("backend,label,m,n,k,seconds,tflops,efficiency,vertices,oom\n");
+        for r in &self.records {
+            match &r.outcome {
+                RunOutcome::Ok { seconds, tflops, efficiency, vertices, .. } => {
+                    out.push_str(&format!(
+                        "{},{},{},{},{},{},{},{},{},false\n",
+                        r.backend,
+                        r.label,
+                        r.shape.m,
+                        r.shape.n,
+                        r.shape.k,
+                        seconds,
+                        tflops,
+                        efficiency,
+                        vertices.map(|v| v.to_string()).unwrap_or_default()
+                    ));
+                }
+                RunOutcome::OutOfMemory => {
+                    out.push_str(&format!(
+                        "{},{},{},{},{},,,,,true\n",
+                        r.backend, r.label, r.shape.m, r.shape.n, r.shape.k
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut arr = Json::Arr(vec![]);
+        for r in &self.records {
+            let mut o = Json::obj();
+            o.set("backend", r.backend.as_str().into());
+            o.set("label", r.label.as_str().into());
+            o.set("m", r.shape.m.into());
+            o.set("n", r.shape.n.into());
+            o.set("k", r.shape.k.into());
+            match &r.outcome {
+                RunOutcome::Ok { seconds, tflops, efficiency, vertices, max_tile_bytes } => {
+                    o.set("seconds", (*seconds).into());
+                    o.set("tflops", (*tflops).into());
+                    o.set("efficiency", (*efficiency).into());
+                    if let Some(v) = vertices {
+                        o.set("vertices", (*v).into());
+                    }
+                    if let Some(b) = max_tile_bytes {
+                        o.set("max_tile_bytes", (*b).into());
+                    }
+                    o.set("oom", false.into());
+                }
+                RunOutcome::OutOfMemory => {
+                    o.set("oom", true.into());
+                }
+            }
+            arr.push(o);
+        }
+        arr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(backend: &str, label: &str, tflops: Option<f64>) -> MetricsRecord {
+        MetricsRecord {
+            backend: backend.to_string(),
+            label: label.to_string(),
+            shape: MmShape::square(64),
+            outcome: match tflops {
+                Some(t) => RunOutcome::Ok {
+                    seconds: 1.0,
+                    tflops: t,
+                    efficiency: 0.5,
+                    vertices: Some(100),
+                    max_tile_bytes: None,
+                },
+                None => RunOutcome::OutOfMemory,
+            },
+        }
+    }
+
+    #[test]
+    fn wide_table_pivots_backends() {
+        let mut m = MetricsTable::default();
+        m.push(rec("ipu", "1024", Some(30.0)));
+        m.push(rec("gpu", "1024", Some(8.0)));
+        m.push(rec("ipu", "4096", None));
+        m.push(rec("gpu", "4096", Some(9.5)));
+        let t = m.to_table("fig4");
+        let ascii = t.to_ascii();
+        assert!(ascii.contains("30.00"));
+        assert!(ascii.contains("OOM"));
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn csv_includes_oom_flag() {
+        let mut m = MetricsTable::default();
+        m.push(rec("ipu", "x", None));
+        let csv = m.to_csv();
+        assert!(csv.contains(",true\n"));
+        assert!(csv.starts_with("backend,"));
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let mut m = MetricsTable::default();
+        m.push(rec("ipu", "x", Some(12.0)));
+        let json = m.to_json().render();
+        assert!(json.contains("\"tflops\": 12"));
+        assert!(json.contains("\"vertices\": 100"));
+    }
+
+    #[test]
+    fn backend_listing_dedups() {
+        let mut m = MetricsTable::default();
+        m.push(rec("b", "1", Some(1.0)));
+        m.push(rec("a", "1", Some(1.0)));
+        m.push(rec("b", "2", Some(1.0)));
+        assert_eq!(m.backends(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(m.for_backend("b").len(), 2);
+    }
+}

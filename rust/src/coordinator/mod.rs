@@ -1,0 +1,19 @@
+//! Benchmark coordinator — the L3 orchestration layer.
+//!
+//! Owns the benchmark lifecycle: build job lists ([`sweep`]), fan them out
+//! over a worker-thread pool ([`runner`] — the offline environment has no
+//! tokio, so this is a std::thread scoped pool with mpsc channels),
+//! collect [`metrics`] records, and emit tables/CSV/JSON. Simulation and
+//! GPU-model jobs parallelize across workers; real PJRT jobs run on the
+//! caller's thread (one PJRT client per process).
+
+pub mod device;
+pub mod metrics;
+pub mod runner;
+pub mod sweep;
+pub mod trace;
+
+pub use device::{Backend, RunOutcome};
+pub use metrics::{MetricsRecord, MetricsTable};
+pub use runner::{run_jobs, Job};
+pub use sweep::{aspect_ratio_ladder, squared_sizes, SweepPoint};

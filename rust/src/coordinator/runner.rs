@@ -1,0 +1,123 @@
+//! Worker-pool job runner.
+//!
+//! Simulator and GPU-model jobs are pure CPU work with no shared state, so
+//! they fan out over a scoped thread pool (no tokio offline; std threads +
+//! mpsc). Results are re-ordered to match submission order so tables are
+//! deterministic regardless of scheduling.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::device::{run_shape, Backend};
+use crate::coordinator::metrics::{MetricsRecord, MetricsTable};
+use crate::planner::partition::MmShape;
+
+/// One unit of benchmark work.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub backend: Backend,
+    pub label: String,
+    pub shape: MmShape,
+}
+
+impl Job {
+    pub fn new(backend: Backend, label: impl Into<String>, shape: MmShape) -> Job {
+        Job { backend, label: label.into(), shape }
+    }
+}
+
+/// Run all jobs across `workers` threads; results in submission order.
+pub fn run_jobs(jobs: Vec<Job>, workers: usize) -> MetricsTable {
+    let workers = workers.max(1).min(jobs.len().max(1));
+    let n = jobs.len();
+    let queue = Arc::new(Mutex::new(
+        jobs.into_iter().enumerate().collect::<Vec<(usize, Job)>>(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, MetricsRecord)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let item = queue.lock().expect("queue poisoned").pop();
+                let Some((idx, job)) = item else { break };
+                let outcome = run_shape(&job.backend, job.shape);
+                let rec = MetricsRecord {
+                    backend: job.backend.name(),
+                    label: job.label,
+                    shape: job.shape,
+                    outcome,
+                };
+                if tx.send((idx, rec)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+    });
+
+    let mut slots: Vec<Option<MetricsRecord>> = (0..n).map(|_| None).collect();
+    for (idx, rec) in rx {
+        slots[idx] = Some(rec);
+    }
+    let mut table = MetricsTable::default();
+    for slot in slots {
+        table.push(slot.expect("worker dropped a job"));
+    }
+    table
+}
+
+/// Default worker count: physical parallelism minus one for the collector.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{GpuArch, IpuArch};
+
+    fn jobs(sizes: &[usize]) -> Vec<Job> {
+        sizes
+            .iter()
+            .flat_map(|&s| {
+                [
+                    Job::new(Backend::IpuSim(IpuArch::gc200()), s.to_string(), MmShape::square(s)),
+                    Job::new(Backend::GpuModel(GpuArch::a30()), s.to_string(), MmShape::square(s)),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn runs_all_jobs_in_submission_order() {
+        let table = run_jobs(jobs(&[256, 512, 768]), 4);
+        assert_eq!(table.len(), 6);
+        let labels: Vec<&str> = table.records.iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, vec!["256", "256", "512", "512", "768", "768"]);
+    }
+
+    #[test]
+    fn single_worker_matches_parallel() {
+        let a = run_jobs(jobs(&[256, 512]), 1);
+        let b = run_jobs(jobs(&[256, 512]), 8);
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.tflops_cell(), rb.tflops_cell());
+        }
+    }
+
+    #[test]
+    fn empty_job_list_is_fine() {
+        let table = run_jobs(vec![], 4);
+        assert!(table.is_empty());
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! Workload sweep builders for the paper's figures.
+
+use crate::planner::partition::MmShape;
+
+/// One point of an aspect-ratio sweep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SweepPoint {
+    pub shape: MmShape,
+    /// log2 of A's aspect ratio m/n: negative = right-skewed (wide A),
+    /// 0 = squared, positive = left-skewed (tall A).
+    pub log2_ratio: i32,
+}
+
+impl SweepPoint {
+    pub fn label(&self) -> String {
+        match self.log2_ratio.cmp(&0) {
+            std::cmp::Ordering::Greater => format!("left 2^{}", self.log2_ratio),
+            std::cmp::Ordering::Equal => "square".to_string(),
+            std::cmp::Ordering::Less => format!("right 2^{}", -self.log2_ratio),
+        }
+    }
+}
+
+/// Fig. 4's squared-size axis: multiples of 256 from 256 to `max`.
+pub fn squared_sizes(max: usize) -> Vec<usize> {
+    (1..).map(|i| i * 256).take_while(|&s| s <= max).collect()
+}
+
+/// Fig. 5's aspect-ratio ladder: A is m x n with m*n = `mn_budget`
+/// (a power of 4 keeps both dims integral) and m/n = 4^i for
+/// i in [-half_steps, +half_steps]; B is n x k.
+///
+/// Paper: "different aspect ratios are used ... the two dimensions of A
+/// are varied. Specifically, k is varied ... to keep the aspect ratios
+/// but vary the data size."
+pub fn aspect_ratio_ladder(mn_budget_log2: u32, half_steps: u32, k: usize) -> Vec<SweepPoint> {
+    assert!(mn_budget_log2 % 2 == 0, "mn budget must be a power of 4");
+    assert!(2 * half_steps < mn_budget_log2, "ratio exceeds budget");
+    let half = (mn_budget_log2 / 2) as i32;
+    let mut out = Vec::new();
+    for i in -(half_steps as i32)..=(half_steps as i32) {
+        // m = 2^(half + i), n = 2^(half - i) -> m*n = 2^budget, m/n = 4^i
+        let m = 1usize << (half + i);
+        let n = 1usize << (half - i);
+        out.push(SweepPoint { shape: MmShape::new(m, n, k), log2_ratio: 2 * i });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squared_sizes_are_256_multiples() {
+        let s = squared_sizes(1024);
+        assert_eq!(s, vec![256, 512, 768, 1024]);
+    }
+
+    #[test]
+    fn ladder_conserves_mn_product() {
+        let pts = aspect_ratio_ladder(22, 4, 2048);
+        assert_eq!(pts.len(), 9);
+        for p in &pts {
+            assert_eq!(p.shape.m * p.shape.n, 1 << 22);
+            assert_eq!(p.shape.k, 2048);
+        }
+    }
+
+    #[test]
+    fn ladder_is_symmetric_in_ratio() {
+        let pts = aspect_ratio_ladder(22, 3, 1024);
+        let first = pts.first().unwrap();
+        let last = pts.last().unwrap();
+        assert_eq!(first.shape.m, last.shape.n);
+        assert_eq!(first.shape.n, last.shape.m);
+        assert_eq!(first.log2_ratio, -last.log2_ratio);
+    }
+
+    #[test]
+    fn center_is_square() {
+        let pts = aspect_ratio_ladder(22, 2, 512);
+        let mid = &pts[2];
+        assert_eq!(mid.shape.m, mid.shape.n);
+        assert_eq!(mid.label(), "square");
+    }
+
+    #[test]
+    fn labels_name_skew_direction() {
+        let pts = aspect_ratio_ladder(22, 1, 512);
+        assert_eq!(pts[0].label(), "right 2^2");
+        assert_eq!(pts[2].label(), "left 2^2");
+    }
+
+    #[test]
+    #[should_panic(expected = "power of 4")]
+    fn odd_budget_rejected() {
+        aspect_ratio_ladder(21, 2, 512);
+    }
+}

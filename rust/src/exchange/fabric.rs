@@ -1,0 +1,146 @@
+//! Exchange fabric timing model.
+//!
+//! The IPU exchange is a non-blocking all-to-all, but each tile has a fixed
+//! send/receive port width (GC200: 8 B/cycle receive). A BSP exchange phase
+//! therefore takes at least `max_tile_bytes / port_bytes_per_cycle` cycles,
+//! plus a congestion factor when many tiles contend (Jia et al. measure
+//! ~70% of ideal under full-chip congestion) and a fixed setup cost for
+//! loading the exchange program.
+
+use crate::arch::IpuArch;
+use crate::exchange::plan::ExchangePlan;
+
+/// Timing results for one exchange phase.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExchangeCost {
+    pub cycles: u64,
+    pub total_bytes: u64,
+    /// Bottleneck tile's byte count (the critical path).
+    pub max_tile_bytes: u64,
+    /// Effective fraction of ideal port bandwidth after congestion.
+    pub efficiency: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExchangeFabric {
+    arch: IpuArch,
+    /// Fixed cycles to launch an exchange program.
+    pub setup_cycles: u64,
+    /// Bandwidth derating at full participation (measured ~0.7 on GC2/GC200).
+    pub congestion_floor: f64,
+}
+
+impl ExchangeFabric {
+    pub fn new(arch: &IpuArch) -> ExchangeFabric {
+        ExchangeFabric { arch: arch.clone(), setup_cycles: 40, congestion_floor: 0.7 }
+    }
+
+    /// Congestion efficiency as a function of participating-tile fraction:
+    /// 1.0 for a handful of tiles, easing towards `congestion_floor` at
+    /// full participation.
+    pub fn congestion_efficiency(&self, participants: usize) -> f64 {
+        let frac = (participants as f64 / self.arch.tiles as f64).clamp(0.0, 1.0);
+        1.0 - (1.0 - self.congestion_floor) * frac
+    }
+
+    /// Cycles for one exchange phase of `plan`.
+    pub fn cost(&self, plan: &ExchangePlan) -> ExchangeCost {
+        if plan.transfers.is_empty() {
+            return ExchangeCost { cycles: 0, total_bytes: 0, max_tile_bytes: 0, efficiency: 1.0 };
+        }
+        let sent = plan.sent_per_tile(self.arch.tiles);
+        let recv = plan.recv_per_tile(self.arch.tiles);
+        // the bottleneck is whichever port (in or out) of whichever tile
+        // carries the most bytes
+        let max_tile_bytes = sent
+            .iter()
+            .chain(recv.iter())
+            .copied()
+            .max()
+            .unwrap_or(0);
+        let efficiency = self.congestion_efficiency(plan.participants());
+        let port = self.arch.exchange_bytes_per_tile_cycle * efficiency;
+        let cycles = self.setup_cycles + (max_tile_bytes as f64 / port).ceil() as u64;
+        ExchangeCost {
+            cycles,
+            total_bytes: plan.total_bytes(),
+            max_tile_bytes,
+            efficiency,
+        }
+    }
+
+    /// Seconds for one exchange phase.
+    pub fn cost_secs(&self, plan: &ExchangePlan) -> f64 {
+        self.arch.cycles_to_secs(self.cost(plan).cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exchange::plan::ExchangePattern;
+
+    fn fabric() -> ExchangeFabric {
+        ExchangeFabric::new(&IpuArch::gc200())
+    }
+
+    #[test]
+    fn empty_plan_is_free() {
+        let p = ExchangePlan::new("e", ExchangePattern::AllToAll);
+        let c = fabric().cost(&p);
+        assert_eq!(c.cycles, 0);
+        assert_eq!(c.total_bytes, 0);
+    }
+
+    #[test]
+    fn single_transfer_cost() {
+        let mut p = ExchangePlan::new("one", ExchangePattern::AllToAll);
+        p.add(0, 1, 8_000);
+        let f = fabric();
+        let c = f.cost(&p);
+        // 2 participants of 1472 -> efficiency ~1.0; 8000 B / 8 B/cy = 1000
+        assert!(c.efficiency > 0.99);
+        assert!(c.cycles >= 1000 && c.cycles < 1100, "{}", c.cycles);
+    }
+
+    #[test]
+    fn bottleneck_is_max_port_not_total() {
+        // tile 0 fans out to 4 tiles: its send port is the bottleneck
+        let p = ExchangePlan::scatter("s", 0, &[1, 2, 3, 4], 1000);
+        let c = fabric().cost(&p);
+        assert_eq!(c.max_tile_bytes, 4000);
+        assert_eq!(c.total_bytes, 4000);
+
+        // 4 disjoint pairs move the same total with no shared bottleneck
+        let mut q = ExchangePlan::new("p", ExchangePattern::AllToAll);
+        for i in 0..4 {
+            q.add(2 * i, 2 * i + 1, 1000);
+        }
+        let cq = fabric().cost(&q);
+        assert_eq!(cq.max_tile_bytes, 1000);
+        assert!(cq.cycles < c.cycles);
+    }
+
+    #[test]
+    fn congestion_reduces_efficiency() {
+        let f = fabric();
+        assert!(f.congestion_efficiency(2) > f.congestion_efficiency(1472));
+        assert!((f.congestion_efficiency(1472) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_chip_broadcast_is_derated() {
+        let tiles: Vec<usize> = (1..1472).collect();
+        let p = ExchangePlan::scatter("all", 0, &tiles, 100);
+        let c = fabric().cost(&p);
+        assert!(c.efficiency < 0.75);
+    }
+
+    #[test]
+    fn setup_cost_floors_small_exchanges() {
+        let mut p = ExchangePlan::new("tiny", ExchangePattern::AllToAll);
+        p.add(0, 1, 8);
+        let c = fabric().cost(&p);
+        assert!(c.cycles >= 40, "{}", c.cycles);
+    }
+}

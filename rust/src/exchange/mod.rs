@@ -1,0 +1,12 @@
+//! Exchange fabric — the IPU's all-to-all interconnect between tiles.
+//!
+//! BSP phase 3 (paper Fig. 3, yellow): after a sync, tiles exchange data
+//! over the fabric. `plan` describes *what* moves (transfers, with builders
+//! for the broadcast/reduce patterns a matmul needs); `fabric` prices *how
+//! long* it takes on a given [`crate::arch::IpuArch`].
+
+pub mod fabric;
+pub mod plan;
+
+pub use fabric::ExchangeFabric;
+pub use plan::{ExchangePattern, ExchangePlan, Transfer};

@@ -1,0 +1,218 @@
+//! Exchange plans: the set of tile-to-tile transfers for one BSP exchange
+//! phase, plus builders for the patterns a distributed matmul uses
+//! (block scatter, row/column broadcast, partial-sum gather).
+
+use anyhow::{bail, Result};
+
+/// One point-to-point transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transfer {
+    pub src_tile: usize,
+    pub dst_tile: usize,
+    pub bytes: u64,
+}
+
+/// Pattern tag, used by the profiler and the congestion model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangePattern {
+    /// Host/initial scatter of operand blocks to their home tiles.
+    Scatter,
+    /// Broadcast of operand blocks along a partition axis.
+    Broadcast,
+    /// Gather of partial sums to reducer tiles.
+    ReduceGather,
+    /// General rearrangement.
+    AllToAll,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExchangePlan {
+    pub name: String,
+    pub pattern: ExchangePattern,
+    pub transfers: Vec<Transfer>,
+}
+
+impl ExchangePlan {
+    pub fn new(name: &str, pattern: ExchangePattern) -> ExchangePlan {
+        ExchangePlan { name: name.to_string(), pattern, transfers: Vec::new() }
+    }
+
+    pub fn add(&mut self, src_tile: usize, dst_tile: usize, bytes: u64) {
+        // self-transfers are free on an IPU (data already resident);
+        // plans never include them so the fabric cost is honest
+        if src_tile != dst_tile && bytes > 0 {
+            self.transfers.push(Transfer { src_tile, dst_tile, bytes });
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.transfers.iter().map(|t| t.bytes).sum()
+    }
+
+    /// Bytes leaving each tile (index = tile id, sized to `tiles`).
+    pub fn sent_per_tile(&self, tiles: usize) -> Vec<u64> {
+        let mut out = vec![0u64; tiles];
+        for t in &self.transfers {
+            out[t.src_tile] += t.bytes;
+        }
+        out
+    }
+
+    /// Bytes arriving at each tile.
+    pub fn recv_per_tile(&self, tiles: usize) -> Vec<u64> {
+        let mut out = vec![0u64; tiles];
+        for t in &self.transfers {
+            out[t.dst_tile] += t.bytes;
+        }
+        out
+    }
+
+    /// Conservation + bounds check: every byte sent is received, and all
+    /// endpoints are valid tiles. (The proptest suite leans on this.)
+    pub fn validate(&self, tiles: usize) -> Result<()> {
+        for t in &self.transfers {
+            if t.src_tile >= tiles || t.dst_tile >= tiles {
+                bail!(
+                    "plan '{}': transfer {}->{} outside tile range 0..{}",
+                    self.name,
+                    t.src_tile,
+                    t.dst_tile,
+                    tiles
+                );
+            }
+            if t.src_tile == t.dst_tile {
+                bail!("plan '{}': self-transfer on tile {}", self.name, t.src_tile);
+            }
+        }
+        let sent: u64 = self.sent_per_tile(tiles).iter().sum();
+        let recv: u64 = self.recv_per_tile(tiles).iter().sum();
+        if sent != recv {
+            bail!("plan '{}': sent {} != received {}", self.name, sent, recv);
+        }
+        Ok(())
+    }
+
+    /// Number of distinct tiles participating (as sender or receiver).
+    pub fn participants(&self) -> usize {
+        let mut tiles: Vec<usize> = self
+            .transfers
+            .iter()
+            .flat_map(|t| [t.src_tile, t.dst_tile])
+            .collect();
+        tiles.sort_unstable();
+        tiles.dedup();
+        tiles.len()
+    }
+
+    // ---- builders for the matmul patterns -------------------------------
+
+    /// Scatter `block_bytes` from a source tile (host gateway tile 0 in our
+    /// model) to each tile in `dst_tiles`.
+    pub fn scatter(name: &str, src: usize, dst_tiles: &[usize], block_bytes: u64) -> ExchangePlan {
+        let mut p = ExchangePlan::new(name, ExchangePattern::Scatter);
+        for &d in dst_tiles {
+            p.add(src, d, block_bytes);
+        }
+        p
+    }
+
+    /// Broadcast: each tile in `src_tiles` sends its block to `fanout`
+    /// sibling tiles computed by the caller-provided mapping.
+    pub fn broadcast(
+        name: &str,
+        src_tiles: &[usize],
+        dsts_of: impl Fn(usize) -> Vec<usize>,
+        block_bytes: u64,
+    ) -> ExchangePlan {
+        let mut p = ExchangePlan::new(name, ExchangePattern::Broadcast);
+        for &s in src_tiles {
+            for d in dsts_of(s) {
+                p.add(s, d, block_bytes);
+            }
+        }
+        p
+    }
+
+    /// Reduce-gather: each group of `srcs` sends a partial block to its
+    /// reducer tile.
+    pub fn reduce_gather(
+        name: &str,
+        groups: &[(usize, Vec<usize>)], // (reducer, partial-holders)
+        block_bytes: u64,
+    ) -> ExchangePlan {
+        let mut p = ExchangePlan::new(name, ExchangePattern::ReduceGather);
+        for (reducer, srcs) in groups {
+            for &s in srcs {
+                p.add(s, *reducer, block_bytes);
+            }
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_skips_self_and_empty() {
+        let mut p = ExchangePlan::new("t", ExchangePattern::AllToAll);
+        p.add(1, 1, 100);
+        p.add(1, 2, 0);
+        p.add(1, 2, 10);
+        assert_eq!(p.transfers.len(), 1);
+        assert_eq!(p.total_bytes(), 10);
+    }
+
+    #[test]
+    fn per_tile_accounting() {
+        let mut p = ExchangePlan::new("t", ExchangePattern::AllToAll);
+        p.add(0, 1, 5);
+        p.add(0, 2, 7);
+        p.add(2, 1, 3);
+        assert_eq!(p.sent_per_tile(3), vec![12, 0, 3]);
+        assert_eq!(p.recv_per_tile(3), vec![0, 8, 7]);
+        assert_eq!(p.participants(), 3);
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut p = ExchangePlan::new("t", ExchangePattern::AllToAll);
+        p.add(0, 9, 1);
+        assert!(p.validate(4).is_err());
+        assert!(p.validate(10).is_ok());
+    }
+
+    #[test]
+    fn scatter_builder() {
+        let p = ExchangePlan::scatter("s", 0, &[1, 2, 3], 64);
+        assert_eq!(p.transfers.len(), 3);
+        assert_eq!(p.total_bytes(), 192);
+        p.validate(4).unwrap();
+    }
+
+    #[test]
+    fn scatter_to_self_tile_is_free() {
+        let p = ExchangePlan::scatter("s", 0, &[0, 1], 64);
+        assert_eq!(p.transfers.len(), 1); // 0->0 dropped
+    }
+
+    #[test]
+    fn broadcast_builder() {
+        // tiles 0,1 each broadcast to the two tiles "above" them
+        let p = ExchangePlan::broadcast("b", &[0, 1], |s| vec![s + 2, s + 4], 32);
+        assert_eq!(p.transfers.len(), 4);
+        assert_eq!(p.total_bytes(), 128);
+        p.validate(6).unwrap();
+    }
+
+    #[test]
+    fn reduce_gather_builder() {
+        let groups = vec![(0usize, vec![1, 2, 3]), (4usize, vec![5, 6])];
+        let p = ExchangePlan::reduce_gather("r", &groups, 16);
+        assert_eq!(p.transfers.len(), 5);
+        assert_eq!(p.recv_per_tile(7)[0], 48);
+        assert_eq!(p.recv_per_tile(7)[4], 32);
+        p.validate(7).unwrap();
+    }
+}

@@ -1,0 +1,117 @@
+//! F4 — paper Fig. 4: squared MM throughput vs problem size, IPU and GPU,
+//! against their theoretical peaks.
+//!
+//! Expected shape (paper §5.1): the GPU approaches its 10.3 TFlop/s peak
+//! (9.7 achieved); the IPU reaches ~44.2 of 62.5 TFlop/s and *wins while
+//! the problem fits*, then hits the 3584^2 memory wall while the GPU keeps
+//! going to much larger sizes.
+
+use crate::arch::{GpuArch, IpuArch};
+use crate::coordinator::device::Backend;
+use crate::coordinator::metrics::MetricsTable;
+use crate::coordinator::runner::{run_jobs, Job};
+use crate::coordinator::sweep::squared_sizes;
+use crate::planner::partition::MmShape;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct Fig4Result {
+    pub metrics: MetricsTable,
+    pub ipu_peak: f64,
+    pub gpu_peak: f64,
+    /// Largest square that fit the IPU in this sweep.
+    pub ipu_max_square: usize,
+    /// Best IPU throughput seen (the paper's 44.2 TFlop/s headline).
+    pub ipu_best_tflops: f64,
+    pub gpu_best_tflops: f64,
+}
+
+/// Run the Fig. 4 sweep up to `max_size` (paper plots past the IPU wall).
+pub fn run(ipu: &IpuArch, gpu: &GpuArch, max_size: usize, workers: usize) -> Fig4Result {
+    let mut jobs = Vec::new();
+    for s in squared_sizes(max_size) {
+        let shape = MmShape::square(s);
+        jobs.push(Job::new(Backend::IpuSim(ipu.clone()), s.to_string(), shape));
+        jobs.push(Job::new(Backend::GpuModel(gpu.clone()), s.to_string(), shape));
+    }
+    let metrics = run_jobs(jobs, workers);
+
+    let ipu_name = Backend::IpuSim(ipu.clone()).name();
+    let gpu_name = Backend::GpuModel(gpu.clone()).name();
+    let ipu_max_square = metrics
+        .for_backend(&ipu_name)
+        .iter()
+        .filter(|r| !r.outcome.is_oom())
+        .filter_map(|r| r.label.parse::<usize>().ok())
+        .max()
+        .unwrap_or(0);
+    let best = |name: &str| {
+        metrics
+            .for_backend(name)
+            .iter()
+            .filter_map(|r| r.outcome.tflops())
+            .fold(0.0f64, f64::max)
+    };
+    Fig4Result {
+        ipu_best_tflops: best(&ipu_name),
+        gpu_best_tflops: best(&gpu_name),
+        ipu_max_square,
+        ipu_peak: ipu.peak_fp32_tflops(),
+        gpu_peak: gpu.peak_fp32_tflops(),
+        metrics,
+    }
+}
+
+impl Fig4Result {
+    pub fn to_table(&self) -> Table {
+        let mut t = self.metrics.to_table(&format!(
+            "Fig. 4 — squared MM (peaks: IPU {:.1}, GPU {:.1} TFlop/s)",
+            self.ipu_peak, self.gpu_peak
+        ));
+        t.row(&[
+            "best/peak".to_string(),
+            format!("{:.1}%", 100.0 * self.ipu_best_tflops / self.ipu_peak),
+            format!("{:.1}%", 100.0 * self.gpu_best_tflops / self.gpu_peak),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_shape_holds() {
+        let r = run(&IpuArch::gc200(), &GpuArch::a30(), 5120, 4);
+        // paper: IPU max square 3584 (we land 3584 at 256-granularity)
+        assert_eq!(r.ipu_max_square, 3584, "IPU wall at {}", r.ipu_max_square);
+        // paper: 44.2 of 62.5 (70.7%); accept the shape within a band
+        let eff = r.ipu_best_tflops / r.ipu_peak;
+        assert!((0.60..=0.80).contains(&eff), "IPU best/peak {eff}");
+        // paper: GPU 9.7 of 10.3 (94%)
+        let geff = r.gpu_best_tflops / r.gpu_peak;
+        assert!(geff > 0.85, "GPU best/peak {geff}");
+        // IPU wins at its max square; GPU survives past the wall
+        let ipu_name = Backend::IpuSim(IpuArch::gc200()).name();
+        let gpu_name = Backend::GpuModel(GpuArch::a30()).name();
+        let at = |name: &str, label: &str| {
+            r.metrics
+                .for_backend(name)
+                .iter()
+                .find(|x| x.label == label)
+                .and_then(|x| x.outcome.tflops())
+        };
+        assert!(at(&ipu_name, "3584").unwrap() > at(&gpu_name, "3584").unwrap());
+        assert!(at(&ipu_name, "4096").is_none());
+        assert!(at(&gpu_name, "4096").is_some());
+    }
+
+    #[test]
+    fn table_renders_with_peak_row() {
+        let r = run(&IpuArch::gc200(), &GpuArch::a30(), 1024, 2);
+        let ascii = r.to_table().to_ascii();
+        assert!(ascii.contains("best/peak"));
+        assert!(ascii.contains("Fig. 4"));
+    }
+}

@@ -1,0 +1,151 @@
+//! F5 — paper Fig. 5: skewed MM throughput vs A's aspect ratio, IPU
+//! (left panel) and GPU (right panel), for several k.
+//!
+//! Expected shape (paper §5.1): the GPU valley is symmetric; the IPU's is
+//! asymmetric — the right-skewed (wide-A, huge reduction) side collapses
+//! much harder than the left-skewed side, driven by the planner's
+//! reduction splitting (Finding 2/3).
+
+use crate::arch::{GpuArch, IpuArch};
+use crate::coordinator::device::Backend;
+use crate::coordinator::metrics::MetricsTable;
+use crate::coordinator::runner::{run_jobs, Job};
+use crate::coordinator::sweep::{aspect_ratio_ladder, SweepPoint};
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct Fig5Result {
+    pub metrics: MetricsTable,
+    pub points: Vec<SweepPoint>,
+    pub ks: Vec<usize>,
+}
+
+/// Run the Fig. 5 ladder (m*n = 2^`mn_budget_log2`) for each k.
+pub fn run(
+    ipu: &IpuArch,
+    gpu: &GpuArch,
+    mn_budget_log2: u32,
+    half_steps: u32,
+    ks: &[usize],
+    workers: usize,
+) -> Fig5Result {
+    let mut jobs = Vec::new();
+    let mut points = Vec::new();
+    for &k in ks {
+        for p in aspect_ratio_ladder(mn_budget_log2, half_steps, k) {
+            let label = format!("k={k} {}", p.label());
+            jobs.push(Job::new(Backend::IpuSim(ipu.clone()), label.clone(), p.shape));
+            jobs.push(Job::new(Backend::GpuModel(gpu.clone()), label, p.shape));
+            points.push(p);
+        }
+    }
+    Fig5Result {
+        metrics: run_jobs(jobs, workers),
+        points,
+        ks: ks.to_vec(),
+    }
+}
+
+/// Skew-drop summary for one backend: (left_drop, right_drop) as
+/// fractions of the squared throughput at aspect ratio 2^`log2_ratio`
+/// (pass `None` for the ladder's outermost ratio).
+pub fn drops(
+    result: &Fig5Result,
+    backend_name: &str,
+    k: usize,
+    log2_ratio: Option<i32>,
+) -> Option<(f64, f64)> {
+    let recs = result.metrics.for_backend(backend_name);
+    let get = |label: &str| {
+        recs.iter()
+            .find(|r| r.label == format!("k={k} {label}"))
+            .and_then(|r| r.outcome.tflops())
+    };
+    let ratio = log2_ratio.unwrap_or_else(|| {
+        result
+            .points
+            .iter()
+            .map(|p| p.log2_ratio)
+            .max()
+            .unwrap_or(0)
+    });
+    let square = get("square")?;
+    let left = get(&format!("left 2^{ratio}"))?;
+    let right = get(&format!("right 2^{ratio}"))?;
+    Some((1.0 - left / square, 1.0 - right / square))
+}
+
+impl Fig5Result {
+    pub fn to_table(&self) -> Table {
+        self.metrics
+            .to_table("Fig. 5 — skewed MM across A aspect ratios (left panel IPU, right panel GPU)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_run() -> Fig5Result {
+        run(&IpuArch::gc200(), &GpuArch::a30(), 22, 4, &[2048], 4)
+    }
+
+    #[test]
+    fn ipu_asymmetry_and_gpu_symmetry() {
+        let r = small_run();
+        let ipu = Backend::IpuSim(IpuArch::gc200()).name();
+        let gpu = Backend::GpuModel(GpuArch::a30()).name();
+
+        // mid-ladder (ratio 2^4): the paper's "drop much more severe" on
+        // the right side shows as a large right-minus-left drop gap on the
+        // IPU but a small one on the GPU
+        let (ipu_left, ipu_right) = drops(&r, &ipu, 2048, Some(4)).unwrap();
+        let (gpu_left, gpu_right) = drops(&r, &gpu, 2048, Some(4)).unwrap();
+        let ipu_gap = ipu_right - ipu_left;
+        let gpu_gap = (gpu_right - gpu_left).abs();
+        assert!(ipu_gap > 0.15, "IPU right-left gap {ipu_gap}");
+        assert!(ipu_gap > gpu_gap, "IPU gap {ipu_gap} vs GPU gap {gpu_gap}");
+
+        // extremes: both IPU sides drop (paper: decreases on both sides),
+        // and the GPU valley is deep on both sides too
+        let (ipu_l8, ipu_r8) = drops(&r, &ipu, 2048, None).unwrap();
+        let (gpu_l8, gpu_r8) = drops(&r, &gpu, 2048, None).unwrap();
+        assert!(ipu_l8 > 0.1 && ipu_r8 > 0.1, "{ipu_l8} / {ipu_r8}");
+        assert!(ipu_r8 > ipu_l8, "right remains worse at the extreme");
+        assert!(gpu_l8 > 0.15 && gpu_r8 > 0.15, "{gpu_l8} / {gpu_r8}");
+    }
+
+    #[test]
+    fn ipu_beats_gpu_wherever_it_fits() {
+        // paper §5.2: "the IPU surpasses the GPU ... for all aspect ratios
+        // as long as they fit into the IPU's In-Processor memory"
+        let r = small_run();
+        let ipu = Backend::IpuSim(IpuArch::gc200()).name();
+        let gpu = Backend::GpuModel(GpuArch::a30()).name();
+        for p in &r.points {
+            let label = format!("k=2048 {}", p.label());
+            let ipu_t = r
+                .metrics
+                .for_backend(&ipu)
+                .iter()
+                .find(|x| x.label == label)
+                .and_then(|x| x.outcome.tflops());
+            let gpu_t = r
+                .metrics
+                .for_backend(&gpu)
+                .iter()
+                .find(|x| x.label == label)
+                .and_then(|x| x.outcome.tflops())
+                .unwrap();
+            if let Some(ipu_t) = ipu_t {
+                assert!(ipu_t > gpu_t, "{label}: IPU {ipu_t} vs GPU {gpu_t}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_has_rows_for_every_point() {
+        let r = small_run();
+        assert_eq!(r.to_table().n_rows(), 9);
+    }
+}

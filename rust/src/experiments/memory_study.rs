@@ -1,0 +1,128 @@
+//! M1 — paper §2.4 memory analysis: the largest squared MM per IPU
+//! generation, its tensor footprint, and the fraction of In-Processor
+//! memory that is actual tensor data vs. overhead.
+//!
+//! Paper anchors: GC2 max 2944^2 (104 MB = 35% of ~300 MB SRAM);
+//! GC200 max 3584^2 (154 MB = 17% of 918 MB SRAM). The binding constraint
+//! is the *overhead* (exchange code, chunk buffers), not tensor bytes.
+
+use crate::arch::IpuArch;
+use crate::planner::partition::MmShape;
+use crate::planner::search::{max_fitting_square, search};
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct MemoryRow {
+    pub arch_name: String,
+    pub max_square: usize,
+    pub paper_max_square: usize,
+    pub tensor_mb: f64,
+    pub sram_mb: f64,
+    pub tensor_fraction: f64,
+    /// Heaviest-tile occupancy at the max square (the binding constraint).
+    pub max_tile_fraction: f64,
+    pub tflops_at_max: f64,
+    pub peak_fraction: f64,
+}
+
+pub fn run(archs: &[(IpuArch, usize)]) -> Vec<MemoryRow> {
+    archs
+        .iter()
+        .map(|(arch, paper_max)| {
+            let max_square = max_fitting_square(arch, 128, 8192);
+            let shape = MmShape::square(max_square);
+            let plan = search(arch, shape).expect("max square must fit");
+            let tensor_mb = shape.tensor_bytes() as f64 / 1e6;
+            let sram_mb = arch.total_sram_bytes() as f64 / 1e6;
+            MemoryRow {
+                arch_name: arch.name.to_string(),
+                max_square,
+                paper_max_square: *paper_max,
+                tensor_mb,
+                sram_mb,
+                tensor_fraction: tensor_mb / sram_mb,
+                max_tile_fraction: plan.cost.tile_bytes_total as f64
+                    / arch.tile_sram_bytes as f64,
+                tflops_at_max: plan.tflops(arch),
+                peak_fraction: plan.tflops(arch) / arch.peak_fp32_tflops(),
+            }
+        })
+        .collect()
+}
+
+pub fn default_archs() -> Vec<(IpuArch, usize)> {
+    vec![
+        (IpuArch::gc200(), crate::arch::ipu::paper::GC200_MAX_SQUARE),
+        (IpuArch::gc2(), crate::arch::ipu::paper::GC2_MAX_SQUARE),
+    ]
+}
+
+pub fn to_table(rows: &[MemoryRow]) -> Table {
+    let mut t = Table::new(
+        "Memory study (paper §2.4: GC200 3584^2 = 154 MB = 17%; GC2 2944^2 = 104 MB = 35%)",
+        &[
+            "arch", "max square", "paper", "tensors MB", "SRAM MB",
+            "tensor %", "max-tile %", "TFlop/s", "of peak",
+        ],
+    );
+    for r in rows {
+        t.row(&[
+            r.arch_name.clone(),
+            r.max_square.to_string(),
+            r.paper_max_square.to_string(),
+            format!("{:.1}", r.tensor_mb),
+            format!("{:.0}", r.sram_mb),
+            format!("{:.1}%", r.tensor_fraction * 100.0),
+            format!("{:.1}%", r.max_tile_fraction * 100.0),
+            format!("{:.2}", r.tflops_at_max),
+            format!("{:.1}%", r.peak_fraction * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gc200_wall_matches_paper() {
+        let rows = run(&[(IpuArch::gc200(), 3584)]);
+        let r = &rows[0];
+        // paper: 3584; accept one 128-step of slack
+        assert!(
+            (3456..=3712).contains(&r.max_square),
+            "GC200 max square {}",
+            r.max_square
+        );
+        // paper: 154 MB = 17% of SRAM (tensor bytes are NOT the constraint)
+        assert!(r.tensor_fraction < 0.30, "tensor fraction {}", r.tensor_fraction);
+        // the heaviest tile is nearly full — that's the real wall
+        assert!(r.max_tile_fraction > 0.85, "max tile {}", r.max_tile_fraction);
+        // paper: 44.2 / 62.5 = 70.7% at the wall
+        assert!((0.55..=0.85).contains(&r.peak_fraction), "{}", r.peak_fraction);
+    }
+
+    #[test]
+    fn gc2_wall_matches_jia() {
+        let rows = run(&[(IpuArch::gc2(), 2944)]);
+        let r = &rows[0];
+        // paper/Jia: 2944 at 60.7% of 31.1 TFlop/s
+        assert!(
+            (2688..=3200).contains(&r.max_square),
+            "GC2 max square {}",
+            r.max_square
+        );
+        assert!((0.45..=0.75).contains(&r.peak_fraction), "{}", r.peak_fraction);
+        // GC2's tensor fraction is higher than GC200's (35% vs 17%)
+        let gc200 = &run(&[(IpuArch::gc200(), 3584)])[0];
+        assert!(r.tensor_fraction > gc200.tensor_fraction);
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = to_table(&run(&default_archs()));
+        assert_eq!(t.n_rows(), 2);
+        assert!(t.to_ascii().contains("GC200"));
+    }
+}

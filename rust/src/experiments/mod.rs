@@ -1,0 +1,29 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//!
+//! Each driver produces structured rows plus a rendered table so the same
+//! code serves the CLI, the criterion-style benches, the integration
+//! tests, and EXPERIMENTS.md generation:
+//!
+//! | id | paper artifact                          | module        |
+//! |----|------------------------------------------|---------------|
+//! | T1 | Table 1 spec comparison                  | `table1`      |
+//! | F4 | Fig. 4 squared MM, IPU vs GPU            | `fig4`        |
+//! | F5 | Fig. 5 skewed MM sweep                   | `fig5`        |
+//! | V1 | §5.1 vertex census 5542/5762/31743       | `vertices`    |
+//! | M1 | §2.4 memory wall 3584/2944               | `memory_study`|
+//! | P1 | Fig. 3 BSP phase breakdown               | `phases`      |
+//! | X1 | §6 streaming-memory extension            | `streaming`   |
+//! | X2 | §6 multi-IPU extension                   | `multi_ipu_x` |
+//! | E2E| end-to-end driver with real PJRT numerics| `e2e`         |
+
+pub mod ablation;
+pub mod e2e;
+pub mod fig4;
+pub mod fp16;
+pub mod fig5;
+pub mod memory_study;
+pub mod multi_ipu_x;
+pub mod phases;
+pub mod streaming;
+pub mod table1;
+pub mod vertices;

@@ -1,0 +1,91 @@
+//! X2 — §6 future work: scaling to the M2000's four GC200s.
+
+use crate::arch::IpuArch;
+use crate::multi_ipu::{MultiIpu, MultiIpuReport};
+use crate::planner::partition::MmShape;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    pub chips: usize,
+    pub report: Option<MultiIpuReport>,
+    pub max_square: usize,
+}
+
+/// Scaling study at a fixed shape + capacity study per chip count.
+pub fn run(arch: &IpuArch, shape: MmShape, chip_counts: &[usize]) -> Vec<ScalingRow> {
+    chip_counts
+        .iter()
+        .map(|&chips| {
+            let pod = MultiIpu::new(arch.clone(), chips);
+            ScalingRow {
+                chips,
+                report: pod.simulate_mm(shape).ok(),
+                max_square: pod.max_fitting_square(256, 16384),
+            }
+        })
+        .collect()
+}
+
+pub fn to_table(rows: &[ScalingRow], shape: MmShape) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Multi-IPU scaling (§6) at {}x{}x{} (M2000 pod, IPU-Link)",
+            shape.m, shape.n, shape.k
+        ),
+        &["chips", "TFlop/s", "speedup", "link time", "max square"],
+    );
+    let base = rows
+        .first()
+        .and_then(|r| r.report.as_ref())
+        .map(|r| r.tflops)
+        .unwrap_or(1.0);
+    for r in rows {
+        match &r.report {
+            Some(rep) => t.row(&[
+                r.chips.to_string(),
+                format!("{:.2}", rep.tflops),
+                format!("{:.2}x", rep.tflops / base),
+                format!("{:.1}%", rep.link_fraction * 100.0),
+                r.max_square.to_string(),
+            ]),
+            None => t.row(&[
+                r.chips.to_string(),
+                "OOM".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                r.max_square.to_string(),
+            ]),
+        };
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pod_scales_throughput_and_capacity() {
+        let rows = run(&IpuArch::gc200(), MmShape::square(3584), &[1, 2, 4]);
+        let t1 = rows[0].report.as_ref().unwrap().tflops;
+        let t4 = rows[2].report.as_ref().unwrap().tflops;
+        assert!(t4 > 1.5 * t1, "4-chip {t4} vs 1-chip {t1}");
+        assert!(rows[2].max_square > rows[0].max_square);
+    }
+
+    #[test]
+    fn speedup_is_sublinear_due_to_link() {
+        let rows = run(&IpuArch::gc200(), MmShape::square(3584), &[1, 4]);
+        let t1 = rows[0].report.as_ref().unwrap().tflops;
+        let r4 = rows[1].report.as_ref().unwrap();
+        assert!(r4.tflops / t1 < 4.0);
+        assert!(r4.link_fraction > 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = run(&IpuArch::gc200(), MmShape::square(2048), &[1, 2]);
+        assert_eq!(to_table(&rows, MmShape::square(2048)).n_rows(), 2);
+    }
+}

@@ -1,0 +1,125 @@
+//! P1 — paper Fig. 3: BSP phase structure (compute / sync / exchange) of
+//! a matmul as the PopVision timeline shows it.
+
+use crate::arch::IpuArch;
+use crate::planner::partition::MmShape;
+use crate::profiler::popvision::PopVisionReport;
+use crate::sim::engine::SimEngine;
+use crate::sim::report::SimReport;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub label: String,
+    pub compute: f64,
+    pub sync: f64,
+    pub exchange: f64,
+    pub supersteps: usize,
+    pub tile_utilization: f64,
+}
+
+/// Profile the paper's flagship shape plus a small and a skewed one.
+pub fn default_shapes() -> Vec<(String, MmShape)> {
+    vec![
+        ("squared 3584".to_string(), MmShape::square(3584)),
+        ("squared 1024".to_string(), MmShape::square(1024)),
+        ("right-skewed".to_string(), MmShape::new(512, 16384, 2048)),
+    ]
+}
+
+pub fn run(arch: &IpuArch, shapes: &[(String, MmShape)]) -> Vec<(PhaseRow, SimReport)> {
+    let engine = SimEngine::new(arch.clone());
+    shapes
+        .iter()
+        .map(|(label, shape)| {
+            let r = engine.simulate_mm(*shape).expect("phase shapes must fit");
+            let (c, s, e) = r.trace.phase_fractions();
+            (
+                PhaseRow {
+                    label: label.clone(),
+                    compute: c,
+                    sync: s,
+                    exchange: e,
+                    supersteps: r.trace.superstep_count(),
+                    tile_utilization: r.trace.tile_utilization(),
+                },
+                r,
+            )
+        })
+        .collect()
+}
+
+pub fn to_table(rows: &[(PhaseRow, SimReport)]) -> Table {
+    let mut t = Table::new(
+        "BSP phase breakdown (paper Fig. 3: compute red / sync blue / exchange yellow)",
+        &["shape", "compute", "sync", "exchange", "supersteps", "tile util"],
+    );
+    for (r, _) in rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.1}%", r.compute * 100.0),
+            format!("{:.1}%", r.sync * 100.0),
+            format!("{:.1}%", r.exchange * 100.0),
+            r.supersteps.to_string(),
+            format!("{:.1}%", r.tile_utilization * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Full-text profile (timeline bar + census + memory) of one shape.
+pub fn profile_text(arch: &IpuArch, shape: MmShape) -> String {
+    let engine = SimEngine::new(arch.clone());
+    match engine.simulate_mm(shape) {
+        Ok(r) => PopVisionReport::new(&r).to_text(),
+        Err(e) => format!("planner: {e}\n"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_partition_unity() {
+        let rows = run(&IpuArch::gc200(), &default_shapes());
+        for (r, _) in &rows {
+            let total = r.compute + r.sync + r.exchange;
+            assert!((total - 1.0).abs() < 1e-9, "{}: {total}", r.label);
+        }
+    }
+
+    #[test]
+    fn compute_dominates_large_squared() {
+        let rows = run(&IpuArch::gc200(), &default_shapes());
+        let squared = &rows[0].0;
+        assert!(squared.compute > 0.5, "compute {}", squared.compute);
+        assert!(squared.exchange > 0.05, "exchange {}", squared.exchange);
+    }
+
+    #[test]
+    fn skewed_shifts_cycles_to_exchange() {
+        let rows = run(&IpuArch::gc200(), &default_shapes());
+        let squared = &rows[0].0;
+        let skewed = &rows[2].0;
+        assert!(
+            skewed.exchange > squared.exchange,
+            "skewed exchange {} vs squared {}",
+            skewed.exchange,
+            squared.exchange
+        );
+    }
+
+    #[test]
+    fn profile_text_is_complete() {
+        let text = profile_text(&IpuArch::gc200(), MmShape::square(1024));
+        assert!(text.contains("compute"));
+        assert!(text.contains("vertex census"));
+    }
+
+    #[test]
+    fn table_renders() {
+        let rows = run(&IpuArch::gc200(), &default_shapes());
+        assert_eq!(to_table(&rows).n_rows(), 3);
+    }
+}

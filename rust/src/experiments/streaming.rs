@@ -1,0 +1,93 @@
+//! X1 — §6 future work: streaming-memory MM past the In-Processor wall.
+
+use crate::arch::IpuArch;
+use crate::ipu::streaming::{StreamingMm, StreamingReport};
+use crate::planner::partition::MmShape;
+use crate::planner::search::search;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct StreamingRow {
+    pub size: usize,
+    pub resident_tflops: Option<f64>,
+    pub streamed: Option<StreamingReport>,
+}
+
+/// Sweep squares across the wall: resident (when it fits) vs streamed.
+pub fn run(arch: &IpuArch, sizes: &[usize]) -> Vec<StreamingRow> {
+    let streaming = StreamingMm::new(arch.clone());
+    sizes
+        .iter()
+        .map(|&size| {
+            let shape = MmShape::square(size);
+            StreamingRow {
+                size,
+                resident_tflops: search(arch, shape).ok().map(|p| p.tflops(arch)),
+                streamed: streaming.simulate_mm(shape).ok(),
+            }
+        })
+        .collect()
+}
+
+pub fn default_sizes() -> Vec<usize> {
+    vec![2048, 3584, 4096, 8192, 16384, 32768]
+}
+
+pub fn to_table(rows: &[StreamingRow]) -> Table {
+    let mut t = Table::new(
+        "Streaming memory extension (§6): resident vs DRAM-staged TFlop/s",
+        &["size", "resident", "streamed", "panels", "stream-bound"],
+    );
+    for r in rows {
+        t.row(&[
+            r.size.to_string(),
+            r.resident_tflops
+                .map(|t| format!("{t:.2}"))
+                .unwrap_or_else(|| "OOM".to_string()),
+            r.streamed
+                .map(|s| format!("{:.2}", s.tflops))
+                .unwrap_or_else(|| "OOM".to_string()),
+            r.streamed
+                .map(|s| s.panels_total.to_string())
+                .unwrap_or_default(),
+            r.streamed
+                .map(|s| {
+                    if s.stream_bound_fraction > 0.5 { "yes" } else { "no" }.to_string()
+                })
+                .unwrap_or_default(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streaming_extends_capacity() {
+        let rows = run(&IpuArch::gc200(), &default_sizes());
+        // inside the wall: resident works
+        assert!(rows[1].resident_tflops.is_some()); // 3584
+        // past the wall: resident OOMs, streaming still goes
+        let past = rows.iter().find(|r| r.size == 8192).unwrap();
+        assert!(past.resident_tflops.is_none());
+        assert!(past.streamed.is_some());
+    }
+
+    #[test]
+    fn streamed_throughput_is_bandwidth_limited() {
+        let rows = run(&IpuArch::gc200(), &[16384]);
+        let s = rows[0].streamed.unwrap();
+        assert!(s.stream_bound_fraction > 0.5);
+        assert!(s.tflops < s.panel_tflops);
+    }
+
+    #[test]
+    fn table_marks_oom_correctly() {
+        let t = to_table(&run(&IpuArch::gc200(), &[3584, 8192]));
+        let ascii = t.to_ascii();
+        assert!(ascii.contains("OOM"));
+        assert_eq!(t.n_rows(), 2);
+    }
+}

@@ -1,0 +1,86 @@
+//! T1 — paper Table 1: GC200 vs A30 specification comparison, with a
+//! third column showing the values our models derive from first
+//! principles (so the calibration is auditable).
+
+use crate::arch::{GpuArch, IpuArch};
+use crate::util::table::Table;
+use crate::util::units::fmt_bytes_si;
+
+pub fn table1(ipu: &IpuArch, gpu: &GpuArch) -> Table {
+    let mut t = Table::new(
+        "Table 1 — IPU vs GPU comparison (paper values; model-derived in parentheses)",
+        &["Property", ipu.name, gpu.name],
+    );
+    t.row(&[
+        "Number of cores".into(),
+        format!("{}", ipu.tiles),
+        format!("{}", gpu.cuda_cores()),
+    ]);
+    t.row(&[
+        "Number of threads".into(),
+        format!("{}", ipu.total_threads()),
+        format!("{}", gpu.total_thread_slots()),
+    ]);
+    t.row(&[
+        "Total SRAM".into(),
+        format!("{} ({} derived)", "918 MB", fmt_bytes_si(ipu.total_sram_bytes())),
+        fmt_bytes_si(gpu.l2_bytes + gpu.sms as u64 * 192 * 1024),
+    ]);
+    t.row(&[
+        "Total DRAM memory".into(),
+        fmt_bytes_si(ipu.streaming_bytes),
+        fmt_bytes_si(gpu.dram_bytes),
+    ]);
+    t.row(&[
+        "DRAM bandwidth".into(),
+        format!("{:.0} GB/s", ipu.streaming_bw_bytes_per_s / 1e9),
+        format!("{:.0} GB/s", gpu.dram_bw_bytes_per_s / 1e9),
+    ]);
+    t.row(&[
+        "Clock frequency".into(),
+        format!("{:.2} GHz", ipu.clock_hz / 1e9),
+        format!("{:.2} GHz", gpu.clock_hz / 1e9),
+    ]);
+    t.row(&[
+        "FP32 peak compute".into(),
+        format!("{:.1} TFlop/s", ipu.peak_fp32_tflops()),
+        format!("{:.1} TFlop/s", gpu.peak_fp32_tflops()),
+    ]);
+    t.row(&[
+        "Power consumption".into(),
+        format!("{:.0} W", ipu.power_w),
+        format!("{:.0} W", gpu.power_w),
+    ]);
+    t.row(&[
+        "Inter-chip bandwidth".into(),
+        format!("{:.0} GB/s", ipu.interchip_bw_bytes_per_s / 1e9),
+        format!("{:.0} GB/s", gpu.interchip_bw_bytes_per_s / 1e9),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_all_table1_rows() {
+        let t = table1(&IpuArch::gc200(), &GpuArch::a30());
+        assert_eq!(t.n_rows(), 9);
+        let ascii = t.to_ascii();
+        // paper Table 1 anchor values
+        assert!(ascii.contains("1472"));
+        assert!(ascii.contains("3584"));
+        assert!(ascii.contains("8832"));
+        assert!(ascii.contains("229376"));
+        assert!(ascii.contains("62.")); // 62.5/62.6 TFlop/s
+        assert!(ascii.contains("10.3"));
+    }
+
+    #[test]
+    fn works_for_other_pairings() {
+        let t = table1(&IpuArch::gc2(), &GpuArch::rtx2080ti());
+        assert!(t.to_ascii().contains("GC2"));
+        assert!(t.to_markdown().contains("RTX 2080 Ti"));
+    }
+}

@@ -1,0 +1,112 @@
+//! V1 — paper §5.1 vertex census: 5542 (left) / 5762 (squared) / 31743
+//! (right) "for a given k".
+//!
+//! Our census triple uses m*n = 2^23 at k = 2048: tall A (16384 x 512),
+//! near-square A (2896 x 2896), wide A (512 x 16384). The right-skewed
+//! shape forces the planner to split the reduction (the unsplit plan's
+//! per-superstep exchange code overflows tile memory), and the reduction
+//! stage's worklist vertices produce the explosion.
+
+use crate::arch::ipu::paper;
+use crate::arch::IpuArch;
+use crate::planner::partition::MmShape;
+use crate::sim::engine::SimEngine;
+use crate::util::table::Table;
+
+#[derive(Clone, Debug)]
+pub struct CensusRow {
+    pub name: &'static str,
+    pub shape: MmShape,
+    pub vertices: usize,
+    pub reduce_vertices: usize,
+    pub pn: usize,
+    pub paper_vertices: usize,
+    pub tflops: f64,
+}
+
+/// The census shapes (k fixed at 2048, m*n = 2^23).
+pub fn census_shapes() -> [(&'static str, MmShape, usize); 3] {
+    [
+        ("left-skewed", MmShape::new(16384, 512, 2048), paper::VERTICES_LEFT),
+        ("squared", MmShape::new(2896, 2896, 2048), paper::VERTICES_SQUARED),
+        ("right-skewed", MmShape::new(512, 16384, 2048), paper::VERTICES_RIGHT),
+    ]
+}
+
+pub fn run(arch: &IpuArch) -> Vec<CensusRow> {
+    let engine = SimEngine::new(arch.clone());
+    census_shapes()
+        .into_iter()
+        .map(|(name, shape, paper_vertices)| {
+            let r = engine
+                .simulate_mm(shape)
+                .expect("census shapes must fit the GC200");
+            CensusRow {
+                name,
+                shape,
+                vertices: r.total_vertices,
+                reduce_vertices: r.plan.cost.reduce_vertices,
+                pn: r.plan.partition().pn,
+                paper_vertices,
+                tflops: r.tflops,
+            }
+        })
+        .collect()
+}
+
+pub fn to_table(rows: &[CensusRow]) -> Table {
+    let mut t = Table::new(
+        "Vertex census (paper §5.1: 5542 / 5762 / 31743)",
+        &["experiment", "A shape", "pn", "vertices", "reduce", "paper", "TFlop/s"],
+    );
+    for r in rows {
+        t.row(&[
+            r.name.to_string(),
+            format!("{}x{}", r.shape.m, r.shape.n),
+            r.pn.to_string(),
+            r.vertices.to_string(),
+            r.reduce_vertices.to_string(),
+            r.paper_vertices.to_string(),
+            format!("{:.2}", r.tflops),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_reproduces_paper_pattern() {
+        let rows = run(&IpuArch::gc200());
+        let (left, squared, right) = (&rows[0], &rows[1], &rows[2]);
+
+        // squared: ~4 vertices/tile, within 10% of the paper's 5762
+        let err = (squared.vertices as f64 - 5762.0).abs() / 5762.0;
+        assert!(err < 0.10, "squared census {} vs 5762", squared.vertices);
+
+        // left is close to squared (paper: 5542 vs 5762)
+        let left_ratio = left.vertices as f64 / squared.vertices as f64;
+        assert!((0.85..=1.1).contains(&left_ratio), "left ratio {left_ratio}");
+
+        // right explodes: paper ratio 31743 / 5762 = 5.5x
+        let right_ratio = right.vertices as f64 / squared.vertices as f64;
+        assert!((3.5..=8.0).contains(&right_ratio), "right ratio {right_ratio}");
+        assert!(right.pn > 1);
+        assert!(right.reduce_vertices > right.vertices / 2);
+
+        // and the explosion costs performance (Finding 2)
+        assert!(right.tflops < 0.85 * squared.tflops);
+    }
+
+    #[test]
+    fn table_lists_three_experiments() {
+        let rows = run(&IpuArch::gc200());
+        let t = to_table(&rows);
+        assert_eq!(t.n_rows(), 3);
+        let ascii = t.to_ascii();
+        assert!(ascii.contains("left-skewed"));
+        assert!(ascii.contains("31743"));
+    }
+}

@@ -1,0 +1,233 @@
+//! Analytical cuBLAS SGEMM model.
+//!
+//! For a shape A[m,n] x B[n,k] (paper convention: n is the reduction dim,
+//! C is m x k) the model:
+//!
+//! 1. tries each CTA tile from cuBLAS's SGEMM kernel family,
+//! 2. prices compute as peak x quantization (tile + wave, from
+//!    `occupancy`) x a fixed instruction-mix efficiency (~94%: the paper
+//!    measures 9.7 of 10.3 TFlop/s squared),
+//! 3. prices memory as a DRAM roofline with per-CTA-tile operand reuse
+//!    (A and B panels re-read once per tile row/column, bounded by L2),
+//! 4. takes max(compute, memory) + launch overhead, then keeps the
+//!    fastest tile.
+//!
+//! This reproduces Fig. 4 (GPU near peak on large squares) and the
+//! *symmetric* skew penalty of Fig. 5: small m or small k starves the grid
+//! (occupancy), while small n drops arithmetic intensity below the ridge
+//! (roofline) — both directions lose, unlike the IPU's asymmetric drop.
+
+use crate::arch::GpuArch;
+use crate::gpu::occupancy::{grid_stats, GridStats};
+use crate::planner::partition::MmShape;
+
+/// cuBLAS SGEMM CTA tile family (rows x cols of C per threadblock).
+pub const CTA_TILES: [(usize, usize); 6] =
+    [(128, 128), (128, 64), (64, 128), (64, 64), (32, 64), (64, 32)];
+
+/// Fraction of peak attainable by the SGEMM inner loop (instruction mix,
+/// scheduling): calibrated to the paper's 9.7 / 10.3 on the A30.
+pub const INNER_LOOP_EFFICIENCY: f64 = 0.95;
+
+/// Kernel launch + cuBLAS dispatch overhead.
+pub const LAUNCH_OVERHEAD_S: f64 = 5e-6;
+
+/// Effective DRAM bandwidth fraction for GEMM streaming access.
+pub const DRAM_EFFICIENCY: f64 = 0.85;
+
+/// Reduction-pipeline depth: the SGEMM main loop streams the reduction dim
+/// through shared memory in staged chunks; reductions shorter than a few
+/// pipeline fills cannot amortize the prologue/epilogue. Efficiency factor
+/// n / (n + K_PIPELINE). This produces the *left* half of Fig. 5's
+/// symmetric GPU valley (thin n), mirroring the occupancy loss at thin m.
+pub const K_PIPELINE: f64 = 96.0;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GpuRunReport {
+    pub shape: MmShape,
+    pub seconds: f64,
+    pub tflops: f64,
+    /// Achieved fraction of theoretical FP32 peak.
+    pub efficiency: f64,
+    pub tile: (usize, usize),
+    pub grid: GridStats,
+    /// True when the DRAM roofline (not compute) set the runtime.
+    pub memory_bound: bool,
+    pub dram_bytes: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct GpuModel {
+    pub arch: GpuArch,
+}
+
+impl GpuModel {
+    pub fn new(arch: GpuArch) -> GpuModel {
+        GpuModel { arch }
+    }
+
+    /// Does the problem fit in device DRAM? (Fig. 4: the GPU handles much
+    /// larger sizes than the IPU.)
+    pub fn fits(&self, shape: MmShape) -> bool {
+        shape.tensor_bytes() <= self.arch.dram_bytes
+    }
+
+    /// DRAM traffic for one tile choice: every operand read/written at
+    /// least once; A re-read once per CTA column beyond L2 reach, B once
+    /// per CTA row.
+    fn dram_bytes(&self, shape: MmShape, tm: usize, tn: usize) -> u64 {
+        let (m, n, k) = (shape.m as u64, shape.n as u64, shape.k as u64);
+        let grid_rows = shape.m.div_ceil(tm) as u64;
+        let grid_cols = shape.k.div_ceil(tn) as u64;
+        // panels covered by L2 don't re-read; approximate L2 reach as the
+        // fraction of the re-read working set it can hold
+        let a_panel = m * n * 4;
+        let b_panel = n * k * 4;
+        let a_rereads = grid_cols.saturating_sub(1);
+        let b_rereads = grid_rows.saturating_sub(1);
+        let reread_bytes = a_panel * a_rereads + b_panel * b_rereads;
+        let l2_cover = (self.arch.l2_bytes as f64 * 32.0 / (a_panel + b_panel) as f64).min(1.0);
+        let rereads_after_l2 = (reread_bytes as f64 * (1.0 - l2_cover)).max(0.0) as u64;
+        a_panel + b_panel + m * k * 4 + rereads_after_l2
+    }
+
+    /// Price one shape; picks the best CTA tile.
+    pub fn simulate_mm(&self, shape: MmShape) -> GpuRunReport {
+        let flops = shape.flops() as f64;
+        let peak = self.arch.peak_fp32_flops();
+        let mut best: Option<GpuRunReport> = None;
+        for (tm, tn) in CTA_TILES {
+            let grid = grid_stats(&self.arch, shape.m, shape.k, tm, tn);
+            // smaller tiles trade occupancy for per-CTA efficiency: the
+            // inner loop of a 32/64-wide tile issues proportionally more
+            // loads per FMA
+            let tile_penalty = ((tm * tn) as f64 / (128.0 * 128.0)).powf(0.15).min(1.0);
+            let k_pipeline_eff = shape.n as f64 / (shape.n as f64 + K_PIPELINE);
+            let compute_eff = grid.quantization_efficiency
+                * INNER_LOOP_EFFICIENCY
+                * tile_penalty
+                * k_pipeline_eff;
+            if compute_eff <= 0.0 {
+                continue;
+            }
+            let t_compute = flops / (peak * compute_eff);
+            let dram_bytes = self.dram_bytes(shape, tm, tn);
+            let t_mem =
+                dram_bytes as f64 / (self.arch.dram_bw_bytes_per_s * DRAM_EFFICIENCY);
+            let memory_bound = t_mem > t_compute;
+            let seconds = t_compute.max(t_mem) + LAUNCH_OVERHEAD_S;
+            let tflops = flops / seconds / 1e12;
+            let rep = GpuRunReport {
+                shape,
+                seconds,
+                tflops,
+                efficiency: flops / seconds / peak,
+                tile: (tm, tn),
+                grid,
+                memory_bound,
+                dram_bytes,
+            };
+            let better = match &best {
+                None => true,
+                Some(b) => rep.seconds < b.seconds,
+            };
+            if better {
+                best = Some(rep);
+            }
+        }
+        best.expect("CTA_TILES is non-empty")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a30() -> GpuModel {
+        GpuModel::new(GpuArch::a30())
+    }
+
+    #[test]
+    fn large_square_near_peak() {
+        // paper Fig. 4: A30 achieves 9.7 of 10.3 TFlop/s
+        let r = a30().simulate_mm(MmShape::square(8192));
+        assert!(
+            (9.0..=10.3).contains(&r.tflops),
+            "squared TFlop/s {}",
+            r.tflops
+        );
+        assert!(!r.memory_bound);
+    }
+
+    #[test]
+    fn paper_comparison_size_efficiency() {
+        let r = a30().simulate_mm(MmShape::square(3584));
+        assert!(r.efficiency > 0.85, "{}", r.efficiency);
+    }
+
+    #[test]
+    fn small_square_is_slow() {
+        let r = a30().simulate_mm(MmShape::square(256));
+        assert!(r.tflops < 3.0, "{}", r.tflops);
+    }
+
+    #[test]
+    fn skew_penalty_is_roughly_symmetric() {
+        // Fig. 5 right panel: both skew directions lose similarly
+        let left = a30().simulate_mm(MmShape::new(32768, 128, 2048));
+        let right = a30().simulate_mm(MmShape::new(128, 32768, 2048));
+        let squared = a30().simulate_mm(MmShape::new(2048, 2048, 2048));
+        assert!(left.tflops < 0.75 * squared.tflops, "left {}", left.tflops);
+        assert!(right.tflops < 0.75 * squared.tflops, "right {}", right.tflops);
+        let asym = left.tflops / right.tflops;
+        assert!((0.3..=3.0).contains(&asym), "asymmetry {asym}");
+    }
+
+    #[test]
+    fn thin_reduction_cannot_amortize_pipeline() {
+        let r = a30().simulate_mm(MmShape::new(4096, 32, 4096));
+        assert!(r.tflops < 3.0, "{}", r.tflops);
+    }
+
+    #[test]
+    fn small_m_is_occupancy_bound() {
+        let r = a30().simulate_mm(MmShape::new(64, 8192, 8192));
+        assert!(r.efficiency < 0.6, "{}", r.efficiency);
+    }
+
+    #[test]
+    fn gpu_handles_sizes_the_ipu_cannot() {
+        // Fig. 4: GPU keeps going past the IPU's 3584 wall
+        let model = a30();
+        assert!(model.fits(MmShape::square(16384)));
+        let r = model.simulate_mm(MmShape::square(16384));
+        assert!(r.tflops > 9.0);
+        // but not past DRAM
+        assert!(!model.fits(MmShape::square(60000)));
+    }
+
+    #[test]
+    fn best_tile_adapts_to_shape() {
+        let wide = a30().simulate_mm(MmShape::new(128, 2048, 8192));
+        // a 128-row tile wastes half the CTA on a 128-row C... the model
+        // should pick something with small rows or pay for it
+        assert!(wide.tile.0 <= 128);
+        let sq = a30().simulate_mm(MmShape::square(4096));
+        assert_eq!(sq.tile, (128, 128));
+    }
+
+    #[test]
+    fn v100_beats_a30_on_paper_ratio() {
+        // Jia et al.: V100 peak 15.7 vs A30 10.3
+        let v = GpuModel::new(GpuArch::v100()).simulate_mm(MmShape::square(8192));
+        let a = a30().simulate_mm(MmShape::square(8192));
+        assert!(v.tflops > a.tflops);
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_mms() {
+        let r = a30().simulate_mm(MmShape::new(16, 16, 16));
+        assert!(r.seconds >= LAUNCH_OVERHEAD_S);
+        assert!(r.tflops < 0.01);
+    }
+}

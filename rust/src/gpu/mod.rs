@@ -1,0 +1,16 @@
+//! Analytical GPU baseline (cuBLAS SGEMM on A30 / RTX 2080 Ti / V100).
+//!
+//! The paper's GPU curves (Fig. 4 right-at-peak squared, Fig. 5 symmetric
+//! skew penalty) are explained by three standard effects, all modelled in
+//! `cublas_model`:
+//!
+//! * **CTA tile + wave quantization** — cuBLAS picks a threadblock tile
+//!   per shape; partial tiles and partial waves waste lanes,
+//! * **occupancy** — small C grids cannot fill all SMs,
+//! * **DRAM roofline** — thin reduction dims drop arithmetic intensity
+//!   below the machine-balance ridge.
+
+pub mod cublas_model;
+pub mod occupancy;
+
+pub use cublas_model::{GpuModel, GpuRunReport};

@@ -1,0 +1,92 @@
+//! SM occupancy and wave arithmetic for tiled GEMM kernels.
+
+use crate::arch::GpuArch;
+
+/// Grid statistics for a CTA tiling of an (m x k)-output GEMM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GridStats {
+    pub ctas: usize,
+    /// Number of full scheduling waves.
+    pub waves: usize,
+    /// Utilisation of the last (partial) wave's slots, in (0, 1].
+    pub last_wave_fill: f64,
+    /// Fraction of CTA-covered output that is real output (tile
+    /// quantization efficiency).
+    pub tile_efficiency: f64,
+    /// Fraction of peak attainable after wave + tile quantization.
+    pub quantization_efficiency: f64,
+}
+
+/// Compute grid statistics for output dims (rows x cols) under a CTA tile
+/// of (tm x tn) on `arch`.
+pub fn grid_stats(arch: &GpuArch, rows: usize, cols: usize, tm: usize, tn: usize) -> GridStats {
+    assert!(tm > 0 && tn > 0);
+    let gm = rows.div_ceil(tm);
+    let gn = cols.div_ceil(tn);
+    let ctas = gm * gn;
+    let slots = arch.sms * arch.max_ctas_per_sm;
+    let waves = ctas.div_ceil(slots);
+    let last = ctas - (waves - 1) * slots;
+    let last_wave_fill = last as f64 / slots as f64;
+    let tile_efficiency = (rows * cols) as f64 / ((gm * tm) * (gn * tn)) as f64;
+    // mean efficiency across waves: full waves run at 1, the last at fill
+    let wave_eff = ((waves - 1) as f64 + last_wave_fill) / waves as f64;
+    GridStats {
+        ctas,
+        waves,
+        last_wave_fill,
+        tile_efficiency,
+        quantization_efficiency: tile_efficiency * wave_eff,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a30() -> GpuArch {
+        GpuArch::a30()
+    }
+
+    #[test]
+    fn exact_grid_full_waves() {
+        // 3584/128 = 28 -> 784 CTAs; A30 slots = 112 -> 7 exact waves
+        let g = grid_stats(&a30(), 3584, 3584, 128, 128);
+        assert_eq!(g.ctas, 784);
+        assert_eq!(g.waves, 7);
+        assert!((g.last_wave_fill - 1.0).abs() < 1e-12);
+        assert!((g.tile_efficiency - 1.0).abs() < 1e-12);
+        assert!((g.quantization_efficiency - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_tiles_waste_lanes() {
+        let g = grid_stats(&a30(), 3600, 3600, 128, 128);
+        assert!(g.tile_efficiency < 1.0);
+        assert!(g.tile_efficiency > 0.9);
+    }
+
+    #[test]
+    fn small_grid_is_occupancy_bound() {
+        // 512 x 512 with 128 tiles -> 16 CTAs on 112 slots
+        let g = grid_stats(&a30(), 512, 512, 128, 128);
+        assert_eq!(g.waves, 1);
+        assert!(g.last_wave_fill < 0.2);
+        assert!(g.quantization_efficiency < 0.2);
+    }
+
+    #[test]
+    fn partial_last_wave_averaged() {
+        // 113 slots worth of CTAs -> 2 waves, second nearly empty
+        let g = grid_stats(&a30(), 113 * 128, 128, 128, 128);
+        assert_eq!(g.waves, 2);
+        assert!(g.quantization_efficiency < 0.6);
+    }
+
+    #[test]
+    fn smaller_tiles_raise_occupancy_for_small_grids() {
+        let big = grid_stats(&a30(), 512, 512, 128, 128);
+        let small = grid_stats(&a30(), 512, 512, 64, 64);
+        assert!(small.quantization_efficiency > big.quantization_efficiency);
+    }
+}

@@ -1,0 +1,246 @@
+//! The graph container and builder API (Poplar `Graph` analogue).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::exchange::plan::ExchangePlan;
+use crate::graph::program::{ExchangeId, Program, ProgramStep};
+use crate::graph::tensor::{DType, Tensor, TensorId, TileMapping};
+use crate::graph::vertex::{ComputeSet, ComputeSetId, Vertex, VertexId, VertexKind};
+
+/// A complete IPU program graph: data, codelets, exchanges, control.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub tiles: usize,
+    tensors: Vec<Tensor>,
+    vertices: Vec<Vertex>,
+    compute_sets: Vec<ComputeSet>,
+    exchanges: Vec<ExchangePlan>,
+    pub program: Program,
+}
+
+impl Graph {
+    pub fn new(tiles: usize) -> Graph {
+        Graph {
+            tiles,
+            tensors: Vec::new(),
+            vertices: Vec::new(),
+            compute_sets: Vec::new(),
+            exchanges: Vec::new(),
+            program: Program::Sequence(vec![]),
+        }
+    }
+
+    // ---- construction ----------------------------------------------------
+
+    pub fn add_tensor(&mut self, name: &str, shape: &[usize], dtype: DType) -> TensorId {
+        let id = TensorId(self.tensors.len() as u32);
+        self.tensors.push(Tensor {
+            id,
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype,
+            mapping: None,
+        });
+        id
+    }
+
+    pub fn set_tile_mapping(&mut self, t: TensorId, mapping: TileMapping) {
+        self.tensors[t.0 as usize].mapping = Some(mapping);
+    }
+
+    pub fn add_compute_set(&mut self, name: &str) -> ComputeSetId {
+        let id = ComputeSetId(self.compute_sets.len() as u32);
+        self.compute_sets.push(ComputeSet { id, name: name.to_string(), vertices: vec![] });
+        id
+    }
+
+    pub fn add_vertex(
+        &mut self,
+        cs: ComputeSetId,
+        kind: VertexKind,
+        tile: usize,
+        inputs: Vec<TensorId>,
+        outputs: Vec<TensorId>,
+    ) -> VertexId {
+        let id = VertexId(self.vertices.len() as u32);
+        self.vertices.push(Vertex { id, kind, tile, inputs, outputs });
+        self.compute_sets[cs.0 as usize].vertices.push(id);
+        id
+    }
+
+    pub fn add_exchange(&mut self, plan: ExchangePlan) -> ExchangeId {
+        let id = ExchangeId(self.exchanges.len() as u32);
+        self.exchanges.push(plan);
+        id
+    }
+
+    pub fn set_program(&mut self, program: Program) {
+        self.program = program;
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id.0 as usize]
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn vertex(&self, id: VertexId) -> &Vertex {
+        &self.vertices[id.0 as usize]
+    }
+
+    pub fn vertices(&self) -> &[Vertex] {
+        &self.vertices
+    }
+
+    pub fn compute_set(&self, id: ComputeSetId) -> &ComputeSet {
+        &self.compute_sets[id.0 as usize]
+    }
+
+    pub fn exchange(&self, id: ExchangeId) -> &ExchangePlan {
+        &self.exchanges[id.0 as usize]
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.vertices.len()
+    }
+
+    /// Vertex census by codelet family — the PopVision statistic behind
+    /// the paper's Finding 2.
+    pub fn vertex_census(&self) -> BTreeMap<&'static str, usize> {
+        let mut census = BTreeMap::new();
+        for v in &self.vertices {
+            *census.entry(v.kind.family()).or_insert(0) += 1;
+        }
+        census
+    }
+
+    /// Vertices resident on each tile (state bytes live in tile memory).
+    pub fn vertices_on_tile(&self, tile: usize) -> impl Iterator<Item = &Vertex> {
+        self.vertices.iter().filter(move |v| v.tile == tile)
+    }
+
+    // ---- validation --------------------------------------------------------
+
+    /// Whole-graph consistency: mappings partition tensors, vertices sit on
+    /// real tiles and reference real tensors, program references are valid,
+    /// exchanges validate against the tile count.
+    pub fn validate(&self) -> Result<()> {
+        for t in &self.tensors {
+            t.validate_mapping()
+                .with_context(|| format!("tensor '{}'", t.name))?;
+            if let Some(m) = &t.mapping {
+                if m.len() > self.tiles {
+                    bail!("tensor '{}' mapping spans {} tiles > {}", t.name, m.len(), self.tiles);
+                }
+            }
+        }
+        for v in &self.vertices {
+            if v.tile >= self.tiles {
+                bail!("vertex {:?} on tile {} >= {}", v.id, v.tile, self.tiles);
+            }
+            for t in v.inputs.iter().chain(&v.outputs) {
+                if t.0 as usize >= self.tensors.len() {
+                    bail!("vertex {:?} references missing tensor {:?}", v.id, t);
+                }
+            }
+        }
+        for ex in &self.exchanges {
+            ex.validate(self.tiles)?;
+        }
+        for step in self.program.steps() {
+            match step {
+                ProgramStep::Execute(cs) => {
+                    if cs.0 as usize >= self.compute_sets.len() {
+                        bail!("program references missing compute set {:?}", cs);
+                    }
+                }
+                ProgramStep::Exchange(ex) => {
+                    if ex.0 as usize >= self.exchanges.len() {
+                        bail!("program references missing exchange {:?}", ex);
+                    }
+                }
+                ProgramStep::Sync => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exchange::plan::ExchangePattern;
+    use crate::graph::tensor::Interval;
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new(4);
+        let a = g.add_tensor("a", &[2, 2], DType::F32);
+        g.set_tile_mapping(a, vec![vec![Interval::new(0, 4)]]);
+        let cs = g.add_compute_set("mm");
+        g.add_vertex(cs, VertexKind::AmpMacc { rows: 2, cols: 2, acc: 2 }, 0, vec![a], vec![a]);
+        let mut plan = ExchangePlan::new("x", ExchangePattern::AllToAll);
+        plan.add(0, 1, 16);
+        let ex = g.add_exchange(plan);
+        g.set_program(Program::Sequence(vec![
+            Program::Execute(cs),
+            Program::Sync,
+            Program::Exchange(ex),
+        ]));
+        g
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        tiny_graph().validate().unwrap();
+    }
+
+    #[test]
+    fn census_counts_families() {
+        let g = tiny_graph();
+        assert_eq!(g.vertex_census().get("AmpMacc"), Some(&1));
+        assert_eq!(g.n_vertices(), 1);
+    }
+
+    #[test]
+    fn invalid_tile_rejected() {
+        let mut g = tiny_graph();
+        let cs = g.add_compute_set("bad");
+        g.add_vertex(cs, VertexKind::Zero { elems: 1 }, 99, vec![], vec![]);
+        assert!(g.validate().unwrap_err().to_string().contains("tile 99"));
+    }
+
+    #[test]
+    fn missing_tensor_reference_rejected() {
+        let mut g = tiny_graph();
+        let cs = g.add_compute_set("bad");
+        g.add_vertex(cs, VertexKind::Zero { elems: 1 }, 0, vec![TensorId(42)], vec![]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn dangling_program_reference_rejected() {
+        let mut g = tiny_graph();
+        g.set_program(Program::Execute(ComputeSetId(9)));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn unmapped_tensor_rejected() {
+        let mut g = tiny_graph();
+        g.add_tensor("loose", &[4], DType::F32);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn vertices_on_tile_filters() {
+        let g = tiny_graph();
+        assert_eq!(g.vertices_on_tile(0).count(), 1);
+        assert_eq!(g.vertices_on_tile(1).count(), 0);
+    }
+}

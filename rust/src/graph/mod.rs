@@ -1,0 +1,20 @@
+//! Poplar-analogue computational dataflow graph (paper §2.2, Fig. 1).
+//!
+//! IPU programs are graphs of `Tensor`s (data), `Vertex`s (codelets bound
+//! to tiles), `ComputeSet`s (vertices executed in one BSP compute phase),
+//! and a control `Program` (Sequence / Execute / Exchange / Sync / Repeat).
+//! The `sim` engine builds one of these graphs per matrix multiplication
+//! from the planner's chosen partition, then the `bsp` engine executes it
+//! against the cycle models. The profiler's vertex census and the memory
+//! accountant both walk this structure — it is the load-bearing substrate,
+//! not decoration.
+
+pub mod builder;
+pub mod program;
+pub mod tensor;
+pub mod vertex;
+
+pub use builder::Graph;
+pub use program::{Program, ProgramStep};
+pub use tensor::{DType, Interval, Tensor, TensorId, TileMapping};
+pub use vertex::{ComputeSet, ComputeSetId, Vertex, VertexId, VertexKind};

@@ -1,0 +1,129 @@
+//! Control programs — the Poplar `program::Sequence` analogue.
+//!
+//! A program is a tree whose leaves are the three BSP phases the paper's
+//! Fig. 3 shows in the PopVision timeline: Execute (compute, red), Sync
+//! (blue), and Exchange (data movement, yellow). The BSP engine walks the
+//! flattened step list.
+
+use crate::graph::vertex::ComputeSetId;
+
+/// Identifier into the graph's exchange-plan table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ExchangeId(pub u32);
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Program {
+    /// Run children in order.
+    Sequence(Vec<Program>),
+    /// Execute one compute set (BSP local-compute phase).
+    Execute(ComputeSetId),
+    /// Run a pre-compiled exchange (BSP data-exchange phase).
+    Exchange(ExchangeId),
+    /// Global cross-tile synchronisation.
+    Sync,
+    /// Repeat the body `n` times.
+    Repeat(usize, Box<Program>),
+}
+
+/// One flattened execution step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgramStep {
+    Execute(ComputeSetId),
+    Exchange(ExchangeId),
+    Sync,
+}
+
+impl Program {
+    /// Flatten the control tree into the linear BSP step sequence.
+    pub fn steps(&self) -> Vec<ProgramStep> {
+        let mut out = Vec::new();
+        self.collect(&mut out);
+        out
+    }
+
+    fn collect(&self, out: &mut Vec<ProgramStep>) {
+        match self {
+            Program::Sequence(children) => {
+                for c in children {
+                    c.collect(out);
+                }
+            }
+            Program::Execute(cs) => out.push(ProgramStep::Execute(*cs)),
+            Program::Exchange(ex) => out.push(ProgramStep::Exchange(*ex)),
+            Program::Sync => out.push(ProgramStep::Sync),
+            Program::Repeat(n, body) => {
+                for _ in 0..*n {
+                    body.collect(out);
+                }
+            }
+        }
+    }
+
+    /// Number of BSP supersteps (compute phases) in the program.
+    pub fn superstep_count(&self) -> usize {
+        self.steps()
+            .iter()
+            .filter(|s| matches!(s, ProgramStep::Execute(_)))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cs(i: u32) -> Program {
+        Program::Execute(ComputeSetId(i))
+    }
+
+    #[test]
+    fn sequence_flattens_in_order() {
+        let p = Program::Sequence(vec![cs(0), Program::Sync, Program::Exchange(ExchangeId(1))]);
+        assert_eq!(
+            p.steps(),
+            vec![
+                ProgramStep::Execute(ComputeSetId(0)),
+                ProgramStep::Sync,
+                ProgramStep::Exchange(ExchangeId(1)),
+            ]
+        );
+    }
+
+    #[test]
+    fn repeat_unrolls() {
+        let p = Program::Repeat(3, Box::new(Program::Sequence(vec![cs(7), Program::Sync])));
+        let steps = p.steps();
+        assert_eq!(steps.len(), 6);
+        assert_eq!(steps[0], ProgramStep::Execute(ComputeSetId(7)));
+        assert_eq!(steps[5], ProgramStep::Sync);
+    }
+
+    #[test]
+    fn nested_sequences() {
+        let p = Program::Sequence(vec![
+            Program::Sequence(vec![cs(1), cs(2)]),
+            Program::Repeat(2, Box::new(cs(3))),
+        ]);
+        let ids: Vec<u32> = p
+            .steps()
+            .iter()
+            .filter_map(|s| match s {
+                ProgramStep::Execute(ComputeSetId(i)) => Some(*i),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2, 3, 3]);
+    }
+
+    #[test]
+    fn superstep_count_counts_executes_only() {
+        let p = Program::Sequence(vec![cs(0), Program::Sync, cs(1), Program::Exchange(ExchangeId(0))]);
+        assert_eq!(p.superstep_count(), 2);
+    }
+
+    #[test]
+    fn empty_program_has_no_steps() {
+        assert!(Program::Sequence(vec![]).steps().is_empty());
+        assert_eq!(Program::Repeat(0, Box::new(cs(1))).steps().len(), 0);
+    }
+}

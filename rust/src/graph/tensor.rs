@@ -1,0 +1,201 @@
+//! Tensors and their tile mappings.
+//!
+//! Poplar tensors carry an explicit mapping of element intervals to tiles;
+//! how a tensor is laid out across In-Processor memory determines both the
+//! per-tile memory bill and the exchange traffic (paper §2.3: "all data
+//! required for a computational step must reside in the In-Processor
+//! Memory of each tile").
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u32);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F16,
+    U32,
+}
+
+impl DType {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::U32 => 4,
+            DType::F16 => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::U32 => "u32",
+        }
+    }
+}
+
+/// Half-open element interval `[begin, end)` in a tensor's flattened order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub begin: usize,
+    pub end: usize,
+}
+
+impl Interval {
+    pub fn new(begin: usize, end: usize) -> Interval {
+        assert!(begin <= end, "interval [{begin}, {end})");
+        Interval { begin, end }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.begin
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.begin == self.end
+    }
+}
+
+/// Per-tile interval lists: `mapping[tile]` = intervals resident on `tile`.
+pub type TileMapping = Vec<Vec<Interval>>;
+
+/// A named, shaped, mapped tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub id: TensorId,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub mapping: Option<TileMapping>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+
+    /// Bytes resident on `tile` under the current mapping (0 if unmapped).
+    pub fn bytes_on_tile(&self, tile: usize) -> usize {
+        match &self.mapping {
+            None => 0,
+            Some(m) => m
+                .get(tile)
+                .map(|ivs| ivs.iter().map(Interval::len).sum::<usize>())
+                .unwrap_or(0)
+                * self.dtype.size_bytes(),
+        }
+    }
+
+    /// Validate that a mapping exactly partitions the element range:
+    /// every element mapped once, no overlap, no out-of-range intervals.
+    pub fn validate_mapping(&self) -> Result<()> {
+        let Some(mapping) = &self.mapping else {
+            bail!("tensor '{}' has no tile mapping", self.name);
+        };
+        let mut all: Vec<Interval> = mapping.iter().flatten().copied().collect();
+        all.retain(|iv| !iv.is_empty());
+        all.sort_by_key(|iv| iv.begin);
+        let mut covered = 0usize;
+        for iv in &all {
+            if iv.begin != covered {
+                bail!(
+                    "tensor '{}': mapping gap/overlap at element {} (interval starts at {})",
+                    self.name,
+                    covered,
+                    iv.begin
+                );
+            }
+            covered = iv.end;
+        }
+        if covered != self.numel() {
+            bail!(
+                "tensor '{}': mapping covers {} of {} elements",
+                self.name,
+                covered,
+                self.numel()
+            );
+        }
+        Ok(())
+    }
+
+    /// Tiles with at least one resident element.
+    pub fn tiles_used(&self) -> usize {
+        match &self.mapping {
+            None => 0,
+            Some(m) => m
+                .iter()
+                .filter(|ivs| ivs.iter().any(|iv| !iv.is_empty()))
+                .count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>, mapping: Option<TileMapping>) -> Tensor {
+        Tensor { id: TensorId(0), name: "t".into(), shape, dtype: DType::F32, mapping }
+    }
+
+    #[test]
+    fn sizes() {
+        let x = t(vec![4, 8], None);
+        assert_eq!(x.numel(), 32);
+        assert_eq!(x.bytes(), 128);
+        assert_eq!(DType::F16.size_bytes(), 2);
+    }
+
+    #[test]
+    fn valid_partition_mapping() {
+        let x = t(
+            vec![2, 4],
+            Some(vec![vec![Interval::new(0, 5)], vec![Interval::new(5, 8)]]),
+        );
+        x.validate_mapping().unwrap();
+        assert_eq!(x.bytes_on_tile(0), 20);
+        assert_eq!(x.bytes_on_tile(1), 12);
+        assert_eq!(x.bytes_on_tile(99), 0);
+        assert_eq!(x.tiles_used(), 2);
+    }
+
+    #[test]
+    fn gap_is_rejected() {
+        let x = t(vec![8], Some(vec![vec![Interval::new(0, 3)], vec![Interval::new(4, 8)]]));
+        let e = x.validate_mapping().unwrap_err();
+        assert!(e.to_string().contains("gap/overlap"));
+    }
+
+    #[test]
+    fn overlap_is_rejected() {
+        let x = t(vec![8], Some(vec![vec![Interval::new(0, 5)], vec![Interval::new(4, 8)]]));
+        assert!(x.validate_mapping().is_err());
+    }
+
+    #[test]
+    fn short_coverage_is_rejected() {
+        let x = t(vec![8], Some(vec![vec![Interval::new(0, 6)]]));
+        let e = x.validate_mapping().unwrap_err();
+        assert!(e.to_string().contains("covers 6 of 8"));
+    }
+
+    #[test]
+    fn unmapped_is_rejected() {
+        assert!(t(vec![4], None).validate_mapping().is_err());
+    }
+
+    #[test]
+    fn empty_intervals_ignored() {
+        let x = t(
+            vec![4],
+            Some(vec![vec![Interval::new(0, 0), Interval::new(0, 4)], vec![]]),
+        );
+        x.validate_mapping().unwrap();
+        assert_eq!(x.tiles_used(), 1);
+    }
+}

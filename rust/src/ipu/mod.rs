@@ -1,0 +1,6 @@
+//! IPU-specific extensions beyond the single-chip SRAM-resident model:
+//! the paper's §6 future-work directions, built as first-class features.
+
+pub mod streaming;
+
+pub use streaming::{StreamingMm, StreamingReport};

@@ -1,0 +1,142 @@
+//! Streaming-memory matmul (paper §6 future work, X1 in DESIGN.md).
+//!
+//! Past the In-Processor wall (3584^2 on GC200) the M2000's Streaming
+//! Memory (256 GB DRAM at 20 GB/s, Table 1) can stage panels: C is
+//! computed panel-by-panel, with A/B panels streamed in via remote
+//! buffers while resident panels compute (double-buffered overlap —
+//! "offering the possibility to overlap communication and computation",
+//! §6). Throughput is the max of compute time and stream time per panel,
+//! so large problems converge to the 20 GB/s roofline.
+
+use crate::arch::IpuArch;
+use crate::planner::partition::MmShape;
+use crate::planner::search::{search, PlannerError};
+
+#[derive(Clone, Copy, Debug)]
+pub struct StreamingReport {
+    pub shape: MmShape,
+    /// Panel edge chosen for the on-chip sub-problems.
+    pub panel: usize,
+    pub panels_total: usize,
+    pub seconds: f64,
+    pub tflops: f64,
+    /// Fraction of wall time the stream (not compute) was critical.
+    pub stream_bound_fraction: f64,
+    /// On-chip throughput of the panel sub-problem.
+    pub panel_tflops: f64,
+}
+
+pub struct StreamingMm {
+    pub arch: IpuArch,
+}
+
+impl StreamingMm {
+    pub fn new(arch: IpuArch) -> StreamingMm {
+        StreamingMm { arch }
+    }
+
+    /// Does the whole problem fit Streaming Memory?
+    pub fn fits(&self, shape: MmShape) -> bool {
+        shape.tensor_bytes() <= self.arch.streaming_bytes
+    }
+
+    /// Largest on-chip square panel (multiple of 512) the planner accepts.
+    fn best_panel(&self, cap: usize) -> Result<usize, PlannerError> {
+        let mut best = Err(PlannerError::OutOfMemory { candidates_evaluated: 0 });
+        let mut p = 512;
+        while p <= cap {
+            if search(&self.arch, MmShape::square(p)).is_ok() {
+                best = Ok(p);
+            } else {
+                break;
+            }
+            p += 512;
+        }
+        best
+    }
+
+    /// Simulate a DRAM-staged matmul of `shape`.
+    pub fn simulate_mm(&self, shape: MmShape) -> Result<StreamingReport, PlannerError> {
+        if !self.fits(shape) {
+            return Err(PlannerError::OutOfMemory { candidates_evaluated: 0 });
+        }
+        let max_dim = shape.m.max(shape.n).max(shape.k);
+        let panel = self.best_panel(max_dim.min(4096))?;
+
+        // panel grid over (m, k) with reduction over n panels
+        let gm = shape.m.div_ceil(panel);
+        let gn = shape.n.div_ceil(panel);
+        let gk = shape.k.div_ceil(panel);
+        let panels_total = gm * gn * gk;
+
+        // on-chip sub-problem throughput from the calibrated simulator
+        let sub = search(&self.arch, MmShape::square(panel))?;
+        let panel_secs = self.arch.cycles_to_secs(sub.cost.total_cycles);
+        let panel_tflops = sub.tflops(&self.arch);
+
+        // stream per panel step: fetch an A panel and a B panel (C stays
+        // resident per (i,j) while the reduction runs)
+        let panel_bytes = (panel * panel * 4) as f64;
+        let stream_secs = 2.0 * panel_bytes / self.arch.streaming_bw_bytes_per_s;
+
+        // double-buffered overlap: each step costs max(compute, stream);
+        // first fetch is exposed
+        let step = panel_secs.max(stream_secs);
+        let seconds = stream_secs + step * panels_total as f64;
+        let tflops = shape.flops() as f64 / seconds / 1e12;
+        Ok(StreamingReport {
+            shape,
+            panel,
+            panels_total,
+            seconds,
+            tflops,
+            stream_bound_fraction: if stream_secs > panel_secs { 1.0 } else { 0.0 },
+            panel_tflops,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s() -> StreamingMm {
+        StreamingMm::new(IpuArch::gc200())
+    }
+
+    #[test]
+    fn extends_past_the_sram_wall() {
+        // 8192^2 is far past the 3584 wall but streams fine
+        let r = s().simulate_mm(MmShape::square(8192)).unwrap();
+        assert!(r.tflops > 0.0);
+        assert!(r.panels_total > 1);
+    }
+
+    #[test]
+    fn stream_bandwidth_is_the_bottleneck() {
+        // panel compute at ~40 TF needs ~TB/s of feed; 20 GB/s can't keep
+        // up, so big streamed MMs are stream-bound (the §6 caveat)
+        let r = s().simulate_mm(MmShape::square(16384)).unwrap();
+        assert!(r.stream_bound_fraction > 0.5);
+        assert!(r.tflops < 20.0, "{}", r.tflops); // well under the ~43 resident TFlop/s
+    }
+
+    #[test]
+    fn streamed_is_slower_than_resident() {
+        let resident = search(&IpuArch::gc200(), MmShape::square(3584)).unwrap();
+        let streamed = s().simulate_mm(MmShape::square(4096)).unwrap();
+        assert!(streamed.tflops < resident.tflops(&IpuArch::gc200()));
+    }
+
+    #[test]
+    fn dram_capacity_still_bounds() {
+        // 256 GB streaming memory: a 200k^2 f32 problem (480 GB) is out
+        assert!(s().simulate_mm(MmShape::square(200_000)).is_err());
+    }
+
+    #[test]
+    fn gc2_has_no_streaming_memory() {
+        let gc2 = StreamingMm::new(IpuArch::gc2());
+        assert!(gc2.simulate_mm(MmShape::square(4096)).is_err());
+    }
+}

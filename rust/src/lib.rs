@@ -1,0 +1,36 @@
+//! # ipumm — IPU squared/skewed matrix-multiply performance analysis
+//!
+//! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
+//! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
+//!
+//! The crate has three roles (see DESIGN.md):
+//!
+//! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
+//!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
+//!    [`exchange`] fabric, the [`bsp`] superstep engine, and the
+//!    PopLin-style matmul [`planner`] whose plan choices produce the
+//!    paper's vertex-count and skew findings.
+//! 2. **GPU baseline** — an analytical cuBLAS SGEMM model ([`gpu`]) for the
+//!    A30 / RTX 2080 Ti comparison curves.
+//! 3. **Real compute path** — AOT-compiled JAX/Pallas HLO artifacts
+//!    executed through PJRT by [`runtime`], so every benchmarked shape is
+//!    backed by an actually-performed, verified multiplication.
+//!
+//! [`coordinator`] orchestrates benchmark jobs across these backends, and
+//! [`experiments`] regenerates each of the paper's tables and figures.
+
+pub mod arch;
+pub mod planner;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod bsp;
+pub mod exchange;
+pub mod coordinator;
+pub mod experiments;
+pub mod gpu;
+pub mod graph;
+pub mod ipu;
+pub mod memory;
+pub mod multi_ipu;
+pub mod util;

@@ -1,0 +1,297 @@
+//! ipumm — CLI for the IPU squared/skewed matmul reproduction.
+//!
+//! Each subcommand regenerates one paper artifact (see DESIGN.md §4):
+//!
+//! ```text
+//! ipumm table1                 Table 1 spec comparison
+//! ipumm fig4   [--max-size N]  Fig. 4 squared sweep, IPU vs GPU
+//! ipumm fig5   [--ks 1024,2048] Fig. 5 aspect-ratio sweep
+//! ipumm vertices               §5.1 vertex census triple
+//! ipumm memory                 §2.4 max-square memory study
+//! ipumm phases                 Fig. 3 BSP phase breakdown
+//! ipumm profile m n k [--json] PopVision-style profile of one shape
+//! ipumm plan m n k             show the planner's chosen partition
+//! ipumm run m n k [--real]     one shape on all backends (+PJRT verify)
+//! ipumm ablation               cost-model ablation study
+//! ipumm trace [--jobs N]       trace-driven latency/throughput study
+//! ipumm streaming              §6 streaming-memory extension
+//! ipumm multiipu               §6 multi-IPU scaling extension
+//! ipumm e2e [--artifacts DIR]  end-to-end driver with real numerics
+//! ipumm all                    every experiment, in order
+//! ```
+//!
+//! Global options: --arch gc200|gc2|bow, --gpu a30|rtx2080ti|v100,
+//! --csv FILE, --workers N.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use ipumm::arch::{GpuArch, IpuArch};
+use ipumm::coordinator::device::{run_shape, Backend};
+use ipumm::coordinator::runner::default_workers;
+use ipumm::experiments::{
+    ablation, e2e, fig4, fig5, fp16, memory_study, multi_ipu_x, phases, streaming, table1,
+    vertices,
+};
+use ipumm::planner::partition::MmShape;
+use ipumm::planner::search::search;
+use ipumm::profiler::popvision::PopVisionReport;
+use ipumm::runtime::blockmm::BlockMmExecutor;
+use ipumm::sim::engine::SimEngine;
+use ipumm::util::cli::Args;
+use ipumm::util::matrix::Matrix;
+use ipumm::util::units::{fmt_bytes, fmt_tflops};
+
+const OPTIONS: &[&str] = &[
+    "arch", "gpu", "csv", "json", "workers", "max-size", "ks", "artifacts", "block", "chips",
+    "jobs", "seed",
+];
+const FLAGS: &[&str] = &["real", "verbose"];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    match dispatch(&cmd, &argv[1..]) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("ipumm {cmd}: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|streaming|multiipu|e2e|all> [args]"
+    );
+    eprintln!("see rust/src/main.rs header for per-command options");
+}
+
+fn parse_common(raw: &[String]) -> Result<(Args, IpuArch, GpuArch, usize)> {
+    let args = Args::parse(raw, OPTIONS, FLAGS)?;
+    let arch = IpuArch::by_name(args.opt_or("arch", "gc200"))
+        .with_context(|| format!("unknown IPU arch '{}'", args.opt_or("arch", "gc200")))?;
+    let gpu = GpuArch::by_name(args.opt_or("gpu", "a30"))
+        .with_context(|| format!("unknown GPU '{}'", args.opt_or("gpu", "a30")))?;
+    let workers = args.opt_usize("workers", default_workers())?;
+    Ok((args, arch, gpu, workers))
+}
+
+fn write_csv(args: &Args, csv: String) -> Result<()> {
+    if let Some(path) = args.opt("csv") {
+        std::fs::write(path, csv).with_context(|| format!("writing {path}"))?;
+        println!("(csv -> {path})");
+    }
+    Ok(())
+}
+
+fn shape_from(args: &Args) -> Result<MmShape> {
+    Ok(MmShape::new(
+        args.pos_usize(0, "m")?,
+        args.pos_usize(1, "n")?,
+        args.pos_usize(2, "k")?,
+    ))
+}
+
+fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
+    match cmd {
+        "table1" => {
+            let (_, arch, gpu, _) = parse_common(raw)?;
+            println!("{}", table1::table1(&arch, &gpu).to_ascii());
+        }
+        "fig4" => {
+            let (args, arch, gpu, workers) = parse_common(raw)?;
+            let max = args.opt_usize("max-size", 5120)?;
+            let r = fig4::run(&arch, &gpu, max, workers);
+            println!("{}", r.to_table().to_ascii());
+            println!(
+                "IPU best {} (paper 44.2) at wall {} (paper 3584); GPU best {} (paper 9.7)",
+                fmt_tflops(r.ipu_best_tflops),
+                r.ipu_max_square,
+                fmt_tflops(r.gpu_best_tflops)
+            );
+            write_csv(&args, r.metrics.to_csv())?;
+        }
+        "fig5" => {
+            let (args, arch, gpu, workers) = parse_common(raw)?;
+            let ks: Vec<usize> = args
+                .opt_or("ks", "1024,2048,4096")
+                .split(',')
+                .map(|s| s.trim().parse().context("bad --ks"))
+                .collect::<Result<_>>()?;
+            let r = fig5::run(&arch, &gpu, 22, 4, &ks, workers);
+            println!("{}", r.to_table().to_ascii());
+            for &k in &ks {
+                let ipu = Backend::IpuSim(arch.clone()).name();
+                let gpu_n = Backend::GpuModel(gpu.clone()).name();
+                if let (Some((il, ir)), Some((gl, gr))) = (
+                    fig5::drops(&r, &ipu, k, None),
+                    fig5::drops(&r, &gpu_n, k, None),
+                ) {
+                    println!(
+                        "k={k}: IPU drops left {:.0}% / right {:.0}% (asymmetric); GPU {:.0}% / {:.0}%",
+                        il * 100.0,
+                        ir * 100.0,
+                        gl * 100.0,
+                        gr * 100.0
+                    );
+                }
+            }
+            write_csv(&args, r.metrics.to_csv())?;
+        }
+        "ablation" => {
+            let (_, arch, _, _) = parse_common(raw)?;
+            let rows = ablation::run(&arch);
+            println!("{}", ablation::to_table(&rows).to_ascii());
+        }
+        "fp16" => {
+            let (_, arch, _, _) = parse_common(raw)?;
+            let r = fp16::run(&arch, &fp16::default_sizes());
+            println!("{}", fp16::to_table(&r).to_ascii());
+        }
+        "vertices" => {
+            let (_, arch, _, _) = parse_common(raw)?;
+            let rows = vertices::run(&arch);
+            println!("{}", vertices::to_table(&rows).to_ascii());
+        }
+        "memory" => {
+            let (_, _, _, _) = parse_common(raw)?;
+            let rows = memory_study::run(&memory_study::default_archs());
+            println!("{}", memory_study::to_table(&rows).to_ascii());
+        }
+        "phases" => {
+            let (_, arch, _, _) = parse_common(raw)?;
+            let rows = phases::run(&arch, &phases::default_shapes());
+            println!("{}", phases::to_table(&rows).to_ascii());
+        }
+        "profile" => {
+            let (args, arch, _, _) = parse_common(raw)?;
+            let shape = shape_from(&args)?;
+            let engine = SimEngine::new(arch);
+            let report = engine
+                .simulate_mm(shape)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let pv = PopVisionReport::new(&report);
+            println!("{}", pv.to_text());
+            // memory-over-time view (liveness sparkline + peak)
+            let graph = engine.build_graph(shape, &report.plan);
+            let liveness = ipumm::memory::liveness::LivenessProfile::of(&graph);
+            println!("{}", PopVisionReport::liveness_text(&liveness));
+            if let Some(path) = args.opt("json") {
+                std::fs::write(path, pv.to_json().render())
+                    .with_context(|| format!("writing {path}"))?;
+                println!("(json -> {path})");
+            }
+        }
+        "plan" => {
+            let (args, arch, _, _) = parse_common(raw)?;
+            let shape = shape_from(&args)?;
+            match search(&arch, shape) {
+                Ok(plan) => {
+                    let p = plan.partition();
+                    let c = &plan.cost;
+                    println!(
+                        "plan for A[{},{}]xB[{},{}] on {}:",
+                        shape.m, shape.n, shape.n, shape.k, arch.name
+                    );
+                    println!(
+                        "  pm={} pn={} pk={} cn={} ({} tiles, {} supersteps)",
+                        p.pm,
+                        p.pn,
+                        p.pk,
+                        p.cn,
+                        p.tiles_used(),
+                        c.supersteps
+                    );
+                    println!(
+                        "  {} | efficiency {:.1}% | {} vertices | max tile {}",
+                        fmt_tflops(plan.tflops(&arch)),
+                        c.efficiency() * 100.0,
+                        c.total_vertices(),
+                        fmt_bytes(c.tile_bytes_total)
+                    );
+                }
+                Err(e) => println!("planner: {e} (the paper's §2.4 memory wall)"),
+            }
+        }
+        "run" => {
+            let (args, arch, gpu, _) = parse_common(raw)?;
+            let shape = shape_from(&args)?;
+            for backend in [Backend::IpuSim(arch), Backend::GpuModel(gpu)] {
+                let name = backend.name();
+                match run_shape(&backend, shape).tflops() {
+                    Some(t) => println!("{name:<18} {}", fmt_tflops(t)),
+                    None => println!("{name:<18} OOM"),
+                }
+            }
+            if args.flag("real") {
+                let dir = args.opt_or("artifacts", "artifacts");
+                let block = args.opt_usize("block", 256)?;
+                let mut ex = BlockMmExecutor::load(Path::new(dir), block)?;
+                let a = Matrix::random(shape.m, shape.n, 1);
+                let b = Matrix::random(shape.n, shape.k, 2);
+                let (_c, stats, err) = ex.mm_verified(&a, &b)?;
+                println!(
+                    "pjrt-real/cpu      {} block calls ({}^3) in {:.3}s, max|err| {err:.1e} (verified)",
+                    stats.block_calls, stats.block, stats.seconds
+                );
+            }
+        }
+        "trace" => {
+            let (args, arch, gpu, workers) = parse_common(raw)?;
+            let n_jobs = args.opt_usize("jobs", 200)?;
+            let seed = args.opt_usize("seed", 42)? as u64;
+            let trace = ipumm::coordinator::trace::TraceSpec::paper_mix(n_jobs, seed);
+            let r = ipumm::coordinator::trace::run_trace(&arch, &gpu, &trace, workers);
+            println!("{}", r.to_table().to_ascii());
+            write_csv(&args, r.to_csv())?;
+        }
+        "streaming" => {
+            let (_, arch, _, _) = parse_common(raw)?;
+            let rows = streaming::run(&arch, &streaming::default_sizes());
+            println!("{}", streaming::to_table(&rows).to_ascii());
+        }
+        "multiipu" => {
+            let (args, arch, _, _) = parse_common(raw)?;
+            let chips: Vec<usize> = args
+                .opt_or("chips", "1,2,4")
+                .split(',')
+                .map(|s| s.trim().parse().context("bad --chips"))
+                .collect::<Result<_>>()?;
+            let shape = MmShape::square(3584);
+            let rows = multi_ipu_x::run(&arch, shape, &chips);
+            println!("{}", multi_ipu_x::to_table(&rows, shape).to_ascii());
+        }
+        "e2e" => {
+            let (args, _, _, _) = parse_common(raw)?;
+            let dir = args.opt_or("artifacts", "artifacts");
+            let block = args.opt_usize("block", 256)?;
+            let r = e2e::run(Path::new(dir), &e2e::default_trace(), block)?;
+            println!("{}", e2e::to_table(&r).to_ascii());
+            println!(
+                "headline: IPU-sim beats A30-model by {:.1}x geomean on the trace; \
+                 {} real block executions verified against the oracle in {:.2}s",
+                r.geomean_speedup, r.total_block_calls, r.total_real_seconds
+            );
+        }
+        "all" => {
+            for sub in [
+                "table1", "fig4", "fig5", "vertices", "memory", "phases", "streaming",
+                "multiipu", "ablation", "trace", "fp16",
+            ] {
+                println!("==== ipumm {sub} ====");
+                dispatch(sub, raw)?;
+            }
+        }
+        other => {
+            print_usage();
+            bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,264 @@
+//! Whole-graph memory accounting: per-tile bills and fit checks.
+//!
+//! Prices everything PopVision's memory tab shows for a PopLin matmul:
+//! mapped tensor data, per-vertex state, per-family codelet code, exchange
+//! code (scales with the transfers a tile participates in), exchange
+//! receive buffers (double-buffered rearrangement landing zones), and a
+//! fixed control-code floor per tile.
+
+use crate::arch::IpuArch;
+use crate::graph::builder::Graph;
+use crate::graph::program::ProgramStep;
+use crate::memory::tile_mem::{RegionKind, TileMemory};
+
+/// Calibration constants (see DESIGN.md §5). These are the knobs that make
+/// the max fitting square land at 3584 (GC200) / 2944 (GC2) as measured by
+/// the paper.
+pub mod overheads {
+    /// Fixed control-program code per tile.
+    pub const CONTROL_CODE_BYTES: u64 = 2 * 1024;
+    /// Codelet code per vertex *family* present on a tile.
+    pub const CODE_BYTES_PER_FAMILY: u64 = 1024;
+    /// Exchange-program code per transfer endpoint on a tile.
+    pub const EXCHANGE_CODE_PER_TRANSFER: u64 = 48;
+    /// Receive-side landing buffers: fraction of the bytes a tile receives
+    /// in its heaviest exchange that must be double-buffered.
+    pub const RECV_BUFFER_FACTOR: f64 = 1.0;
+}
+
+#[derive(Clone, Debug)]
+pub struct MemoryReport {
+    pub per_tile: Vec<TileMemory>,
+    pub max_tile_used: u64,
+    pub max_tile: usize,
+    pub total_used: u64,
+    pub capacity_per_tile: u64,
+}
+
+impl MemoryReport {
+    pub fn fits(&self) -> bool {
+        self.max_tile_used <= self.capacity_per_tile
+    }
+
+    /// Fraction of total SRAM used (the paper's "17% of available
+    /// In-Processor Memory" statistic).
+    pub fn total_fraction(&self) -> f64 {
+        self.total_used as f64 / (self.capacity_per_tile * self.per_tile.len() as u64) as f64
+    }
+
+    /// Fraction of the bottleneck tile used (the binding constraint).
+    pub fn max_tile_fraction(&self) -> f64 {
+        self.max_tile_used as f64 / self.capacity_per_tile as f64
+    }
+
+    /// Histogram of per-tile usage in `buckets` equal-width bins over
+    /// [0, capacity] (PopVision's per-tile memory chart).
+    pub fn histogram(&self, buckets: usize) -> Vec<usize> {
+        let mut h = vec![0usize; buckets];
+        for tm in &self.per_tile {
+            let frac = (tm.used() as f64 / self.capacity_per_tile as f64).min(1.0);
+            let b = ((frac * buckets as f64) as usize).min(buckets - 1);
+            h[b] += 1;
+        }
+        h
+    }
+
+    /// Sum of one region across tiles.
+    pub fn region_total(&self, kind: RegionKind) -> u64 {
+        self.per_tile.iter().map(|t| t.region(kind)).sum()
+    }
+}
+
+pub struct MemoryAccountant<'a> {
+    arch: &'a IpuArch,
+}
+
+impl<'a> MemoryAccountant<'a> {
+    pub fn new(arch: &'a IpuArch) -> Self {
+        MemoryAccountant { arch }
+    }
+
+    /// Price a whole graph. Never fails: over-committed tiles are visible
+    /// via `fits() == false` so the planner can reject candidate plans.
+    pub fn account(&self, graph: &Graph) -> MemoryReport {
+        let tiles = self.arch.tiles;
+        let mut mems: Vec<TileMemory> = (0..tiles)
+            .map(|t| TileMemory::new(t, self.arch.tile_sram_bytes))
+            .collect();
+
+        // control code floor on every tile that does anything
+        for tm in mems.iter_mut() {
+            tm.alloc_unchecked(RegionKind::ControlCode, overheads::CONTROL_CODE_BYTES);
+        }
+
+        // tensor data per mapping
+        for t in graph.tensors() {
+            if t.mapping.is_some() {
+                for (tile, tm) in mems.iter_mut().enumerate() {
+                    let b = t.bytes_on_tile(tile) as u64;
+                    if b > 0 {
+                        tm.alloc_unchecked(RegionKind::TensorData, b);
+                    }
+                }
+            }
+        }
+
+        // vertex state + codelet code per family present
+        let mut families_on_tile: Vec<Vec<&'static str>> = vec![Vec::new(); tiles];
+        for v in graph.vertices() {
+            mems[v.tile].alloc_unchecked(RegionKind::VertexState, v.kind.state_bytes() as u64);
+            let fam = v.kind.family();
+            if !families_on_tile[v.tile].contains(&fam) {
+                families_on_tile[v.tile].push(fam);
+                mems[v.tile]
+                    .alloc_unchecked(RegionKind::VertexCode, overheads::CODE_BYTES_PER_FAMILY);
+            }
+        }
+
+        // exchange code + receive buffers, per exchange the program runs
+        let mut max_recv = vec![0u64; tiles];
+        for step in graph.program.steps() {
+            if let ProgramStep::Exchange(ex) = step {
+                let plan = graph.exchange(ex);
+                let recv = plan.recv_per_tile(tiles);
+                // one pass over transfers (not tiles x transfers — §Perf)
+                let mut endpoints = vec![0u64; tiles];
+                for t in &plan.transfers {
+                    endpoints[t.src_tile] += 1;
+                    endpoints[t.dst_tile] += 1;
+                }
+                for tile in 0..tiles {
+                    if endpoints[tile] > 0 {
+                        mems[tile].alloc_unchecked(
+                            RegionKind::ExchangeCode,
+                            endpoints[tile] * overheads::EXCHANGE_CODE_PER_TRANSFER,
+                        );
+                    }
+                    max_recv[tile] = max_recv[tile].max(recv[tile]);
+                }
+            }
+        }
+        for (tile, tm) in mems.iter_mut().enumerate() {
+            let buf = (max_recv[tile] as f64 * overheads::RECV_BUFFER_FACTOR) as u64;
+            if buf > 0 {
+                tm.alloc_unchecked(RegionKind::ExchangeBuffers, buf);
+            }
+        }
+
+        let (max_tile, max_tile_used) = mems
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (i, m.used()))
+            .max_by_key(|&(_, u)| u)
+            .unwrap_or((0, 0));
+        let total_used = mems.iter().map(|m| m.used()).sum();
+        MemoryReport {
+            per_tile: mems,
+            max_tile_used,
+            max_tile,
+            total_used,
+            capacity_per_tile: self.arch.tile_sram_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exchange::plan::{ExchangePattern, ExchangePlan};
+    use crate::graph::program::Program;
+    use crate::graph::tensor::DType;
+    use crate::graph::vertex::VertexKind;
+    use crate::memory::mapping::linear_balanced_mapping;
+
+    fn arch() -> IpuArch {
+        IpuArch::gc200()
+    }
+
+    fn graph_with_tensor(numel: usize) -> Graph {
+        let a = arch();
+        let mut g = Graph::new(a.tiles);
+        let t = g.add_tensor("x", &[numel], DType::F32);
+        g.set_tile_mapping(t, linear_balanced_mapping(numel, a.tiles));
+        g
+    }
+
+    #[test]
+    fn control_code_floor_everywhere() {
+        let g = Graph::new(arch().tiles);
+        let r = MemoryAccountant::new(&arch()).account(&g);
+        assert_eq!(
+            r.region_total(RegionKind::ControlCode),
+            overheads::CONTROL_CODE_BYTES * arch().tiles as u64
+        );
+    }
+
+    #[test]
+    fn tensor_bytes_counted_once_total() {
+        let g = graph_with_tensor(1472 * 100);
+        let r = MemoryAccountant::new(&arch()).account(&g);
+        assert_eq!(r.region_total(RegionKind::TensorData), 1472 * 100 * 4);
+        assert!(r.fits());
+    }
+
+    #[test]
+    fn vertex_state_and_family_code() {
+        let mut g = Graph::new(arch().tiles);
+        let cs = g.add_compute_set("c");
+        for _ in 0..3 {
+            g.add_vertex(cs, VertexKind::Zero { elems: 8 }, 5, vec![], vec![]);
+        }
+        let r = MemoryAccountant::new(&arch()).account(&g);
+        let tile5 = &r.per_tile[5];
+        assert_eq!(tile5.region(RegionKind::VertexCode), overheads::CODE_BYTES_PER_FAMILY);
+        assert_eq!(
+            tile5.region(RegionKind::VertexState),
+            3 * VertexKind::Zero { elems: 8 }.state_bytes() as u64
+        );
+    }
+
+    #[test]
+    fn exchange_costs_show_up() {
+        let mut g = Graph::new(arch().tiles);
+        let mut plan = ExchangePlan::new("x", ExchangePattern::Broadcast);
+        plan.add(0, 1, 1000);
+        plan.add(0, 2, 1000);
+        let ex = g.add_exchange(plan);
+        g.set_program(Program::Exchange(ex));
+        let r = MemoryAccountant::new(&arch()).account(&g);
+        assert_eq!(r.per_tile[1].region(RegionKind::ExchangeBuffers), 1000);
+        assert!(r.per_tile[0].region(RegionKind::ExchangeCode) > 0);
+        // sender holds no receive buffer
+        assert_eq!(r.per_tile[0].region(RegionKind::ExchangeBuffers), 0);
+    }
+
+    #[test]
+    fn oversized_tensor_fails_fit() {
+        // one tile's share exceeds 624 KiB: 1472 tiles * 700 KiB total
+        let numel = arch().tiles * 180 * 1024; // 720 KiB/tile in f32
+        let g = graph_with_tensor(numel);
+        let r = MemoryAccountant::new(&arch()).account(&g);
+        assert!(!r.fits());
+        assert!(r.max_tile_fraction() > 1.0);
+    }
+
+    #[test]
+    fn histogram_sums_to_tiles() {
+        let g = graph_with_tensor(1000);
+        let r = MemoryAccountant::new(&arch()).account(&g);
+        let h = r.histogram(10);
+        assert_eq!(h.iter().sum::<usize>(), arch().tiles);
+    }
+
+    #[test]
+    fn repeated_exchange_buffers_use_max_not_sum() {
+        let mut g = Graph::new(arch().tiles);
+        let mut plan = ExchangePlan::new("x", ExchangePattern::Broadcast);
+        plan.add(0, 1, 500);
+        let ex = g.add_exchange(plan);
+        g.set_program(Program::Repeat(5, Box::new(Program::Exchange(ex))));
+        let r = MemoryAccountant::new(&arch()).account(&g);
+        // buffer is reused across repeats: 500, not 2500
+        assert_eq!(r.per_tile[1].region(RegionKind::ExchangeBuffers), 500);
+    }
+}

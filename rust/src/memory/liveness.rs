@@ -1,0 +1,165 @@
+//! Program-step liveness: how per-tile memory demand evolves across the
+//! BSP program — the PopVision "memory over time" view that underlies the
+//! paper's observation that *transient* state (chunk landings, partial
+//! gathers), not resident tensors, sets the peak.
+
+use crate::graph::builder::Graph;
+use crate::graph::program::ProgramStep;
+
+/// Memory demand at one program step.
+#[derive(Clone, Debug)]
+pub struct LivenessPoint {
+    pub step_index: usize,
+    pub label: String,
+    /// Resident tensor bytes (constant across the program in our model —
+    /// tensors are allocated for the whole run, as in Poplar).
+    pub resident_bytes: u64,
+    /// Transient bytes in flight at this step on the busiest tile
+    /// (exchange landings for Exchange steps, zero otherwise).
+    pub peak_transient_tile_bytes: u64,
+}
+
+/// Liveness profile of a graph's program.
+#[derive(Clone, Debug)]
+pub struct LivenessProfile {
+    pub points: Vec<LivenessPoint>,
+    pub resident_bytes: u64,
+}
+
+impl LivenessProfile {
+    /// Compute the profile. Resident = all mapped tensors; transient =
+    /// per-step exchange receive maxima.
+    pub fn of(graph: &Graph) -> LivenessProfile {
+        let resident: u64 = graph
+            .tensors()
+            .iter()
+            .filter(|t| t.mapping.is_some())
+            .map(|t| t.bytes() as u64)
+            .sum();
+        let mut points = Vec::new();
+        for (i, step) in graph.program.steps().into_iter().enumerate() {
+            let (label, transient) = match step {
+                ProgramStep::Execute(cs) => {
+                    (format!("execute:{}", graph.compute_set(cs).name), 0)
+                }
+                ProgramStep::Sync => ("sync".to_string(), 0),
+                ProgramStep::Exchange(ex) => {
+                    let plan = graph.exchange(ex);
+                    let max_recv = plan
+                        .recv_per_tile(graph.tiles)
+                        .into_iter()
+                        .max()
+                        .unwrap_or(0);
+                    (format!("exchange:{}", plan.name), max_recv)
+                }
+            };
+            points.push(LivenessPoint {
+                step_index: i,
+                label,
+                resident_bytes: resident,
+                peak_transient_tile_bytes: transient,
+            });
+        }
+        LivenessProfile { points, resident_bytes: resident }
+    }
+
+    /// Step with the largest transient demand (the liveness peak).
+    pub fn peak(&self) -> Option<&LivenessPoint> {
+        self.points
+            .iter()
+            .max_by_key(|p| p.peak_transient_tile_bytes)
+    }
+
+    /// Sparkline of transient demand across steps ('.' none .. '#' peak).
+    pub fn sparkline(&self) -> String {
+        let max = self
+            .points
+            .iter()
+            .map(|p| p.peak_transient_tile_bytes)
+            .max()
+            .unwrap_or(0)
+            .max(1);
+        self.points
+            .iter()
+            .map(|p| {
+                let frac = p.peak_transient_tile_bytes as f64 / max as f64;
+                match (frac * 4.0).round() as u32 {
+                    0 => '.',
+                    1 => '-',
+                    2 => '=',
+                    3 => '+',
+                    _ => '#',
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::IpuArch;
+    use crate::planner::partition::MmShape;
+    use crate::planner::search::search;
+    use crate::sim::engine::SimEngine;
+
+    fn profile(shape: MmShape) -> LivenessProfile {
+        let arch = IpuArch::gc200();
+        let engine = SimEngine::new(arch.clone());
+        let plan = search(&arch, shape).unwrap();
+        LivenessProfile::of(&engine.build_graph(shape, &plan))
+    }
+
+    #[test]
+    fn resident_equals_tensor_totals() {
+        let shape = MmShape::square(512);
+        let p = profile(shape);
+        // A + B + C in f32
+        assert_eq!(p.resident_bytes, shape.tensor_bytes());
+    }
+
+    #[test]
+    fn exchanges_carry_transient_demand() {
+        let p = profile(MmShape::square(1024));
+        let peak = p.peak().unwrap();
+        assert!(peak.peak_transient_tile_bytes > 0);
+        assert!(peak.label.starts_with("exchange:"));
+    }
+
+    #[test]
+    fn execute_steps_have_no_transients() {
+        let p = profile(MmShape::square(512));
+        for pt in &p.points {
+            if pt.label.starts_with("execute:") {
+                assert_eq!(pt.peak_transient_tile_bytes, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn step_count_matches_program() {
+        let arch = IpuArch::gc200();
+        let engine = SimEngine::new(arch.clone());
+        let shape = MmShape::square(1024);
+        let plan = search(&arch, shape).unwrap();
+        let g = engine.build_graph(shape, &plan);
+        let p = LivenessProfile::of(&g);
+        assert_eq!(p.points.len(), g.program.steps().len());
+    }
+
+    #[test]
+    fn sparkline_length_matches_steps() {
+        let p = profile(MmShape::square(512));
+        assert_eq!(p.sparkline().chars().count(), p.points.len());
+        assert!(p.sparkline().contains('#'));
+    }
+
+    #[test]
+    fn split_reduction_adds_gather_peak() {
+        let p = profile(MmShape::new(512, 16384, 2048));
+        assert!(p
+            .points
+            .iter()
+            .any(|pt| pt.label == "exchange:gather-partials"));
+    }
+}

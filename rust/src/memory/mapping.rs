@@ -1,0 +1,149 @@
+//! Tensor->tile mapping strategies (the Poplar `setTileMapping` analogue).
+
+use crate::graph::tensor::{Interval, TileMapping};
+
+/// Spread `numel` elements across `tiles` tiles in contiguous, balanced
+/// chunks (Poplar's `mapTensorLinearly`). The first `numel % tiles` tiles
+/// get one extra element.
+pub fn linear_balanced_mapping(numel: usize, tiles: usize) -> TileMapping {
+    assert!(tiles > 0);
+    let base = numel / tiles;
+    let extra = numel % tiles;
+    let mut out: TileMapping = Vec::with_capacity(tiles);
+    let mut cursor = 0;
+    for t in 0..tiles {
+        let len = base + usize::from(t < extra);
+        out.push(if len == 0 {
+            vec![]
+        } else {
+            vec![Interval::new(cursor, cursor + len)]
+        });
+        cursor += len;
+    }
+    debug_assert_eq!(cursor, numel);
+    out
+}
+
+/// Map a row-major `rows x cols` tensor as a `pr x pc` grid of blocks, block
+/// (i, j) going to `tile_of(i, j)`. Rows/cols need not divide evenly; edge
+/// blocks are smaller. Produces one interval per (block-row-slice) so the
+/// mapping stays exact.
+pub fn grid_2d_mapping(
+    rows: usize,
+    cols: usize,
+    pr: usize,
+    pc: usize,
+    tiles: usize,
+    tile_of: impl Fn(usize, usize) -> usize,
+) -> TileMapping {
+    assert!(pr > 0 && pc > 0);
+    let mut out: TileMapping = vec![vec![]; tiles];
+    let rb = rows.div_ceil(pr);
+    let cb = cols.div_ceil(pc);
+    for bi in 0..pr {
+        let r0 = bi * rb;
+        if r0 >= rows {
+            continue;
+        }
+        let r1 = ((bi + 1) * rb).min(rows);
+        for bj in 0..pc {
+            let c0 = bj * cb;
+            if c0 >= cols {
+                continue;
+            }
+            let c1 = ((bj + 1) * cb).min(cols);
+            let tile = tile_of(bi, bj);
+            assert!(tile < tiles, "tile_of({bi},{bj}) = {tile} out of range");
+            for r in r0..r1 {
+                out[tile].push(Interval::new(r * cols + c0, r * cols + c1));
+            }
+        }
+    }
+    out
+}
+
+/// Bytes on the heaviest tile for a mapping of element size `elem_bytes`.
+pub fn max_tile_bytes(mapping: &TileMapping, elem_bytes: usize) -> usize {
+    mapping
+        .iter()
+        .map(|ivs| ivs.iter().map(Interval::len).sum::<usize>() * elem_bytes)
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tensor::{DType, Tensor, TensorId};
+
+    fn validate(numel: usize, mapping: TileMapping) {
+        let t = Tensor {
+            id: TensorId(0),
+            name: "t".into(),
+            shape: vec![numel],
+            dtype: DType::F32,
+            mapping: Some(mapping),
+        };
+        t.validate_mapping().unwrap();
+    }
+
+    #[test]
+    fn linear_even_split() {
+        let m = linear_balanced_mapping(8, 4);
+        assert_eq!(m.len(), 4);
+        assert_eq!(m[0], vec![Interval::new(0, 2)]);
+        assert_eq!(m[3], vec![Interval::new(6, 8)]);
+        validate(8, m);
+    }
+
+    #[test]
+    fn linear_remainder_goes_to_early_tiles() {
+        let m = linear_balanced_mapping(10, 4);
+        let lens: Vec<usize> = m.iter().map(|iv| iv.iter().map(Interval::len).sum()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+        validate(10, m);
+    }
+
+    #[test]
+    fn linear_more_tiles_than_elements() {
+        let m = linear_balanced_mapping(2, 5);
+        let used = m.iter().filter(|iv| !iv.is_empty()).count();
+        assert_eq!(used, 2);
+        validate(2, m);
+    }
+
+    #[test]
+    fn grid_even_blocks() {
+        // 4x4 over 2x2 grid -> 4 tiles, each 2x2 block = 2 intervals of 2
+        let m = grid_2d_mapping(4, 4, 2, 2, 4, |i, j| i * 2 + j);
+        validate(16, m.clone());
+        for t in 0..4 {
+            let n: usize = m[t].iter().map(Interval::len).sum();
+            assert_eq!(n, 4);
+        }
+    }
+
+    #[test]
+    fn grid_uneven_edges() {
+        // 5x3 over 2x2 grid: row blocks of 3/2 rows, col blocks of 2/1
+        let m = grid_2d_mapping(5, 3, 2, 2, 4, |i, j| i * 2 + j);
+        validate(15, m.clone());
+        let n0: usize = m[0].iter().map(Interval::len).sum();
+        assert_eq!(n0, 6); // 3 rows x 2 cols
+        let n3: usize = m[3].iter().map(Interval::len).sum();
+        assert_eq!(n3, 2); // 2 rows x 1 col
+    }
+
+    #[test]
+    fn grid_degenerate_partitions_skip_empty() {
+        // more partitions than rows: pr=4 over 2 rows
+        let m = grid_2d_mapping(2, 2, 4, 1, 4, |i, _| i);
+        validate(4, m);
+    }
+
+    #[test]
+    fn max_tile_bytes_reports_heaviest() {
+        let m = linear_balanced_mapping(10, 4);
+        assert_eq!(max_tile_bytes(&m, 4), 12);
+    }
+}

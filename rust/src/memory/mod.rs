@@ -1,0 +1,21 @@
+//! In-Processor memory modelling (paper §2.3).
+//!
+//! The paper's central constraint: "all data required for a computational
+//! step must reside in the In-Processor Memory of each tile", and memory —
+//! not compute — bounds the largest multipliable matrices (§2.4: 3584^2 on
+//! GC200 at only 17% *tensor* occupancy; the rest is code, vertex state,
+//! exchange buffers and rearrangement copies).
+//!
+//! * `mapping`    — tensor->tile layout strategies,
+//! * `tile_mem`   — a per-tile region allocator,
+//! * `accounting` — whole-graph per-tile memory bills and fit checks.
+
+pub mod accounting;
+pub mod mapping;
+pub mod liveness;
+pub mod tile_mem;
+
+pub use accounting::{MemoryAccountant, MemoryReport};
+pub use mapping::{grid_2d_mapping, linear_balanced_mapping};
+pub use liveness::LivenessProfile;
+pub use tile_mem::{RegionKind, TileMemory};

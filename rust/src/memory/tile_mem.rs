@@ -1,0 +1,155 @@
+//! Per-tile memory region allocator.
+//!
+//! Tracks how one tile's 624 KiB (GC200) splits across the categories
+//! PopVision reports: tensor data, vertex state, codelet code, exchange
+//! code and buffers, and control code. Over-commit is an error carrying
+//! the full bill — the message a Poplar user sees as
+//! "Out of memory on tile N".
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RegionKind {
+    TensorData,
+    VertexState,
+    VertexCode,
+    ExchangeCode,
+    ExchangeBuffers,
+    ControlCode,
+}
+
+impl RegionKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RegionKind::TensorData => "tensor-data",
+            RegionKind::VertexState => "vertex-state",
+            RegionKind::VertexCode => "vertex-code",
+            RegionKind::ExchangeCode => "exchange-code",
+            RegionKind::ExchangeBuffers => "exchange-buffers",
+            RegionKind::ControlCode => "control-code",
+        }
+    }
+
+    pub fn all() -> [RegionKind; 6] {
+        [
+            RegionKind::TensorData,
+            RegionKind::VertexState,
+            RegionKind::VertexCode,
+            RegionKind::ExchangeCode,
+            RegionKind::ExchangeBuffers,
+            RegionKind::ControlCode,
+        ]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TileMemory {
+    pub tile: usize,
+    pub capacity: u64,
+    regions: BTreeMap<RegionKind, u64>,
+}
+
+impl TileMemory {
+    pub fn new(tile: usize, capacity: u64) -> TileMemory {
+        TileMemory { tile, capacity, regions: BTreeMap::new() }
+    }
+
+    /// Reserve `bytes` in `kind`; errors with the full bill on overflow.
+    pub fn alloc(&mut self, kind: RegionKind, bytes: u64) -> Result<()> {
+        *self.regions.entry(kind).or_insert(0) += bytes;
+        if self.used() > self.capacity {
+            let bill = self.bill();
+            bail!(
+                "Out of memory on tile {}: need {} of {} bytes ({bill})",
+                self.tile,
+                self.used(),
+                self.capacity
+            );
+        }
+        Ok(())
+    }
+
+    /// Reserve without the capacity check (for what-if accounting).
+    pub fn alloc_unchecked(&mut self, kind: RegionKind, bytes: u64) {
+        *self.regions.entry(kind).or_insert(0) += bytes;
+    }
+
+    pub fn used(&self) -> u64 {
+        self.regions.values().sum()
+    }
+
+    pub fn free(&self) -> i64 {
+        self.capacity as i64 - self.used() as i64
+    }
+
+    pub fn fits(&self) -> bool {
+        self.used() <= self.capacity
+    }
+
+    pub fn region(&self, kind: RegionKind) -> u64 {
+        self.regions.get(&kind).copied().unwrap_or(0)
+    }
+
+    /// "tensor-data=1024 vertex-state=96 ..." (only non-zero regions).
+    pub fn bill(&self) -> String {
+        RegionKind::all()
+            .iter()
+            .filter_map(|k| {
+                let v = self.region(*k);
+                (v > 0).then(|| format!("{}={}", k.name(), v))
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_within_capacity() {
+        let mut m = TileMemory::new(0, 1000);
+        m.alloc(RegionKind::TensorData, 600).unwrap();
+        m.alloc(RegionKind::VertexState, 300).unwrap();
+        assert_eq!(m.used(), 900);
+        assert_eq!(m.free(), 100);
+        assert!(m.fits());
+    }
+
+    #[test]
+    fn overflow_reports_bill() {
+        let mut m = TileMemory::new(7, 100);
+        m.alloc(RegionKind::TensorData, 80).unwrap();
+        let e = m.alloc(RegionKind::ExchangeBuffers, 30).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("Out of memory on tile 7"), "{msg}");
+        assert!(msg.contains("tensor-data=80"), "{msg}");
+        assert!(msg.contains("exchange-buffers=30"), "{msg}");
+    }
+
+    #[test]
+    fn unchecked_alloc_allows_overcommit() {
+        let mut m = TileMemory::new(0, 10);
+        m.alloc_unchecked(RegionKind::ControlCode, 100);
+        assert!(!m.fits());
+        assert_eq!(m.free(), -90);
+    }
+
+    #[test]
+    fn regions_accumulate() {
+        let mut m = TileMemory::new(0, 1000);
+        m.alloc(RegionKind::TensorData, 10).unwrap();
+        m.alloc(RegionKind::TensorData, 15).unwrap();
+        assert_eq!(m.region(RegionKind::TensorData), 25);
+    }
+
+    #[test]
+    fn bill_skips_zero_regions() {
+        let mut m = TileMemory::new(0, 100);
+        m.alloc(RegionKind::VertexCode, 5).unwrap();
+        assert_eq!(m.bill(), "vertex-code=5");
+    }
+}

@@ -1,0 +1,137 @@
+//! Multi-IPU scaling (paper §6 future work, X2 in DESIGN.md).
+//!
+//! The M2000 carries four GC200s linked at 350 GB/s (Table 1). The
+//! natural matmul sharding keeps A replicated-by-rows and splits B's
+//! columns (the k dim) across chips: no cross-chip reduction is needed,
+//! but each chip must receive its B shard and the A panel over IPU-Link,
+//! and the per-chip problem must still clear the per-chip SRAM wall. The
+//! paper notes PopLin "is currently lacking support for multiple IPUs"
+//! (§2.3) — this model quantifies what that support would buy.
+
+use crate::arch::IpuArch;
+use crate::planner::partition::MmShape;
+use crate::planner::search::{search, PlannerError};
+
+#[derive(Clone, Copy, Debug)]
+pub struct MultiIpuReport {
+    pub shape: MmShape,
+    pub chips: usize,
+    pub seconds: f64,
+    pub tflops: f64,
+    /// Speedup over the best single-chip run of the same shape (None when
+    /// the shape does not fit one chip at all).
+    pub single_chip_tflops: Option<f64>,
+    /// Fraction of time spent in IPU-Link distribution.
+    pub link_fraction: f64,
+    pub per_chip_shape: MmShape,
+}
+
+pub struct MultiIpu {
+    pub arch: IpuArch,
+    pub chips: usize,
+}
+
+impl MultiIpu {
+    /// An M2000-like pod of `chips` IPUs.
+    pub fn new(arch: IpuArch, chips: usize) -> MultiIpu {
+        assert!(chips >= 1);
+        MultiIpu { arch, chips }
+    }
+
+    /// Simulate k-sharded execution across the pod.
+    pub fn simulate_mm(&self, shape: MmShape) -> Result<MultiIpuReport, PlannerError> {
+        // shard k as evenly as possible; every chip must fit its shard
+        let k_shard = shape.k.div_ceil(self.chips).max(1);
+        let per_chip = MmShape::new(shape.m, shape.n, k_shard);
+        let plan = search(&self.arch, per_chip)?;
+        let compute_secs = self.arch.cycles_to_secs(plan.cost.total_cycles);
+
+        // distribution: A (m x n) broadcast to all chips + each chip's B
+        // shard, over IPU-Link; the link is shared so transfers serialize
+        let a_bytes = (shape.m * shape.n * 4) as f64;
+        let b_bytes = (shape.n * shape.k * 4) as f64;
+        let link_secs = if self.chips > 1 {
+            ((self.chips - 1) as f64 * a_bytes + b_bytes)
+                / self.arch.interchip_bw_bytes_per_s
+        } else {
+            0.0
+        };
+
+        let seconds = compute_secs + link_secs;
+        let tflops = shape.flops() as f64 / seconds / 1e12;
+        let single = search(&self.arch, shape)
+            .ok()
+            .map(|p| p.tflops(&self.arch));
+        Ok(MultiIpuReport {
+            shape,
+            chips: self.chips,
+            seconds,
+            tflops,
+            single_chip_tflops: single,
+            link_fraction: link_secs / seconds,
+            per_chip_shape: per_chip,
+        })
+    }
+
+    /// Largest fitting square across the pod (the §6 "maximum processable
+    /// matrices" improvement), at `step` granularity.
+    pub fn max_fitting_square(&self, step: usize, limit: usize) -> usize {
+        let mut best = 0;
+        let mut s = step;
+        while s <= limit {
+            if self.simulate_mm(MmShape::square(s)).is_ok() {
+                best = s;
+            } else if best > 0 {
+                break;
+            }
+            s += step;
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pod(chips: usize) -> MultiIpu {
+        MultiIpu::new(IpuArch::gc200(), chips)
+    }
+
+    #[test]
+    fn one_chip_matches_single_search() {
+        let r = pod(1).simulate_mm(MmShape::square(2048)).unwrap();
+        let single = search(&IpuArch::gc200(), MmShape::square(2048)).unwrap();
+        let expect = single.tflops(&IpuArch::gc200());
+        assert!((r.tflops - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    fn four_chips_speed_up_large_squares() {
+        let r1 = pod(1).simulate_mm(MmShape::square(3584)).unwrap();
+        let r4 = pod(4).simulate_mm(MmShape::square(3584)).unwrap();
+        assert!(r4.tflops > 1.5 * r1.tflops, "{} vs {}", r4.tflops, r1.tflops);
+    }
+
+    #[test]
+    fn four_chips_extend_the_memory_wall() {
+        let m1 = pod(1).max_fitting_square(256, 16384);
+        let m4 = pod(4).max_fitting_square(256, 16384);
+        assert!(m4 > m1, "{m4} vs {m1}");
+    }
+
+    #[test]
+    fn link_time_is_visible_but_not_dominant_for_squares() {
+        let r = pod(4).simulate_mm(MmShape::square(3584)).unwrap();
+        assert!(r.link_fraction > 0.0 && r.link_fraction < 0.8, "{}", r.link_fraction);
+    }
+
+    #[test]
+    fn scaling_efficiency_degrades_for_small_problems() {
+        let small = pod(4).simulate_mm(MmShape::square(512)).unwrap();
+        let big = pod(4).simulate_mm(MmShape::square(3584)).unwrap();
+        let eff_small = small.tflops / small.single_chip_tflops.unwrap();
+        let eff_big = big.tflops / big.single_chip_tflops.unwrap();
+        assert!(eff_big > eff_small, "{eff_big} vs {eff_small}");
+    }
+}

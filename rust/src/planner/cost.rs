@@ -1,0 +1,548 @@
+//! The planner's cost model: cycles, memory, and vertex census for one
+//! candidate partition.
+//!
+//! Mechanisms (each maps to a paper finding — see DESIGN.md §5):
+//!
+//! * **AMP quantization** — sub-block dims round up to the AMP pipeline's
+//!   granularity (rows 4, reduction 16), so thin tiles waste passes.
+//! * **Per-superstep exchange** — each chunk of the reduction is fetched
+//!   over the fabric; skew changes the compute-to-traffic ratio per tile.
+//! * **Vertex overhead** — every vertex costs fixed dispatch cycles; plans
+//!   that split the reduction (pn > 1) emit a reduction stage whose vertex
+//!   count explodes (Finding 2: 31743 vs 5762).
+//! * **Memory bill** — resident homes + C block + double-buffered chunks +
+//!   AMP rearrangement copy + *per-superstep exchange code* (unrolled
+//!   exchange programs; this is what caps the max problem size, §2.4).
+
+use crate::arch::IpuArch;
+use crate::planner::partition::{MmShape, Partition};
+use crate::util::units::div_ceil;
+
+/// Model constants shared by every architecture (per-arch constants live
+/// on [`IpuArch`]). Calibrated against the paper's measurements.
+pub mod consts {
+    /// Compute vertices per active tile: 1 AMP supervisor + 2 rearrange
+    /// (A, B chunk) + 1 zero/cast. PopVision shows ~4/tile for a PopLin
+    /// matmul: 4 x 1440 tiles ~= the paper's squared census of 5762.
+    pub const COMPUTE_VERTICES_PER_TILE: usize = 4;
+    /// Output elements per reduction worklist vertex. Fit to the paper's
+    /// right-skew census (31743 total).
+    pub const REDUCE_GRAIN: usize = 160;
+    /// Chunk double-buffering factor (receive next chunk while computing).
+    pub const CHUNK_BUFFERS: u64 = 2;
+    /// Fixed per-tile bytes for vertex state + codelet code + misc.
+    pub const FIXED_TILE_OVERHEAD_BYTES: u64 = 6 * 1024;
+    /// Syncs per BSP superstep (pre-exchange + post-exchange).
+    pub const SYNCS_PER_STEP: u64 = 2;
+    /// Exchange-program launch cost, cycles.
+    pub const EXCHANGE_SETUP_CYCLES: u64 = 40;
+    /// Fixed cost of entering a reduction stage (pn > 1): the whole-chip
+    /// rearrangement of C partials into reduction layout plus the extra
+    /// exchange/control program load. Calibrated (DESIGN.md §5) so squared
+    /// shapes keep pn = 1 (paper census: ~4 vertices/tile) while strongly
+    /// right-skewed shapes still profit from splitting the reduction.
+    pub const REDUCE_STAGE_SETUP_CYCLES: u64 = 80_000;
+    /// Additional reduction cost per extra partial (pn - 1): each level of
+    /// splitting adds a partial-gather round plus control overhead; this is
+    /// what makes the *extreme* right-skew collapse in Fig. 5. Calibrated.
+    pub const REDUCE_STAGE_PER_SPLIT_CYCLES: u64 = 60_000;
+    /// Cycles per C element for the output cast/rearrangement epilogue
+    /// (AMP accumulator layout -> row-major output). Calibrated.
+    pub const C_CAST_CYCLES_PER_ELEM: u64 = 12;
+    /// Congestion floor at full-chip participation (cf. exchange::fabric).
+    pub const CONGESTION_FLOOR: f64 = 0.7;
+    /// Reduction chunk candidates searched (multiples of the AMP vector).
+    pub const CN_CANDIDATES: [usize; 8] = [64, 96, 128, 160, 192, 256, 384, 512];
+}
+
+
+/// Which cost-model mechanisms are active — the ablation surface
+/// (DESIGN.md calls out one bench per design choice). Default: all on,
+/// which is the calibrated model every experiment uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CostConfig {
+    /// Operand precision: FP32 (the paper's experiments) or FP16 through
+    /// the AMP's fp16.16 mode (extension; accumulation stays FP32).
+    pub dtype: MmDtype,
+    /// 120-cycle dispatch cost per vertex (drives Finding 2's perf side).
+    pub vertex_overhead: bool,
+    /// AMP pipeline rounding (rows->4, reduction->16).
+    pub amp_quantization: bool,
+    /// Exchange congestion derating towards the 0.7 floor.
+    pub exchange_congestion: bool,
+    /// Per-superstep (unrolled) exchange code in the memory bill — the
+    /// mechanism behind the 3584^2 wall and the forced reduction split.
+    pub exchange_code_scaling: bool,
+    /// Fixed + per-split reduction-stage entry cost.
+    pub reduce_stage_penalty: bool,
+    /// C cast/rearrangement epilogue (keeps left-skew below squared).
+    pub c_cast_epilogue: bool,
+}
+
+impl Default for CostConfig {
+    fn default() -> Self {
+        CostConfig {
+            dtype: MmDtype::F32,
+            vertex_overhead: true,
+            amp_quantization: true,
+            exchange_congestion: true,
+            exchange_code_scaling: true,
+            reduce_stage_penalty: true,
+            c_cast_epilogue: true,
+        }
+    }
+}
+
+/// Operand precision for the matmul datapath.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MmDtype {
+    F32,
+    /// AMP fp16.16: fp16 operands, fp32 accumulation — 4x the MAC rate
+    /// and half the operand bytes.
+    F16,
+}
+
+impl MmDtype {
+    pub fn elem_bytes(&self) -> u64 {
+        match self {
+            MmDtype::F32 => 4,
+            MmDtype::F16 => 2,
+        }
+    }
+}
+
+/// Nameable mechanisms for ablation tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mechanism {
+    VertexOverhead,
+    AmpQuantization,
+    ExchangeCongestion,
+    ExchangeCodeScaling,
+    ReduceStagePenalty,
+    CCastEpilogue,
+}
+
+impl Mechanism {
+    pub fn all() -> [Mechanism; 6] {
+        [
+            Mechanism::VertexOverhead,
+            Mechanism::AmpQuantization,
+            Mechanism::ExchangeCongestion,
+            Mechanism::ExchangeCodeScaling,
+            Mechanism::ReduceStagePenalty,
+            Mechanism::CCastEpilogue,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mechanism::VertexOverhead => "vertex-overhead",
+            Mechanism::AmpQuantization => "amp-quantization",
+            Mechanism::ExchangeCongestion => "exchange-congestion",
+            Mechanism::ExchangeCodeScaling => "exchange-code-scaling",
+            Mechanism::ReduceStagePenalty => "reduce-stage-penalty",
+            Mechanism::CCastEpilogue => "c-cast-epilogue",
+        }
+    }
+}
+
+impl CostConfig {
+    /// The full model with one mechanism disabled.
+    pub fn without(mech: Mechanism) -> CostConfig {
+        let mut c = CostConfig::default();
+        match mech {
+            Mechanism::VertexOverhead => c.vertex_overhead = false,
+            Mechanism::AmpQuantization => c.amp_quantization = false,
+            Mechanism::ExchangeCongestion => c.exchange_congestion = false,
+            Mechanism::ExchangeCodeScaling => c.exchange_code_scaling = false,
+            Mechanism::ReduceStagePenalty => c.reduce_stage_penalty = false,
+            Mechanism::CCastEpilogue => c.c_cast_epilogue = false,
+        }
+        c
+    }
+}
+
+/// Fully-priced candidate plan.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanCost {
+    pub partition: Partition,
+    // -- cycles ----------------------------------------------------------
+    pub compute_cycles: u64,
+    pub exchange_cycles: u64,
+    pub sync_cycles: u64,
+    pub total_cycles: u64,
+    /// MAC cycles that do useful (unpadded, unquantized) work.
+    pub useful_cycles: u64,
+    pub supersteps: usize,
+    // -- census ----------------------------------------------------------
+    pub compute_vertices: usize,
+    pub reduce_vertices: usize,
+    // -- memory (heaviest tile) -------------------------------------------
+    pub tile_bytes_tensors: u64,
+    pub tile_bytes_chunks: u64,
+    pub tile_bytes_exchange_code: u64,
+    pub tile_bytes_total: u64,
+    pub fits: bool,
+    // -- traffic ----------------------------------------------------------
+    pub bytes_moved: u64,
+}
+
+impl PlanCost {
+    pub fn total_vertices(&self) -> usize {
+        self.compute_vertices + self.reduce_vertices
+    }
+
+    /// Model efficiency: useful MAC cycles / critical-path cycles.
+    pub fn efficiency(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.useful_cycles as f64 / self.total_cycles as f64
+        }
+    }
+}
+
+pub struct CostModel<'a> {
+    pub arch: &'a IpuArch,
+    pub config: CostConfig,
+}
+
+impl<'a> CostModel<'a> {
+    pub fn new(arch: &'a IpuArch) -> Self {
+        CostModel { arch, config: CostConfig::default() }
+    }
+
+    pub fn with_config(arch: &'a IpuArch, config: CostConfig) -> Self {
+        CostModel { arch, config }
+    }
+
+    fn congestion(&self, tiles_used: usize) -> f64 {
+        if !self.config.exchange_congestion {
+            return 1.0;
+        }
+        let frac = (tiles_used as f64 / self.arch.tiles as f64).clamp(0.0, 1.0);
+        1.0 - (1.0 - consts::CONGESTION_FLOOR) * frac
+    }
+
+    /// Operand element size under the configured precision.
+    fn eb(&self) -> u64 {
+        self.config.dtype.elem_bytes()
+    }
+
+    /// AMP MACs per tile-cycle under the configured precision.
+    fn macs(&self) -> u32 {
+        match self.config.dtype {
+            MmDtype::F32 => self.arch.fp32_macs_per_tile_cycle,
+            MmDtype::F16 => self.arch.fp16_macs_per_tile_cycle,
+        }
+    }
+
+    /// AMP reduction-vector quantum (16 fp32 lanes, 32 fp16 lanes).
+    fn acc_quantum(&self) -> usize {
+        match self.config.dtype {
+            MmDtype::F32 => 16,
+            MmDtype::F16 => 32,
+        }
+    }
+
+    fn vertex_overhead(&self) -> u64 {
+        if self.config.vertex_overhead { 120 } else { 0 }
+    }
+
+    /// AMP supervisor-vertex cycles (config-aware twin of
+    /// `VertexKind::AmpMacc::cycles`, which the BSP graph uses with the
+    /// full model).
+    fn amp_cycles(&self, rows: usize, cols: usize, acc: usize, macs: u32) -> u64 {
+        let q = |v: usize, quant: usize| {
+            if self.config.amp_quantization { v.div_ceil(quant) * quant } else { v }
+        };
+        let m = (q(rows, 4) * q(cols, 4) * q(acc, self.acc_quantum())) as u64;
+        self.vertex_overhead() + m / macs.max(1) as u64
+    }
+
+    fn rearrange_cycles(&self, bytes: u64) -> u64 {
+        (self.vertex_overhead() + bytes / 8).div_ceil(2)
+    }
+
+    /// Cycles to receive `bytes` on the bottleneck tile.
+    fn exchange_cycles(&self, bytes: u64, tiles_used: usize) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        let port = self.arch.exchange_bytes_per_tile_cycle * self.congestion(tiles_used);
+        consts::EXCHANGE_SETUP_CYCLES + (bytes as f64 / port).ceil() as u64
+    }
+
+    /// Cheap memory-only bill of a candidate (§Perf: the search rejects
+    /// infeasible candidates on this before paying for the cycle model —
+    /// must stay consistent with `evaluate`'s memory section).
+    pub fn tile_bytes(&self, shape: MmShape, part: Partition) -> u64 {
+        let (sm, sn, sk) = part.sub_block(shape);
+        let cn = part.cn.min(sn);
+        let n_steps = div_ceil(sn, cn);
+        let eb = self.eb();
+        let ab_bytes =
+            eb * (shape.m as u64 * shape.n as u64 + shape.n as u64 * shape.k as u64);
+        let home_bytes = ab_bytes / self.arch.tiles as u64 + 64;
+        let c_block_bytes = (sm * sk * 4) as u64; // fp32 accumulator
+        let chunk_bytes = consts::CHUNK_BUFFERS * ((sm + sk) as u64 * cn as u64 * eb)
+            + sm as u64 * cn as u64 * eb;
+        let landing_bytes = if part.pn > 1 {
+            (part.pn as u64 - 1) * c_block_bytes
+        } else {
+            0
+        };
+        let code_steps = if self.config.exchange_code_scaling { n_steps as u64 } else { 1 };
+        let exchange_code =
+            code_steps * (sm + cn + sk) as u64 * self.arch.exchange_code_row_bytes;
+        home_bytes
+            + c_block_bytes
+            + landing_bytes
+            + chunk_bytes
+            + exchange_code
+            + consts::FIXED_TILE_OVERHEAD_BYTES
+    }
+
+    /// Price one candidate partition for `shape`.
+    pub fn evaluate(&self, shape: MmShape, part: Partition) -> PlanCost {
+        debug_assert!(part.is_valid(shape, self.arch.tiles));
+        let macs = self.macs();
+        let (sm, sn, sk) = part.sub_block(shape);
+        let tiles_used = part.tiles_used();
+        let cn = part.cn.min(sn);
+        let full_steps = sn / cn;
+        let rem = sn % cn;
+        let n_steps = full_steps + usize::from(rem > 0);
+
+        // ---- main loop: per-superstep compute + exchange + sync ---------
+        let eb = self.eb();
+        let chunk_recv_bytes = |c: usize| (sm + sk) as u64 * c as u64 * eb;
+        let step_compute = |c: usize| {
+            let amp = self.amp_cycles(sm, sk, c, macs);
+            // rearrange overlapped across worker threads (cf. bsp engine)
+            let re = self.rearrange_cycles(chunk_recv_bytes(c));
+            amp + re
+        };
+        let mut compute_cycles = full_steps as u64 * step_compute(cn);
+        let mut exchange_cycles =
+            full_steps as u64 * self.exchange_cycles(chunk_recv_bytes(cn), tiles_used);
+        if rem > 0 {
+            compute_cycles += step_compute(rem);
+            exchange_cycles += self.exchange_cycles(chunk_recv_bytes(rem), tiles_used);
+        }
+        let mut sync_cycles = consts::SYNCS_PER_STEP * self.arch.sync_cycles * n_steps as u64;
+
+        // ---- prologue: scatter A and B from home mapping -----------------
+        let ab_bytes =
+            eb * (shape.m as u64 * shape.n as u64 + shape.n as u64 * shape.k as u64);
+        let prologue_per_tile = ab_bytes / tiles_used.max(1) as u64;
+        exchange_cycles += self.exchange_cycles(prologue_per_tile, tiles_used);
+        sync_cycles += self.arch.sync_cycles;
+
+        // ---- reduction stage when the reduction dim is split -------------
+        let c_block_bytes = (sm * sk * 4) as u64;
+        let mut reduce_vertices = 0usize;
+        if part.pn > 1 {
+            // stage-entry cost (C-partial rearrangement + program load)
+            // plus a per-split gather round
+            if self.config.reduce_stage_penalty {
+                exchange_cycles += consts::REDUCE_STAGE_SETUP_CYCLES
+                    + (part.pn as u64 - 1) * consts::REDUCE_STAGE_PER_SPLIT_CYCLES;
+            }
+            // gather partials to one reducer per output block
+            let landing = (part.pn as u64 - 1) * c_block_bytes;
+            exchange_cycles += self.exchange_cycles(landing, tiles_used);
+            sync_cycles += consts::SYNCS_PER_STEP * self.arch.sync_cycles;
+            // reduction worklists, spread over the reducer's threads
+            let partial_elems_per_reducer = part.pn * sm * sk;
+            let verts_per_reducer = div_ceil(partial_elems_per_reducer, consts::REDUCE_GRAIN);
+            let reduce_elems = (part.pn * (consts::REDUCE_GRAIN / part.pn.max(1))) as u64;
+            let one_vertex = self.vertex_overhead() + reduce_elems / 2;
+            compute_cycles += (verts_per_reducer as u64 * one_vertex).div_ceil(2);
+            reduce_vertices = verts_per_reducer * part.pm * part.pk;
+        }
+
+        // ---- epilogue: cast C out of AMP accumulator layout ---------------
+        // (calibrated; disproportionately taxes shapes with large C per
+        // superstep — the mechanism that keeps left-skew slightly below
+        // squared in Fig. 5 while barely touching deep-reduction shapes)
+        if self.config.c_cast_epilogue {
+            compute_cycles += (sm * sk) as u64 * consts::C_CAST_CYCLES_PER_ELEM;
+        }
+
+        // ---- useful work (denominator of the efficiency ratio) -----------
+        let useful_macs =
+            shape.m as u64 * shape.n as u64 * shape.k as u64 / tiles_used.max(1) as u64;
+        let useful_cycles = useful_macs / macs as u64;
+
+        // ---- census ------------------------------------------------------
+        let compute_vertices = consts::COMPUTE_VERTICES_PER_TILE * tiles_used;
+
+        // ---- memory bill on the heaviest tile -----------------------------
+        let home_bytes = ab_bytes / self.arch.tiles as u64 + 64;
+        let chunk_bytes =
+            consts::CHUNK_BUFFERS * chunk_recv_bytes(cn) + sm as u64 * cn as u64 * eb;
+        let landing_bytes = if part.pn > 1 {
+            (part.pn as u64 - 1) * c_block_bytes
+        } else {
+            0
+        };
+        let code_steps = if self.config.exchange_code_scaling { n_steps as u64 } else { 1 };
+        let exchange_code = code_steps
+            * (sm + cn + sk) as u64
+            * self.arch.exchange_code_row_bytes;
+        let tile_bytes_tensors = home_bytes + c_block_bytes + landing_bytes;
+        let tile_bytes_total = tile_bytes_tensors
+            + chunk_bytes
+            + exchange_code
+            + consts::FIXED_TILE_OVERHEAD_BYTES;
+
+        // ---- traffic total -------------------------------------------------
+        let bytes_moved = ab_bytes // prologue
+            + (chunk_recv_bytes(cn) * full_steps as u64
+                + if rem > 0 { chunk_recv_bytes(rem) } else { 0 })
+                * tiles_used as u64
+            + landing_bytes * (part.pm * part.pk) as u64;
+
+        let total_cycles = compute_cycles + exchange_cycles + sync_cycles;
+        PlanCost {
+            partition: part,
+            compute_cycles,
+            exchange_cycles,
+            sync_cycles,
+            total_cycles,
+            useful_cycles,
+            supersteps: n_steps,
+            compute_vertices,
+            reduce_vertices,
+            tile_bytes_tensors,
+            tile_bytes_chunks: chunk_bytes,
+            tile_bytes_exchange_code: exchange_code,
+            tile_bytes_total,
+            fits: tile_bytes_total <= self.arch.tile_sram_bytes,
+            bytes_moved,
+        }
+    }
+
+    /// Achieved TFlop/s for a priced plan.
+    pub fn tflops(&self, shape: MmShape, cost: &PlanCost) -> f64 {
+        let secs = self.arch.cycles_to_secs(cost.total_cycles);
+        shape.flops() as f64 / secs / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gc200_cost(shape: MmShape, part: Partition) -> PlanCost {
+        let arch = IpuArch::gc200();
+        CostModel::new(&arch).evaluate(shape, part)
+    }
+
+    fn paper_3584_plan() -> (MmShape, Partition) {
+        (
+            MmShape::square(3584),
+            Partition { pm: 40, pn: 1, pk: 36, cn: 128 },
+        )
+    }
+
+    #[test]
+    fn squared_3584_lands_near_paper_efficiency() {
+        let (shape, part) = paper_3584_plan();
+        let c = gc200_cost(shape, part);
+        assert!(c.fits, "paper's max square must fit: {c:?}");
+        // paper: 44.2 / 62.5 = 70.7%; this hand-picked plan should land
+        // within a few points (the search may find slightly better)
+        let eff = c.efficiency();
+        assert!((0.60..=0.85).contains(&eff), "efficiency {eff}");
+    }
+
+    #[test]
+    fn squared_census_is_4_per_tile() {
+        let (shape, part) = paper_3584_plan();
+        let c = gc200_cost(shape, part);
+        assert_eq!(c.compute_vertices, 4 * 1440);
+        assert_eq!(c.reduce_vertices, 0);
+    }
+
+    #[test]
+    fn reduction_split_explodes_vertices() {
+        // right-skewed: A wide (n = 16384 reduction), small m
+        let shape = MmShape::new(512, 16384, 2048);
+        let no_split = gc200_cost(shape, Partition { pm: 32, pn: 1, pk: 46, cn: 512 });
+        let split = gc200_cost(shape, Partition { pm: 8, pn: 4, pk: 44, cn: 256 });
+        assert_eq!(no_split.reduce_vertices, 0);
+        assert!(split.reduce_vertices > 2 * split.compute_vertices,
+            "reduce vertices should dominate: {split:?}");
+        assert!(split.total_vertices() > 4 * no_split.total_vertices(),
+            "vertex explosion: {} vs {}", split.total_vertices(), no_split.total_vertices());
+    }
+
+    #[test]
+    fn exchange_code_wall_forces_reduction_split() {
+        // the mechanism that makes the planner split at extreme right-skew:
+        // unsplit plans need one exchange program per reduction chunk, and
+        // at huge n that code alone overflows the tile (§2.4 memory wall)
+        let shape = MmShape::new(512, 16384, 2048);
+        let arch = IpuArch::gc200();
+        let model = CostModel::new(&arch);
+        for cn in consts::CN_CANDIDATES {
+            let c = model.evaluate(shape, Partition { pm: 32, pn: 1, pk: 46, cn });
+            assert!(
+                !c.fits,
+                "unsplit plan with cn={cn} should overflow: {} bytes",
+                c.tile_bytes_total
+            );
+        }
+        let split = model.evaluate(shape, Partition { pm: 8, pn: 4, pk: 44, cn: 256 });
+        assert!(split.fits);
+    }
+
+    #[test]
+    fn memory_grows_with_problem_size() {
+        let part = Partition { pm: 40, pn: 1, pk: 36, cn: 128 };
+        let small = gc200_cost(MmShape::square(1024), part);
+        let big = gc200_cost(MmShape::square(3584), part);
+        assert!(big.tile_bytes_total > small.tile_bytes_total);
+    }
+
+    #[test]
+    fn oversize_square_does_not_fit_with_paper_plan() {
+        // 4096^2 must fail for every cn candidate at the balanced grid —
+        // the §2.4 memory wall (search.rs verifies no partition fits)
+        for cn in consts::CN_CANDIDATES {
+            let c = gc200_cost(MmShape::square(4096), Partition { pm: 40, pn: 1, pk: 36, cn });
+            assert!(!c.fits, "4096 with cn={cn} should not fit: {c:?}");
+        }
+    }
+
+    #[test]
+    fn efficiency_definition() {
+        let (shape, part) = paper_3584_plan();
+        let c = gc200_cost(shape, part);
+        assert!(c.total_cycles >= c.useful_cycles);
+        assert!(c.efficiency() > 0.0 && c.efficiency() <= 1.0);
+        assert_eq!(
+            c.total_cycles,
+            c.compute_cycles + c.exchange_cycles + c.sync_cycles
+        );
+    }
+
+    #[test]
+    fn bytes_moved_includes_prologue() {
+        let (shape, part) = paper_3584_plan();
+        let c = gc200_cost(shape, part);
+        assert!(c.bytes_moved >= 2 * 3584 * 3584 * 4);
+    }
+
+    #[test]
+    fn tflops_below_peak() {
+        let (shape, part) = paper_3584_plan();
+        let arch = IpuArch::gc200();
+        let model = CostModel::new(&arch);
+        let c = model.evaluate(shape, part);
+        let tf = model.tflops(shape, &c);
+        assert!(tf > 0.0 && tf < arch.peak_fp32_tflops());
+    }
+}

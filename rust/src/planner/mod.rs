@@ -1,0 +1,21 @@
+//! PopLin-style matrix-multiply planner — the reproduction's core.
+//!
+//! PopLibs plans a matmul by searching partitions of the compute across
+//! tiles against a cost model (cycles + memory), exactly like its
+//! convolution planner. The *choices* this search makes are what the paper
+//! measures: how many vertices the compiled graph contains (Finding 2),
+//! why right-skewed shapes collapse (reduction splitting), and why memory
+//! — not flops — caps the largest problem (§2.4).
+//!
+//! Terminology follows the paper: `A[m, n] x B[n, k] = C[m, k]`, so **n is
+//! the reduction dimension**. A partition `(pm, pn, pk)` splits m / n / k
+//! across tiles; `cn` is the temporal chunk of the reduction processed per
+//! BSP superstep (the In-Processor working set).
+
+pub mod cost;
+pub mod partition;
+pub mod search;
+
+pub use cost::{CostModel, PlanCost};
+pub use partition::{MmShape, Partition};
+pub use search::{search, Plan, PlannerError};

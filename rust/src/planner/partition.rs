@@ -1,0 +1,152 @@
+//! Partitions: how a matmul's three dimensions spread over tiles.
+
+use crate::util::units::div_ceil;
+
+/// Problem shape, paper convention: A[m, n] x B[n, k] = C[m, k].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MmShape {
+    pub m: usize,
+    /// Reduction dimension (shared between A's columns and B's rows).
+    pub n: usize,
+    pub k: usize,
+}
+
+impl MmShape {
+    pub fn new(m: usize, n: usize, k: usize) -> MmShape {
+        assert!(m > 0 && n > 0 && k > 0, "degenerate shape {m}x{n}x{k}");
+        MmShape { m, n, k }
+    }
+
+    pub fn square(s: usize) -> MmShape {
+        MmShape::new(s, s, s)
+    }
+
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.n as u64 * self.k as u64
+    }
+
+    /// Total tensor bytes (A + B + C) in f32 — the paper's "154 MB" figure
+    /// for 3584^2.
+    pub fn tensor_bytes(&self) -> u64 {
+        4 * (self.m as u64 * self.n as u64
+            + self.n as u64 * self.k as u64
+            + self.m as u64 * self.k as u64)
+    }
+
+    /// Aspect ratio of A as the paper plots it: m / n (log axis). Left-
+    /// skewed (tall A) > 1, right-skewed (wide A) < 1.
+    pub fn aspect_ratio(&self) -> f64 {
+        self.m as f64 / self.n as f64
+    }
+}
+
+/// Spatial partition of the compute across tiles, plus the temporal
+/// reduction chunk `cn` per superstep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Partition {
+    /// Splits of m (C rows), n (reduction), k (C cols) across tiles.
+    pub pm: usize,
+    pub pn: usize,
+    pub pk: usize,
+    /// Reduction elements processed per BSP superstep.
+    pub cn: usize,
+}
+
+impl Partition {
+    /// Tiles this partition occupies.
+    pub fn tiles_used(&self) -> usize {
+        self.pm * self.pn * self.pk
+    }
+
+    /// Per-tile sub-block dims (sm, sn, sk) for `shape`.
+    pub fn sub_block(&self, shape: MmShape) -> (usize, usize, usize) {
+        (
+            div_ceil(shape.m, self.pm),
+            div_ceil(shape.n, self.pn),
+            div_ceil(shape.k, self.pk),
+        )
+    }
+
+    /// BSP supersteps of the main compute loop: the per-tile reduction
+    /// span sn walked in chunks of cn.
+    pub fn main_supersteps(&self, shape: MmShape) -> usize {
+        let (_, sn, _) = self.sub_block(shape);
+        div_ceil(sn, self.cn)
+    }
+
+    /// Is the partition meaningful for `shape` on `tiles` tiles?
+    pub fn is_valid(&self, shape: MmShape, tiles: usize) -> bool {
+        self.pm >= 1
+            && self.pn >= 1
+            && self.pk >= 1
+            && self.cn >= 1
+            && self.tiles_used() <= tiles
+            && self.pm <= shape.m
+            && self.pn <= shape.n
+            && self.pk <= shape.k
+            && self.cn <= div_ceil(shape.n, self.pn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_basics() {
+        let s = MmShape::square(3584);
+        assert_eq!(s.flops(), 2 * 3584u64.pow(3));
+        // 3 * 3584^2 * 4 B = 154.1 MB — the paper's §2.4 number
+        assert!((s.tensor_bytes() as f64 / 1e6 - 154.1).abs() < 0.5);
+        assert_eq!(s.aspect_ratio(), 1.0);
+    }
+
+    #[test]
+    fn skew_direction_convention() {
+        let left = MmShape::new(8192, 512, 2048);
+        let right = MmShape::new(512, 8192, 2048);
+        assert!(left.aspect_ratio() > 1.0);
+        assert!(right.aspect_ratio() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn zero_dim_panics() {
+        MmShape::new(0, 4, 4);
+    }
+
+    #[test]
+    fn sub_block_ceils() {
+        let p = Partition { pm: 40, pn: 1, pk: 36, cn: 256 };
+        let (sm, sn, sk) = p.sub_block(MmShape::square(3584));
+        assert_eq!(sm, 90); // ceil(3584/40)
+        assert_eq!(sn, 3584);
+        assert_eq!(sk, 100); // ceil(3584/36)
+    }
+
+    #[test]
+    fn supersteps_chunk_reduction() {
+        let p = Partition { pm: 40, pn: 1, pk: 36, cn: 256 };
+        assert_eq!(p.main_supersteps(MmShape::square(3584)), 14);
+        let p2 = Partition { pn: 4, ..p };
+        assert_eq!(p2.main_supersteps(MmShape::square(3584)), 4); // 896/256
+    }
+
+    #[test]
+    fn validity() {
+        let shape = MmShape::square(1024);
+        let ok = Partition { pm: 32, pn: 1, pk: 46, cn: 128 };
+        assert!(ok.is_valid(shape, 1472));
+        // too many tiles
+        assert!(!Partition { pm: 64, pn: 2, pk: 32, cn: 128 }.is_valid(shape, 1472));
+        // pm > m
+        assert!(!Partition { pm: 2048, pn: 1, pk: 1, cn: 128 }.is_valid(shape, 4096));
+        // cn > per-tile reduction span
+        assert!(!Partition { pm: 1, pn: 8, pk: 1, cn: 512 }.is_valid(shape, 1472));
+    }
+
+    #[test]
+    fn tiles_used_product() {
+        assert_eq!(Partition { pm: 4, pn: 2, pk: 8, cn: 16 }.tiles_used(), 64);
+    }
+}

@@ -1,0 +1,271 @@
+//! Plan search: enumerate candidate partitions, keep the fastest that fits.
+//!
+//! Mirrors the PopLibs planner: exhaustive search over a pruned partition
+//! space against the cost model. Failure to find *any* fitting plan is the
+//! "Out of memory" a Poplar user hits past the 3584^2 wall.
+
+use crate::arch::IpuArch;
+use crate::planner::cost::{consts, CostConfig, CostModel, PlanCost};
+use crate::planner::partition::{MmShape, Partition};
+use crate::util::units::div_ceil;
+
+/// The search's winning plan.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub shape: MmShape,
+    pub cost: PlanCost,
+    /// Candidates priced (search-effort statistic for the perf benches).
+    pub candidates_evaluated: usize,
+}
+
+impl Plan {
+    pub fn partition(&self) -> Partition {
+        self.cost.partition
+    }
+
+    pub fn tflops(&self, arch: &IpuArch) -> f64 {
+        CostModel::new(arch).tflops(self.shape, &self.cost)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlannerError {
+    /// No partition of this shape fits In-Processor memory.
+    OutOfMemory { candidates_evaluated: usize },
+}
+
+impl std::fmt::Display for PlannerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlannerError::OutOfMemory { candidates_evaluated } => write!(
+                f,
+                "no plan fits In-Processor memory ({candidates_evaluated} candidates tried)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlannerError {}
+
+/// Candidate values for one partition axis: divisors-of-convenience that
+/// tile `dim` without degenerate splits, capped at `max`.
+fn axis_candidates(dim: usize, max: usize) -> Vec<usize> {
+    let hi = max.min(dim);
+    let mut out = Vec::new();
+    // geometric ladder + exact neighbourhood sweep keeps the space small
+    // while still finding balanced grids like 40 x 36
+    let mut v = 1usize;
+    while v <= hi {
+        out.push(v);
+        // fine steps below 64, coarser above
+        v = if v < 8 {
+            v + 1
+        } else if v < 64 {
+            v + 4
+        } else {
+            v + v / 8
+        };
+    }
+    if !out.contains(&hi) {
+        out.push(hi);
+    }
+    out
+}
+
+/// Reduction-split candidates (pn): powers of two up to `max`.
+fn pn_candidates(n: usize, max: usize) -> Vec<usize> {
+    let mut out = vec![1usize];
+    let mut v = 2usize;
+    while v <= max.min(n) {
+        out.push(v);
+        v *= 2;
+    }
+    out
+}
+
+/// Find the fastest fitting plan for `shape` on `arch` (full model).
+pub fn search(arch: &IpuArch, shape: MmShape) -> Result<Plan, PlannerError> {
+    search_with_config(arch, shape, CostConfig::default())
+}
+
+/// Plan search under an ablated cost model (see `cost::Mechanism`).
+pub fn search_with_config(
+    arch: &IpuArch,
+    shape: MmShape,
+    config: CostConfig,
+) -> Result<Plan, PlannerError> {
+    let model = CostModel::with_config(arch, config);
+    let tiles = arch.tiles;
+    let mut best: Option<PlanCost> = None;
+    let mut evaluated = 0usize;
+
+    // pm/pk need at least 4 rows/cols per tile to be worth a split
+    let macs = arch.fp32_macs_per_tile_cycle as u64;
+    let total_macs = shape.m as u64 * shape.n as u64 * shape.k as u64;
+    // §Perf ordering: visit pm near the balanced grid first so a strong
+    // incumbent is found early and the lower-bound prune cuts the rest
+    let ideal_pm = ((shape.m as f64 * tiles as f64 / shape.k as f64).sqrt())
+        .round()
+        .max(1.0) as usize;
+    let mut pms = axis_candidates(div_ceil(shape.m, 4), tiles);
+    pms.sort_by_key(|&pm| pm.abs_diff(ideal_pm));
+    for &pm in &pms {
+        let max_pk = tiles / pm;
+        if max_pk == 0 {
+            continue;
+        }
+        let mut pks = axis_candidates(div_ceil(shape.k, 4), max_pk);
+        pks.sort_by_key(|&pk| pk.abs_diff(max_pk));
+        for &pk in &pks {
+            let max_pn = tiles / (pm * pk);
+            for &pn in &pn_candidates(shape.n, max_pn) {
+                // lower bound (§Perf pruning): no plan on this grid can
+                // beat pure AMP time on its tile count, independent of cn
+                if let Some(b) = &best {
+                    let lower = total_macs / (pm * pn * pk) as u64 / macs;
+                    if lower >= b.total_cycles {
+                        continue;
+                    }
+                }
+                let sn = div_ceil(shape.n, pn);
+                let mut prev_cn = 0usize;
+                for &cn in &consts::CN_CANDIDATES {
+                    let cn = cn.min(sn);
+                    if cn == prev_cn {
+                        continue; // clamped duplicate of the last candidate
+                    }
+                    prev_cn = cn;
+                    let part = Partition { pm, pn, pk, cn };
+                    if !part.is_valid(shape, tiles) {
+                        continue;
+                    }
+                    evaluated += 1;
+                    // memory-first rejection: skip the cycle model when the
+                    // candidate cannot fit a tile (§Perf)
+                    if model.tile_bytes(shape, part) > arch.tile_sram_bytes {
+                        continue;
+                    }
+                    let cost = model.evaluate(shape, part);
+                    debug_assert!(cost.fits);
+                    let better = match &best {
+                        None => true,
+                        Some(b) => cost.total_cycles < b.total_cycles,
+                    };
+                    if better {
+                        best = Some(cost);
+                    }
+                }
+            }
+        }
+    }
+
+    match best {
+        Some(cost) => Ok(Plan { shape, cost, candidates_evaluated: evaluated }),
+        None => Err(PlannerError::OutOfMemory { candidates_evaluated: evaluated }),
+    }
+}
+
+/// Largest fitting squared MM (the paper's §2.4 memory-wall statistic),
+/// searched over multiples of `step`.
+pub fn max_fitting_square(arch: &IpuArch, step: usize, limit: usize) -> usize {
+    max_fitting_square_with_config(arch, step, limit, CostConfig::default())
+}
+
+/// Ablation variant of [`max_fitting_square`].
+pub fn max_fitting_square_with_config(
+    arch: &IpuArch,
+    step: usize,
+    limit: usize,
+    config: CostConfig,
+) -> usize {
+    let mut best = 0;
+    let mut s = step;
+    while s <= limit {
+        if search_with_config(arch, MmShape::square(s), config).is_ok() {
+            best = s;
+        } else if best > 0 {
+            break; // monotone past the wall
+        }
+        s += step;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ipu::paper;
+
+    #[test]
+    fn finds_plan_for_small_square() {
+        let arch = IpuArch::gc200();
+        let plan = search(&arch, MmShape::square(512)).unwrap();
+        assert!(plan.cost.fits);
+        assert!(plan.candidates_evaluated > 100);
+        assert!(plan.tflops(&arch) > 0.0);
+    }
+
+    #[test]
+    fn paper_max_square_fits() {
+        let arch = IpuArch::gc200();
+        let plan = search(&arch, MmShape::square(paper::GC200_MAX_SQUARE)).unwrap();
+        let eff = plan.cost.efficiency();
+        // paper: 70.7% at the max square
+        assert!((0.55..=0.90).contains(&eff), "efficiency {eff}");
+    }
+
+    #[test]
+    fn well_past_wall_is_oom() {
+        let arch = IpuArch::gc200();
+        let err = search(&arch, MmShape::square(6144)).unwrap_err();
+        assert!(matches!(err, PlannerError::OutOfMemory { .. }));
+    }
+
+    #[test]
+    fn squared_prefers_unsplit_reduction() {
+        let arch = IpuArch::gc200();
+        let plan = search(&arch, MmShape::square(2048)).unwrap();
+        assert_eq!(plan.partition().pn, 1, "{:?}", plan.partition());
+        assert_eq!(plan.cost.reduce_vertices, 0);
+    }
+
+    #[test]
+    fn right_skew_splits_reduction() {
+        // strongly right-skewed: huge reduction dim forces pn > 1 (the
+        // exchange-code memory wall makes unsplit plans infeasible) and the
+        // vertex census explodes — paper Finding 2
+        let arch = IpuArch::gc200();
+        let plan = search(&arch, MmShape::new(512, 16384, 2048)).unwrap();
+        assert!(plan.partition().pn > 1, "{:?}", plan.partition());
+        assert!(plan.cost.reduce_vertices > 0);
+        let squared = search(&arch, MmShape::new(2896, 2896, 2048)).unwrap();
+        let ratio = plan.cost.total_vertices() as f64 / squared.cost.total_vertices() as f64;
+        // paper: 31743 / 5762 = 5.5x
+        assert!((3.5..=8.0).contains(&ratio), "vertex ratio {ratio}");
+    }
+
+    #[test]
+    fn axis_candidates_cover_range() {
+        let c = axis_candidates(1472, 1472);
+        assert!(c.contains(&1));
+        assert!(c.contains(&1472));
+        assert!(c.len() < 120, "{}", c.len());
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn pn_candidates_powers_of_two() {
+        assert_eq!(pn_candidates(8192, 16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(pn_candidates(3, 16), vec![1, 2]);
+        assert_eq!(pn_candidates(8192, 1), vec![1]);
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let arch = IpuArch::gc200();
+        let a = search(&arch, MmShape::new(1000, 700, 300)).unwrap();
+        let b = search(&arch, MmShape::new(1000, 700, 300)).unwrap();
+        assert_eq!(a.cost.partition, b.cost.partition);
+        assert_eq!(a.cost.total_cycles, b.cost.total_cycles);
+    }
+}

@@ -1,0 +1,10 @@
+//! PopVision Graph Analyser analogue (paper §4.2, Fig. 3).
+//!
+//! Renders what the paper reads off PopVision for each run: the BSP phase
+//! timeline (compute red / sync blue / exchange yellow), tile utilisation,
+//! the vertex census behind Finding 2, and the per-tile memory breakdown
+//! behind the §2.4 memory analysis. Text for terminals, JSON for tooling.
+
+pub mod popvision;
+
+pub use popvision::PopVisionReport;

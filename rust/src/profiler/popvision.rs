@@ -1,0 +1,233 @@
+//! Report rendering: SimReport -> PopVision-style text / JSON.
+
+use crate::bsp::trace::Phase;
+use crate::memory::tile_mem::RegionKind;
+use crate::sim::report::SimReport;
+use crate::util::json::Json;
+use crate::util::units::{fmt_bytes, fmt_secs};
+
+/// A rendered profile of one simulated run.
+pub struct PopVisionReport<'a> {
+    pub sim: &'a SimReport,
+}
+
+impl<'a> PopVisionReport<'a> {
+    pub fn new(sim: &'a SimReport) -> Self {
+        PopVisionReport { sim }
+    }
+
+    /// ASCII phase bar like the Fig. 3 timeline, proportional widths.
+    pub fn phase_bar(&self, width: usize) -> String {
+        let (c, s, e) = self.sim.trace.phase_fractions();
+        let wc = (c * width as f64).round() as usize;
+        let ws = (s * width as f64).round() as usize;
+        let we = width.saturating_sub(wc + ws);
+        format!(
+            "[{}{}{}] compute {:.1}% | sync {:.1}% | exchange {:.1}%",
+            "#".repeat(wc),
+            "-".repeat(ws),
+            "~".repeat(we),
+            c * 100.0,
+            s * 100.0,
+            e * 100.0
+        )
+    }
+
+    /// Full text report.
+    pub fn to_text(&self) -> String {
+        let sim = self.sim;
+        let mut out = String::new();
+        out.push_str(&format!("== PopVision-style profile: {}\n", sim.summary()));
+        out.push_str(&format!(
+            "   time {} | supersteps {} | tile utilisation {:.1}%\n",
+            fmt_secs(sim.seconds),
+            sim.trace.superstep_count(),
+            sim.trace.tile_utilization() * 100.0
+        ));
+        out.push_str(&format!("   {}\n", self.phase_bar(48)));
+
+        out.push_str("   vertex census:\n");
+        for (family, count) in &sim.census {
+            out.push_str(&format!("     {family:<12} {count}\n"));
+        }
+        out.push_str(&format!("     {:<12} {}\n", "TOTAL", sim.total_vertices));
+
+        let mem = &sim.memory;
+        out.push_str(&format!(
+            "   memory: max tile {} of {} ({:.1}%), chip total {} ({:.1}%)\n",
+            fmt_bytes(mem.max_tile_used),
+            fmt_bytes(mem.capacity_per_tile),
+            mem.max_tile_fraction() * 100.0,
+            fmt_bytes(mem.total_used),
+            mem.total_fraction() * 100.0
+        ));
+        let heaviest = &mem.per_tile[mem.max_tile];
+        out.push_str(&format!(
+            "   heaviest tile #{} bill: {}\n",
+            mem.max_tile,
+            heaviest.bill()
+        ));
+        out.push_str("   per-tile occupancy histogram (10% buckets): ");
+        let hist = mem.histogram(10);
+        out.push_str(
+            &hist
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join(" "),
+        );
+        out.push('\n');
+        out
+    }
+
+    /// Append the liveness view (memory-over-time) for a graph's program.
+    pub fn liveness_text(profile: &crate::memory::liveness::LivenessProfile) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "   liveness: resident {} | transient-per-step: {}\n",
+            fmt_bytes(profile.resident_bytes),
+            profile.sparkline()
+        ));
+        if let Some(peak) = profile.peak() {
+            out.push_str(&format!(
+                "   liveness peak: step {} ({}) lands {} on the busiest tile\n",
+                peak.step_index,
+                peak.label,
+                fmt_bytes(peak.peak_transient_tile_bytes)
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable JSON export.
+    pub fn to_json(&self) -> Json {
+        let sim = self.sim;
+        let mut root = Json::obj();
+        root.set("arch", sim.arch_name.as_str().into());
+        let mut shape = Json::obj();
+        shape.set("m", sim.shape.m.into());
+        shape.set("n", sim.shape.n.into());
+        shape.set("k", sim.shape.k.into());
+        root.set("shape", shape);
+
+        let p = sim.plan.partition();
+        let mut plan = Json::obj();
+        plan.set("pm", p.pm.into());
+        plan.set("pn", p.pn.into());
+        plan.set("pk", p.pk.into());
+        plan.set("cn", p.cn.into());
+        plan.set("tiles_used", p.tiles_used().into());
+        root.set("plan", plan);
+
+        let mut perf = Json::obj();
+        perf.set("seconds", sim.seconds.into());
+        perf.set("tflops", sim.tflops.into());
+        perf.set("efficiency", sim.efficiency.into());
+        perf.set("total_cycles", sim.plan.cost.total_cycles.into());
+        perf.set("tile_utilization", sim.trace.tile_utilization().into());
+        root.set("performance", perf);
+
+        let (c, s, e) = sim.trace.phase_fractions();
+        let mut phases = Json::obj();
+        phases.set("compute", c.into());
+        phases.set("sync", s.into());
+        phases.set("exchange", e.into());
+        phases.set(
+            "compute_cycles",
+            sim.trace.phase_cycles(Phase::Compute).into(),
+        );
+        phases.set("sync_cycles", sim.trace.phase_cycles(Phase::Sync).into());
+        phases.set(
+            "exchange_cycles",
+            sim.trace.phase_cycles(Phase::Exchange).into(),
+        );
+        root.set("phases", phases);
+
+        let mut census = Json::obj();
+        for (family, count) in &sim.census {
+            census.set(family, (*count).into());
+        }
+        census.set("total", sim.total_vertices.into());
+        root.set("vertex_census", census);
+
+        let mem = &sim.memory;
+        let mut memory = Json::obj();
+        memory.set("max_tile_bytes", mem.max_tile_used.into());
+        memory.set("max_tile", mem.max_tile.into());
+        memory.set("capacity_per_tile", mem.capacity_per_tile.into());
+        memory.set("total_bytes", mem.total_used.into());
+        memory.set("total_fraction", mem.total_fraction().into());
+        memory.set("fits", mem.fits().into());
+        let mut regions = Json::obj();
+        for kind in RegionKind::all() {
+            regions.set(kind.name(), mem.region_total(kind).into());
+        }
+        memory.set("region_totals", regions);
+        memory.set(
+            "histogram",
+            mem.histogram(10)
+                .into_iter()
+                .collect::<Vec<usize>>()
+                .into(),
+        );
+        root.set("memory", memory);
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::IpuArch;
+    use crate::planner::partition::MmShape;
+    use crate::sim::engine::SimEngine;
+
+    fn report_for(shape: MmShape) -> SimReport {
+        SimEngine::new(IpuArch::gc200()).simulate_mm(shape).unwrap()
+    }
+
+    #[test]
+    fn text_report_has_all_sections() {
+        let sim = report_for(MmShape::square(1024));
+        let text = PopVisionReport::new(&sim).to_text();
+        assert!(text.contains("PopVision-style profile"));
+        assert!(text.contains("vertex census"));
+        assert!(text.contains("AmpMacc"));
+        assert!(text.contains("memory: max tile"));
+        assert!(text.contains("histogram"));
+    }
+
+    #[test]
+    fn phase_bar_fractions_sum_to_100() {
+        let sim = report_for(MmShape::square(512));
+        let bar = PopVisionReport::new(&sim).phase_bar(40);
+        assert!(bar.contains("compute"));
+        assert!(bar.starts_with('['));
+    }
+
+    #[test]
+    fn json_export_is_complete() {
+        let sim = report_for(MmShape::square(1024));
+        let json = PopVisionReport::new(&sim).to_json().render();
+        for key in [
+            "\"arch\"", "\"shape\"", "\"plan\"", "\"performance\"",
+            "\"phases\"", "\"vertex_census\"", "\"memory\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+
+    #[test]
+    fn json_census_total_matches() {
+        let sim = report_for(MmShape::square(512));
+        let json = PopVisionReport::new(&sim).to_json().render();
+        assert!(json.contains(&format!("\"total\": {}", sim.total_vertices)));
+    }
+
+    #[test]
+    fn split_reduction_census_shows_reduce_family() {
+        let sim = report_for(MmShape::new(512, 16384, 2048));
+        let text = PopVisionReport::new(&sim).to_text();
+        assert!(text.contains("Reduce"), "{text}");
+    }
+}

@@ -1,0 +1,108 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+
+/// A compiled artifact ready to execute.
+struct LoadedArtifact {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Owns the PJRT CPU client and the compiled executables.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    loaded: HashMap<String, LoadedArtifact>,
+    pub manifest: Manifest,
+    /// Cumulative execution count (perf accounting).
+    pub executions: u64,
+}
+
+impl RuntimeClient {
+    /// Load every artifact in `dir`'s manifest and compile it.
+    pub fn load(dir: &Path) -> Result<RuntimeClient> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut loaded = HashMap::new();
+        for spec in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path
+                    .to_str()
+                    .with_context(|| format!("non-utf8 path {:?}", spec.path))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            loaded.insert(spec.name.clone(), LoadedArtifact { spec: spec.clone(), exe });
+        }
+        Ok(RuntimeClient { client, loaded, manifest, executions: 0 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.loaded.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    fn literal(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        anyhow::ensure!(data.len() == rows * cols, "literal shape mismatch");
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// Execute the accumulating block artifact `name`:
+    /// returns `c + a @ b` for row-major inputs of the artifact's shape.
+    pub fn execute_block(
+        &mut self,
+        name: &str,
+        a: &[f32],
+        b: &[f32],
+        c: &[f32],
+    ) -> Result<Vec<f32>> {
+        let art = self
+            .loaded
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let (m, n, k) = (art.spec.m, art.spec.n, art.spec.k);
+        let la = Self::literal(a, m, n)?;
+        let lb = Self::literal(b, n, k)?;
+        let lc = Self::literal(c, m, k)?;
+        let result = art.exe.execute::<xla::Literal>(&[la, lb, lc])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        self.executions += 1;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute a `full` artifact (two inputs, a @ b).
+    pub fn execute_full(&mut self, name: &str, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let art = self
+            .loaded
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        if art.spec.kind != crate::runtime::manifest::ArtifactKind::Full {
+            bail!("artifact '{name}' is not a full-matmul artifact");
+        }
+        let (m, n, k) = (art.spec.m, art.spec.n, art.spec.k);
+        let la = Self::literal(a, m, n)?;
+        let lb = Self::literal(b, n, k)?;
+        let result = art.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        self.executions += 1;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.loaded.get(name).map(|l| &l.spec)
+    }
+}

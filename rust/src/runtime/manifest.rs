@@ -1,0 +1,167 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes a TSV (deliberately not JSON so the
+//! loader needs no parser dependency):
+//!
+//! ```text
+//! kind<TAB>name<TAB>file<TAB>m<TAB>n<TAB>k<TAB>dtype
+//! block	mm_block_128	mm_block_128.hlo.txt	128	128	128	f32
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Accumulating block matmul: out = c + a @ b.
+    Block,
+    /// Small full matmul: out = a @ b (smoke tests).
+    Full,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub name: String,
+    pub path: PathBuf,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.tsv`; artifact paths are resolved against
+    /// `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 7 {
+                bail!(
+                    "manifest line {}: expected 7 tab-separated fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                );
+            }
+            let kind = match fields[0] {
+                "block" => ArtifactKind::Block,
+                "full" => ArtifactKind::Full,
+                other => bail!("manifest line {}: unknown kind '{other}'", lineno + 1),
+            };
+            if fields[6] != "f32" {
+                bail!("manifest line {}: unsupported dtype '{}'", lineno + 1, fields[6]);
+            }
+            let parse_dim = |s: &str, what: &str| -> Result<usize> {
+                s.parse()
+                    .with_context(|| format!("manifest line {}: bad {what} '{s}'", lineno + 1))
+            };
+            artifacts.push(ArtifactSpec {
+                kind,
+                name: fields[1].to_string(),
+                path: dir.join(fields[2]),
+                m: parse_dim(fields[3], "m")?,
+                n: parse_dim(fields[4], "n")?,
+                k: parse_dim(fields[5], "k")?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest is empty");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn blocks(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Block)
+    }
+
+    /// Best (largest, square) block artifact no larger than `cap`; falls
+    /// back to the smallest block when everything exceeds `cap`.
+    pub fn pick_block(&self, cap: usize) -> Option<&ArtifactSpec> {
+        let mut blocks: Vec<&ArtifactSpec> = self.blocks().collect();
+        blocks.sort_by_key(|a| a.m);
+        blocks
+            .iter()
+            .rev()
+            .find(|a| a.m <= cap)
+            .copied()
+            .or_else(|| blocks.first().copied())
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "block\tmm_block_64\tmm_block_64.hlo.txt\t64\t64\t64\tf32\n\
+                          block\tmm_block_128\tmm_block_128.hlo.txt\t128\t128\t128\tf32\n\
+                          full\tmm_full_32\tmm_full_32.hlo.txt\t32\t32\t32\tf32\n";
+
+    fn sample() -> Manifest {
+        Manifest::parse(SAMPLE, Path::new("/art")).unwrap()
+    }
+
+    #[test]
+    fn parses_all_rows() {
+        let m = sample();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.blocks().count(), 2);
+        assert_eq!(m.artifacts[0].path, PathBuf::from("/art/mm_block_64.hlo.txt"));
+    }
+
+    #[test]
+    fn pick_block_prefers_largest_under_cap() {
+        let m = sample();
+        assert_eq!(m.pick_block(4096).unwrap().m, 128);
+        assert_eq!(m.pick_block(100).unwrap().m, 64);
+        // nothing fits -> smallest
+        assert_eq!(m.pick_block(16).unwrap().m, 64);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(sample().by_name("mm_full_32").is_some());
+        assert!(sample().by_name("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("block\tonly-two", Path::new(".")).is_err());
+        assert!(Manifest::parse("weird\ta\tb\t1\t1\t1\tf32", Path::new(".")).is_err());
+        assert!(Manifest::parse("block\ta\tb\tx\t1\t1\tf32", Path::new(".")).is_err());
+        assert!(Manifest::parse("block\ta\tb\t1\t1\t1\tf64", Path::new(".")).is_err());
+        assert!(Manifest::parse("", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse(
+            "# comment\n\nblock\tb\tb.hlo.txt\t64\t64\t64\tf32\n",
+            Path::new("."),
+        )
+        .unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+}

@@ -1,0 +1,18 @@
+//! The real compute path: AOT-compiled JAX/Pallas HLO artifacts executed
+//! on the PJRT CPU client via the `xla` crate.
+//!
+//! Python runs only at build time (`make artifacts`); this module loads
+//! `artifacts/manifest.tsv` + `*.hlo.txt` (HLO *text* — serialized protos
+//! from jax >= 0.5 are rejected by xla_extension 0.5.1) and serves block
+//! matmuls to the coordinator. [`blockmm`] composes arbitrary (m, n, k)
+//! multiplications out of fixed-shape accumulating block calls, mirroring
+//! how the IPU accumulates partials across BSP supersteps — and every
+//! result is checkable against the in-tree oracle.
+
+pub mod blockmm;
+pub mod client;
+pub mod manifest;
+
+pub use blockmm::BlockMmExecutor;
+pub use client::RuntimeClient;
+pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};

@@ -1,0 +1,276 @@
+//! Build a concrete graph for a plan and execute it on the BSP engine.
+
+use anyhow::Result;
+
+use crate::arch::IpuArch;
+use crate::bsp::scheduler::BspEngine;
+use crate::exchange::plan::{ExchangePattern, ExchangePlan};
+use crate::graph::builder::Graph;
+use crate::graph::program::Program;
+use crate::graph::tensor::DType;
+use crate::graph::vertex::VertexKind;
+use crate::memory::accounting::{MemoryAccountant, MemoryReport};
+use crate::memory::mapping::{grid_2d_mapping, linear_balanced_mapping};
+use crate::planner::cost::{consts, CostModel};
+use crate::planner::partition::MmShape;
+use crate::planner::search::{search, Plan, PlannerError};
+use crate::sim::report::SimReport;
+use crate::util::units::div_ceil;
+
+pub struct SimEngine {
+    pub arch: IpuArch,
+}
+
+impl SimEngine {
+    pub fn new(arch: IpuArch) -> SimEngine {
+        SimEngine { arch }
+    }
+
+    /// Plan and simulate one matmul. `Err` is the paper's out-of-memory
+    /// wall (§2.4).
+    pub fn simulate_mm(&self, shape: MmShape) -> Result<SimReport, PlannerError> {
+        let plan = search(&self.arch, shape)?;
+        Ok(self.simulate_plan(shape, plan))
+    }
+
+    /// Materialize + execute a specific plan (used by ablations).
+    pub fn simulate_plan(&self, shape: MmShape, plan: Plan) -> SimReport {
+        let graph = self.build_graph(shape, &plan);
+        debug_assert!(graph.validate().is_ok(), "{:?}", graph.validate());
+        let trace = BspEngine::new(&self.arch).run(&graph);
+        let memory: MemoryReport = MemoryAccountant::new(&self.arch).account(&graph);
+        let model = CostModel::new(&self.arch);
+        let seconds = self.arch.cycles_to_secs(plan.cost.total_cycles);
+        let tflops = model.tflops(shape, &plan.cost);
+        SimReport {
+            arch_name: self.arch.name.to_string(),
+            shape,
+            seconds,
+            tflops,
+            efficiency: plan.cost.efficiency(),
+            census: graph.vertex_census(),
+            total_vertices: graph.n_vertices(),
+            trace,
+            memory,
+            plan,
+        }
+    }
+
+    /// Materialize the plan as a Poplar-like graph:
+    ///
+    /// ```text
+    /// Sequence [
+    ///   Exchange(prologue scatter A+B), Sync,
+    ///   Repeat(n_steps) [ Exchange(chunks), Sync, Execute(mm) ],
+    ///   if pn > 1: [ Exchange(gather partials), Sync, Execute(reduce) ]
+    /// ]
+    /// ```
+    pub fn build_graph(&self, shape: MmShape, plan: &Plan) -> Graph {
+        let part = plan.partition();
+        let tiles = self.arch.tiles;
+        let mut g = Graph::new(tiles);
+        let (sm, sn, sk) = part.sub_block(shape);
+        let cn = part.cn.min(sn);
+        let n_steps = div_ceil(sn, cn);
+        let tiles_used = part.tiles_used();
+
+        // tensors: A and B live in home (linear) mappings; C is mapped as
+        // a pm x pk grid over the first pm*pk*pn tiles (in_ = 0 plane)
+        let a = g.add_tensor("A", &[shape.m, shape.n], DType::F32);
+        g.set_tile_mapping(a, linear_balanced_mapping(shape.m * shape.n, tiles));
+        let b = g.add_tensor("B", &[shape.n, shape.k], DType::F32);
+        g.set_tile_mapping(b, linear_balanced_mapping(shape.n * shape.k, tiles));
+        let c = g.add_tensor("C", &[shape.m, shape.k], DType::F32);
+        let pn = part.pn;
+        let pk = part.pk;
+        g.set_tile_mapping(
+            c,
+            grid_2d_mapping(shape.m, shape.k, part.pm, pk, tiles, |i, j| {
+                // output block (i, j) lives on its reducer tile (in_ = 0)
+                (i * pn * pk + j).min(tiles - 1)
+            }),
+        );
+
+        // prologue: balanced scatter of A+B home shares into compute layout
+        let ab_bytes = (a.0 as u64, ());
+        let _ = ab_bytes;
+        let per_tile =
+            (4 * (shape.m as u64 * shape.n as u64 + shape.n as u64 * shape.k as u64))
+                / tiles_used.max(1) as u64;
+        let mut prologue = ExchangePlan::new("scatter-AB", ExchangePattern::Scatter);
+        for t in 0..tiles_used {
+            let src = (t + tiles / 2) % tiles;
+            if src != t {
+                prologue.add(src, t, per_tile);
+            }
+        }
+        let prologue_id = g.add_exchange(prologue);
+
+        // per-superstep chunk exchange: each active tile receives its A and
+        // B chunk from (byte-equivalent) home tiles
+        let mut chunks = ExchangePlan::new("chunk-AB", ExchangePattern::Broadcast);
+        for t in 0..tiles_used {
+            let a_src = (t + tiles / 3) % tiles;
+            let b_src = (t + 2 * tiles / 3) % tiles;
+            if a_src != t {
+                chunks.add(a_src, t, (sm * cn * 4) as u64);
+            }
+            if b_src != t {
+                chunks.add(b_src, t, (cn * sk * 4) as u64);
+            }
+        }
+        let chunks_id = g.add_exchange(chunks);
+
+        // main compute set: the planner's 4 vertices per active tile
+        let mm_cs = g.add_compute_set("mm");
+        for t in 0..tiles_used {
+            g.add_vertex(mm_cs, VertexKind::AmpMacc { rows: sm, cols: sk, acc: cn }, t, vec![a, b], vec![c]);
+            g.add_vertex(mm_cs, VertexKind::Rearrange { bytes: sm * cn * 4 }, t, vec![a], vec![]);
+            g.add_vertex(mm_cs, VertexKind::Rearrange { bytes: cn * sk * 4 }, t, vec![b], vec![]);
+            g.add_vertex(mm_cs, VertexKind::Zero { elems: sm * sk }, t, vec![], vec![c]);
+        }
+
+        let mut program = vec![
+            Program::Exchange(prologue_id),
+            Program::Sync,
+            Program::Repeat(
+                n_steps,
+                Box::new(Program::Sequence(vec![
+                    Program::Exchange(chunks_id),
+                    Program::Sync,
+                    Program::Execute(mm_cs),
+                    Program::Sync,
+                ])),
+            ),
+        ];
+
+        // reduction stage for split-reduction plans
+        if pn > 1 {
+            let c_block = (sm * sk * 4) as u64;
+            let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+            for im in 0..part.pm {
+                for ik in 0..pk {
+                    let reducer = im * pn * pk + ik;
+                    let partials: Vec<usize> = (1..pn)
+                        .map(|in_| im * pn * pk + in_ * pk + ik)
+                        .filter(|&t| t < tiles_used)
+                        .collect();
+                    if reducer < tiles_used && !partials.is_empty() {
+                        groups.push((reducer, partials));
+                    }
+                }
+            }
+            let gather = ExchangePlan::reduce_gather("gather-partials", &groups, c_block);
+            let gather_id = g.add_exchange(gather);
+            let reduce_cs = g.add_compute_set("reduce");
+            let verts_per_reducer = div_ceil(pn * sm * sk, consts::REDUCE_GRAIN);
+            for (reducer, _) in &groups {
+                for _ in 0..verts_per_reducer {
+                    g.add_vertex(
+                        reduce_cs,
+                        VertexKind::Reduce { inputs: pn, width: consts::REDUCE_GRAIN / pn },
+                        *reducer,
+                        vec![c],
+                        vec![c],
+                    );
+                }
+            }
+            program.push(Program::Exchange(gather_id));
+            program.push(Program::Sync);
+            program.push(Program::Execute(reduce_cs));
+        }
+
+        g.set_program(Program::Sequence(program));
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsp::trace::Phase;
+
+    fn engine() -> SimEngine {
+        SimEngine::new(IpuArch::gc200())
+    }
+
+    #[test]
+    fn simulates_squared_mm() {
+        let r = engine().simulate_mm(MmShape::square(1024)).unwrap();
+        assert!(r.tflops > 10.0 && r.tflops < 62.5, "{}", r.tflops);
+        assert!(r.memory.fits());
+        assert_eq!(r.census.get("AmpMacc"), Some(&r.plan.partition().tiles_used()));
+    }
+
+    #[test]
+    fn graph_census_matches_planner_census() {
+        let e = engine();
+        let shape = MmShape::square(2048);
+        let r = e.simulate_mm(shape).unwrap();
+        assert_eq!(r.total_vertices, r.plan.cost.total_vertices());
+    }
+
+    #[test]
+    fn census_matches_for_split_reduction() {
+        let e = engine();
+        let shape = MmShape::new(512, 16384, 2048);
+        let r = e.simulate_mm(shape).unwrap();
+        assert!(r.plan.partition().pn > 1);
+        assert_eq!(r.total_vertices, r.plan.cost.total_vertices());
+        assert!(r.census.get("Reduce").copied().unwrap_or(0) > 0);
+    }
+
+    #[test]
+    fn graph_validates() {
+        let e = engine();
+        let shape = MmShape::new(777, 1300, 555);
+        let plan = search(&e.arch, shape).unwrap();
+        let g = e.build_graph(shape, &plan);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_has_all_three_phases() {
+        let r = engine().simulate_mm(MmShape::square(1024)).unwrap();
+        assert!(r.trace.phase_cycles(Phase::Compute) > 0);
+        assert!(r.trace.phase_cycles(Phase::Sync) > 0);
+        assert!(r.trace.phase_cycles(Phase::Exchange) > 0);
+    }
+
+    #[test]
+    fn trace_total_tracks_planner_estimate() {
+        // the materialized graph's BSP cost should be in the same ballpark
+        // as the analytic plan cost (the analytic side adds the epilogue
+        // cast and prologue congestion, so allow a generous band)
+        let r = engine().simulate_mm(MmShape::square(2048)).unwrap();
+        let trace = r.trace.total_cycles() as f64;
+        let planned = r.plan.cost.total_cycles as f64;
+        let ratio = trace / planned;
+        assert!((0.4..=1.2).contains(&ratio), "trace/planned = {ratio}");
+    }
+
+    #[test]
+    fn oom_propagates() {
+        assert!(engine().simulate_mm(MmShape::square(6144)).is_err());
+    }
+
+    #[test]
+    fn memory_report_fits_for_paper_max() {
+        let r = engine().simulate_mm(MmShape::square(3584)).unwrap();
+        assert!(r.memory.fits(), "max tile {}", r.memory.max_tile_used);
+    }
+
+    #[test]
+    fn tile_utilization_is_high_for_balanced_squared() {
+        let r = engine().simulate_mm(MmShape::square(2048)).unwrap();
+        assert!(r.trace.tile_utilization() > 0.9, "{}", r.trace.tile_utilization());
+    }
+
+    #[test]
+    fn summary_mentions_plan() {
+        let r = engine().simulate_mm(MmShape::square(512)).unwrap();
+        let s = r.summary();
+        assert!(s.contains("TFlop/s"));
+        assert!(s.contains("pm="));
+    }
+}

@@ -1,0 +1,14 @@
+//! Simulation engine: planner -> concrete Poplar-like graph -> BSP trace,
+//! memory bill, and vertex census, packaged as a [`SimReport`].
+//!
+//! The planner's analytic cost (calibrated to the paper) provides the
+//! headline cycles/TFlop/s; the engine *materializes* the chosen plan as a
+//! real [`crate::graph::Graph`] and executes it on the BSP engine so the
+//! profiler has a faithful phase timeline, per-tile memory map and vertex
+//! census to report — the PopVision side of the reproduction.
+
+pub mod engine;
+pub mod report;
+
+pub use engine::SimEngine;
+pub use report::SimReport;

@@ -1,0 +1,55 @@
+//! The simulation result record consumed by experiments and the profiler.
+
+use std::collections::BTreeMap;
+
+use crate::arch::IpuArch;
+use crate::bsp::trace::Trace;
+use crate::memory::accounting::MemoryReport;
+use crate::planner::partition::MmShape;
+use crate::planner::search::Plan;
+
+/// Everything one simulated matmul produces.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub arch_name: String,
+    pub shape: MmShape,
+    pub plan: Plan,
+    /// Headline numbers from the calibrated plan cost.
+    pub seconds: f64,
+    pub tflops: f64,
+    pub efficiency: f64,
+    /// BSP execution trace of the materialized graph (profiler detail).
+    pub trace: Trace,
+    /// Per-tile memory bill of the materialized graph.
+    pub memory: MemoryReport,
+    /// Vertex census by codelet family.
+    pub census: BTreeMap<&'static str, usize>,
+    pub total_vertices: usize,
+}
+
+impl SimReport {
+    pub fn peak_fraction(&self, arch: &IpuArch) -> f64 {
+        self.tflops / arch.peak_fp32_tflops()
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let p = self.plan.partition();
+        format!(
+            "{} A[{},{}]xB[{},{}]: {:.2} TFlop/s ({:.1}% eff), plan pm={} pn={} pk={} cn={}, {} vertices, max tile {:.1} KiB",
+            self.arch_name,
+            self.shape.m,
+            self.shape.n,
+            self.shape.n,
+            self.shape.k,
+            self.tflops,
+            self.efficiency * 100.0,
+            p.pm,
+            p.pn,
+            p.pk,
+            p.cn,
+            self.total_vertices,
+            self.memory.max_tile_used as f64 / 1024.0
+        )
+    }
+}

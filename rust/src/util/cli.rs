@@ -1,0 +1,152 @@
+//! Minimal CLI argument parser (clap is not available offline).
+//!
+//! Grammar: `ipumm <subcommand> [positional...] [--key value] [--flag]`.
+//! Subcommands declare their options; unknown options are hard errors so
+//! typos never silently run the wrong experiment.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name / subcommand), validating
+    /// against declared option and flag names.
+    pub fn parse(
+        raw: &[String],
+        allowed_options: &[&str],
+        allowed_flags: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if allowed_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if allowed_options.contains(&name) {
+                    let val = it
+                        .next()
+                        .with_context(|| format!("--{name} requires a value"))?;
+                    out.options.insert(name.to_string(), val.clone());
+                } else {
+                    bail!(
+                        "unknown option --{name}; valid options: {}, flags: {}",
+                        fmt_list(allowed_options),
+                        fmt_list(allowed_flags)
+                    );
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .with_context(|| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .with_context(|| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Positional argument parsed as usize.
+    pub fn pos_usize(&self, idx: usize, what: &str) -> Result<usize> {
+        let v = self
+            .positional
+            .get(idx)
+            .with_context(|| format!("missing positional argument <{what}>"))?;
+        v.parse::<usize>()
+            .with_context(|| format!("<{what}> expects an integer, got '{v}'"))
+    }
+}
+
+fn fmt_list(xs: &[&str]) -> String {
+    if xs.is_empty() {
+        "(none)".to_string()
+    } else {
+        xs.iter().map(|x| format!("--{x}")).collect::<Vec<_>>().join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = Args::parse(
+            &raw(&["3584", "--arch", "gc200", "--real"]),
+            &["arch"],
+            &["real"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["3584"]);
+        assert_eq!(a.opt("arch"), Some("gc200"));
+        assert!(a.flag("real"));
+        assert!(!a.flag("json"));
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        let e = Args::parse(&raw(&["--bogus", "1"]), &["arch"], &[]).unwrap_err();
+        assert!(e.to_string().contains("unknown option --bogus"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = Args::parse(&raw(&["--arch"]), &["arch"], &[]).unwrap_err();
+        assert!(e.to_string().contains("requires a value"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&raw(&["--k", "2048"]), &["k"], &[]).unwrap();
+        assert_eq!(a.opt_usize("k", 0).unwrap(), 2048);
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+        assert!(Args::parse(&raw(&["--k", "xyz"]), &["k"], &[])
+            .unwrap()
+            .opt_usize("k", 0)
+            .is_err());
+    }
+
+    #[test]
+    fn positional_typed() {
+        let a = Args::parse(&raw(&["128", "256"]), &[], &[]).unwrap();
+        assert_eq!(a.pos_usize(0, "m").unwrap(), 128);
+        assert_eq!(a.pos_usize(1, "n").unwrap(), 256);
+        assert!(a.pos_usize(2, "k").is_err());
+    }
+}

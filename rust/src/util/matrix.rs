@@ -1,0 +1,220 @@
+//! Row-major f32 matrix used on the real compute path (runtime block
+//! executor) and by the correctness oracles. Deliberately simple: the hot
+//! math runs inside the PJRT executable, not here.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Deterministic synthetic data in [-1, 1) — the benchmark workload.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols).map(|_| rng.next_f32_unit()).collect();
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    /// Copy of the block starting at (r0, c0), `br` x `bc`, zero-padded when
+    /// it overhangs the matrix edge — the runtime's padding path.
+    pub fn block_padded(&self, r0: usize, c0: usize, br: usize, bc: usize) -> Matrix {
+        let mut out = Matrix::zeros(br, bc);
+        let rmax = self.rows.saturating_sub(r0).min(br);
+        let cmax = self.cols.saturating_sub(c0).min(bc);
+        for r in 0..rmax {
+            let src = (r0 + r) * self.cols + c0;
+            let dst = r * bc;
+            out.data[dst..dst + cmax].copy_from_slice(&self.data[src..src + cmax]);
+        }
+        out
+    }
+
+    /// `block_padded` into a caller-owned buffer (hot-path variant: the
+    /// runtime block executor reuses two of these per reduction step
+    /// instead of allocating — see EXPERIMENTS.md §Perf L3).
+    pub fn block_padded_into(&self, r0: usize, c0: usize, out: &mut Matrix) {
+        out.data.fill(0.0);
+        let (br, bc) = (out.rows, out.cols);
+        let rmax = self.rows.saturating_sub(r0).min(br);
+        let cmax = self.cols.saturating_sub(c0).min(bc);
+        for r in 0..rmax {
+            let src = (r0 + r) * self.cols + c0;
+            let dst = r * bc;
+            out.data[dst..dst + cmax].copy_from_slice(&self.data[src..src + cmax]);
+        }
+    }
+
+    /// Write `block`'s overlap into self at (r0, c0) (inverse of
+    /// `block_padded`: drops the padded fringe).
+    pub fn write_block(&mut self, r0: usize, c0: usize, block: &Matrix) {
+        let rmax = self.rows.saturating_sub(r0).min(block.rows);
+        let cmax = self.cols.saturating_sub(c0).min(block.cols);
+        for r in 0..rmax {
+            let dst = (r0 + r) * self.cols + c0;
+            let src = r * block.cols;
+            self.data[dst..dst + cmax].copy_from_slice(&block.data[src..src + cmax]);
+        }
+    }
+
+    /// Naive triple-loop oracle (i-k-j order for locality). Ground truth for
+    /// the PJRT path; only used in tests and verification modes.
+    pub fn matmul_oracle(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "oracle: inner dims {} vs {}", self.cols, b.rows);
+        let mut c = Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for l in 0..self.cols {
+                let a_il = self.at(i, l);
+                if a_il == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[l * b.cols..(l + 1) * b.cols];
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += a_il * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// Max absolute elementwise difference.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Approximate equality with an absolute tolerance scaled by the
+    /// reduction length (fp32 accumulation-order noise).
+    pub fn allclose(&self, other: &Matrix, atol: f32) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.max_abs_diff(other) <= atol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.numel(), 6);
+        assert_eq!(m.bytes(), 24);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        assert_eq!(Matrix::random(4, 4, 9), Matrix::random(4, 4, 9));
+        assert_ne!(Matrix::random(4, 4, 9), Matrix::random(4, 4, 10));
+    }
+
+    #[test]
+    fn block_roundtrip_interior() {
+        let m = Matrix::random(8, 8, 1);
+        let b = m.block_padded(2, 4, 3, 2);
+        assert_eq!(b.at(0, 0), m.at(2, 4));
+        assert_eq!(b.at(2, 1), m.at(4, 5));
+    }
+
+    #[test]
+    fn block_pads_fringe_with_zeros() {
+        let m = Matrix::random(5, 5, 2);
+        let b = m.block_padded(4, 4, 3, 3);
+        assert_eq!(b.at(0, 0), m.at(4, 4));
+        assert_eq!(b.at(1, 1), 0.0);
+        assert_eq!(b.at(2, 2), 0.0);
+    }
+
+    #[test]
+    fn write_block_drops_fringe() {
+        let mut m = Matrix::zeros(4, 4);
+        let b = Matrix::from_vec(3, 3, vec![1.0; 9]);
+        m.write_block(2, 2, &b);
+        assert_eq!(m.at(2, 2), 1.0);
+        assert_eq!(m.at(3, 3), 1.0);
+        assert_eq!(m.at(1, 1), 0.0);
+        // no panic from overhang; the fringe was dropped
+    }
+
+    #[test]
+    fn oracle_identity() {
+        let a = Matrix::random(5, 5, 3);
+        let mut id = Matrix::zeros(5, 5);
+        for i in 0..5 {
+            id.set(i, i, 1.0);
+        }
+        let c = a.matmul_oracle(&id);
+        assert!(c.allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn oracle_known_2x2() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul_oracle(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn oracle_rectangular() {
+        let a = Matrix::random(3, 7, 4);
+        let b = Matrix::random(7, 2, 5);
+        let c = a.matmul_oracle(&b);
+        assert_eq!((c.rows, c.cols), (3, 2));
+        // spot-check one element
+        let mut want = 0.0;
+        for l in 0..7 {
+            want += a.at(1, l) * b.at(l, 1);
+        }
+        assert!((c.at(1, 1) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn max_abs_diff_and_allclose() {
+        let a = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Matrix::from_vec(1, 2, vec![1.0, 2.5]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        assert!(a.allclose(&b, 0.5));
+        assert!(!a.allclose(&b, 0.4));
+    }
+}

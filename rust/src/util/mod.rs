@@ -1,0 +1,16 @@
+//! Small in-tree substrate crates-worth of utilities.
+//!
+//! The build environment is offline with only the `xla` crate's dependency
+//! closure vendored, so everything a production repo would normally pull
+//! from crates.io (CLI parsing, JSON emission, stats, a bench harness, a
+//! property-testing loop, matrices, PRNG) lives here instead.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod matrix;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,137 @@
+//! Property-based testing loop (proptest is not available offline).
+//!
+//! A property is a closure over a [`Rng`]-driven case generator; the runner
+//! executes many cases with a deterministic seed ladder, and on failure
+//! re-reports the exact seed so the case can be replayed in isolation:
+//!
+//! ```text
+//! property 'plan fits memory' failed at case 17 (seed 0x11000011): ...
+//! ```
+//!
+//! Shrinking is replaced by *sized* generation: early cases draw from small
+//! ranges, later cases from the full range, so the first failure found is
+//! usually already near-minimal.
+
+use crate::util::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: u32,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // IPUMM_PROP_CASES overrides for deeper local runs
+        let cases = std::env::var("IPUMM_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        PropConfig { cases, base_seed: 0x5EED }
+    }
+}
+
+/// Size knob in [0,1]: 0 for the first case, 1 for the last. Generators use
+/// it to scale ranges so early failures are small.
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub f64);
+
+impl Size {
+    /// Interpolated inclusive upper bound: lo at size 0, hi at size 1.
+    pub fn scale(&self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + ((hi - lo) as f64 * self.0).round() as usize
+    }
+}
+
+/// Run `prop` for `config.cases` cases; panic with seed info on failure.
+/// `prop` returns `Err(reason)` or panics to signal failure.
+pub fn check<F>(name: &str, config: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, Size) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        let seed = config
+            .base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let size = Size(if config.cases <= 1 {
+            1.0
+        } else {
+            case as f64 / (config.cases - 1) as f64
+        });
+        if let Err(reason) = prop(&mut rng, size) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {reason}"
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng, Size) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop);
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always true", PropConfig { cases: 10, base_seed: 1 }, |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails' failed at case 0")]
+    fn failing_property_reports_case_and_seed() {
+        check("fails", PropConfig { cases: 5, base_seed: 1 }, |_, _| {
+            Err("boom".to_string())
+        });
+    }
+
+    #[test]
+    fn size_ramps_from_zero_to_one() {
+        let mut sizes = Vec::new();
+        check("sizes", PropConfig { cases: 3, base_seed: 1 }, |_, s| {
+            sizes.push(s.0);
+            Ok(())
+        });
+        assert_eq!(sizes, vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn size_scale_interpolates() {
+        assert_eq!(Size(0.0).scale(1, 100), 1);
+        assert_eq!(Size(1.0).scale(1, 100), 100);
+        assert_eq!(Size(0.5).scale(0, 10), 5);
+    }
+
+    #[test]
+    fn prop_assert_macro_returns_err() {
+        fn body(x: i32) -> Result<(), String> {
+            prop_assert!(x < 5, "x was {x}");
+            Ok(())
+        }
+        assert!(body(3).is_ok());
+        assert_eq!(body(9).unwrap_err(), "x was 9");
+    }
+}

@@ -1,0 +1,128 @@
+//! Unit formatting and conversions used across reports: bytes, flops,
+//! cycles<->seconds. The paper reports TFlop/s and MB; we keep both SI (MB)
+//! and binary (MiB) explicit to avoid the GC200 918-vs-897 "MB" ambiguity.
+
+pub const KIB: u64 = 1024;
+pub const MIB: u64 = 1024 * 1024;
+pub const GIB: u64 = 1024 * 1024 * 1024;
+
+/// Matrix-multiply flop count under the paper's convention (§2.4):
+/// A[m,n] x B[n,k] -> 2*m*n*k flops (multiply + add).
+pub fn mm_flops(m: usize, n: usize, k: usize) -> u64 {
+    2 * m as u64 * n as u64 * k as u64
+}
+
+/// Tera-flops/s from flops and seconds.
+pub fn tflops(flops: u64, seconds: f64) -> f64 {
+    assert!(seconds > 0.0, "tflops: non-positive time {seconds}");
+    flops as f64 / seconds / 1e12
+}
+
+/// Cycles at a clock to seconds.
+pub fn cycles_to_secs(cycles: u64, clock_hz: f64) -> f64 {
+    cycles as f64 / clock_hz
+}
+
+/// Human bytes, binary units ("154.0 MiB").
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if bytes >= GIB {
+        format!("{:.2} GiB", b / GIB as f64)
+    } else if bytes >= MIB {
+        format!("{:.1} MiB", b / MIB as f64)
+    } else if bytes >= KIB {
+        format!("{:.1} KiB", b / KIB as f64)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Human bytes, SI units ("154.0 MB") — what the paper's prose uses.
+pub fn fmt_bytes_si(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.1} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} kB", b / 1e3)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Seconds to a human string ("3.2 ms").
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// "12.34 TFlop/s"
+pub fn fmt_tflops(t: f64) -> String {
+    format!("{t:.2} TFlop/s")
+}
+
+/// Round `v` up to the next multiple of `m`.
+pub fn round_up(v: usize, m: usize) -> usize {
+    assert!(m > 0);
+    v.div_ceil(m) * m
+}
+
+/// Ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_flop_convention() {
+        // 3584^3 squared MM = 92.09 Gflop * 2
+        assert_eq!(mm_flops(3584, 3584, 3584), 2 * 3584u64.pow(3));
+    }
+
+    #[test]
+    fn tflops_of_known_case() {
+        // 62.5 TFlop/s peak: 62.5e12 flops in 1 s
+        assert!((tflops(62_500_000_000_000, 1.0) - 62.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cycles_seconds_roundtrip() {
+        let s = cycles_to_secs(1_330_000_000, 1.33e9);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(154 * MIB), "154.0 MiB");
+        assert_eq!(fmt_bytes_si(154_000_000), "154.0 MB");
+        assert_eq!(fmt_bytes_si(918_000_000), "918.0 MB");
+        assert_eq!(fmt_bytes_si(1_500_000_000), "1.50 GB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(0.0032), "3.200 ms");
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+    }
+
+    #[test]
+    fn rounding_helpers() {
+        assert_eq!(round_up(100, 128), 128);
+        assert_eq!(round_up(128, 128), 128);
+        assert_eq!(div_ceil(1, 128), 1);
+        assert_eq!(div_ceil(0, 128), 0);
+    }
+}

@@ -1,0 +1,129 @@
+//! CLI integration: run the `ipumm` binary end-to-end per subcommand and
+//! assert the key lines of each paper artifact appear.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_ipumm"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage_and_fails() {
+    let (_, err, ok) = run(&[]);
+    assert!(!ok);
+    assert!(err.contains("usage: ipumm"));
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let (_, err, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(err.contains("unknown command"));
+}
+
+#[test]
+fn unknown_option_reports_valid_set() {
+    let (_, err, ok) = run(&["fig4", "--bogus", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown option --bogus"));
+}
+
+#[test]
+fn table1_prints_specs() {
+    let (out, _, ok) = run(&["table1"]);
+    assert!(ok);
+    assert!(out.contains("1472"));
+    assert!(out.contains("62.6 TFlop/s"));
+}
+
+#[test]
+fn fig4_small_sweep() {
+    let (out, _, ok) = run(&["fig4", "--max-size", "1024", "--workers", "2"]);
+    assert!(ok);
+    assert!(out.contains("best/peak"));
+    assert!(out.contains("IPU best"));
+}
+
+#[test]
+fn vertices_prints_census() {
+    let (out, _, ok) = run(&["vertices"]);
+    assert!(ok);
+    assert!(out.contains("31743")); // paper column
+    assert!(out.contains("right-skewed"));
+}
+
+#[test]
+fn plan_shows_partition_and_oom() {
+    let (out, _, ok) = run(&["plan", "1024", "1024", "1024"]);
+    assert!(ok);
+    assert!(out.contains("pm="));
+    let (out, _, ok) = run(&["plan", "8192", "8192", "8192"]);
+    assert!(ok);
+    assert!(out.contains("memory wall"));
+}
+
+#[test]
+fn profile_writes_json() {
+    let json_path = std::env::temp_dir().join("ipumm_cli_profile.json");
+    let json_arg = json_path.to_str().unwrap();
+    let (out, _, ok) = run(&["profile", "512", "512", "512", "--json", json_arg]);
+    assert!(ok);
+    assert!(out.contains("PopVision-style profile"));
+    assert!(out.contains("liveness peak"));
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.contains("\"vertex_census\""));
+    let _ = std::fs::remove_file(&json_path);
+}
+
+#[test]
+fn run_with_real_path_verifies() {
+    let (out, err, ok) = run(&["run", "200", "300", "100", "--real"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("ipu-sim/GC200"));
+    assert!(out.contains("verified"));
+}
+
+#[test]
+fn ablation_lists_mechanisms() {
+    let (out, _, ok) = run(&["ablation"]);
+    assert!(ok);
+    assert!(out.contains("full model"));
+    assert!(out.contains("exchange-code-scaling"));
+}
+
+#[test]
+fn trace_reports_percentiles() {
+    let (out, _, ok) = run(&["trace", "--jobs", "30", "--workers", "2"]);
+    assert!(ok);
+    assert!(out.contains("p95"));
+    assert!(out.contains("squared"));
+}
+
+#[test]
+fn gc2_arch_flag_is_honored() {
+    let (out, _, ok) = run(&["table1", "--arch", "gc2", "--gpu", "v100"]);
+    assert!(ok);
+    assert!(out.contains("GC2"));
+    assert!(out.contains("V100"));
+}
+
+#[test]
+fn fig5_csv_export_works() {
+    let csv_path = std::env::temp_dir().join("ipumm_cli_fig5.csv");
+    let csv_arg = csv_path.to_str().unwrap();
+    let (_, _, ok) = run(&["fig5", "--ks", "1024", "--workers", "2", "--csv", csv_arg]);
+    assert!(ok);
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(csv.starts_with("backend,label"));
+    assert!(csv.lines().count() > 10);
+    let _ = std::fs::remove_file(&csv_path);
+}

@@ -1,0 +1,159 @@
+//! Integration tests for the real compute path (L1/L2 artifacts -> L3
+//! PJRT execution). Requires `make artifacts` (the Makefile's `test`
+//! target guarantees ordering).
+
+use std::path::{Path, PathBuf};
+
+use ipumm::experiments::e2e;
+use ipumm::runtime::{ArtifactKind, BlockMmExecutor, Manifest, RuntimeClient};
+use ipumm::util::matrix::Matrix;
+
+fn artifacts_dir() -> PathBuf {
+    // tests run from the crate root
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn require_artifacts() -> PathBuf {
+    let dir = artifacts_dir();
+    assert!(
+        dir.join("manifest.tsv").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    dir
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let m = Manifest::load(&require_artifacts()).unwrap();
+    assert!(m.blocks().count() >= 3, "expected >= 3 block sizes");
+    assert!(m.by_name("mm_block_128").is_some());
+    assert!(m
+        .artifacts
+        .iter()
+        .any(|a| a.kind == ArtifactKind::Full));
+}
+
+#[test]
+fn client_compiles_every_artifact() {
+    let c = RuntimeClient::load(&require_artifacts()).unwrap();
+    assert_eq!(c.platform(), "cpu");
+    assert!(c.artifact_names().len() >= 4);
+}
+
+#[test]
+fn block_artifact_accumulates() {
+    // out = c + a@b: with a = I, out must equal c + b
+    let mut c = RuntimeClient::load(&require_artifacts()).unwrap();
+    let n = 64;
+    let mut ident = Matrix::zeros(n, n);
+    for i in 0..n {
+        ident.set(i, i, 1.0);
+    }
+    let b = Matrix::random(n, n, 5);
+    let acc = Matrix::random(n, n, 6);
+    let out = c
+        .execute_block("mm_block_64", &ident.data, &b.data, &acc.data)
+        .unwrap();
+    let got = Matrix::from_vec(n, n, out);
+    let mut want = acc.clone();
+    for i in 0..n * n {
+        want.data[i] += b.data[i];
+    }
+    assert!(got.allclose(&want, 1e-5), "max err {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn full_artifact_matches_oracle() {
+    let mut c = RuntimeClient::load(&require_artifacts()).unwrap();
+    for name in ["mm_full_32", "mm_full_96"] {
+        let spec = c.spec(name).unwrap().clone();
+        let a = Matrix::random(spec.m, spec.n, 7);
+        let b = Matrix::random(spec.n, spec.k, 8);
+        let out = c.execute_full(name, &a.data, &b.data).unwrap();
+        let got = Matrix::from_vec(spec.m, spec.k, out);
+        let want = a.matmul_oracle(&b);
+        assert!(got.allclose(&want, 1e-4), "{name}: err {}", got.max_abs_diff(&want));
+    }
+}
+
+#[test]
+fn executing_full_as_block_is_rejected() {
+    let mut c = RuntimeClient::load(&require_artifacts()).unwrap();
+    let a = vec![0.0f32; 64 * 64];
+    let err = c.execute_full("mm_block_64", &a, &a).unwrap_err();
+    assert!(err.to_string().contains("not a full-matmul"));
+}
+
+#[test]
+fn block_executor_handles_exact_multiples() {
+    let mut ex = BlockMmExecutor::load(&require_artifacts(), 128).unwrap();
+    let a = Matrix::random(256, 384, 11);
+    let b = Matrix::random(384, 128, 12);
+    let (_c, stats, err) = ex.mm_verified(&a, &b).unwrap();
+    assert_eq!(stats.block_calls, 2 * 1 * 3);
+    assert!(err < 1e-4);
+}
+
+#[test]
+fn block_executor_pads_ragged_shapes() {
+    let mut ex = BlockMmExecutor::load(&require_artifacts(), 64).unwrap();
+    let a = Matrix::random(65, 130, 13);
+    let b = Matrix::random(130, 1, 14);
+    let (c, stats, err) = ex.mm_verified(&a, &b).unwrap();
+    assert_eq!((c.rows, c.cols), (65, 1));
+    assert_eq!(stats.padded_m, 128);
+    assert_eq!(stats.padded_k, 64);
+    assert!(err < 1e-4);
+}
+
+#[test]
+fn block_executor_accumulation_depth() {
+    // deep reduction (right-skew shape): many accumulating steps per block
+    let mut ex = BlockMmExecutor::load(&require_artifacts(), 64).unwrap();
+    let a = Matrix::random(64, 640, 15);
+    let b = Matrix::random(640, 64, 16);
+    let (_c, stats, err) = ex.mm_verified(&a, &b).unwrap();
+    assert_eq!(stats.block_calls, 10);
+    assert!(err < 1e-3);
+}
+
+#[test]
+fn block_sizes_agree_with_each_other() {
+    let dir = require_artifacts();
+    let a = Matrix::random(200, 100, 17);
+    let b = Matrix::random(100, 160, 18);
+    let mut results = Vec::new();
+    for cap in [64usize, 128, 256] {
+        let mut ex = BlockMmExecutor::load(&dir, cap).unwrap();
+        let (c, _s) = ex.mm(&a, &b).unwrap();
+        results.push(c);
+    }
+    for w in results.windows(2) {
+        assert!(
+            w[0].allclose(&w[1], 1e-4),
+            "block sizes disagree: {}",
+            w[0].max_abs_diff(&w[1])
+        );
+    }
+}
+
+#[test]
+fn e2e_driver_runs_and_verifies() {
+    let r = e2e::run(&require_artifacts(), &e2e::default_trace(), 128).unwrap();
+    assert_eq!(r.rows.len(), e2e::default_trace().len());
+    for row in &r.rows {
+        assert!(row.real_max_err < 1e-3, "{}: err {}", row.label, row.real_max_err);
+        assert!(row.gpu_tflops > 0.0);
+    }
+    // paper headline: IPU wins wherever it fits
+    assert!(r.geomean_speedup > 1.0, "geomean {}", r.geomean_speedup);
+    assert!(r.total_block_calls > 100);
+}
+
+#[test]
+fn e2e_table_renders_all_rows() {
+    let r = e2e::run(&require_artifacts(), &e2e::default_trace()[..2], 128).unwrap();
+    let ascii = e2e::to_table(&r).to_ascii();
+    assert!(ascii.contains("geomean"));
+    assert!(ascii.contains("squared-256"));
+}

@@ -1,0 +1,314 @@
+//! Property-based invariants over the whole substrate, driven by the
+//! in-tree prop framework (rust/src/util/prop.rs): sized random cases
+//! with replayable seeds.
+
+use ipumm::arch::IpuArch;
+use ipumm::bsp::scheduler::BspEngine;
+use ipumm::exchange::fabric::ExchangeFabric;
+use ipumm::exchange::plan::{ExchangePattern, ExchangePlan};
+use ipumm::gpu::cublas_model::GpuModel;
+use ipumm::arch::GpuArch;
+use ipumm::memory::mapping::{grid_2d_mapping, linear_balanced_mapping};
+use ipumm::graph::tensor::{DType, Tensor, TensorId};
+use ipumm::planner::cost::CostModel;
+use ipumm::planner::partition::{MmShape, Partition};
+use ipumm::planner::search::search;
+use ipumm::prop_assert;
+use ipumm::sim::engine::SimEngine;
+use ipumm::util::prop::{check_default, Size};
+use ipumm::util::rng::Rng;
+
+fn random_shape(rng: &mut Rng, size: Size) -> MmShape {
+    let hi = size.scale(64, 4096);
+    MmShape::new(
+        rng.gen_usize(1, hi),
+        rng.gen_usize(1, hi),
+        rng.gen_usize(1, hi),
+    )
+}
+
+#[test]
+fn prop_plans_fit_tile_memory_or_error() {
+    let arch = IpuArch::gc200();
+    check_default("plan fits or OOM", |rng, size| {
+        let shape = random_shape(rng, size);
+        match search(&arch, shape) {
+            Ok(plan) => {
+                prop_assert!(
+                    plan.cost.fits && plan.cost.tile_bytes_total <= arch.tile_sram_bytes,
+                    "plan claims fit but max tile {} > {} for {shape:?}",
+                    plan.cost.tile_bytes_total,
+                    arch.tile_sram_bytes
+                );
+                prop_assert!(
+                    plan.partition().is_valid(shape, arch.tiles),
+                    "invalid partition {:?}",
+                    plan.partition()
+                );
+            }
+            Err(_) => {} // OOM is a legal outcome
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_efficiency_bounded() {
+    let arch = IpuArch::gc200();
+    check_default("efficiency in (0, 1]", |rng, size| {
+        let shape = random_shape(rng, size);
+        if let Ok(plan) = search(&arch, shape) {
+            let eff = plan.cost.efficiency();
+            prop_assert!(eff > 0.0 && eff <= 1.0, "efficiency {eff} for {shape:?}");
+            let tf = plan.tflops(&arch);
+            prop_assert!(
+                tf <= arch.peak_fp32_tflops(),
+                "tflops {tf} above peak for {shape:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_model_census_consistency() {
+    let arch = IpuArch::gc200();
+    let model = CostModel::new(&arch);
+    check_default("census = 4/tile + reduce", |rng, size| {
+        let shape = random_shape(rng, size);
+        let pm = rng.gen_usize(1, 32.min(shape.m));
+        let pk = rng.gen_usize(1, 32.min(shape.k));
+        let pn = 1 << rng.gen_usize(0, 3);
+        let cn = 16 * rng.gen_usize(1, size.scale(2, 32));
+        let part = Partition { pm, pn, pk, cn };
+        if !part.is_valid(shape, arch.tiles) {
+            return Ok(());
+        }
+        let cost = model.evaluate(shape, part);
+        prop_assert!(
+            cost.compute_vertices == 4 * part.tiles_used(),
+            "compute vertices {} != 4*{}",
+            cost.compute_vertices,
+            part.tiles_used()
+        );
+        prop_assert!(
+            (pn == 1) == (cost.reduce_vertices == 0),
+            "reduce vertices {} inconsistent with pn={pn}",
+            cost.reduce_vertices
+        );
+        prop_assert!(
+            cost.total_cycles == cost.compute_cycles + cost.exchange_cycles + cost.sync_cycles,
+            "cycle sum mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exchange_plans_conserve_bytes() {
+    let arch = IpuArch::gc200();
+    let fabric = ExchangeFabric::new(&arch);
+    check_default("exchange conservation", |rng, size| {
+        let mut plan = ExchangePlan::new("prop", ExchangePattern::AllToAll);
+        let transfers = size.scale(1, 200);
+        for _ in 0..transfers {
+            let src = rng.gen_usize(0, arch.tiles - 1);
+            let dst = rng.gen_usize(0, arch.tiles - 1);
+            plan.add(src, dst, rng.gen_range(0, 1 << 16));
+        }
+        plan.validate(arch.tiles).map_err(|e| e.to_string())?;
+        let sent: u64 = plan.sent_per_tile(arch.tiles).iter().sum();
+        let recv: u64 = plan.recv_per_tile(arch.tiles).iter().sum();
+        prop_assert!(sent == recv, "sent {sent} != recv {recv}");
+        prop_assert!(sent == plan.total_bytes(), "sent {sent} != total");
+
+        let cost = fabric.cost(&plan);
+        let max_tile = plan
+            .sent_per_tile(arch.tiles)
+            .into_iter()
+            .chain(plan.recv_per_tile(arch.tiles))
+            .max()
+            .unwrap_or(0);
+        prop_assert!(cost.max_tile_bytes == max_tile, "bottleneck mismatch");
+        if plan.transfers.is_empty() {
+            prop_assert!(cost.cycles == 0, "empty plan should be free");
+        } else {
+            prop_assert!(cost.cycles >= fabric.setup_cycles, "missing setup cost");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mappings_partition_tensors() {
+    check_default("mappings partition", |rng, size| {
+        let numel = rng.gen_usize(1, size.scale(16, 1 << 20));
+        let tiles = rng.gen_usize(1, 1472);
+        let mapping = linear_balanced_mapping(numel, tiles);
+        let t = Tensor {
+            id: TensorId(0),
+            name: "prop".into(),
+            shape: vec![numel],
+            dtype: DType::F32,
+            mapping: Some(mapping),
+        };
+        t.validate_mapping().map_err(|e| e.to_string())?;
+
+        let rows = rng.gen_usize(1, size.scale(4, 512));
+        let cols = rng.gen_usize(1, size.scale(4, 512));
+        let pr = rng.gen_usize(1, rows.min(32));
+        let pc = rng.gen_usize(1, cols.min(32));
+        let tiles2 = pr * pc;
+        let g = grid_2d_mapping(rows, cols, pr, pc, tiles2, |i, j| i * pc + j);
+        let t2 = Tensor {
+            id: TensorId(1),
+            name: "grid".into(),
+            shape: vec![rows, cols],
+            dtype: DType::F32,
+            mapping: Some(g),
+        };
+        t2.validate_mapping().map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_trace_phases_partition_total() {
+    let arch = IpuArch::gc200();
+    let engine = SimEngine::new(arch);
+    check_default("trace phases partition", |rng, size| {
+        let hi = size.scale(128, 2048);
+        let shape = MmShape::new(
+            rng.gen_usize(32, hi),
+            rng.gen_usize(32, hi),
+            rng.gen_usize(32, hi),
+        );
+        if let Ok(report) = engine.simulate_mm(shape) {
+            let (c, s, e) = report.trace.phase_fractions();
+            prop_assert!(
+                (c + s + e - 1.0).abs() < 1e-9,
+                "fractions sum {} for {shape:?}",
+                c + s + e
+            );
+            let util = report.trace.tile_utilization();
+            prop_assert!((0.0..=1.0).contains(&util), "utilization {util}");
+            prop_assert!(
+                report.memory.fits(),
+                "graph memory overflow despite fitting plan: {shape:?}"
+            );
+            prop_assert!(
+                report.total_vertices == report.plan.cost.total_vertices(),
+                "graph census {} != planner census {}",
+                report.total_vertices,
+                report.plan.cost.total_vertices()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bsp_engine_deterministic() {
+    let arch = IpuArch::gc200();
+    let engine = SimEngine::new(arch.clone());
+    check_default("bsp deterministic", |rng, size| {
+        let hi = size.scale(64, 1024);
+        let shape = MmShape::new(
+            rng.gen_usize(16, hi),
+            rng.gen_usize(16, hi),
+            rng.gen_usize(16, hi),
+        );
+        if let Ok(plan) = search(&arch, shape) {
+            let g = engine.build_graph(shape, &plan);
+            let bsp = BspEngine::new(&arch);
+            let t1 = bsp.run(&g).total_cycles();
+            let t2 = bsp.run(&g).total_cycles();
+            prop_assert!(t1 == t2, "nondeterministic trace {t1} vs {t2}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gpu_model_bounded_and_monotone_in_peak() {
+    let a30 = GpuModel::new(GpuArch::a30());
+    let v100 = GpuModel::new(GpuArch::v100());
+    check_default("gpu model bounded", |rng, size| {
+        let shape = random_shape(rng, size);
+        let r = a30.simulate_mm(shape);
+        prop_assert!(r.tflops > 0.0, "non-positive tflops for {shape:?}");
+        prop_assert!(
+            r.efficiency <= 1.0,
+            "efficiency {} above 1 for {shape:?}",
+            r.efficiency
+        );
+        // a strictly faster part should never be slower on big shapes
+        if shape.flops() > 1_000_000_000 {
+            let rv = v100.simulate_mm(shape);
+            prop_assert!(
+                rv.tflops >= 0.9 * r.tflops,
+                "V100 {} slower than A30 {} for {shape:?}",
+                rv.tflops,
+                r.tflops
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matrix_block_roundtrip() {
+    check_default("block roundtrip", |rng, size| {
+        let rows = rng.gen_usize(1, size.scale(2, 64));
+        let cols = rng.gen_usize(1, size.scale(2, 64));
+        let m = ipumm::util::matrix::Matrix::random(rows, cols, rng.next_u64());
+        let br = rng.gen_usize(1, 80);
+        let bc = rng.gen_usize(1, 80);
+        let r0 = rng.gen_usize(0, rows.saturating_sub(1));
+        let c0 = rng.gen_usize(0, cols.saturating_sub(1));
+        let block = m.block_padded(r0, c0, br, bc);
+        // in-range elements match, out-of-range are zero
+        for r in 0..br {
+            for c in 0..bc {
+                let v = block.at(r, c);
+                if r0 + r < rows && c0 + c < cols {
+                    prop_assert!(v == m.at(r0 + r, c0 + c), "copy mismatch");
+                } else {
+                    prop_assert!(v == 0.0, "padding not zero");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_oracle_matches_block_decomposition_in_pure_rust() {
+    // the runtime's decomposition logic, replayed without PJRT: splitting
+    // the reduction and accumulating must equal the direct oracle
+    check_default("oracle decomposition", |rng, size| {
+        let m = rng.gen_usize(1, size.scale(2, 24));
+        let n = rng.gen_usize(2, size.scale(2, 24).max(2));
+        let k = rng.gen_usize(1, size.scale(2, 24));
+        let a = ipumm::util::matrix::Matrix::random(m, n, rng.next_u64());
+        let b = ipumm::util::matrix::Matrix::random(n, k, rng.next_u64());
+        let whole = a.matmul_oracle(&b);
+
+        let split = rng.gen_usize(1, n - 1);
+        let a1 = a.block_padded(0, 0, m, split);
+        let a2 = a.block_padded(0, split, m, n - split);
+        let b1 = b.block_padded(0, 0, split, k);
+        let b2 = b.block_padded(split, 0, n - split, k);
+        let mut acc = a1.matmul_oracle(&b1);
+        let part2 = a2.matmul_oracle(&b2);
+        for i in 0..acc.data.len() {
+            acc.data[i] += part2.data[i];
+        }
+        prop_assert!(
+            acc.allclose(&whole, 1e-4 * n as f32),
+            "decomposition err {}",
+            acc.max_abs_diff(&whole)
+        );
+        Ok(())
+    });
+}
