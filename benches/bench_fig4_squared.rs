@@ -8,7 +8,7 @@ fn main() {
     let mut b = Bench::new("fig4_squared").with_iters(1, 5);
     let mut last = None;
     b.run("sweep_to_5120", || {
-        let r = fig4::run(&IpuArch::gc200(), &GpuArch::a30(), 5120, 4);
+        let r = fig4::run(&IpuArch::gc200(), &GpuArch::a30(), 5120, Some(4));
         last = Some(black_box(r));
     });
     let r = last.unwrap();

@@ -8,7 +8,7 @@ fn main() {
     let mut b = Bench::new("fig5_skewed").with_iters(1, 5);
     let mut last = None;
     b.run("ladder_3k", || {
-        let r = fig5::run(&IpuArch::gc200(), &GpuArch::a30(), 22, 4, &[1024, 2048, 4096], 4);
+        let r = fig5::run(&IpuArch::gc200(), &GpuArch::a30(), 22, 4, &[1024, 2048, 4096], Some(4));
         last = Some(black_box(r));
     });
     let r = last.unwrap();

@@ -1,0 +1,73 @@
+//! Serving-layer bench: cached vs cold planning throughput, and the
+//! end-to-end service on a mixed trace.
+//!
+//! The headline comparison is the whole point of the plan cache: a cold
+//! `planner::search` prices thousands of partition candidates, a warm
+//! lookup is one hash probe under a mutex. The end-to-end case measures
+//! sustained request throughput with bucketing + coalescing on top.
+
+use ipumm::arch::IpuArch;
+use ipumm::planner::partition::MmShape;
+use ipumm::planner::search::search;
+use ipumm::serve::{MmService, PlanCache, ServiceConfig};
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let arch = IpuArch::gc200();
+    let mut b = Bench::new("serve");
+
+    let shapes = [
+        ("squared_2048", MmShape::square(2048)),
+        ("left_8192x512x1024", MmShape::new(8192, 512, 1024)),
+        ("right_512x8192x1024", MmShape::new(512, 8192, 1024)),
+    ];
+
+    for (name, shape) in shapes {
+        // cold: the full planner search every time (what every request
+        // would pay without the serving layer)
+        b.run(&format!("cold_plan_{name}"), || {
+            black_box(search(&arch, shape).unwrap())
+        });
+
+        // cached: LRU lookup of the memoized plan
+        let cache = PlanCache::new(64);
+        cache.get_or_plan(&arch, shape).unwrap();
+        b.run(&format!("cached_plan_{name}"), || {
+            black_box(cache.get_or_plan(&arch, shape).unwrap())
+        });
+
+        // amortized speedup as bench throughput annotation
+        let results = b.results();
+        let cold = results[results.len() - 2].summary.mean;
+        let warm = results[results.len() - 1].summary.mean;
+        b.throughput(cold / warm, "x cold/warm");
+    }
+
+    // batched cached lookups: sustained lookup rate under one thread
+    let cache = PlanCache::new(64);
+    let hot = MmShape::square(1024);
+    cache.get_or_plan(&arch, hot).unwrap();
+    let r = b.run("cached_lookups_x1000", || {
+        for _ in 0..1000 {
+            black_box(cache.get_or_plan(&arch, hot).unwrap());
+        }
+    });
+    let mean = r.summary.mean;
+    b.throughput(1000.0 / mean, "lookups/s");
+
+    // end-to-end: warm service over a 500-request jittered mix
+    let svc = MmService::new(ServiceConfig { workers: Some(4), ..ServiceConfig::default() });
+    let trace: Vec<MmShape> = (0..500)
+        .map(|i| match i % 3 {
+            0 => MmShape::new(1024 - i % 50, 1024 - i % 31, 1024 - i % 17),
+            1 => MmShape::new(4096 - i % 50, 256 - i % 13, 1024 - i % 17),
+            _ => MmShape::new(256 - i % 13, 4096 - i % 50, 1024 - i % 17),
+        })
+        .collect();
+    svc.serve_trace(&trace); // warm the buckets
+    let r = b.run("serve_trace_500_warm", || black_box(svc.serve_trace(&trace)));
+    let mean = r.summary.mean;
+    b.throughput(500.0 / mean, "req/s");
+
+    b.dump_csv();
+}

@@ -13,7 +13,7 @@ fn main() -> anyhow::Result<()> {
     let seed = *args.get(1).unwrap_or(&42);
     let spec = TraceSpec::paper_mix(n_jobs, seed);
     println!("dispatching {n_jobs} mixed MM requests (seed {seed}) to both devices...\n");
-    let r = run_trace(&IpuArch::gc200(), &GpuArch::a30(), &spec, 0);
+    let r = run_trace(&IpuArch::gc200(), &GpuArch::a30(), &spec, None);
     println!("{}", r.to_table().to_ascii());
     println!("reading: per-request model latency; the IPU's advantage persists across the mix,");
     println!("with the right-skew class the narrowest margin (paper Finding 3).");

@@ -154,6 +154,27 @@ impl IpuArch {
         self.tiles as f64 * self.exchange_bytes_per_tile_cycle * self.clock_hz
     }
 
+    /// Fingerprint of every plan-relevant parameter — the architecture
+    /// half of the serving layer's plan-cache key (`serve::cache`). Two
+    /// archs that would make the planner choose differently must not
+    /// collide, so everything `planner::cost` reads is hashed; host-side
+    /// attributes (streaming memory, power) are deliberately excluded.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.name.hash(&mut h);
+        self.tiles.hash(&mut h);
+        self.threads_per_tile.hash(&mut h);
+        self.tile_sram_bytes.hash(&mut h);
+        self.clock_hz.to_bits().hash(&mut h);
+        self.fp32_macs_per_tile_cycle.hash(&mut h);
+        self.fp16_macs_per_tile_cycle.hash(&mut h);
+        self.exchange_bytes_per_tile_cycle.to_bits().hash(&mut h);
+        self.sync_cycles.hash(&mut h);
+        self.exchange_code_row_bytes.hash(&mut h);
+        h.finish()
+    }
+
     pub fn cycles_to_secs(&self, cycles: u64) -> f64 {
         cycles as f64 / self.clock_hz
     }
@@ -248,6 +269,22 @@ mod tests {
     fn fp16_peak_is_4x_fp32_on_mk2() {
         let a = IpuArch::gc200();
         assert!((a.peak_fp16_flops() / a.peak_fp32_flops() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_archs() {
+        let gc200 = IpuArch::gc200();
+        assert_eq!(gc200.fingerprint(), IpuArch::gc200().fingerprint());
+        assert_ne!(gc200.fingerprint(), IpuArch::gc2().fingerprint());
+        assert_ne!(gc200.fingerprint(), IpuArch::bow2000().fingerprint());
+        // a plan-relevant tweak must change the fingerprint
+        let mut derated = IpuArch::gc200();
+        derated.tile_sram_bytes -= 1;
+        assert_ne!(gc200.fingerprint(), derated.fingerprint());
+        // host-side attributes must not
+        let mut repowered = IpuArch::gc200();
+        repowered.power_w += 50.0;
+        assert_eq!(gc200.fingerprint(), repowered.fingerprint());
     }
 
     #[test]

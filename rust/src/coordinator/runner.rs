@@ -26,9 +26,17 @@ impl Job {
     }
 }
 
-/// Run all jobs across `workers` threads; results in submission order.
-pub fn run_jobs(jobs: Vec<Job>, workers: usize) -> MetricsTable {
-    let workers = workers.max(1).min(jobs.len().max(1));
+/// Run all jobs across a worker pool; results in submission order.
+///
+/// `workers: None` sizes the pool from [`default_workers`]
+/// (`available_parallelism` minus one) — the single sizing policy shared
+/// by the paper sweeps and the serving layer (`serve::service`). Pass
+/// `Some(n)` only to pin a count (tests, reproducible bench runs).
+pub fn run_jobs(jobs: Vec<Job>, workers: Option<usize>) -> MetricsTable {
+    let workers = workers
+        .unwrap_or_else(default_workers)
+        .max(1)
+        .min(jobs.len().max(1));
     let n = jobs.len();
     let queue = Arc::new(Mutex::new(
         jobs.into_iter().enumerate().collect::<Vec<(usize, Job)>>(),
@@ -94,7 +102,7 @@ mod tests {
 
     #[test]
     fn runs_all_jobs_in_submission_order() {
-        let table = run_jobs(jobs(&[256, 512, 768]), 4);
+        let table = run_jobs(jobs(&[256, 512, 768]), Some(4));
         assert_eq!(table.len(), 6);
         let labels: Vec<&str> = table.records.iter().map(|r| r.label.as_str()).collect();
         assert_eq!(labels, vec!["256", "256", "512", "512", "768", "768"]);
@@ -102,8 +110,8 @@ mod tests {
 
     #[test]
     fn single_worker_matches_parallel() {
-        let a = run_jobs(jobs(&[256, 512]), 1);
-        let b = run_jobs(jobs(&[256, 512]), 8);
+        let a = run_jobs(jobs(&[256, 512]), Some(1));
+        let b = run_jobs(jobs(&[256, 512]), Some(8));
         assert_eq!(a.len(), b.len());
         for (ra, rb) in a.records.iter().zip(&b.records) {
             assert_eq!(ra.tflops_cell(), rb.tflops_cell());
@@ -111,8 +119,14 @@ mod tests {
     }
 
     #[test]
+    fn default_sizing_policy_runs_everything() {
+        let table = run_jobs(jobs(&[256, 512]), None);
+        assert_eq!(table.len(), 4);
+    }
+
+    #[test]
     fn empty_job_list_is_fine() {
-        let table = run_jobs(vec![], 4);
+        let table = run_jobs(vec![], Some(4));
         assert!(table.is_empty());
     }
 

@@ -75,7 +75,7 @@ pub fn run_trace(
     ipu: &IpuArch,
     gpu: &GpuArch,
     spec: &TraceSpec,
-    workers: usize,
+    workers: Option<usize>,
 ) -> TraceResult {
     let mut jobs = Vec::new();
     for (label, shape) in &spec.jobs {
@@ -154,7 +154,7 @@ mod tests {
 
     fn small_trace() -> TraceResult {
         let spec = TraceSpec::paper_mix(60, 7);
-        run_trace(&IpuArch::gc200(), &GpuArch::a30(), &spec, 4)
+        run_trace(&IpuArch::gc200(), &GpuArch::a30(), &spec, Some(4))
     }
 
     #[test]

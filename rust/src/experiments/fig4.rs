@@ -27,7 +27,8 @@ pub struct Fig4Result {
 }
 
 /// Run the Fig. 4 sweep up to `max_size` (paper plots past the IPU wall).
-pub fn run(ipu: &IpuArch, gpu: &GpuArch, max_size: usize, workers: usize) -> Fig4Result {
+/// `workers: None` uses the shared `runner::default_workers` policy.
+pub fn run(ipu: &IpuArch, gpu: &GpuArch, max_size: usize, workers: Option<usize>) -> Fig4Result {
     let mut jobs = Vec::new();
     for s in squared_sizes(max_size) {
         let shape = MmShape::square(s);
@@ -83,7 +84,7 @@ mod tests {
 
     #[test]
     fn fig4_shape_holds() {
-        let r = run(&IpuArch::gc200(), &GpuArch::a30(), 5120, 4);
+        let r = run(&IpuArch::gc200(), &GpuArch::a30(), 5120, Some(4));
         // paper: IPU max square 3584 (we land 3584 at 256-granularity)
         assert_eq!(r.ipu_max_square, 3584, "IPU wall at {}", r.ipu_max_square);
         // paper: 44.2 of 62.5 (70.7%); accept the shape within a band
@@ -109,7 +110,7 @@ mod tests {
 
     #[test]
     fn table_renders_with_peak_row() {
-        let r = run(&IpuArch::gc200(), &GpuArch::a30(), 1024, 2);
+        let r = run(&IpuArch::gc200(), &GpuArch::a30(), 1024, Some(2));
         let ascii = r.to_table().to_ascii();
         assert!(ascii.contains("best/peak"));
         assert!(ascii.contains("Fig. 4"));

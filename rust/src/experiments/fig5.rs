@@ -27,7 +27,7 @@ pub fn run(
     mn_budget_log2: u32,
     half_steps: u32,
     ks: &[usize],
-    workers: usize,
+    workers: Option<usize>,
 ) -> Fig5Result {
     let mut jobs = Vec::new();
     let mut points = Vec::new();
@@ -87,7 +87,7 @@ mod tests {
     use super::*;
 
     fn small_run() -> Fig5Result {
-        run(&IpuArch::gc200(), &GpuArch::a30(), 22, 4, &[2048], 4)
+        run(&IpuArch::gc200(), &GpuArch::a30(), 22, 4, &[2048], Some(4))
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! | E2E| end-to-end driver with real PJRT numerics| `e2e`         |
 
 pub mod ablation;
+#[cfg(feature = "xla")]
 pub mod e2e;
 pub mod fig4;
 pub mod fp16;

@@ -3,7 +3,7 @@
 //! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
 //! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
 //!
-//! The crate has three roles (see DESIGN.md):
+//! The crate has four roles (see DESIGN.md):
 //!
 //! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
 //!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
@@ -13,8 +13,19 @@
 //! 2. **GPU baseline** — an analytical cuBLAS SGEMM model ([`gpu`]) for the
 //!    A30 / RTX 2080 Ti comparison curves.
 //! 3. **Real compute path** — AOT-compiled JAX/Pallas HLO artifacts
-//!    executed through PJRT by [`runtime`], so every benchmarked shape is
-//!    backed by an actually-performed, verified multiplication.
+//!    executed through PJRT by [`runtime`] (behind the off-by-default
+//!    `xla` feature), so benchmarked shapes can be backed by an
+//!    actually-performed, verified multiplication.
+//! 4. **Serving layer** — [`serve`] turns the one-shot pipeline into
+//!    matmul-as-a-service: requests are rounded up onto a bucketing
+//!    ladder (`serve::bucket`) whose rungs walk the same `{2^i, 3·2^(i-1)}`
+//!    classes as the paper's Fig. 5 aspect-ratio sweep, so the skewed
+//!    long tail collapses onto few plan-cache keys; a thread-safe LRU
+//!    cache (`serve::cache`) memoizes planner searches per
+//!    `(shape, arch fingerprint)` the way PopLibs memoizes its planner in
+//!    production; and a bounded queue with batch coalescing
+//!    (`serve::queue`) feeds multi-backend dispatch (`serve::service`)
+//!    with per-bucket telemetry (`serve::telemetry`).
 //!
 //! [`coordinator`] orchestrates benchmark jobs across these backends, and
 //! [`experiments`] regenerates each of the paper's tables and figures.
@@ -33,4 +44,5 @@ pub mod graph;
 pub mod ipu;
 pub mod memory;
 pub mod multi_ipu;
+pub mod serve;
 pub mod util;

@@ -14,6 +14,11 @@
 //! ipumm run m n k [--real]     one shape on all backends (+PJRT verify)
 //! ipumm ablation               cost-model ablation study
 //! ipumm trace [--jobs N]       trace-driven latency/throughput study
+//! ipumm serve [--jobs N] [--cache N] [--batch N] [--warmup N]
+//!                              matmul-as-a-service demo (plan cache,
+//!                              shape bucketing, coalescing dispatch;
+//!                              --artifacts DIR + --features xla anchors
+//!                              cold buckets to real PJRT execution)
 //! ipumm streaming              §6 streaming-memory extension
 //! ipumm multiipu               §6 multi-IPU scaling extension
 //! ipumm e2e [--artifacts DIR]  end-to-end driver with real numerics
@@ -23,29 +28,33 @@
 //! Global options: --arch gc200|gc2|bow, --gpu a30|rtx2080ti|v100,
 //! --csv FILE, --workers N.
 
+#[cfg(feature = "xla")]
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use ipumm::arch::{GpuArch, IpuArch};
 use ipumm::coordinator::device::{run_shape, Backend};
-use ipumm::coordinator::runner::default_workers;
+#[cfg(feature = "xla")]
+use ipumm::experiments::e2e;
 use ipumm::experiments::{
-    ablation, e2e, fig4, fig5, fp16, memory_study, multi_ipu_x, phases, streaming, table1,
-    vertices,
+    ablation, fig4, fig5, fp16, memory_study, multi_ipu_x, phases, streaming, table1, vertices,
 };
 use ipumm::planner::partition::MmShape;
 use ipumm::planner::search::search;
 use ipumm::profiler::popvision::PopVisionReport;
+#[cfg(feature = "xla")]
 use ipumm::runtime::blockmm::BlockMmExecutor;
+use ipumm::serve::{MmService, ServiceConfig};
 use ipumm::sim::engine::SimEngine;
 use ipumm::util::cli::Args;
+#[cfg(feature = "xla")]
 use ipumm::util::matrix::Matrix;
 use ipumm::util::units::{fmt_bytes, fmt_tflops};
 
 const OPTIONS: &[&str] = &[
     "arch", "gpu", "csv", "json", "workers", "max-size", "ks", "artifacts", "block", "chips",
-    "jobs", "seed",
+    "jobs", "seed", "cache", "batch", "warmup",
 ];
 const FLAGS: &[&str] = &["real", "verbose"];
 
@@ -67,18 +76,19 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|streaming|multiipu|e2e|all> [args]"
+        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|streaming|multiipu|e2e|all> [args]"
     );
     eprintln!("see rust/src/main.rs header for per-command options");
 }
 
-fn parse_common(raw: &[String]) -> Result<(Args, IpuArch, GpuArch, usize)> {
+fn parse_common(raw: &[String]) -> Result<(Args, IpuArch, GpuArch, Option<usize>)> {
     let args = Args::parse(raw, OPTIONS, FLAGS)?;
     let arch = IpuArch::by_name(args.opt_or("arch", "gc200"))
         .with_context(|| format!("unknown IPU arch '{}'", args.opt_or("arch", "gc200")))?;
     let gpu = GpuArch::by_name(args.opt_or("gpu", "a30"))
         .with_context(|| format!("unknown GPU '{}'", args.opt_or("gpu", "a30")))?;
-    let workers = args.opt_usize("workers", default_workers())?;
+    // None -> the shared runner::default_workers sizing policy
+    let workers = args.opt_usize_opt("workers")?;
     Ok((args, arch, gpu, workers))
 }
 
@@ -230,16 +240,21 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 }
             }
             if args.flag("real") {
-                let dir = args.opt_or("artifacts", "artifacts");
-                let block = args.opt_usize("block", 256)?;
-                let mut ex = BlockMmExecutor::load(Path::new(dir), block)?;
-                let a = Matrix::random(shape.m, shape.n, 1);
-                let b = Matrix::random(shape.n, shape.k, 2);
-                let (_c, stats, err) = ex.mm_verified(&a, &b)?;
-                println!(
-                    "pjrt-real/cpu      {} block calls ({}^3) in {:.3}s, max|err| {err:.1e} (verified)",
-                    stats.block_calls, stats.block, stats.seconds
-                );
+                #[cfg(feature = "xla")]
+                {
+                    let dir = args.opt_or("artifacts", "artifacts");
+                    let block = args.opt_usize("block", 256)?;
+                    let mut ex = BlockMmExecutor::load(Path::new(dir), block)?;
+                    let a = Matrix::random(shape.m, shape.n, 1);
+                    let b = Matrix::random(shape.n, shape.k, 2);
+                    let (_c, stats, err) = ex.mm_verified(&a, &b)?;
+                    println!(
+                        "pjrt-real/cpu      {} block calls ({}^3) in {:.3}s, max|err| {err:.1e} (verified)",
+                        stats.block_calls, stats.block, stats.seconds
+                    );
+                }
+                #[cfg(not(feature = "xla"))]
+                bail!("--real needs the PJRT runtime; rebuild with `--features xla`");
             }
         }
         "trace" => {
@@ -250,6 +265,52 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
             let r = ipumm::coordinator::trace::run_trace(&arch, &gpu, &trace, workers);
             println!("{}", r.to_table().to_ascii());
             write_csv(&args, r.to_csv())?;
+        }
+        "serve" => {
+            let (args, arch, gpu, workers) = parse_common(raw)?;
+            let n_jobs = args.opt_usize("jobs", 1000)?;
+            let seed = args.opt_usize("seed", 42)? as u64;
+            // clamp so short traces still report a meaningful steady state
+            let warmup = (args.opt_usize("warmup", 100)? as u64).min(n_jobs as u64 / 2);
+            let cache_capacity = args.opt_usize("cache", 256)?;
+            anyhow::ensure!(cache_capacity >= 1, "--cache must be >= 1");
+            let max_batch = args.opt_usize("batch", 32)?;
+            anyhow::ensure!(max_batch >= 1, "--batch must be >= 1");
+            let config = ServiceConfig {
+                arch,
+                gpu,
+                workers,
+                cache_capacity,
+                max_batch,
+                // real-PJRT anchor when built with --features xla
+                artifacts: args.opt("artifacts").map(std::path::PathBuf::from),
+                ..ServiceConfig::default()
+            };
+            let svc = MmService::new(config);
+            if args.opt("artifacts").is_some() {
+                #[cfg(not(feature = "xla"))]
+                eprintln!(
+                    "warning: --artifacts ignored (built without --features xla; \
+                     no real PJRT anchoring will run)"
+                );
+                #[cfg(feature = "xla")]
+                if !svc.backends().iter().any(|b| b.contains("pjrt-real")) {
+                    eprintln!(
+                        "warning: --artifacts given but artifacts failed to load; \
+                         serving without real PJRT anchoring"
+                    );
+                }
+            }
+            let spec = ipumm::coordinator::trace::TraceSpec::paper_mix(n_jobs, seed);
+            let shapes: Vec<MmShape> = spec.jobs.iter().map(|(_, s)| *s).collect();
+            let report = svc.serve_trace(&shapes);
+            println!("{}", report.bucket_table().to_ascii());
+            println!("{}", report.summary());
+            println!(
+                "steady state (after request {warmup}): {:.1}% plan-cache hit rate",
+                100.0 * report.hit_rate_after(warmup)
+            );
+            write_csv(&args, report.metrics.to_csv())?;
         }
         "streaming" => {
             let (_, arch, _, _) = parse_common(raw)?;
@@ -268,21 +329,26 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
             println!("{}", multi_ipu_x::to_table(&rows, shape).to_ascii());
         }
         "e2e" => {
-            let (args, _, _, _) = parse_common(raw)?;
-            let dir = args.opt_or("artifacts", "artifacts");
-            let block = args.opt_usize("block", 256)?;
-            let r = e2e::run(Path::new(dir), &e2e::default_trace(), block)?;
-            println!("{}", e2e::to_table(&r).to_ascii());
-            println!(
-                "headline: IPU-sim beats A30-model by {:.1}x geomean on the trace; \
-                 {} real block executions verified against the oracle in {:.2}s",
-                r.geomean_speedup, r.total_block_calls, r.total_real_seconds
-            );
+            #[cfg(feature = "xla")]
+            {
+                let (args, _, _, _) = parse_common(raw)?;
+                let dir = args.opt_or("artifacts", "artifacts");
+                let block = args.opt_usize("block", 256)?;
+                let r = e2e::run(Path::new(dir), &e2e::default_trace(), block)?;
+                println!("{}", e2e::to_table(&r).to_ascii());
+                println!(
+                    "headline: IPU-sim beats A30-model by {:.1}x geomean on the trace; \
+                     {} real block executions verified against the oracle in {:.2}s",
+                    r.geomean_speedup, r.total_block_calls, r.total_real_seconds
+                );
+            }
+            #[cfg(not(feature = "xla"))]
+            bail!("e2e needs the PJRT runtime; rebuild with `--features xla`");
         }
         "all" => {
             for sub in [
                 "table1", "fig4", "fig5", "vertices", "memory", "phases", "streaming",
-                "multiipu", "ablation", "trace", "fp16",
+                "multiipu", "ablation", "trace", "serve", "fp16",
             ] {
                 println!("==== ipumm {sub} ====");
                 dispatch(sub, raw)?;

@@ -9,10 +9,19 @@
 //! how the IPU accumulates partials across BSP supersteps — and every
 //! result is checkable against the in-tree oracle.
 
+//! The execution layer is behind the off-by-default `xla` cargo feature:
+//! manifest parsing is always available (the serve layer uses it to align
+//! bucket ladders with block artifacts), while the PJRT client and the
+//! block executor need the `xla` crate and compiled artifacts.
+
+#[cfg(feature = "xla")]
 pub mod blockmm;
+#[cfg(feature = "xla")]
 pub mod client;
 pub mod manifest;
 
+#[cfg(feature = "xla")]
 pub use blockmm::BlockMmExecutor;
+#[cfg(feature = "xla")]
 pub use client::RuntimeClient;
 pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};

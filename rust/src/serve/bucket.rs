@@ -1,0 +1,228 @@
+//! Shape bucketing: round requests up to a ladder of block classes.
+//!
+//! A serving workload's shapes form a long, skewed tail (the paper's §5.2:
+//! "skewed matrices are dominant in the field of AI and ML"), and every
+//! distinct shape costs a planner search. Bucketing rounds each incoming
+//! `(m, n, k)` **up** to the nearest rung of a ladder so near-miss shapes
+//! share one cached plan. The invariant the rest of the stack relies on:
+//! a bucket is never smaller than the request in any dimension, so a plan
+//! (or OOM verdict) for the bucket is always sufficient for the request.
+//!
+//! The default ladder walks `{2^i, 3·2^(i-1)}` multiples of a base block —
+//! the same geometric spacing as the paper's Fig. 5 aspect-ratio sweep
+//! (ratios 4^i), so every sweep point is itself a rung and skew classes
+//! stay distinguishable after rounding. Consecutive rung ratios
+//! alternate 3/2 and 4/3, bounding padded work per dimension at 50% and
+//! padded flops at (3/2)^3 ~ 3.4x worst case (typical traffic sits far
+//! below; see `overprovision`). [`BucketLadder::block_aligned`] snaps the
+//! rungs to multiples of an AOT block edge so the real execution path
+//! (`runtime::blockmm`, which pads to block multiples anyway) wastes no
+//! extra flops on bucketed shapes; [`BucketLadder::from_manifest`] derives
+//! that alignment from the artifact manifest.
+
+use crate::planner::partition::MmShape;
+use crate::runtime::manifest::Manifest;
+use crate::util::units::round_up;
+
+/// An ascending ladder of dimension classes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketLadder {
+    rungs: Vec<usize>,
+}
+
+impl BucketLadder {
+    /// Geometric `{base·2^i, base·3·2^(i-1)}` ladder up to `max`
+    /// (inclusive; `max` itself is always a rung).
+    pub fn geometric(base: usize, max: usize) -> BucketLadder {
+        assert!(base >= 1, "ladder base must be positive");
+        assert!(max >= base, "ladder max {max} below base {base}");
+        let mut rungs = Vec::new();
+        let mut b = base;
+        while b <= max {
+            rungs.push(b);
+            let mid = b / 2 * 3;
+            if b % 2 == 0 && mid <= max {
+                rungs.push(mid);
+            }
+            b *= 2;
+        }
+        if *rungs.last().expect("base <= max") != max {
+            rungs.push(max);
+        }
+        BucketLadder { rungs }
+    }
+
+    /// Geometric ladder whose rungs are rounded up to multiples of
+    /// `block`, so every bucket dimension quantizes exactly into the
+    /// fixed-shape block artifacts `runtime::blockmm` composes.
+    pub fn block_aligned(block: usize, max: usize) -> BucketLadder {
+        assert!(block >= 1, "block edge must be positive");
+        let geo = BucketLadder::geometric(block, round_up(max, block));
+        let mut rungs: Vec<usize> = geo.rungs.iter().map(|&r| round_up(r, block)).collect();
+        rungs.dedup();
+        BucketLadder { rungs }
+    }
+
+    /// Ladder aligned to the best block artifact in `manifest` no larger
+    /// than `block_cap` (the same choice `runtime::blockmm` makes).
+    pub fn from_manifest(manifest: &Manifest, block_cap: usize, max: usize) -> Option<BucketLadder> {
+        manifest
+            .pick_block(block_cap)
+            .map(|spec| BucketLadder::block_aligned(spec.m, max))
+    }
+
+    /// Explicit rungs (must be ascending and positive).
+    pub fn from_rungs(rungs: Vec<usize>) -> BucketLadder {
+        assert!(!rungs.is_empty(), "ladder needs at least one rung");
+        assert!(rungs[0] >= 1, "rungs must be positive");
+        assert!(
+            rungs.windows(2).all(|w| w[0] < w[1]),
+            "rungs must be strictly ascending"
+        );
+        BucketLadder { rungs }
+    }
+
+    pub fn rungs(&self) -> &[usize] {
+        &self.rungs
+    }
+
+    /// Round one dimension up to its class: the smallest rung that holds
+    /// it, or — past the top rung — the next multiple of the top rung
+    /// (so the never-smaller invariant holds for any input).
+    pub fn bucket_dim(&self, dim: usize) -> usize {
+        assert!(dim >= 1, "degenerate dimension");
+        match self.rungs.iter().find(|&&r| r >= dim) {
+            Some(&r) => r,
+            None => round_up(dim, *self.rungs.last().expect("non-empty ladder")),
+        }
+    }
+
+    /// The bucket (plan-cache key shape) for a request.
+    pub fn bucket(&self, shape: MmShape) -> MmShape {
+        MmShape::new(
+            self.bucket_dim(shape.m),
+            self.bucket_dim(shape.n),
+            self.bucket_dim(shape.k),
+        )
+    }
+
+    /// Human label for a bucket, e.g. `1024x512x256`.
+    pub fn label(bucket: MmShape) -> String {
+        format!("{}x{}x{}", bucket.m, bucket.n, bucket.k)
+    }
+
+    /// Padded-work factor of serving `request` at `bucket` size:
+    /// bucket flops / request flops (>= 1).
+    pub fn overprovision(request: MmShape, bucket: MmShape) -> f64 {
+        bucket.flops() as f64 / request.flops() as f64
+    }
+}
+
+impl Default for BucketLadder {
+    /// Covers the GC200's whole fitting range: base 64 up past the §2.4
+    /// memory wall (out-of-tolerance requests still bucket, they just
+    /// cache an OOM verdict).
+    fn default() -> BucketLadder {
+        BucketLadder::geometric(64, 8192)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn geometric_ladder_has_expected_rungs() {
+        let l = BucketLadder::geometric(64, 1024);
+        assert_eq!(l.rungs(), &[64, 96, 128, 192, 256, 384, 512, 768, 1024]);
+    }
+
+    #[test]
+    fn consecutive_rungs_within_three_halves() {
+        let l = BucketLadder::default();
+        for w in l.rungs().windows(2) {
+            let ratio = w[1] as f64 / w[0] as f64;
+            assert!(ratio <= 1.5 + 1e-9, "gap {} -> {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn bucket_never_smaller_than_request() {
+        let l = BucketLadder::default();
+        for &(m, n, k) in &[(1, 1, 1), (65, 2000, 511), (8193, 64, 12_000)] {
+            let req = MmShape::new(m, n, k);
+            let b = l.bucket(req);
+            assert!(b.m >= req.m && b.n >= req.n && b.k >= req.k, "{req:?} -> {b:?}");
+        }
+    }
+
+    #[test]
+    fn bucket_is_idempotent() {
+        let l = BucketLadder::default();
+        let b = l.bucket(MmShape::new(700, 130, 9000));
+        assert_eq!(l.bucket(b), b, "bucketing a bucket must be a fixpoint");
+    }
+
+    #[test]
+    fn past_top_rung_rounds_to_top_multiples() {
+        let l = BucketLadder::geometric(64, 1024);
+        assert_eq!(l.bucket_dim(1025), 2048);
+        assert_eq!(l.bucket_dim(2049), 3072);
+    }
+
+    #[test]
+    fn near_miss_shapes_share_a_bucket() {
+        // jittered variants of one workload collapse to one cache key
+        let l = BucketLadder::default();
+        let a = l.bucket(MmShape::new(1000, 490, 250));
+        let b = l.bucket(MmShape::new(970, 512, 241));
+        assert_eq!(a, b);
+        assert_eq!(a, MmShape::new(1024, 512, 256));
+    }
+
+    #[test]
+    fn block_aligned_rungs_are_multiples() {
+        let l = BucketLadder::block_aligned(128, 4096);
+        assert!(l.rungs().iter().all(|r| r % 128 == 0), "{:?}", l.rungs());
+        assert!(l.rungs().contains(&128));
+        assert_eq!(l.bucket_dim(100), 128);
+    }
+
+    #[test]
+    fn from_manifest_uses_picked_block() {
+        let tsv = "block\tmm_block_64\tmm_block_64.hlo.txt\t64\t64\t64\tf32\n\
+                   block\tmm_block_128\tmm_block_128.hlo.txt\t128\t128\t128\tf32\n";
+        let manifest = Manifest::parse(tsv, Path::new("/art")).unwrap();
+        let l = BucketLadder::from_manifest(&manifest, 4096, 2048).unwrap();
+        assert!(l.rungs().iter().all(|r| r % 128 == 0));
+    }
+
+    #[test]
+    fn overprovision_is_at_least_one() {
+        let l = BucketLadder::default();
+        let req = MmShape::new(900, 450, 220);
+        let b = l.bucket(req);
+        let f = BucketLadder::overprovision(req, b);
+        assert!((1.0..=2.4).contains(&f), "overprovision {f}");
+        assert_eq!(BucketLadder::overprovision(b, b), 1.0);
+    }
+
+    #[test]
+    fn skew_classes_stay_distinguishable() {
+        // the paper's fig5 ladder points are fixpoints of the default
+        // ladder: aspect-ratio structure survives bucketing
+        let l = BucketLadder::default();
+        for p in crate::coordinator::sweep::aspect_ratio_ladder(22, 4, 2048) {
+            if p.shape.m <= 8192 && p.shape.n <= 8192 {
+                assert_eq!(l.bucket(p.shape), p.shape, "{:?}", p.shape);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn unsorted_rungs_rejected() {
+        BucketLadder::from_rungs(vec![64, 32]);
+    }
+}

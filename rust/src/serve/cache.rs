@@ -1,0 +1,320 @@
+//! Thread-safe LRU plan cache.
+//!
+//! PopLibs memoizes its matmul/convolution planner in production because
+//! the exhaustive partition search (thousands of candidates per shape,
+//! see `planner::search`) is far too expensive to repeat per request.
+//! This cache plays that role for the serving layer: it memoizes the
+//! *result* of the search — the winning [`Plan`] or the out-of-memory
+//! verdict — keyed by the problem shape and a fingerprint of every
+//! plan-relevant architecture parameter, so a GC200 plan is never served
+//! to a GC2 request.
+//!
+//! Negative results (OOM) are cached too: shapes past the §2.4 memory
+//! wall are exactly the ones whose searches evaluate the most candidates
+//! before failing, so they benefit the most from memoization.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::arch::IpuArch;
+use crate::planner::partition::MmShape;
+use crate::planner::search::{search, Plan, PlannerError};
+
+/// Cache key: problem shape + architecture fingerprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub shape: MmShape,
+    pub arch_fingerprint: u64,
+}
+
+/// Monotonic counters; `entries` is the current population.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    /// Wall seconds spent in cold `planner::search` calls (the cost the
+    /// hits amortize away).
+    pub cold_plan_seconds: f64,
+}
+
+impl CacheStats {
+    /// Hits over all lookups; 0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Counters accumulated since `baseline` (an earlier snapshot of the
+    /// same cache); `entries` stays absolute. Lets a serving run report
+    /// per-run cache behavior from a long-lived cache.
+    pub fn since(&self, baseline: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - baseline.hits,
+            misses: self.misses - baseline.misses,
+            evictions: self.evictions - baseline.evictions,
+            entries: self.entries,
+            cold_plan_seconds: self.cold_plan_seconds - baseline.cold_plan_seconds,
+        }
+    }
+}
+
+struct Entry {
+    result: Result<Plan, PlannerError>,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<PlanKey, Entry>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+/// Bounded, thread-safe, least-recently-used plan cache.
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+}
+
+impl PlanCache {
+    /// `capacity` is the maximum number of cached (shape, arch) entries.
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity >= 1, "plan cache needs capacity >= 1");
+        PlanCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                tick: 0,
+                stats: CacheStats::default(),
+            }),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.lock();
+        CacheStats { entries: inner.map.len(), ..inner.stats }
+    }
+
+    pub fn clear(&self) {
+        let mut inner = self.lock();
+        inner.map.clear();
+    }
+
+    /// Memoized [`search`]: returns the cached plan (or cached OOM
+    /// verdict) on a hit, runs the planner and populates the cache on a
+    /// miss.
+    pub fn get_or_plan(
+        &self,
+        arch: &IpuArch,
+        shape: MmShape,
+    ) -> Result<Plan, PlannerError> {
+        self.get_or_plan_timed(arch, shape).0
+    }
+
+    /// [`Self::get_or_plan`] plus `(was_hit, planning_seconds)` — the
+    /// telemetry the serving layer charges to a batch. `planning_seconds`
+    /// is 0 on a hit.
+    pub fn get_or_plan_timed(
+        &self,
+        arch: &IpuArch,
+        shape: MmShape,
+    ) -> (Result<Plan, PlannerError>, bool, f64) {
+        let key = PlanKey { shape, arch_fingerprint: arch.fingerprint() };
+
+        {
+            let mut guard = self.lock();
+            let inner = &mut *guard;
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(entry) = inner.map.get_mut(&key) {
+                entry.last_used = tick;
+                let result = entry.result.clone();
+                inner.stats.hits += 1;
+                return (result, true, 0.0);
+            }
+            inner.stats.misses += 1;
+        }
+
+        // Plan outside the lock: a slow search must not serialize other
+        // workers' hits. `search` is deterministic, so concurrent misses
+        // on the same key insert identical entries (last write wins).
+        let t0 = Instant::now();
+        let result = search(arch, shape);
+        let seconds = t0.elapsed().as_secs_f64();
+
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.stats.cold_plan_seconds += seconds;
+        inner
+            .map
+            .insert(key, Entry { result: result.clone(), last_used: tick });
+        // eviction is an O(capacity) scan, paid only on cold misses once
+        // the cache is full; misses also run a full planner search, which
+        // dwarfs the scan at realistic capacities. Revisit with an
+        // ordered index if very large capacities become a hot path.
+        while inner.map.len() > self.capacity {
+            let lru = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("non-empty map above capacity");
+            inner.map.remove(&lru);
+            inner.stats.evictions += 1;
+        }
+        (result, false, seconds)
+    }
+
+    /// Peek without planning or touching LRU order (diagnostics only).
+    pub fn peek(&self, arch: &IpuArch, shape: MmShape) -> Option<Result<Plan, PlannerError>> {
+        let key = PlanKey { shape, arch_fingerprint: arch.fingerprint() };
+        self.lock().map.get(&key).map(|e| e.result.clone())
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("plan cache poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn hit_returns_identical_plan() {
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(8);
+        let shape = MmShape::square(768);
+        let cold = cache.get_or_plan(&arch, shape).unwrap();
+        let warm = cache.get_or_plan(&arch, shape).unwrap();
+        let fresh = search(&arch, shape).unwrap();
+        assert_eq!(warm.cost.partition, cold.cost.partition);
+        assert_eq!(warm.cost.total_cycles, fresh.cost.total_cycles);
+        assert_eq!(warm.candidates_evaluated, fresh.candidates_evaluated);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(s.cold_plan_seconds > 0.0);
+    }
+
+    #[test]
+    fn oom_verdict_is_cached() {
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(8);
+        let shape = MmShape::square(8192); // past the §2.4 wall
+        assert!(cache.get_or_plan(&arch, shape).is_err());
+        assert!(cache.get_or_plan(&arch, shape).is_err());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn distinct_archs_do_not_share_entries() {
+        let gc200 = IpuArch::gc200();
+        let gc2 = IpuArch::gc2();
+        let cache = PlanCache::new(8);
+        let shape = MmShape::square(512);
+        let a = cache.get_or_plan(&gc200, shape).unwrap();
+        let b = cache.get_or_plan(&gc2, shape).unwrap();
+        assert_eq!(cache.stats().misses, 2, "different fingerprints must miss");
+        // GC2 has fewer tiles: the winning grids genuinely differ
+        assert!(a.cost.partition.tiles_used() <= gc200.tiles);
+        assert!(b.cost.partition.tiles_used() <= gc2.tiles);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_entry() {
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(2);
+        let s1 = MmShape::square(256);
+        let s2 = MmShape::square(512);
+        let s3 = MmShape::square(768);
+        cache.get_or_plan(&arch, s1).unwrap();
+        cache.get_or_plan(&arch, s2).unwrap();
+        cache.get_or_plan(&arch, s1).unwrap(); // refresh s1
+        cache.get_or_plan(&arch, s3).unwrap(); // evicts s2 (LRU)
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.peek(&arch, s1).is_some());
+        assert!(cache.peek(&arch, s2).is_none());
+        assert!(cache.peek(&arch, s3).is_some());
+    }
+
+    #[test]
+    fn timed_lookup_reports_hit_flag() {
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(4);
+        let shape = MmShape::new(640, 320, 160);
+        let (_, hit, cold_s) = cache.get_or_plan_timed(&arch, shape);
+        assert!(!hit);
+        assert!(cold_s > 0.0);
+        let (_, hit, warm_s) = cache.get_or_plan_timed(&arch, shape);
+        assert!(hit);
+        assert_eq!(warm_s, 0.0);
+    }
+
+    #[test]
+    fn concurrent_lookups_converge() {
+        let cache = Arc::new(PlanCache::new(16));
+        let shapes: Vec<MmShape> =
+            (1..=4).map(|i| MmShape::square(256 * i)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let cache = Arc::clone(&cache);
+                let shapes = shapes.clone();
+                scope.spawn(move || {
+                    for _ in 0..5 {
+                        for &s in &shapes {
+                            cache.get_or_plan(&IpuArch::gc200(), s).unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.entries, 4);
+        assert_eq!(s.hits + s.misses, 80);
+        // at most one duplicated search per (thread, shape) race
+        assert!(s.misses >= 4 && s.misses <= 16, "misses {}", s.misses);
+        assert!(s.hit_rate() > 0.7, "hit rate {}", s.hit_rate());
+    }
+
+    #[test]
+    fn hit_rate_zero_when_unused() {
+        assert_eq!(PlanCache::new(1).stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn stats_since_subtracts_counters_but_not_entries() {
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(8);
+        cache.get_or_plan(&arch, MmShape::square(256)).unwrap();
+        let base = cache.stats();
+        cache.get_or_plan(&arch, MmShape::square(256)).unwrap();
+        cache.get_or_plan(&arch, MmShape::square(512)).unwrap();
+        let delta = cache.stats().since(&base);
+        assert_eq!((delta.hits, delta.misses), (1, 1));
+        assert_eq!(delta.entries, 2, "entries are absolute, not a delta");
+        assert!(delta.cold_plan_seconds > 0.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! Matmul-as-a-service — the L4 serving layer.
+//!
+//! The paper's central finding is that plan *choice*, not raw flops,
+//! determines IPU matmul performance — and the planner search that makes
+//! that choice is expensive enough that PopLibs memoizes it in
+//! production. This module turns the one-shot benchmark pipeline into a
+//! request-serving front end that amortizes planner searches across
+//! sustained traffic, the way Graphcore's own stack does:
+//!
+//! * [`cache`] — a thread-safe LRU **plan cache** keyed by
+//!   `(MmShape, IpuArch fingerprint)` that memoizes [`crate::planner::search`]
+//!   results (including out-of-memory verdicts) and exposes
+//!   hit/miss/eviction counters.
+//! * [`bucket`] — **shape bucketing**: incoming `(m, n, k)` requests are
+//!   rounded up to a ladder of block classes so the skewed long tail
+//!   shares cached plans. The ladder's rungs are the same power-of-two /
+//!   3·2^i block classes the paper's aspect-ratio sweep walks, and can be
+//!   aligned to the AOT block artifacts `runtime::blockmm` composes.
+//! * [`queue`] — a bounded MPSC **request queue** with admission control
+//!   (reject-on-full) and batch coalescing of same-bucket requests.
+//! * [`service`] — the front door: coalesced batches are dispatched
+//!   across backends (IPU simulator, GPU model, and the real PJRT
+//!   runtime when artifacts are present) on a worker pool sized by the
+//!   same policy as [`crate::coordinator::runner`].
+//! * [`telemetry`] — per-bucket latency/throughput/cache records that
+//!   reuse [`crate::coordinator::metrics`] for rendering.
+//!
+//! The demo driver is `examples/serve_demo.rs`; `benches/bench_serve.rs`
+//! measures cached-vs-cold planning throughput.
+
+pub mod bucket;
+pub mod cache;
+pub mod queue;
+pub mod service;
+pub mod telemetry;
+
+pub use bucket::BucketLadder;
+pub use cache::{CacheStats, PlanCache};
+pub use queue::{AdmissionError, Batch, MmRequest, QueueStats, RequestQueue};
+pub use service::{DispatchPolicy, MmService, ServiceConfig};
+pub use telemetry::{RequestRecord, ServeReport};

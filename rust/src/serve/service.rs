@@ -1,0 +1,462 @@
+//! The serving front door: bucket, enqueue, coalesce, plan-from-cache,
+//! dispatch across backends.
+//!
+//! A worker pool (sized by the same policy as `coordinator::runner`, see
+//! [`default_workers`]) drains the bounded request queue. Each coalesced
+//! batch costs **one** plan-cache lookup; the search result decides the
+//! dispatch:
+//!
+//! * plan found — the request is priced on the IPU simulator directly
+//!   from the cached plan (no re-search, no graph rebuild: the plan cost
+//!   already carries cycles, efficiency, vertex census and peak tile
+//!   bytes — execution uses the same outcome contract as
+//!   `coordinator::device::run_shape`);
+//! * out of memory (the paper's §2.4 wall) — the batch falls back to the
+//!   GPU model (policy permitting), mirroring how a heterogeneous fleet
+//!   sheds IPU-infeasible shapes;
+//! * with the `xla` feature and AOT artifacts present, miss batches are
+//!   additionally executed for real through `runtime::blockmm` and
+//!   verified against the oracle, so the serving path stays anchored to
+//!   actually-performed multiplications.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::arch::{GpuArch, IpuArch};
+use crate::coordinator::device::{run_shape, Backend, RunOutcome};
+use crate::coordinator::metrics::{MetricsRecord, MetricsTable};
+use crate::coordinator::runner::default_workers;
+use crate::planner::partition::MmShape;
+use crate::planner::search::Plan;
+use crate::serve::bucket::BucketLadder;
+use crate::serve::cache::PlanCache;
+use crate::serve::queue::{Batch, MmRequest, RequestQueue};
+use crate::serve::telemetry::{RequestRecord, ServeReport};
+
+/// How batches spread over the configured backends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// IPU simulator first; shapes past the IPU memory wall go to the
+    /// GPU model (default).
+    IpuWithGpuFallback,
+    /// IPU only; infeasible shapes are reported OOM.
+    IpuOnly,
+    /// GPU model only (baseline / ablation).
+    GpuOnly,
+}
+
+/// Serving-layer configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub arch: IpuArch,
+    pub gpu: GpuArch,
+    pub ladder: BucketLadder,
+    pub policy: DispatchPolicy,
+    /// Plan-cache entries (shape x arch keys).
+    pub cache_capacity: usize,
+    /// Bounded queue depth (admission control beyond it).
+    pub queue_capacity: usize,
+    /// Max requests coalesced into one batch.
+    pub max_batch: usize,
+    /// Worker threads; `None` uses the shared
+    /// `coordinator::runner::default_workers` policy.
+    pub workers: Option<usize>,
+    /// AOT artifact directory for the real PJRT path (used only when the
+    /// `xla` feature is enabled and the directory holds a manifest).
+    pub artifacts: Option<std::path::PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            arch: IpuArch::gc200(),
+            gpu: GpuArch::a30(),
+            ladder: BucketLadder::default(),
+            policy: DispatchPolicy::IpuWithGpuFallback,
+            cache_capacity: 256,
+            queue_capacity: 1024,
+            max_batch: 32,
+            workers: None,
+            artifacts: None,
+        }
+    }
+}
+
+/// Matmul-as-a-service: owns the plan cache and the dispatch policy.
+pub struct MmService {
+    config: ServiceConfig,
+    cache: PlanCache,
+    #[cfg(feature = "xla")]
+    real: Option<Mutex<crate::runtime::blockmm::BlockMmExecutor>>,
+}
+
+impl MmService {
+    pub fn new(config: ServiceConfig) -> MmService {
+        #[cfg(feature = "xla")]
+        let (config, real) = {
+            let mut config = config;
+            let real = config
+                .artifacts
+                .as_deref()
+                .and_then(|dir| crate::runtime::blockmm::BlockMmExecutor::load(dir, 256).ok());
+            if let Some(ex) = &real {
+                // align the ladder to the loaded block artifact so the
+                // real path pads no extra flops on bucketed shapes
+                let top = *config.ladder.rungs().last().expect("non-empty ladder");
+                config.ladder = BucketLadder::block_aligned(ex.block, top);
+            }
+            (config, real.map(Mutex::new))
+        };
+        MmService {
+            cache: PlanCache::new(config.cache_capacity),
+            config,
+            #[cfg(feature = "xla")]
+            real,
+        }
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
+
+    /// The long-lived plan cache (persists across traces — a warm
+    /// service keeps its plans).
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// Backend names this service can dispatch to, coordinator naming.
+    pub fn backends(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if self.config.policy != DispatchPolicy::GpuOnly {
+            out.push(Backend::IpuSim(self.config.arch.clone()).name());
+        }
+        if self.config.policy != DispatchPolicy::IpuOnly {
+            out.push(Backend::GpuModel(self.config.gpu.clone()).name());
+        }
+        #[cfg(feature = "xla")]
+        if self.real.is_some() {
+            out.push("pjrt-real/cpu".to_string());
+        }
+        out
+    }
+
+    /// Serve a request trace to completion: submit every shape through
+    /// the bounded queue (blocking backpressure) while a worker pool
+    /// drains coalesced batches. Returns per-request and per-bucket
+    /// telemetry.
+    pub fn serve_trace(&self, shapes: &[MmShape]) -> ServeReport {
+        let queue = RequestQueue::new(self.config.queue_capacity);
+        let workers = self
+            .config
+            .workers
+            .unwrap_or_else(default_workers)
+            .max(1);
+        let records: Mutex<Vec<RequestRecord>> = Mutex::new(Vec::with_capacity(shapes.len()));
+        // keyed by earliest rider id so the emitted table/CSV row order is
+        // deterministic regardless of worker scheduling (run_jobs makes
+        // the same guarantee via submission order)
+        let batch_records: Mutex<Vec<(u64, MetricsRecord)>> = Mutex::new(Vec::new());
+        let cache_baseline = self.cache.stats();
+
+        // A worker that unwinds must close the queue on its way out:
+        // otherwise a blocked producer waits forever on a condvar nobody
+        // will signal and the panic never propagates out of the scope.
+        struct CloseOnDrop<'a>(&'a RequestQueue);
+        impl Drop for CloseOnDrop<'_> {
+            fn drop(&mut self) {
+                self.0.close();
+            }
+        }
+
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let _guard = CloseOnDrop(&queue);
+                    while let Some(batch) = queue.next_batch(self.config.max_batch) {
+                        self.process_batch(batch, &records, &batch_records);
+                    }
+                });
+            }
+            for (i, &shape) in shapes.iter().enumerate() {
+                let bucket = self.config.ladder.bucket(shape);
+                if queue
+                    .submit_blocking(MmRequest::new(i as u64, shape, bucket))
+                    .is_err()
+                {
+                    // queue closed early: a worker died; stop producing
+                    // and let scope join propagate its panic
+                    break;
+                }
+            }
+            queue.close();
+        });
+        let wall_seconds = t0.elapsed().as_secs_f64();
+
+        let mut requests = records.into_inner().expect("records poisoned");
+        requests.sort_by_key(|r| r.id);
+        let mut batch_recs = batch_records.into_inner().expect("metrics poisoned");
+        batch_recs.sort_by_key(|(first_id, _)| *first_id);
+        let mut metrics = MetricsTable::default();
+        for (_, rec) in batch_recs {
+            metrics.push(rec);
+        }
+        ServeReport {
+            batches: metrics.len(),
+            // per-run delta: a warm service's lifetime counters would
+            // otherwise masquerade as this trace's behavior
+            cache: self.cache.stats().since(&cache_baseline),
+            queue: queue.stats(),
+            requests,
+            metrics,
+            wall_seconds,
+        }
+    }
+
+    /// Serve one batch: one plan lookup, one dispatch, one telemetry
+    /// record per rider.
+    fn process_batch(
+        &self,
+        batch: Batch,
+        records: &Mutex<Vec<RequestRecord>>,
+        batch_records: &Mutex<Vec<(u64, MetricsRecord)>>,
+    ) {
+        let drained_at = Instant::now();
+        let bucket = batch.bucket;
+        let (outcome, backend, cache_hit, plan_seconds) = self.dispatch(bucket);
+        // anchor cold buckets to the real path; hits (and cache-less
+        // dispatches) were either anchored already or never planned
+        let real_seconds = if cache_hit == Some(false) {
+            self.verify_real(bucket)
+        } else {
+            None
+        };
+
+        let n = batch.len().max(1);
+        let device_seconds = match &outcome {
+            RunOutcome::Ok { seconds, .. } => *seconds,
+            RunOutcome::OutOfMemory => 0.0,
+        };
+        let oom = outcome.is_oom();
+
+        {
+            let mut recs = records.lock().expect("records poisoned");
+            for req in &batch.requests {
+                recs.push(RequestRecord {
+                    id: req.id,
+                    shape: req.shape,
+                    bucket,
+                    backend: backend.clone(),
+                    batch_size: n,
+                    cache_hit,
+                    queue_seconds: drained_at
+                        .saturating_duration_since(req.submitted)
+                        .as_secs_f64(),
+                    plan_seconds: plan_seconds / n as f64,
+                    device_seconds,
+                    real_seconds,
+                    oom,
+                });
+            }
+        }
+        let first_id = batch.requests.iter().map(|r| r.id).min().unwrap_or(0);
+        batch_records.lock().expect("metrics poisoned").push((
+            first_id,
+            MetricsRecord {
+                backend,
+                label: BucketLadder::label(bucket),
+                shape: bucket,
+                outcome,
+            },
+        ));
+    }
+
+    /// Resolve one bucket to an outcome on some backend. The `Option<bool>`
+    /// is the cache verdict: `None` when the policy never consulted it.
+    fn dispatch(&self, bucket: MmShape) -> (RunOutcome, String, Option<bool>, f64) {
+        let gpu_backend = || Backend::GpuModel(self.config.gpu.clone());
+        if self.config.policy == DispatchPolicy::GpuOnly {
+            let out = run_shape(&gpu_backend(), bucket);
+            return (out, gpu_backend().name(), None, 0.0);
+        }
+        let ipu_name = Backend::IpuSim(self.config.arch.clone()).name();
+        let (result, hit, plan_seconds) =
+            self.cache.get_or_plan_timed(&self.config.arch, bucket);
+        match result {
+            Ok(plan) => (
+                self.outcome_from_plan(&plan),
+                ipu_name,
+                Some(hit),
+                plan_seconds,
+            ),
+            Err(_) if self.config.policy == DispatchPolicy::IpuWithGpuFallback => {
+                let out = run_shape(&gpu_backend(), bucket);
+                (out, gpu_backend().name(), Some(hit), plan_seconds)
+            }
+            Err(_) => (RunOutcome::OutOfMemory, ipu_name, Some(hit), plan_seconds),
+        }
+    }
+
+    /// Price a cached plan without re-searching or materializing a graph
+    /// — same outcome contract as `coordinator::device::run_shape`.
+    fn outcome_from_plan(&self, plan: &Plan) -> RunOutcome {
+        RunOutcome::Ok {
+            seconds: self.config.arch.cycles_to_secs(plan.cost.total_cycles),
+            tflops: plan.tflops(&self.config.arch),
+            efficiency: plan.cost.efficiency(),
+            vertices: Some(plan.cost.total_vertices()),
+            max_tile_bytes: Some(plan.cost.tile_bytes_total),
+        }
+    }
+
+    /// Real-path anchor: on cold buckets, execute the bucket shape
+    /// through the AOT block artifacts and verify against the oracle.
+    /// Compiled out without the `xla` feature; returns `None` when
+    /// artifacts are absent or the shape is too large to verify cheaply.
+    #[cfg(feature = "xla")]
+    fn verify_real(&self, bucket: MmShape) -> Option<f64> {
+        const MAX_REAL_FLOPS: u64 = 1 << 28;
+        let ex = self.real.as_ref()?;
+        if bucket.flops() > MAX_REAL_FLOPS {
+            return None;
+        }
+        let a = crate::util::matrix::Matrix::random(bucket.m, bucket.n, bucket.m as u64);
+        let b = crate::util::matrix::Matrix::random(bucket.n, bucket.k, bucket.k as u64);
+        let mut ex = ex.lock().expect("real executor poisoned");
+        ex.mm_verified(&a, &b).ok().map(|(_, stats, _)| stats.seconds)
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn verify_real(&self, _bucket: MmShape) -> Option<f64> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service(policy: DispatchPolicy) -> MmService {
+        MmService::new(ServiceConfig {
+            policy,
+            workers: Some(4),
+            ..ServiceConfig::default()
+        })
+    }
+
+    fn mixed_trace() -> Vec<MmShape> {
+        // two repeated workloads with jitter + one IPU-infeasible shape
+        let mut shapes = Vec::new();
+        for i in 0..30 {
+            shapes.push(MmShape::new(1000 + i % 7, 500 - i % 5, 250));
+            shapes.push(MmShape::new(120 + i % 3, 4000 + i % 9, 1000));
+        }
+        shapes.push(MmShape::square(8000)); // past the §2.4 wall
+        shapes
+    }
+
+    #[test]
+    fn serves_whole_trace_with_high_hit_rate() {
+        let svc = service(DispatchPolicy::IpuWithGpuFallback);
+        // warm the cache with one representative per bucket, then serve:
+        // every steady-state lookup must hit
+        let warm = svc.serve_trace(&[
+            MmShape::new(1000, 500, 250),
+            MmShape::new(120, 4000, 1000),
+            MmShape::square(8000),
+        ]);
+        assert_eq!(warm.cache.misses, 3, "3 distinct buckets -> 3 cold searches");
+        let report = svc.serve_trace(&mixed_trace());
+        assert_eq!(report.requests.len(), 61);
+        assert_eq!(report.cache.misses, 0, "jittered shapes reuse warm buckets");
+        assert!(report.cache.hits >= 3, "every batch lookup hits");
+        assert!(
+            (report.hit_rate() - 1.0).abs() < 1e-12,
+            "hit rate {}",
+            report.hit_rate()
+        );
+        assert!(report.batches >= 3);
+        assert_eq!(
+            report.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            (0..61u64).collect::<Vec<_>>(),
+            "every request answered exactly once, in id order"
+        );
+    }
+
+    #[test]
+    fn oversized_shapes_fall_back_to_gpu() {
+        let svc = service(DispatchPolicy::IpuWithGpuFallback);
+        let report = svc.serve_trace(&[MmShape::square(8000)]);
+        let r = &report.requests[0];
+        assert!(r.backend.contains("gpu-model"), "{}", r.backend);
+        assert!(!r.oom, "GPU model fits what the IPU cannot");
+    }
+
+    #[test]
+    fn ipu_only_reports_oom_instead_of_falling_back() {
+        let svc = service(DispatchPolicy::IpuOnly);
+        let report = svc.serve_trace(&[MmShape::square(8000)]);
+        assert!(report.requests[0].oom);
+        assert!(report.requests[0].backend.contains("ipu-sim"));
+    }
+
+    #[test]
+    fn gpu_only_never_touches_the_plan_cache() {
+        let svc = service(DispatchPolicy::GpuOnly);
+        let report = svc.serve_trace(&[MmShape::square(512); 8]);
+        assert_eq!(report.cache.hits + report.cache.misses, 0);
+        assert!(report.requests.iter().all(|r| r.backend.contains("gpu-model")));
+        assert!(
+            report.requests.iter().all(|r| r.cache_hit.is_none()),
+            "cache-less dispatch must not masquerade as misses"
+        );
+        assert_eq!(report.hit_rate(), 0.0, "no lookups -> rate is 0, not skewed");
+    }
+
+    #[test]
+    fn cache_survives_across_traces() {
+        let svc = service(DispatchPolicy::IpuWithGpuFallback);
+        let shape = MmShape::square(768);
+        let first = svc.serve_trace(&[shape]);
+        assert_eq!((first.cache.hits, first.cache.misses), (0, 1));
+        let second = svc.serve_trace(&[shape]);
+        // per-run stats: the second trace does no cold planning at all
+        assert_eq!((second.cache.hits, second.cache.misses), (1, 0));
+        assert_eq!(second.cache.entries, 1, "entries stay absolute");
+        assert_eq!(second.requests[0].cache_hit, Some(true));
+    }
+
+    #[test]
+    fn batch_metrics_are_bucket_labelled() {
+        let svc = service(DispatchPolicy::IpuWithGpuFallback);
+        let report = svc.serve_trace(&[MmShape::new(1000, 500, 250); 4]);
+        assert!(!report.metrics.is_empty());
+        for rec in &report.metrics.records {
+            assert_eq!(rec.label, "1024x512x256");
+            assert_eq!(rec.shape, MmShape::new(1024, 512, 256));
+        }
+    }
+
+    #[test]
+    fn cached_outcome_matches_run_shape_pricing() {
+        // the plan-cost fast path must agree with the coordinator's
+        // full sim on the throughput it reports
+        let svc = service(DispatchPolicy::IpuWithGpuFallback);
+        let bucket = MmShape::square(1024);
+        let (outcome, _, _, _) = svc.dispatch(bucket);
+        let direct = run_shape(&Backend::IpuSim(IpuArch::gc200()), bucket);
+        let (a, b) = (outcome.tflops().unwrap(), direct.tflops().unwrap());
+        assert!((a - b).abs() < 1e-9, "serve {a} vs coordinator {b}");
+    }
+
+    #[test]
+    fn backends_reflect_policy() {
+        assert_eq!(service(DispatchPolicy::IpuOnly).backends().len(), 1);
+        assert_eq!(service(DispatchPolicy::GpuOnly).backends().len(), 1);
+        assert_eq!(
+            service(DispatchPolicy::IpuWithGpuFallback).backends().len(),
+            2
+        );
+    }
+}

@@ -1,0 +1,324 @@
+//! Per-bucket serving telemetry.
+//!
+//! Reuses the coordinator's metrics plumbing: every served batch emits a
+//! [`MetricsRecord`] (backend, bucket label, bucket shape, outcome) into
+//! a [`MetricsTable`], so the serving layer's output renders with the
+//! same table/CSV/JSON emitters as the paper sweeps. On top of that,
+//! per-request [`RequestRecord`]s carry the serving-specific axes —
+//! queue wait, amortized planning time, cache hit, batch size — and
+//! aggregate into per-bucket latency summaries.
+
+use crate::coordinator::metrics::MetricsTable;
+use crate::planner::partition::MmShape;
+use crate::serve::bucket::BucketLadder;
+use crate::serve::cache::CacheStats;
+use crate::serve::queue::QueueStats;
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+/// One served request, as observed by the service.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    /// The caller's shape.
+    pub shape: MmShape,
+    /// The bucket it was served at.
+    pub bucket: MmShape,
+    /// Backend that served it (coordinator backend naming).
+    pub backend: String,
+    /// Size of the coalesced batch it rode in.
+    pub batch_size: usize,
+    /// Whether the batch's plan lookup hit the cache; `None` when the
+    /// dispatch policy never consulted it (e.g. GPU-only).
+    pub cache_hit: Option<bool>,
+    /// Wall seconds spent queued before a worker drained the batch.
+    pub queue_seconds: f64,
+    /// Planner wall seconds charged to this request (cold search time
+    /// divided over the batch; 0 on a cache hit).
+    pub plan_seconds: f64,
+    /// Model-predicted device seconds for the bucket (0 on OOM).
+    pub device_seconds: f64,
+    /// Real PJRT wall seconds, when the artifact path verified the batch.
+    pub real_seconds: Option<f64>,
+    /// Request could not be served on any configured backend.
+    pub oom: bool,
+}
+
+impl RequestRecord {
+    /// End-to-end request latency the serving model reports: queue wait
+    /// plus amortized planning plus device time.
+    pub fn latency_seconds(&self) -> f64 {
+        self.queue_seconds + self.plan_seconds + self.device_seconds
+    }
+
+    /// Padded-work factor paid for bucketing this request.
+    pub fn overprovision(&self) -> f64 {
+        BucketLadder::overprovision(self.shape, self.bucket)
+    }
+}
+
+/// Aggregated view of one bucket's traffic.
+#[derive(Clone, Debug)]
+pub struct BucketStats {
+    pub bucket: MmShape,
+    pub requests: usize,
+    pub batches: usize,
+    pub cache_hits: usize,
+    pub oom: usize,
+    pub latency: Summary,
+    pub mean_overprovision: f64,
+    pub mean_batch: f64,
+}
+
+/// Everything one serving run produced.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Per-request records, ordered by request id.
+    pub requests: Vec<RequestRecord>,
+    /// One record per served batch (bucket-labelled), coordinator format.
+    pub metrics: MetricsTable,
+    /// Plan-cache counters accumulated during this run (delta since the
+    /// trace started; `entries` is the absolute population — see
+    /// `CacheStats::since`). Lifetime totals live on `MmService::cache`.
+    pub cache: CacheStats,
+    pub queue: QueueStats,
+    pub batches: usize,
+    /// Wall-clock seconds for the whole run (producer + workers).
+    pub wall_seconds: f64,
+}
+
+impl ServeReport {
+    /// Fraction of requests served from a cached plan.
+    pub fn hit_rate(&self) -> f64 {
+        self.hit_rate_after(0)
+    }
+
+    /// Hit rate over requests with `id >= warmup` — the steady-state
+    /// number once the cache has seen each bucket once. Requests whose
+    /// dispatch never consulted the cache are excluded.
+    pub fn hit_rate_after(&self, warmup: u64) -> f64 {
+        let (mut hits, mut total) = (0usize, 0usize);
+        for r in self.requests.iter().filter(|r| r.id >= warmup) {
+            if let Some(hit) = r.cache_hit {
+                total += 1;
+                hits += hit as usize;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Served requests per wall second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            0.0
+        } else {
+            self.requests.len() as f64 / self.wall_seconds
+        }
+    }
+
+    /// Group request records per bucket, largest traffic first.
+    pub fn bucket_stats(&self) -> Vec<BucketStats> {
+        let mut buckets: Vec<MmShape> = self.requests.iter().map(|r| r.bucket).collect();
+        buckets.sort_by_key(|b| (b.m, b.n, b.k));
+        buckets.dedup();
+        let mut out: Vec<BucketStats> = buckets
+            .into_iter()
+            .map(|bucket| {
+                let recs: Vec<&RequestRecord> =
+                    self.requests.iter().filter(|r| r.bucket == bucket).collect();
+                let lat: Vec<f64> = recs.iter().map(|r| r.latency_seconds()).collect();
+                // batches = distinct (id of first request per batch) is not
+                // tracked per record; estimate from batch sizes: each
+                // request reports its batch size, so sum(1/size) counts
+                // each batch exactly once.
+                let batches = recs.iter().map(|r| 1.0 / r.batch_size as f64).sum::<f64>();
+                BucketStats {
+                    bucket,
+                    requests: recs.len(),
+                    batches: batches.round() as usize,
+                    cache_hits: recs.iter().filter(|r| r.cache_hit == Some(true)).count(),
+                    oom: recs.iter().filter(|r| r.oom).count(),
+                    latency: Summary::of(&lat),
+                    mean_overprovision: recs.iter().map(|r| r.overprovision()).sum::<f64>()
+                        / recs.len() as f64,
+                    mean_batch: recs.iter().map(|r| r.batch_size as f64).sum::<f64>()
+                        / recs.len() as f64,
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| b.requests.cmp(&a.requests));
+        out
+    }
+
+    /// Per-bucket latency table (the acceptance-criteria artifact).
+    pub fn bucket_table(&self) -> Table {
+        let mut t = Table::new(
+            "serve: per-bucket latency / cache / batching",
+            &[
+                "bucket", "req", "batches", "hit%", "oom", "p50", "p95", "overprov",
+                "avg batch",
+            ],
+        );
+        for s in self.bucket_stats() {
+            t.row(&[
+                BucketLadder::label(s.bucket),
+                s.requests.to_string(),
+                s.batches.to_string(),
+                format!("{:.0}%", 100.0 * s.cache_hits as f64 / s.requests as f64),
+                s.oom.to_string(),
+                format!("{:.3} ms", s.latency.median * 1e3),
+                format!("{:.3} ms", s.latency.p95 * 1e3),
+                format!("{:.2}x", s.mean_overprovision),
+                format!("{:.1}", s.mean_batch),
+            ]);
+        }
+        t
+    }
+
+    /// One-paragraph run summary for CLI/demo output.
+    pub fn summary(&self) -> String {
+        let lat: Vec<f64> = self.requests.iter().map(|r| r.latency_seconds()).collect();
+        let line1 = format!(
+            "served {} requests in {} batches over {:.2}s wall ({:.0} req/s)",
+            self.requests.len(),
+            self.batches,
+            self.wall_seconds,
+            self.throughput_rps(),
+        );
+        let line2 = format!(
+            "plan cache: {:.1}% hit rate ({} hits / {} misses / {} evictions), {:.2}s of cold planning amortized",
+            100.0 * self.cache.hit_rate(),
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.evictions,
+            self.cache.cold_plan_seconds,
+        );
+        let line3 = if lat.is_empty() {
+            "no requests served".to_string()
+        } else {
+            let s = Summary::of(&lat);
+            format!(
+                "request latency p50 {:.3} ms / p95 {:.3} ms; queue peak depth {}, {} rejected",
+                s.median * 1e3,
+                s.p95 * 1e3,
+                self.queue.max_depth,
+                self.queue.rejected,
+            )
+        };
+        format!("{line1}\n{line2}\n{line3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, bucket: usize, hit: bool, batch: usize) -> RequestRecord {
+        RequestRecord {
+            id,
+            shape: MmShape::square(bucket - 8),
+            bucket: MmShape::square(bucket),
+            backend: "ipu-sim/GC200".into(),
+            batch_size: batch,
+            cache_hit: Some(hit),
+            queue_seconds: 1e-4,
+            plan_seconds: if hit { 0.0 } else { 1e-2 },
+            device_seconds: 1e-3,
+            real_seconds: None,
+            oom: false,
+        }
+    }
+
+    fn report(requests: Vec<RequestRecord>) -> ServeReport {
+        let batches = requests
+            .iter()
+            .map(|r| 1.0 / r.batch_size as f64)
+            .sum::<f64>()
+            .round() as usize;
+        ServeReport {
+            requests,
+            metrics: MetricsTable::default(),
+            cache: CacheStats { hits: 3, misses: 1, ..CacheStats::default() },
+            queue: QueueStats::default(),
+            batches,
+            wall_seconds: 0.5,
+        }
+    }
+
+    #[test]
+    fn hit_rate_counts_requests_not_batches() {
+        let r = report(vec![
+            rec(0, 256, false, 1),
+            rec(1, 256, true, 2),
+            rec(2, 256, true, 2),
+            rec(3, 512, false, 1),
+        ]);
+        assert!((r.hit_rate() - 0.5).abs() < 1e-12);
+        assert!((r.hit_rate_after(1) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hit_rate_ignores_requests_that_skipped_the_cache() {
+        let mut no_cache = rec(0, 256, false, 1);
+        no_cache.cache_hit = None;
+        no_cache.backend = "gpu-model/A30".into();
+        let r = report(vec![no_cache, rec(1, 256, true, 1)]);
+        assert!((r.hit_rate() - 1.0).abs() < 1e-12, "None records excluded");
+    }
+
+    #[test]
+    fn latency_includes_amortized_planning() {
+        let cold = rec(0, 256, false, 1);
+        let warm = rec(1, 256, true, 1);
+        assert!(cold.latency_seconds() > warm.latency_seconds());
+        assert!((warm.latency_seconds() - 1.1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_stats_group_and_count_batches() {
+        let r = report(vec![
+            rec(0, 256, false, 1),
+            rec(1, 256, true, 2),
+            rec(2, 256, true, 2),
+            rec(3, 512, false, 1),
+        ]);
+        let stats = r.bucket_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].bucket, MmShape::square(256), "busiest first");
+        assert_eq!(stats[0].requests, 3);
+        assert_eq!(stats[0].batches, 2, "one solo + one coalesced pair");
+        assert_eq!(stats[0].cache_hits, 2);
+        assert!((stats[0].mean_batch - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_table_renders_every_bucket() {
+        let r = report(vec![rec(0, 256, false, 1), rec(1, 512, false, 1)]);
+        let t = r.bucket_table();
+        assert_eq!(t.n_rows(), 2);
+        let ascii = t.to_ascii();
+        assert!(ascii.contains("256x256x256"));
+        assert!(ascii.contains("512x512x512"));
+    }
+
+    #[test]
+    fn summary_mentions_cache_and_latency() {
+        let r = report(vec![rec(0, 256, false, 1), rec(1, 256, true, 1)]);
+        let s = r.summary();
+        assert!(s.contains("hit rate"));
+        assert!(s.contains("p95"));
+        assert!(s.contains("2 requests"));
+    }
+
+    #[test]
+    fn empty_report_is_well_defined() {
+        let r = report(vec![]);
+        assert_eq!(r.hit_rate(), 0.0);
+        assert!(r.summary().contains("no requests"));
+        assert!(r.bucket_stats().is_empty());
+    }
+}

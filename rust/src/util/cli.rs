@@ -61,10 +61,17 @@ impl Args {
     }
 
     pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.opt_usize_opt(name)?.unwrap_or(default))
+    }
+
+    /// Optional integer option with no default — `None` when absent, so
+    /// the callee can apply its own policy (e.g. worker-pool sizing).
+    pub fn opt_usize_opt(&self, name: &str) -> Result<Option<usize>> {
         match self.opt(name) {
-            None => Ok(default),
+            None => Ok(None),
             Some(v) => v
                 .parse::<usize>()
+                .map(Some)
                 .with_context(|| format!("--{name} expects an integer, got '{v}'")),
         }
     }

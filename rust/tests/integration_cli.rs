@@ -84,12 +84,34 @@ fn profile_writes_json() {
     let _ = std::fs::remove_file(&json_path);
 }
 
+/// Real PJRT execution needs the `xla` feature and `make artifacts`.
+#[cfg(feature = "xla")]
 #[test]
 fn run_with_real_path_verifies() {
     let (out, err, ok) = run(&["run", "200", "300", "100", "--real"]);
     assert!(ok, "stderr: {err}");
     assert!(out.contains("ipu-sim/GC200"));
     assert!(out.contains("verified"));
+}
+
+/// Without the feature, `--real` must fail fast with a pointer to it —
+/// the model backends still print first.
+#[cfg(not(feature = "xla"))]
+#[test]
+fn run_real_flag_reports_missing_feature() {
+    let (out, err, ok) = run(&["run", "200", "300", "100", "--real"]);
+    assert!(!ok);
+    assert!(out.contains("ipu-sim/GC200"));
+    assert!(err.contains("--features xla"), "stderr: {err}");
+}
+
+#[test]
+fn serve_reports_cache_and_buckets() {
+    let (out, _, ok) = run(&["serve", "--jobs", "60", "--workers", "2", "--seed", "3"]);
+    assert!(ok);
+    assert!(out.contains("hit rate"));
+    assert!(out.contains("per-bucket"));
+    assert!(out.contains("steady state"));
 }
 
 #[test]

@@ -21,7 +21,7 @@ fn t1_table_reports_paper_specs() {
 
 #[test]
 fn f4_full_reproduction_bands() {
-    let r = fig4::run(&IpuArch::gc200(), &GpuArch::a30(), 6144, 4);
+    let r = fig4::run(&IpuArch::gc200(), &GpuArch::a30(), 6144, Some(4));
 
     // paper: max square 3584
     assert_eq!(r.ipu_max_square, paper::GC200_MAX_SQUARE);
@@ -72,7 +72,7 @@ fn f4_full_reproduction_bands() {
 #[test]
 fn f4_gc2_reproduces_jia_numbers() {
     // §2.4: GC2 peaks 18.9 of 31.1 TFlop/s at 2944^2
-    let r = fig4::run(&IpuArch::gc2(), &GpuArch::v100(), 4096, 4);
+    let r = fig4::run(&IpuArch::gc2(), &GpuArch::v100(), 4096, Some(4));
     assert!(
         (2688..=3200).contains(&r.ipu_max_square),
         "GC2 wall {}",
@@ -86,7 +86,7 @@ fn f4_gc2_reproduces_jia_numbers() {
 
 #[test]
 fn f5_multiple_k_series_keep_the_pattern() {
-    let r = fig5::run(&IpuArch::gc200(), &GpuArch::a30(), 22, 4, &[1024, 2048, 4096], 4);
+    let r = fig5::run(&IpuArch::gc200(), &GpuArch::a30(), 22, 4, &[1024, 2048, 4096], Some(4));
     let ipu = Backend::IpuSim(IpuArch::gc200()).name();
     for k in [1024usize, 2048, 4096] {
         let (left, right) = fig5::drops(&r, &ipu, k, Some(4)).unwrap();
@@ -169,8 +169,8 @@ fn x2_pod_scaling_table() {
 #[test]
 fn bow_outperforms_gc200_at_same_shape() {
     // the §2.1 Bow generation: same layout, higher clock
-    let r200 = fig4::run(&IpuArch::gc200(), &GpuArch::a30(), 2048, 2);
-    let rbow = fig4::run(&IpuArch::bow2000(), &GpuArch::a30(), 2048, 2);
+    let r200 = fig4::run(&IpuArch::gc200(), &GpuArch::a30(), 2048, Some(2));
+    let rbow = fig4::run(&IpuArch::bow2000(), &GpuArch::a30(), 2048, Some(2));
     assert!(rbow.ipu_best_tflops > r200.ipu_best_tflops);
 }
 
@@ -180,7 +180,7 @@ fn per_watt_comparison_favors_ipu() {
     // throughput/W (150 W vs 165 W, Table 1)
     let ipu = IpuArch::gc200();
     let gpu = GpuArch::a30();
-    let r = fig4::run(&ipu, &gpu, 3584, 4);
+    let r = fig4::run(&ipu, &gpu, 3584, Some(4));
     let ipu_per_w = r.ipu_best_tflops / ipu.power_w;
     let gpu_per_w = r.gpu_best_tflops / gpu.power_w;
     assert!(ipu_per_w > gpu_per_w);

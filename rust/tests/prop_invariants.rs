@@ -14,6 +14,7 @@ use ipumm::planner::cost::CostModel;
 use ipumm::planner::partition::{MmShape, Partition};
 use ipumm::planner::search::search;
 use ipumm::prop_assert;
+use ipumm::serve::{BucketLadder, PlanCache};
 use ipumm::sim::engine::SimEngine;
 use ipumm::util::prop::{check_default, Size};
 use ipumm::util::rng::Rng;
@@ -277,6 +278,78 @@ fn prop_matrix_block_roundtrip() {
                     prop_assert!(v == 0.0, "padding not zero");
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_hit_identical_to_fresh_search() {
+    // serving-layer contract: a memoized plan must be indistinguishable
+    // from re-running the planner — same partition, same cost, same
+    // search statistics; a cached OOM verdict must match a fresh OOM
+    let arch = IpuArch::gc200();
+    let cache = PlanCache::new(512);
+    check_default("cache hit == fresh search", |rng, size| {
+        let shape = random_shape(rng, size);
+        let cached = cache.get_or_plan(&arch, shape);
+        let hit = cache.get_or_plan(&arch, shape);
+        let fresh = search(&arch, shape);
+        match (hit, fresh, cached) {
+            (Ok(h), Ok(f), Ok(_)) => {
+                prop_assert!(
+                    h.cost.partition == f.cost.partition,
+                    "partition {:?} != fresh {:?} for {shape:?}",
+                    h.cost.partition,
+                    f.cost.partition
+                );
+                prop_assert!(
+                    h.cost.total_cycles == f.cost.total_cycles,
+                    "cycles {} != fresh {} for {shape:?}",
+                    h.cost.total_cycles,
+                    f.cost.total_cycles
+                );
+                prop_assert!(
+                    h.candidates_evaluated == f.candidates_evaluated,
+                    "search stats diverge for {shape:?}"
+                );
+            }
+            (Err(_), Err(_), Err(_)) => {}
+            _ => prop_assert!(false, "cache and fresh search disagree for {shape:?}"),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bucket_never_smaller_than_request() {
+    let ladders = [
+        BucketLadder::default(),
+        BucketLadder::geometric(32, 2048),
+        BucketLadder::block_aligned(128, 8192),
+    ];
+    check_default("bucket >= request, idempotent", |rng, size| {
+        let hi = size.scale(64, 32_768);
+        let shape = MmShape::new(
+            rng.gen_usize(1, hi),
+            rng.gen_usize(1, hi),
+            rng.gen_usize(1, hi),
+        );
+        for ladder in &ladders {
+            let b = ladder.bucket(shape);
+            prop_assert!(
+                b.m >= shape.m && b.n >= shape.n && b.k >= shape.k,
+                "bucket {b:?} smaller than request {shape:?}"
+            );
+            prop_assert!(
+                ladder.bucket(b) == b,
+                "bucketing not idempotent: {b:?} -> {:?}",
+                ladder.bucket(b)
+            );
+            prop_assert!(
+                BucketLadder::overprovision(shape, b) >= 1.0,
+                "overprovision below 1 for {shape:?}"
+            );
         }
         Ok(())
     });

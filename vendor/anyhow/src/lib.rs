@@ -1,0 +1,233 @@
+//! Offline, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides exactly the surface the workspace uses: [`Error`] with a
+//! context chain, [`Result`], the [`Context`] extension trait for
+//! `Result` and `Option`, and the `anyhow!` / `bail!` / `ensure!`
+//! macros. Formatting mirrors upstream: `{}` prints the outermost
+//! message, `{:#}` prints the whole chain joined with `": "`, and `{:?}`
+//! prints the message plus a `Caused by:` list.
+//!
+//! Swapping back to the real crate is a one-line change in the root
+//! `Cargo.toml`; no call site depends on anything beyond upstream's API.
+
+use std::fmt;
+
+/// Error with a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Construct from a standard error, capturing its source chain.
+    pub fn new<E: std::error::Error>(error: E) -> Error {
+        let mut chain = vec![error.to_string()];
+        let mut src = error.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                if self.chain.len() > 2 {
+                    write!(f, "\n    {i}: {cause}")?;
+                } else {
+                    write!(f, "\n    {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like upstream, `Error` deliberately does NOT implement
+// `std::error::Error`; that keeps this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+/// Attach context to the error variant of a `Result` or to `None`.
+pub trait Context<T>: private::Sealed {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+/// Errors (including [`Error`] itself) that can enter the chain; sealed
+/// mirror of upstream's `context` support for both `Result<_, E>` and
+/// `Result<_, anyhow::Error>`.
+pub trait IntoChain {
+    fn into_chain(self) -> Error;
+}
+
+impl IntoChain for Error {
+    fn into_chain(self) -> Error {
+        self
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> IntoChain for E {
+    fn into_chain(self) -> Error {
+        Error::new(self)
+    }
+}
+
+impl<T, E: IntoChain> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_chain().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_chain().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+    }
+
+    #[test]
+    fn option_context_produces_message() {
+        let e = None::<u32>.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_stacks() {
+        fn inner() -> Result<()> {
+            bail!("inner failure")
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner failure");
+        assert_eq!(e.root_cause(), "inner failure");
+    }
+
+    #[test]
+    fn ensure_formats_and_returns() {
+        fn check(x: usize) -> Result<()> {
+            ensure!(x < 10, "x was {x}");
+            Ok(())
+        }
+        assert!(check(3).is_ok());
+        assert_eq!(format!("{}", check(12).unwrap_err()), "x was 12");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Err::<(), _>(io_err())
+            .context("mid")
+            .context("top")
+            .unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("top"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("file missing"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Link-time stub of the `xla` crate (PJRT bindings) for offline builds.
+//!
+//! The real compute path (`ipumm`'s `runtime` module) executes AOT
+//! JAX/Pallas HLO artifacts through PJRT via the `xla` crate. That crate
+//! needs the `xla_extension` native library and crates.io access, neither
+//! of which exists in the offline build environment. This stub exposes
+//! the exact API surface `runtime::client` uses so the `xla` cargo
+//! feature still *compiles* everywhere; every entry point that would
+//! touch PJRT returns [`Error::Unavailable`] at runtime.
+//!
+//! To run the real path, replace the `vendor/xla-stub` path dependency in
+//! the root `Cargo.toml` with the actual `xla` crate (0.5.x) and rebuild
+//! with `--features xla`.
+
+use std::fmt;
+
+/// Stub error: always "PJRT unavailable".
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: built against the vendored xla stub; swap in the real \
+                 `xla` crate in Cargo.toml to execute PJRT artifacts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// Host-side tensor literal (row-major f32 only in the stub).
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.data.len() {
+            return unavailable("reshape with mismatched element count");
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (opaque in the stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle; construction always fails in the stub.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_stub() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+    }
+
+    #[test]
+    fn literal_shape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert!(l.reshape(&[7, 7]).is_err());
+    }
+}
