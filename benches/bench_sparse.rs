@@ -1,0 +1,69 @@
+//! Block-sparse bench: pattern generation, sparse vs dense planning,
+//! and the cached sparse-serving path.
+//!
+//! The interesting deltas: how much the sparsity wrapper adds on top of
+//! a dense search (it reuses the dense winner, so the answer should be
+//! "one pattern scan + a dozen candidate evaluations"), and how much
+//! runtime the model says block sparsity buys at each density.
+
+use ipumm::arch::IpuArch;
+use ipumm::planner::partition::MmShape;
+use ipumm::planner::search::search;
+use ipumm::serve::PlanCache;
+use ipumm::sparse::csr::BlockCsr;
+use ipumm::sparse::pattern::{BlockPattern, PatternKind, SparsitySpec};
+use ipumm::sparse::planner::sparse_search;
+use ipumm::util::bench::{black_box, Bench};
+
+fn main() {
+    let arch = IpuArch::gc200();
+    let mut b = Bench::new("sparse");
+
+    let shapes = [
+        ("squared_2048", MmShape::square(2048)),
+        ("right_512x8192x1024", MmShape::new(512, 8192, 1024)),
+    ];
+
+    for (name, shape) in shapes {
+        // dense search baseline: the cost every sparse plan starts from
+        b.run(&format!("dense_plan_{name}"), || {
+            black_box(search(&arch, shape).unwrap())
+        });
+
+        for density in [0.5, 0.1] {
+            let spec = SparsitySpec::new(PatternKind::Random, 8, density, 42);
+            let pattern = BlockPattern::for_shape(spec, shape);
+
+            b.run(&format!("pattern_gen_{name}_d{density}"), || {
+                black_box(BlockPattern::for_shape(spec, shape))
+            });
+            b.run(&format!("block_csr_{name}_d{density}"), || {
+                black_box(BlockCsr::from_pattern(&pattern))
+            });
+            // storage balance of the CSR block assignment across the chip
+            let csr = BlockCsr::from_pattern(&pattern);
+            b.throughput(csr.assign_tiles(1472).balance(), "balance");
+
+            b.run(&format!("sparse_plan_{name}_d{density}"), || {
+                black_box(sparse_search(&arch, shape, &pattern).unwrap())
+            });
+            let plan = sparse_search(&arch, shape, &pattern).unwrap();
+            b.throughput(plan.speedup_vs_dense(), "x modeled speedup");
+        }
+    }
+
+    // warm sparse plan-cache lookups: the serving fast path
+    let cache = PlanCache::new(64);
+    let hot = MmShape::square(1024);
+    let spec = SparsitySpec::new(PatternKind::Random, 8, 0.25, 7);
+    cache.get_or_plan_sparse(&arch, hot, spec).unwrap();
+    let r = b.run("cached_sparse_lookups_x1000", || {
+        for _ in 0..1000 {
+            black_box(cache.get_or_plan_sparse(&arch, hot, spec).unwrap());
+        }
+    });
+    let mean = r.summary.mean;
+    b.throughput(1000.0 / mean, "lookups/s");
+
+    b.dump_csv();
+}

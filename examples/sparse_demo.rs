@@ -1,0 +1,100 @@
+//! SPARSE DEMO — the block-sparse subsystem end-to-end, with the
+//! acceptance gates the CI runs:
+//!
+//! 1. a density x aspect-ratio sweep on the simulator, printing both
+//!    dense-equivalent and effective TFlop/s per point;
+//! 2. **dense-reproduction gate**: at density 1.0 the squared point must
+//!    match the dense `fig4` path (same `run_shape` pricing) exactly;
+//! 3. **cache-separation gate**: a serve trace mixing dense and sparse
+//!    requests of the *same bucket* must keep one plan-cache entry per
+//!    sparsity fingerprint — sparse plans depend on the exact pattern,
+//!    so sharing an entry across fingerprints would serve wrong plans.
+//!
+//!     cargo run --release --example sparse_demo
+
+use ipumm::arch::IpuArch;
+use ipumm::coordinator::device::{run_shape, Backend};
+use ipumm::experiments::sparse_sweep;
+use ipumm::planner::partition::MmShape;
+use ipumm::serve::{MmService, ServiceConfig};
+use ipumm::sparse::pattern::{PatternKind, SparsitySpec};
+
+fn main() {
+    let arch = IpuArch::gc200();
+
+    // -- 1. the density x skew grid (small budget keeps the demo fast) --
+    let densities = [1.0, 0.5, 0.25, 0.1];
+    let rows = sparse_sweep::run(&arch, 20, 2, 1024, 8, &densities, PatternKind::Random, 42);
+    println!("{}", sparse_sweep::to_table(&rows).to_ascii());
+
+    // -- 2. dense-reproduction gate ------------------------------------
+    let squared = rows
+        .iter()
+        .find(|r| r.label == "square" && r.spec.is_dense())
+        .expect("grid contains the dense squared point");
+    let fig4_path = run_shape(&Backend::IpuSim(arch.clone()), squared.shape)
+        .tflops()
+        .expect("dense squared point fits");
+    let ours = squared.dense_equiv_tflops.expect("dense point planned");
+    println!(
+        "dense gate: sweep {ours:.3} TFlop/s vs fig4 path {fig4_path:.3} TFlop/s at {}^2",
+        squared.shape.m
+    );
+    if (ours - fig4_path).abs() > 1e-9 {
+        eprintln!("FAIL: density 1.0 diverges from the dense fig4 path");
+        std::process::exit(1);
+    }
+
+    // -- 3. cache-separation gate --------------------------------------
+    let svc = MmService::new(ServiceConfig { workers: Some(4), ..ServiceConfig::default() });
+    let shape = MmShape::square(1024);
+    let specs = [
+        SparsitySpec::new(PatternKind::Random, 8, 0.5, 1),
+        SparsitySpec::new(PatternKind::Banded, 8, 0.25, 1),
+        SparsitySpec::new(PatternKind::Random, 16, 0.5, 1),
+    ];
+    // warmup: one request per (bucket, sparsity) key primes each entry
+    // with exactly one cold search (no same-key worker races)
+    let mut warmup: Vec<(MmShape, Option<SparsitySpec>)> = vec![(shape, None)];
+    warmup.extend(specs.iter().map(|&s| (shape, Some(s))));
+    let w = svc.serve_trace_mixed(&warmup);
+    let mut trace: Vec<(MmShape, Option<SparsitySpec>)> = Vec::new();
+    for _ in 0..10 {
+        trace.push((shape, None));
+        for spec in specs {
+            trace.push((shape, Some(spec)));
+        }
+    }
+    let report = svc.serve_trace_mixed(&trace);
+    println!(
+        "{}",
+        report
+            .metrics
+            .to_table("serve: mixed dense/sparse batches of one bucket")
+            .to_ascii()
+    );
+    println!("{}", report.summary());
+    let expected_entries = 1 + specs.len();
+    println!(
+        "cache-separation gate: {} warm misses / {} steady misses / {} entries \
+         (expect {} / 0 / {}: dense + {} sparsity fingerprints)",
+        w.cache.misses,
+        report.cache.misses,
+        svc.cache().len(),
+        expected_entries,
+        expected_entries,
+        specs.len()
+    );
+    if w.cache.misses as usize != expected_entries
+        || report.cache.misses != 0
+        || svc.cache().len() != expected_entries
+    {
+        eprintln!("FAIL: sparsity fingerprints must not share plan-cache entries");
+        std::process::exit(1);
+    }
+    if report.requests.len() != trace.len() || report.requests.iter().any(|r| r.oom) {
+        eprintln!("FAIL: every mixed request must be served");
+        std::process::exit(1);
+    }
+    println!("OK");
+}

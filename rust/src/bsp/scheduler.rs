@@ -82,7 +82,8 @@ impl<'a> BspEngine<'a> {
         let raw = kind.cycles(self.arch.fp32_macs_per_tile_cycle);
         match kind {
             // the AMP pipeline is a per-tile resource: no thread speedup
-            VertexKind::AmpMacc { .. } => raw,
+            // (dense and block-sparse supervisors alike)
+            VertexKind::AmpMacc { .. } | VertexKind::BlockSparseMm { .. } => raw,
             // memory-bound codelets overlap across the 6 hardware threads;
             // model a conservative 2x effective overlap
             _ => raw.div_ceil(2),

@@ -14,6 +14,7 @@
 //! | P1 | Fig. 3 BSP phase breakdown               | `phases`      |
 //! | X1 | §6 streaming-memory extension            | `streaming`   |
 //! | X2 | §6 multi-IPU extension                   | `multi_ipu_x` |
+//! | S1 | block-sparse density x skew sweep        | `sparse_sweep`|
 //! | E2E| end-to-end driver with real PJRT numerics| `e2e`         |
 
 pub mod ablation;
@@ -25,6 +26,7 @@ pub mod fig5;
 pub mod memory_study;
 pub mod multi_ipu_x;
 pub mod phases;
+pub mod sparse_sweep;
 pub mod streaming;
 pub mod table1;
 pub mod vertices;

@@ -1,0 +1,256 @@
+//! S1 — density x aspect-ratio sweep: the paper's skew axis (Fig. 5)
+//! crossed with PopSparse's density axis.
+//!
+//! Neither source paper answers this alone: the dense paper shows where
+//! the IPU's skew advantage lives, PopSparse shows block-sparse matmul
+//! works on the same hardware — this sweep asks **where the skew
+//! advantage survives under sparsity**. Every point reports both
+//! throughput conventions (Domke et al.): dense-equivalent TFlop/s
+//! (what a dense replacement would need) and effective TFlop/s (nonzero
+//! work only). At density 1.0 the squared points reproduce the dense
+//! Fig. 4 path exactly.
+
+use crate::arch::IpuArch;
+use crate::coordinator::sweep::aspect_ratio_ladder;
+use crate::planner::cost::CostConfig;
+use crate::planner::partition::MmShape;
+use crate::planner::search::search;
+use crate::sim::engine::SimEngine;
+use crate::sparse::pattern::{BlockPattern, PatternKind, SparsitySpec};
+use crate::sparse::planner::sparse_plan_from_dense;
+use crate::util::table::Table;
+
+/// One (aspect ratio, density) grid point.
+#[derive(Clone, Debug)]
+pub struct SparseSweepRow {
+    /// Sweep-point label (`square`, `left 2^4`, ...).
+    pub label: String,
+    pub shape: MmShape,
+    pub spec: SparsitySpec,
+    /// Nonzero-block fraction the generator realized.
+    pub realized_density: f64,
+    /// Densest partition-cell density (the planner's scaling bottleneck).
+    pub critical_density: f64,
+    /// `None` = past the (dense) §2.4 memory wall.
+    pub dense_equiv_tflops: Option<f64>,
+    pub effective_tflops: Option<f64>,
+    /// Runtime ratio vs the dense plan of the same shape.
+    pub speedup_vs_dense: Option<f64>,
+}
+
+/// The density axis of the default grid.
+pub fn default_densities() -> Vec<f64> {
+    vec![1.0, 0.5, 0.25, 0.1]
+}
+
+/// Run the grid: the Fig. 5 ladder (m*n = 2^`mn_budget_log2`, ratios
+/// 4^i for |i| <= `half_steps`) at fixed `k`, crossed with `densities`,
+/// end-to-end on the simulator (graph build + BSP trace per point).
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    arch: &IpuArch,
+    mn_budget_log2: u32,
+    half_steps: u32,
+    k: usize,
+    block: usize,
+    densities: &[f64],
+    kind: PatternKind,
+    seed: u64,
+) -> Vec<SparseSweepRow> {
+    let engine = SimEngine::new(arch.clone());
+    let mut rows = Vec::new();
+    for point in aspect_ratio_ladder(mn_budget_log2, half_steps, k) {
+        // one dense search per ladder point: the dense winner (and the
+        // OOM verdict) depend only on the shape, so every density on
+        // this point amortizes the same expensive search
+        let dense = search(arch, point.shape).ok();
+        for &density in densities {
+            let spec = SparsitySpec::new(kind, block, density, seed);
+            let row = match &dense {
+                Some(dense_plan) => {
+                    let pattern = BlockPattern::for_shape(spec, point.shape);
+                    let plan = sparse_plan_from_dense(
+                        arch,
+                        point.shape,
+                        &pattern,
+                        CostConfig::default(),
+                        dense_plan.clone(),
+                    );
+                    let report = engine.simulate_sparse_plan(point.shape, plan, &pattern);
+                    SparseSweepRow {
+                        label: point.label(),
+                        shape: point.shape,
+                        spec,
+                        realized_density: report.plan.realized_density,
+                        critical_density: report.plan.cost.critical_density,
+                        dense_equiv_tflops: Some(report.dense_equiv_tflops),
+                        effective_tflops: Some(report.effective_tflops),
+                        speedup_vs_dense: Some(report.plan.speedup_vs_dense()),
+                    }
+                }
+                None => SparseSweepRow {
+                    label: point.label(),
+                    shape: point.shape,
+                    spec,
+                    realized_density: density,
+                    critical_density: 0.0,
+                    dense_equiv_tflops: None,
+                    effective_tflops: None,
+                    speedup_vs_dense: None,
+                },
+            };
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+/// Best effective TFlop/s at one density across the whole ladder —
+/// the "does skew survive" headline per density.
+pub fn best_effective_at(rows: &[SparseSweepRow], density_permille: u32) -> Option<(String, f64)> {
+    rows.iter()
+        .filter(|r| r.spec.density_permille == density_permille)
+        .filter_map(|r| r.effective_tflops.map(|t| (r.label.clone(), t)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).expect("finite tflops"))
+}
+
+pub fn to_table(rows: &[SparseSweepRow]) -> Table {
+    let mut t = Table::new(
+        "S1 — block-sparse MM: density x aspect ratio (dense-equivalent vs effective TFlop/s)",
+        &[
+            "shape", "A", "density", "crit", "dense-equiv", "effective", "vs dense",
+        ],
+    );
+    for r in rows {
+        let fmt = |v: Option<f64>, suffix: &str| match v {
+            Some(v) => format!("{v:.2}{suffix}"),
+            None => "OOM".to_string(),
+        };
+        t.row(&[
+            r.label.clone(),
+            format!("{}x{}", r.shape.m, r.shape.n),
+            format!("{:.2}", r.realized_density),
+            format!("{:.2}", r.critical_density),
+            fmt(r.dense_equiv_tflops, ""),
+            fmt(r.effective_tflops, ""),
+            fmt(r.speedup_vs_dense, "x"),
+        ]);
+    }
+    t
+}
+
+/// CSV twin of the table for downstream plotting.
+pub fn to_csv(rows: &[SparseSweepRow]) -> String {
+    let mut out = String::from(
+        "label,m,n,k,kind,block,density,realized_density,critical_density,\
+         dense_equiv_tflops,effective_tflops,speedup_vs_dense\n",
+    );
+    for r in rows {
+        let opt = |v: Option<f64>| v.map(|x| x.to_string()).unwrap_or_default();
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            r.label,
+            r.shape.m,
+            r.shape.n,
+            r.shape.k,
+            r.spec.kind.name(),
+            r.spec.block,
+            r.spec.density(),
+            r.realized_density,
+            r.critical_density,
+            opt(r.dense_equiv_tflops),
+            opt(r.effective_tflops),
+            opt(r.speedup_vs_dense),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::device::{run_shape, Backend};
+
+    fn small_grid() -> Vec<SparseSweepRow> {
+        run(
+            &IpuArch::gc200(),
+            20,
+            2,
+            1024,
+            8,
+            &[1.0, 0.25],
+            PatternKind::Random,
+            42,
+        )
+    }
+
+    #[test]
+    fn grid_covers_ladder_times_densities() {
+        let rows = small_grid();
+        assert_eq!(rows.len(), 5 * 2, "5 ladder points x 2 densities");
+        assert_eq!(to_table(&rows).n_rows(), 10);
+    }
+
+    #[test]
+    fn density_one_squared_matches_dense_fig4_path() {
+        // acceptance criterion: the sweep's dense-equivalent figure at
+        // density 1.0 equals the dense path fig4 runs through run_shape
+        let rows = small_grid();
+        let squared = rows
+            .iter()
+            .find(|r| r.label == "square" && r.spec.is_dense())
+            .unwrap();
+        let dense = run_shape(&Backend::IpuSim(IpuArch::gc200()), squared.shape)
+            .tflops()
+            .unwrap();
+        let ours = squared.dense_equiv_tflops.unwrap();
+        assert!(
+            (ours - dense).abs() < 1e-9,
+            "sweep {ours} vs fig4 path {dense}"
+        );
+        assert!((squared.speedup_vs_dense.unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparsity_speeds_up_but_effective_drops() {
+        let rows = small_grid();
+        for point in ["square", "left 2^4", "right 2^4"] {
+            let dense = rows
+                .iter()
+                .find(|r| r.label == point && r.spec.is_dense())
+                .unwrap();
+            let sparse = rows
+                .iter()
+                .find(|r| r.label == point && !r.spec.is_dense())
+                .unwrap();
+            let (dd, sd) = (
+                dense.dense_equiv_tflops.unwrap(),
+                sparse.dense_equiv_tflops.unwrap(),
+            );
+            assert!(sd >= dd, "{point}: sparse dense-equiv {sd} < dense {dd}");
+            let (de, se) = (
+                dense.effective_tflops.unwrap(),
+                sparse.effective_tflops.unwrap(),
+            );
+            assert!(se < de, "{point}: effective should drop ({se} vs {de})");
+            assert!(sparse.speedup_vs_dense.unwrap() > 1.0);
+        }
+    }
+
+    #[test]
+    fn best_effective_finds_the_headline() {
+        let rows = small_grid();
+        let (label, tf) = best_effective_at(&rows, 1000).unwrap();
+        assert!(tf > 0.0);
+        assert!(rows.iter().any(|r| r.label == label));
+        assert!(best_effective_at(&rows, 777).is_none());
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let rows = small_grid();
+        let csv = to_csv(&rows);
+        assert!(csv.starts_with("label,m,n,k,"));
+        assert_eq!(csv.lines().count(), 1 + rows.len());
+    }
+}

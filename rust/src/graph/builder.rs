@@ -208,6 +208,23 @@ mod tests {
     }
 
     #[test]
+    fn census_counts_block_sparse_family() {
+        let mut g = tiny_graph();
+        let cs = g.add_compute_set("bsmm");
+        for t in 0..3 {
+            g.add_vertex(
+                cs,
+                VertexKind::BlockSparseMm { block: 8, nz_blocks: 4 },
+                t,
+                vec![],
+                vec![],
+            );
+        }
+        assert_eq!(g.vertex_census().get("BlockSparseMm"), Some(&3));
+        g.validate().unwrap();
+    }
+
+    #[test]
     fn invalid_tile_rejected() {
         let mut g = tiny_graph();
         let cs = g.add_compute_set("bad");

@@ -23,6 +23,9 @@ pub enum VertexKind {
     AmpMacc { rows: usize, cols: usize, acc: usize },
     /// Partial-sum reduction over `inputs` partials of `width` elements.
     Reduce { inputs: usize, width: usize },
+    /// Block-sparse AMP matmul supervisor (PopSparse static block-CSR):
+    /// walks `nz_blocks` nonzero `block^3` sub-products on this tile.
+    BlockSparseMm { block: usize, nz_blocks: usize },
     /// Pre-arrangement copy of `bytes` into AMP-friendly layout.
     Rearrange { bytes: usize },
     /// Cast between dtypes (fp16 partials -> fp32, etc.).
@@ -35,6 +38,7 @@ impl VertexKind {
     pub fn family(&self) -> &'static str {
         match self {
             VertexKind::AmpMacc { .. } => "AmpMacc",
+            VertexKind::BlockSparseMm { .. } => "BlockSparseMm",
             VertexKind::Reduce { .. } => "Reduce",
             VertexKind::Rearrange { .. } => "Rearrange",
             VertexKind::Cast { .. } => "Cast",
@@ -58,6 +62,16 @@ impl VertexKind {
                 let macs = (ru(*rows, 4) * ru(*cols, 4) * ru(*acc, 16)) as u64;
                 VERTEX_OVERHEAD + macs / fp32_macs_per_cycle.max(1) as u64
             }
+            VertexKind::BlockSparseMm { block, nz_blocks } => {
+                // each nonzero block is one AMP-quantized block^3 product
+                // plus a worklist-entry decode (PopSparse walks block
+                // coordinates from CSR metadata between AMP passes)
+                const BLOCK_DECODE_CYCLES: u64 = 8;
+                let ru = |v: usize, q: usize| v.div_ceil(q) * q;
+                let per_block = (ru(*block, 4) * ru(*block, 4) * ru(*block, 16)) as u64
+                    / fp32_macs_per_cycle.max(1) as u64;
+                VERTEX_OVERHEAD + *nz_blocks as u64 * (BLOCK_DECODE_CYCLES + per_block)
+            }
             VertexKind::Reduce { inputs, width } => {
                 // ~1 cycle per input element per 2 lanes (64-bit loads)
                 VERTEX_OVERHEAD + ((inputs * width) as u64) / 2
@@ -74,6 +88,8 @@ impl VertexKind {
         const BASE: usize = 64; // vertex descriptor + edge pointers
         match self {
             VertexKind::AmpMacc { rows, .. } => BASE + 8 * rows.div_ceil(4), // worklists
+            // 8 B worklist entry + 4 B block-column index per nonzero block
+            VertexKind::BlockSparseMm { nz_blocks, .. } => BASE + 12 * nz_blocks,
             VertexKind::Reduce { inputs, .. } => BASE + 8 * inputs,
             _ => BASE,
         }
@@ -124,6 +140,31 @@ mod tests {
         let tiny = VertexKind::AmpMacc { rows: 4, cols: 4, acc: 4 }.cycles(16);
         // acc quantizes 4 -> 16: 4*4*16/16 = 16 useful-equivalent cycles
         assert_eq!(tiny, 120 + 16);
+    }
+
+    #[test]
+    fn block_sparse_cycles_scale_with_nonzeros() {
+        let sparse = VertexKind::BlockSparseMm { block: 16, nz_blocks: 10 }.cycles(16);
+        let denser = VertexKind::BlockSparseMm { block: 16, nz_blocks: 40 }.cycles(16);
+        assert!(denser > sparse);
+        // 16^3 macs at 16/cycle = 256 cycles + 8 decode, per block
+        assert_eq!(sparse, 120 + 10 * (8 + 256));
+        // empty worklist is pure overhead
+        assert_eq!(VertexKind::BlockSparseMm { block: 8, nz_blocks: 0 }.cycles(16), 120);
+    }
+
+    #[test]
+    fn block_sparse_quantizes_small_blocks() {
+        // block 4: acc rounds 4 -> 16, rows/cols stay 4: 4*4*16/16 = 16
+        let v = VertexKind::BlockSparseMm { block: 4, nz_blocks: 1 }.cycles(16);
+        assert_eq!(v, 120 + 8 + 16);
+    }
+
+    #[test]
+    fn block_sparse_state_tracks_worklist() {
+        let v = VertexKind::BlockSparseMm { block: 8, nz_blocks: 5 };
+        assert_eq!(v.state_bytes(), 64 + 60);
+        assert_eq!(v.family(), "BlockSparseMm");
     }
 
     #[test]

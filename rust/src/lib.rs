@@ -3,7 +3,7 @@
 //! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
 //! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
 //!
-//! The crate has four roles (see DESIGN.md):
+//! The crate has five roles (see DESIGN.md):
 //!
 //! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
 //!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
@@ -16,7 +16,17 @@
 //!    executed through PJRT by [`runtime`] (behind the off-by-default
 //!    `xla` feature), so benchmarked shapes can be backed by an
 //!    actually-performed, verified multiplication.
-//! 4. **Serving layer** — [`serve`] turns the one-shot pipeline into
+//! 4. **Block-sparse workload** — [`sparse`] opens PopSparse's workload
+//!    (Li et al., arXiv 2303.16999) on the same stack: seeded block-CSR
+//!    sparsity patterns (`sparse::pattern`), the on-device layout and
+//!    balanced per-tile block assignment (`sparse::csr`), and a
+//!    sparsity-aware cost/search wrapper over the dense planner
+//!    (`sparse::planner`) that scales compute/exchange by realized
+//!    per-partition density while keeping the dense §2.4 memory wall.
+//!    Reports carry dense-equivalent *and* effective TFlop/s; the
+//!    density x skew grid is `experiments::sparse_sweep` (`ipumm
+//!    sparse`).
+//! 5. **Serving layer** — [`serve`] turns the one-shot pipeline into
 //!    matmul-as-a-service: requests are rounded up onto a bucketing
 //!    ladder (`serve::bucket`) whose rungs walk the same `{2^i, 3·2^(i-1)}`
 //!    classes as the paper's Fig. 5 aspect-ratio sweep, so the skewed
@@ -45,4 +55,5 @@ pub mod ipu;
 pub mod memory;
 pub mod multi_ipu;
 pub mod serve;
+pub mod sparse;
 pub mod util;

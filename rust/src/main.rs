@@ -19,6 +19,10 @@
 //!                              shape bucketing, coalescing dispatch;
 //!                              --artifacts DIR + --features xla anchors
 //!                              cold buckets to real PJRT execution)
+//! ipumm sparse [--k N] [--block 4|8|16] [--kind random|banded|blockdiag]
+//!              [--densities 1.0,0.5,...] [--seed N]
+//!                              block-sparse density x skew sweep
+//!                              (dense-equivalent + effective TFlop/s)
 //! ipumm streaming              §6 streaming-memory extension
 //! ipumm multiipu               §6 multi-IPU scaling extension
 //! ipumm e2e [--artifacts DIR]  end-to-end driver with real numerics
@@ -38,8 +42,10 @@ use ipumm::coordinator::device::{run_shape, Backend};
 #[cfg(feature = "xla")]
 use ipumm::experiments::e2e;
 use ipumm::experiments::{
-    ablation, fig4, fig5, fp16, memory_study, multi_ipu_x, phases, streaming, table1, vertices,
+    ablation, fig4, fig5, fp16, memory_study, multi_ipu_x, phases, sparse_sweep, streaming,
+    table1, vertices,
 };
+use ipumm::sparse::pattern::PatternKind;
 use ipumm::planner::partition::MmShape;
 use ipumm::planner::search::search;
 use ipumm::profiler::popvision::PopVisionReport;
@@ -54,7 +60,7 @@ use ipumm::util::units::{fmt_bytes, fmt_tflops};
 
 const OPTIONS: &[&str] = &[
     "arch", "gpu", "csv", "json", "workers", "max-size", "ks", "artifacts", "block", "chips",
-    "jobs", "seed", "cache", "batch", "warmup",
+    "jobs", "seed", "cache", "batch", "warmup", "k", "kind", "densities",
 ];
 const FLAGS: &[&str] = &["real", "verbose"];
 
@@ -76,7 +82,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|streaming|multiipu|e2e|all> [args]"
+        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|sparse|streaming|multiipu|e2e|all> [args]"
     );
     eprintln!("see rust/src/main.rs header for per-command options");
 }
@@ -312,6 +318,50 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
             );
             write_csv(&args, report.metrics.to_csv())?;
         }
+        "sparse" => {
+            let (args, arch, _, _) = parse_common(raw)?;
+            let k = args.opt_usize("k", 2048)?;
+            let block = args.opt_usize("block", 8)?;
+            anyhow::ensure!(
+                ipumm::sparse::pattern::BLOCK_SIZES.contains(&block),
+                "--block must be one of {:?}",
+                ipumm::sparse::pattern::BLOCK_SIZES
+            );
+            let kind = PatternKind::by_name(args.opt_or("kind", "random"))
+                .with_context(|| format!("unknown pattern kind '{}'", args.opt_or("kind", "random")))?;
+            let densities: Vec<f64> = args
+                .opt_or("densities", "1.0,0.5,0.25,0.1")
+                .split(',')
+                .map(|s| s.trim().parse().context("bad --densities"))
+                .collect::<Result<_>>()?;
+            let seed = args.opt_usize("seed", 42)? as u64;
+            let rows = sparse_sweep::run(&arch, 22, 4, k, block, &densities, kind, seed);
+            println!("{}", sparse_sweep::to_table(&rows).to_ascii());
+            for &d in &densities {
+                let permille = ((d * 1000.0).round() as i64).clamp(1, 1000) as u32;
+                let at = |label: &str| {
+                    rows.iter()
+                        .find(|r| r.spec.density_permille == permille && r.label == label)
+                        .and_then(|r| r.effective_tflops)
+                };
+                if let (Some(sq), Some((blabel, btf))) =
+                    (at("square"), sparse_sweep::best_effective_at(&rows, permille))
+                {
+                    let retention = |side: Option<f64>| {
+                        side.map(|t| format!("{:.0}%", 100.0 * t / sq))
+                            .unwrap_or_else(|| "OOM".to_string())
+                    };
+                    println!(
+                        "density {d:.2}: best effective {} at {blabel}; vs squared the \
+                         extremes keep left {} / right {}",
+                        fmt_tflops(btf),
+                        retention(at("left 2^8")),
+                        retention(at("right 2^8")),
+                    );
+                }
+            }
+            write_csv(&args, sparse_sweep::to_csv(&rows))?;
+        }
         "streaming" => {
             let (_, arch, _, _) = parse_common(raw)?;
             let rows = streaming::run(&arch, &streaming::default_sizes());
@@ -348,7 +398,7 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
         "all" => {
             for sub in [
                 "table1", "fig4", "fig5", "vertices", "memory", "phases", "streaming",
-                "multiipu", "ablation", "trace", "serve", "fp16",
+                "multiipu", "ablation", "trace", "serve", "fp16", "sparse",
             ] {
                 println!("==== ipumm {sub} ====");
                 dispatch(sub, raw)?;

@@ -218,6 +218,22 @@ mod tests {
     }
 
     #[test]
+    fn block_sparse_state_scales_with_worklist() {
+        // the accountant prices BlockSparseMm like any codelet: per-vertex
+        // state (CSR worklist entries) + one code charge for the family
+        let mut g = Graph::new(arch().tiles);
+        let cs = g.add_compute_set("bsmm");
+        g.add_vertex(cs, VertexKind::BlockSparseMm { block: 8, nz_blocks: 100 }, 3, vec![], vec![]);
+        let r = MemoryAccountant::new(&arch()).account(&g);
+        let tile3 = &r.per_tile[3];
+        assert_eq!(
+            tile3.region(RegionKind::VertexState),
+            VertexKind::BlockSparseMm { block: 8, nz_blocks: 100 }.state_bytes() as u64
+        );
+        assert_eq!(tile3.region(RegionKind::VertexCode), overheads::CODE_BYTES_PER_FAMILY);
+    }
+
+    #[test]
     fn exchange_costs_show_up() {
         let mut g = Graph::new(arch().tiles);
         let mut plan = ExchangePlan::new("x", ExchangePattern::Broadcast);

@@ -12,6 +12,13 @@
 //! Negative results (OOM) are cached too: shapes past the §2.4 memory
 //! wall are exactly the ones whose searches evaluate the most candidates
 //! before failing, so they benefit the most from memoization.
+//!
+//! Block-sparse requests add a third key dimension: the
+//! [`SparsitySpec`] fingerprint. A sparse plan depends on the exact
+//! pattern (generator, block size, density, seed), so two requests only
+//! share an entry when their sparsity fingerprints are equal; dense
+//! requests key with `sparsity: None` and never collide with sparse
+//! entries for the same shape.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -20,12 +27,17 @@ use std::time::Instant;
 use crate::arch::IpuArch;
 use crate::planner::partition::MmShape;
 use crate::planner::search::{search, Plan, PlannerError};
+use crate::sparse::pattern::SparsitySpec;
+use crate::sparse::planner::{sparse_search_spec, SparsePlan};
 
-/// Cache key: problem shape + architecture fingerprint.
+/// Cache key: problem shape + architecture fingerprint + (for sparse
+/// requests) the sparsity-spec fingerprint.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub shape: MmShape,
     pub arch_fingerprint: u64,
+    /// `None` for dense plans, `Some(spec.fingerprint())` for sparse.
+    pub sparsity: Option<u64>,
 }
 
 /// Monotonic counters; `entries` is the current population.
@@ -65,8 +77,15 @@ impl CacheStats {
     }
 }
 
+/// What a cache entry memoizes: a dense or a sparse planner verdict.
+#[derive(Clone)]
+enum CachedResult {
+    Dense(Result<Plan, PlannerError>),
+    Sparse(Result<SparsePlan, PlannerError>),
+}
+
 struct Entry {
-    result: Result<Plan, PlannerError>,
+    result: CachedResult,
     last_used: u64,
 }
 
@@ -137,20 +156,10 @@ impl PlanCache {
         arch: &IpuArch,
         shape: MmShape,
     ) -> (Result<Plan, PlannerError>, bool, f64) {
-        let key = PlanKey { shape, arch_fingerprint: arch.fingerprint() };
+        let key = PlanKey { shape, arch_fingerprint: arch.fingerprint(), sparsity: None };
 
-        {
-            let mut guard = self.lock();
-            let inner = &mut *guard;
-            inner.tick += 1;
-            let tick = inner.tick;
-            if let Some(entry) = inner.map.get_mut(&key) {
-                entry.last_used = tick;
-                let result = entry.result.clone();
-                inner.stats.hits += 1;
-                return (result, true, 0.0);
-            }
-            inner.stats.misses += 1;
+        if let Some(CachedResult::Dense(result)) = self.lookup(&key) {
+            return (result, true, 0.0);
         }
 
         // Plan outside the lock: a slow search must not serialize other
@@ -159,15 +168,70 @@ impl PlanCache {
         let t0 = Instant::now();
         let result = search(arch, shape);
         let seconds = t0.elapsed().as_secs_f64();
+        self.insert(key, CachedResult::Dense(result.clone()), seconds);
+        (result, false, seconds)
+    }
 
+    /// Memoized sparse search: the key extends the dense one with the
+    /// spec's fingerprint, so hits require equal sparsity fingerprints.
+    pub fn get_or_plan_sparse(
+        &self,
+        arch: &IpuArch,
+        shape: MmShape,
+        spec: SparsitySpec,
+    ) -> Result<SparsePlan, PlannerError> {
+        self.get_or_plan_sparse_timed(arch, shape, spec).0
+    }
+
+    /// [`Self::get_or_plan_sparse`] plus `(was_hit, planning_seconds)`.
+    pub fn get_or_plan_sparse_timed(
+        &self,
+        arch: &IpuArch,
+        shape: MmShape,
+        spec: SparsitySpec,
+    ) -> (Result<SparsePlan, PlannerError>, bool, f64) {
+        let key = PlanKey {
+            shape,
+            arch_fingerprint: arch.fingerprint(),
+            sparsity: Some(spec.fingerprint()),
+        };
+
+        if let Some(CachedResult::Sparse(result)) = self.lookup(&key) {
+            return (result, true, 0.0);
+        }
+
+        let t0 = Instant::now();
+        let result = sparse_search_spec(arch, shape, spec);
+        let seconds = t0.elapsed().as_secs_f64();
+        self.insert(key, CachedResult::Sparse(result.clone()), seconds);
+        (result, false, seconds)
+    }
+
+    /// Hit path shared by the dense and sparse lookups: counts a hit and
+    /// refreshes LRU order on success, a miss otherwise.
+    fn lookup(&self, key: &PlanKey) -> Option<CachedResult> {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(entry) = inner.map.get_mut(key) {
+            entry.last_used = tick;
+            let result = entry.result.clone();
+            inner.stats.hits += 1;
+            return Some(result);
+        }
+        inner.stats.misses += 1;
+        None
+    }
+
+    /// Cold-miss insert shared by both paths, with LRU eviction.
+    fn insert(&self, key: PlanKey, result: CachedResult, seconds: f64) {
         let mut guard = self.lock();
         let inner = &mut *guard;
         inner.tick += 1;
         let tick = inner.tick;
         inner.stats.cold_plan_seconds += seconds;
-        inner
-            .map
-            .insert(key, Entry { result: result.clone(), last_used: tick });
+        inner.map.insert(key, Entry { result, last_used: tick });
         // eviction is an O(capacity) scan, paid only on cold misses once
         // the cache is full; misses also run a full planner search, which
         // dwarfs the scan at realistic capacities. Revisit with an
@@ -182,13 +246,15 @@ impl PlanCache {
             inner.map.remove(&lru);
             inner.stats.evictions += 1;
         }
-        (result, false, seconds)
     }
 
     /// Peek without planning or touching LRU order (diagnostics only).
     pub fn peek(&self, arch: &IpuArch, shape: MmShape) -> Option<Result<Plan, PlannerError>> {
-        let key = PlanKey { shape, arch_fingerprint: arch.fingerprint() };
-        self.lock().map.get(&key).map(|e| e.result.clone())
+        let key = PlanKey { shape, arch_fingerprint: arch.fingerprint(), sparsity: None };
+        self.lock().map.get(&key).and_then(|e| match &e.result {
+            CachedResult::Dense(result) => Some(result.clone()),
+            CachedResult::Sparse(_) => None,
+        })
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
@@ -302,6 +368,47 @@ mod tests {
     #[test]
     fn hit_rate_zero_when_unused() {
         assert_eq!(PlanCache::new(1).stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn sparse_hits_require_equal_fingerprints() {
+        use crate::sparse::pattern::{PatternKind, SparsitySpec};
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(16);
+        let shape = MmShape::square(768);
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.5, 1);
+        let cold = cache.get_or_plan_sparse(&arch, shape, spec).unwrap();
+        let warm = cache.get_or_plan_sparse(&arch, shape, spec).unwrap();
+        assert_eq!(warm.cost.total_cycles, cold.cost.total_cycles);
+        assert_eq!((cache.stats().hits, cache.stats().misses), (1, 1));
+        // any fingerprint-changing tweak must miss
+        for other in [
+            SparsitySpec::new(PatternKind::Banded, 8, 0.5, 1),
+            SparsitySpec::new(PatternKind::Random, 16, 0.5, 1),
+            SparsitySpec::new(PatternKind::Random, 8, 0.25, 1),
+            SparsitySpec::new(PatternKind::Random, 8, 0.5, 2),
+        ] {
+            cache.get_or_plan_sparse(&arch, shape, other).unwrap();
+        }
+        assert_eq!(cache.stats().misses, 5, "distinct specs are distinct entries");
+        assert_eq!(cache.stats().entries, 5);
+    }
+
+    #[test]
+    fn dense_and_sparse_entries_do_not_collide() {
+        use crate::sparse::pattern::SparsitySpec;
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(8);
+        let shape = MmShape::square(512);
+        cache.get_or_plan(&arch, shape).unwrap();
+        cache
+            .get_or_plan_sparse(&arch, shape, SparsitySpec::dense(8))
+            .unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 2, 2));
+        // the dense entry is still intact and hit by the dense path
+        cache.get_or_plan(&arch, shape).unwrap();
+        assert_eq!(cache.stats().hits, 1);
     }
 
     #[test]

@@ -8,9 +8,12 @@
 //! sustained traffic, the way Graphcore's own stack does:
 //!
 //! * [`cache`] — a thread-safe LRU **plan cache** keyed by
-//!   `(MmShape, IpuArch fingerprint)` that memoizes [`crate::planner::search`]
-//!   results (including out-of-memory verdicts) and exposes
-//!   hit/miss/eviction counters.
+//!   `(MmShape, IpuArch fingerprint, sparsity fingerprint)` that memoizes
+//!   [`crate::planner::search`] and [`crate::sparse::planner`] results
+//!   (including out-of-memory verdicts) and exposes hit/miss/eviction
+//!   counters. Dense requests key with no sparsity dimension; sparse
+//!   requests only hit entries with an equal
+//!   [`crate::sparse::pattern::SparsitySpec`] fingerprint.
 //! * [`bucket`] — **shape bucketing**: incoming `(m, n, k)` requests are
 //!   rounded up to a ladder of block classes so the skewed long tail
 //!   shares cached plans. The ladder's rungs are the same power-of-two /

@@ -17,6 +17,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use crate::planner::partition::MmShape;
+use crate::sparse::pattern::SparsitySpec;
 
 /// One matmul request, already bucketed by the front door.
 #[derive(Clone, Debug)]
@@ -26,6 +27,10 @@ pub struct MmRequest {
     pub shape: MmShape,
     /// The plan-cache key shape (`>= shape` in every dimension).
     pub bucket: MmShape,
+    /// Block-sparsity descriptor; `None` is a dense request. Part of the
+    /// coalescing key: sparse plans depend on the exact pattern, so only
+    /// requests with equal specs may share a batch (and a cache entry).
+    pub sparsity: Option<SparsitySpec>,
     /// Enqueue timestamp (queue-wait telemetry).
     pub submitted: Instant,
 }
@@ -36,14 +41,23 @@ impl MmRequest {
             bucket.m >= shape.m && bucket.n >= shape.n && bucket.k >= shape.k,
             "bucket {bucket:?} smaller than request {shape:?}"
         );
-        MmRequest { id, shape, bucket, submitted: Instant::now() }
+        MmRequest { id, shape, bucket, sparsity: None, submitted: Instant::now() }
+    }
+
+    /// Tag the request with a block-sparsity descriptor.
+    pub fn with_sparsity(mut self, spec: SparsitySpec) -> MmRequest {
+        self.sparsity = Some(spec);
+        self
     }
 }
 
-/// A coalesced group of same-bucket requests, served by one plan lookup.
+/// A coalesced group of same-bucket, same-sparsity requests, served by
+/// one plan lookup.
 #[derive(Debug)]
 pub struct Batch {
     pub bucket: MmShape,
+    /// Shared sparsity of every rider (`None` = dense batch).
+    pub sparsity: Option<SparsitySpec>,
     pub requests: Vec<MmRequest>,
 }
 
@@ -194,13 +208,22 @@ impl RequestQueue {
         loop {
             if let Some(head) = inner.queue.pop_front() {
                 let bucket = head.bucket;
+                let sparsity = head.sparsity;
                 let mut requests = vec![head];
                 // rebuild the queue only when there is actually something
                 // to coalesce — the no-rider case stays allocation-free
-                if max_batch > 1 && inner.queue.iter().any(|r| r.bucket == bucket) {
+                if max_batch > 1
+                    && inner
+                        .queue
+                        .iter()
+                        .any(|r| r.bucket == bucket && r.sparsity == sparsity)
+                {
                     let mut kept = VecDeque::with_capacity(inner.queue.len());
                     for req in inner.queue.drain(..) {
-                        if requests.len() < max_batch && req.bucket == bucket {
+                        if requests.len() < max_batch
+                            && req.bucket == bucket
+                            && req.sparsity == sparsity
+                        {
                             requests.push(req);
                         } else {
                             kept.push_back(req);
@@ -209,7 +232,7 @@ impl RequestQueue {
                     inner.queue = kept;
                 }
                 self.not_full.notify_all();
-                return Some(Batch { bucket, requests });
+                return Some(Batch { bucket, sparsity, requests });
             }
             if inner.closed {
                 return None;
@@ -257,6 +280,31 @@ mod tests {
         let b2 = q.next_batch(8).unwrap();
         assert_eq!(b2.bucket, MmShape::square(1024));
         assert_eq!(b2.len(), 1);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sparsity_splits_batches() {
+        use crate::sparse::pattern::{PatternKind, SparsitySpec};
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.5, 1);
+        let other = SparsitySpec::new(PatternKind::Random, 8, 0.25, 1);
+        let q = RequestQueue::new(16);
+        q.submit(req(0, 512)).unwrap();
+        q.submit(req(1, 512).with_sparsity(spec)).unwrap();
+        q.submit(req(2, 512)).unwrap();
+        q.submit(req(3, 512).with_sparsity(spec)).unwrap();
+        q.submit(req(4, 512).with_sparsity(other)).unwrap();
+        // dense batch coalesces only dense riders of the bucket
+        let dense = q.next_batch(8).unwrap();
+        assert_eq!(dense.sparsity, None);
+        assert_eq!(dense.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        // then the first sparse spec, then the second — never mixed
+        let s1 = q.next_batch(8).unwrap();
+        assert_eq!(s1.sparsity, Some(spec));
+        assert_eq!(s1.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let s2 = q.next_batch(8).unwrap();
+        assert_eq!(s2.sparsity, Some(other));
+        assert_eq!(s2.len(), 1);
         assert!(q.is_empty());
     }
 

@@ -32,6 +32,8 @@ use crate::serve::bucket::BucketLadder;
 use crate::serve::cache::PlanCache;
 use crate::serve::queue::{Batch, MmRequest, RequestQueue};
 use crate::serve::telemetry::{RequestRecord, ServeReport};
+use crate::sparse::pattern::SparsitySpec;
+use crate::sparse::planner::SparsePlan;
 
 /// How batches spread over the configured backends.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -146,13 +148,23 @@ impl MmService {
     /// drains coalesced batches. Returns per-request and per-bucket
     /// telemetry.
     pub fn serve_trace(&self, shapes: &[MmShape]) -> ServeReport {
+        let dense: Vec<(MmShape, Option<SparsitySpec>)> =
+            shapes.iter().map(|&s| (s, None)).collect();
+        self.serve_trace_mixed(&dense)
+    }
+
+    /// [`Self::serve_trace`] for a mixed dense/sparse trace: each request
+    /// optionally carries a block-sparsity descriptor. Sparse requests
+    /// bucket like dense ones but coalesce and cache per sparsity
+    /// fingerprint (see `serve::cache`).
+    pub fn serve_trace_mixed(&self, reqs: &[(MmShape, Option<SparsitySpec>)]) -> ServeReport {
         let queue = RequestQueue::new(self.config.queue_capacity);
         let workers = self
             .config
             .workers
             .unwrap_or_else(default_workers)
             .max(1);
-        let records: Mutex<Vec<RequestRecord>> = Mutex::new(Vec::with_capacity(shapes.len()));
+        let records: Mutex<Vec<RequestRecord>> = Mutex::new(Vec::with_capacity(reqs.len()));
         // keyed by earliest rider id so the emitted table/CSV row order is
         // deterministic regardless of worker scheduling (run_jobs makes
         // the same guarantee via submission order)
@@ -179,12 +191,13 @@ impl MmService {
                     }
                 });
             }
-            for (i, &shape) in shapes.iter().enumerate() {
+            for (i, &(shape, sparsity)) in reqs.iter().enumerate() {
                 let bucket = self.config.ladder.bucket(shape);
-                if queue
-                    .submit_blocking(MmRequest::new(i as u64, shape, bucket))
-                    .is_err()
-                {
+                let mut req = MmRequest::new(i as u64, shape, bucket);
+                if let Some(spec) = sparsity {
+                    req = req.with_sparsity(spec);
+                }
+                if queue.submit_blocking(req).is_err() {
                     // queue closed early: a worker died; stop producing
                     // and let scope join propagate its panic
                     break;
@@ -224,10 +237,11 @@ impl MmService {
     ) {
         let drained_at = Instant::now();
         let bucket = batch.bucket;
-        let (outcome, backend, cache_hit, plan_seconds) = self.dispatch(bucket);
-        // anchor cold buckets to the real path; hits (and cache-less
-        // dispatches) were either anchored already or never planned
-        let real_seconds = if cache_hit == Some(false) {
+        let (outcome, backend, cache_hit, plan_seconds) =
+            self.dispatch(bucket, batch.sparsity);
+        // anchor cold dense buckets to the real path; hits, cache-less
+        // dispatches and sparse batches (no sparse AOT artifacts) skip it
+        let real_seconds = if cache_hit == Some(false) && batch.sparsity.is_none() {
             self.verify_real(bucket)
         } else {
             None
@@ -247,6 +261,7 @@ impl MmService {
                     id: req.id,
                     shape: req.shape,
                     bucket,
+                    sparsity: req.sparsity,
                     backend: backend.clone(),
                     batch_size: n,
                     cache_hit,
@@ -261,35 +276,47 @@ impl MmService {
             }
         }
         let first_id = batch.requests.iter().map(|r| r.id).min().unwrap_or(0);
+        let label = match &batch.sparsity {
+            Some(spec) => format!("{} {}", BucketLadder::label(bucket), spec.label()),
+            None => BucketLadder::label(bucket),
+        };
         batch_records.lock().expect("metrics poisoned").push((
             first_id,
-            MetricsRecord {
-                backend,
-                label: BucketLadder::label(bucket),
-                shape: bucket,
-                outcome,
-            },
+            MetricsRecord { backend, label, shape: bucket, outcome },
         ));
     }
 
     /// Resolve one bucket to an outcome on some backend. The `Option<bool>`
     /// is the cache verdict: `None` when the policy never consulted it.
-    fn dispatch(&self, bucket: MmShape) -> (RunOutcome, String, Option<bool>, f64) {
+    /// Sparse buckets plan through the sparsity-keyed cache path; on the
+    /// GPU fallback they are priced dense-equivalent (the cuBLAS model
+    /// has no block-sparse kernel — conservative for the GPU).
+    fn dispatch(
+        &self,
+        bucket: MmShape,
+        sparsity: Option<SparsitySpec>,
+    ) -> (RunOutcome, String, Option<bool>, f64) {
         let gpu_backend = || Backend::GpuModel(self.config.gpu.clone());
         if self.config.policy == DispatchPolicy::GpuOnly {
             let out = run_shape(&gpu_backend(), bucket);
             return (out, gpu_backend().name(), None, 0.0);
         }
         let ipu_name = Backend::IpuSim(self.config.arch.clone()).name();
-        let (result, hit, plan_seconds) =
-            self.cache.get_or_plan_timed(&self.config.arch, bucket);
+        let (result, hit, plan_seconds) = match sparsity {
+            None => {
+                let (result, hit, secs) =
+                    self.cache.get_or_plan_timed(&self.config.arch, bucket);
+                (result.map(|plan| self.outcome_from_plan(&plan)), hit, secs)
+            }
+            Some(spec) => {
+                let (result, hit, secs) =
+                    self.cache
+                        .get_or_plan_sparse_timed(&self.config.arch, bucket, spec);
+                (result.map(|plan| self.outcome_from_sparse_plan(&plan)), hit, secs)
+            }
+        };
         match result {
-            Ok(plan) => (
-                self.outcome_from_plan(&plan),
-                ipu_name,
-                Some(hit),
-                plan_seconds,
-            ),
+            Ok(outcome) => (outcome, ipu_name, Some(hit), plan_seconds),
             Err(_) if self.config.policy == DispatchPolicy::IpuWithGpuFallback => {
                 let out = run_shape(&gpu_backend(), bucket);
                 (out, gpu_backend().name(), Some(hit), plan_seconds)
@@ -307,6 +334,19 @@ impl MmService {
             efficiency: plan.cost.efficiency(),
             vertices: Some(plan.cost.total_vertices()),
             max_tile_bytes: Some(plan.cost.tile_bytes_total),
+        }
+    }
+
+    /// Sparse twin of [`Self::outcome_from_plan`]. `tflops` reports the
+    /// *effective* convention (nonzero work only) — the dense-equivalent
+    /// figure is recoverable from `seconds` and the bucket shape.
+    fn outcome_from_sparse_plan(&self, plan: &SparsePlan) -> RunOutcome {
+        RunOutcome::Ok {
+            seconds: plan.seconds(&self.config.arch),
+            tflops: plan.effective_tflops(&self.config.arch),
+            efficiency: plan.efficiency(),
+            vertices: Some(plan.dense_plan.cost.total_vertices()),
+            max_tile_bytes: Some(plan.cost.dense.tile_bytes_total),
         }
     }
 
@@ -444,10 +484,74 @@ mod tests {
         // full sim on the throughput it reports
         let svc = service(DispatchPolicy::IpuWithGpuFallback);
         let bucket = MmShape::square(1024);
-        let (outcome, _, _, _) = svc.dispatch(bucket);
+        let (outcome, _, _, _) = svc.dispatch(bucket, None);
         let direct = run_shape(&Backend::IpuSim(IpuArch::gc200()), bucket);
         let (a, b) = (outcome.tflops().unwrap(), direct.tflops().unwrap());
         assert!((a - b).abs() < 1e-9, "serve {a} vs coordinator {b}");
+    }
+
+    #[test]
+    fn mixed_trace_keeps_distinct_entries_per_sparsity_fingerprint() {
+        use crate::sparse::pattern::{PatternKind, SparsitySpec};
+        let svc = service(DispatchPolicy::IpuWithGpuFallback);
+        let shape = MmShape::square(1024);
+        let half = SparsitySpec::new(PatternKind::Random, 8, 0.5, 1);
+        let tenth = SparsitySpec::new(PatternKind::Banded, 8, 0.1, 1);
+        // warm each key once (distinct keys -> no same-key cold races)
+        let warm = svc.serve_trace_mixed(&[
+            (shape, None),
+            (shape, Some(half)),
+            (shape, Some(tenth)),
+        ]);
+        assert_eq!(warm.cache.misses, 3, "dense + two sparse fingerprints");
+        let mut trace: Vec<(MmShape, Option<SparsitySpec>)> = Vec::new();
+        for _ in 0..6 {
+            trace.push((shape, None));
+            trace.push((shape, Some(half)));
+            trace.push((shape, Some(tenth)));
+        }
+        let report = svc.serve_trace_mixed(&trace);
+        assert_eq!(report.requests.len(), 18);
+        // steady state: every lookup hits its own fingerprint's entry
+        assert_eq!(report.cache.misses, 0, "warm keys never re-plan");
+        assert_eq!(svc.cache().len(), 3, "entries stay distinct");
+        // every request is answered and carries its own sparsity tag
+        for r in &report.requests {
+            let expected = match r.id % 3 {
+                0 => None,
+                1 => Some(half),
+                _ => Some(tenth),
+            };
+            assert_eq!(r.sparsity, expected, "request {}", r.id);
+            assert!(!r.oom);
+        }
+        // sparse batches are labelled with the spec in the metrics table
+        assert!(report
+            .metrics
+            .records
+            .iter()
+            .any(|m| m.label.contains("random/b8/d0.50")));
+    }
+
+    #[test]
+    fn sparse_outcome_reports_effective_throughput() {
+        use crate::sparse::pattern::{PatternKind, SparsitySpec};
+        let svc = service(DispatchPolicy::IpuWithGpuFallback);
+        let bucket = MmShape::square(1024);
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.25, 1);
+        let (sparse, _, _, _) = svc.dispatch(bucket, Some(spec));
+        let (dense, _, _, _) = svc.dispatch(bucket, None);
+        let (s, d) = (sparse.tflops().unwrap(), dense.tflops().unwrap());
+        // effective throughput on a quarter-dense pattern sits well below
+        // the dense figure even though the sparse run finishes sooner
+        assert!(s < d, "effective {s} vs dense {d}");
+        match (sparse, dense) {
+            (
+                RunOutcome::Ok { seconds: ss, .. },
+                RunOutcome::Ok { seconds: ds, .. },
+            ) => assert!(ss < ds, "sparse {ss}s should beat dense {ds}s"),
+            _ => panic!("both dispatches must succeed"),
+        }
     }
 
     #[test]

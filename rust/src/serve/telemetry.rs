@@ -24,6 +24,8 @@ pub struct RequestRecord {
     pub shape: MmShape,
     /// The bucket it was served at.
     pub bucket: MmShape,
+    /// Block-sparsity descriptor the request carried (`None` = dense).
+    pub sparsity: Option<crate::sparse::pattern::SparsitySpec>,
     /// Backend that served it (coordinator backend naming).
     pub backend: String,
     /// Size of the coalesced batch it rode in.
@@ -222,6 +224,7 @@ mod tests {
             id,
             shape: MmShape::square(bucket - 8),
             bucket: MmShape::square(bucket),
+            sparsity: None,
             backend: "ipu-sim/GC200".into(),
             batch_size: batch,
             cache_hit: Some(hit),

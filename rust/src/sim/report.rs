@@ -7,6 +7,7 @@ use crate::bsp::trace::Trace;
 use crate::memory::accounting::MemoryReport;
 use crate::planner::partition::MmShape;
 use crate::planner::search::Plan;
+use crate::sparse::planner::SparsePlan;
 
 /// Everything one simulated matmul produces.
 #[derive(Clone, Debug)]
@@ -25,6 +26,51 @@ pub struct SimReport {
     /// Vertex census by codelet family.
     pub census: BTreeMap<&'static str, usize>,
     pub total_vertices: usize,
+}
+
+/// Everything one simulated *block-sparse* matmul produces. Both
+/// throughput conventions are first-class (Domke et al.'s matrix-engine
+/// survey distinguishes them): dense-equivalent counts all `2mnk` flops,
+/// effective counts only the nonzero work.
+#[derive(Clone, Debug)]
+pub struct SparseSimReport {
+    pub arch_name: String,
+    pub shape: MmShape,
+    pub plan: SparsePlan,
+    pub seconds: f64,
+    /// Full `2mnk` flops over the sparse runtime.
+    pub dense_equiv_tflops: f64,
+    /// `2 * nnz(A) * k` flops over the sparse runtime.
+    pub effective_tflops: f64,
+    pub trace: Trace,
+    pub memory: MemoryReport,
+    pub census: BTreeMap<&'static str, usize>,
+    pub total_vertices: usize,
+}
+
+impl SparseSimReport {
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let p = self.plan.partition();
+        format!(
+            "{} A[{},{}]xB[{},{}] {}: {:.2} dense-equiv / {:.2} effective TFlop/s, \
+             plan pm={} pn={} pk={} cn={}, {:.1}% dense blocks, {} vertices",
+            self.arch_name,
+            self.shape.m,
+            self.shape.n,
+            self.shape.n,
+            self.shape.k,
+            self.plan.spec.label(),
+            self.dense_equiv_tflops,
+            self.effective_tflops,
+            p.pm,
+            p.pn,
+            p.pk,
+            p.cn,
+            self.plan.realized_density * 100.0,
+            self.total_vertices
+        )
+    }
 }
 
 impl SimReport {

@@ -1,0 +1,201 @@
+//! Block-CSR layout and per-tile nonzero-block assignment.
+//!
+//! The PopSparse on-device format: block coordinates in CSR
+//! (`row_ptr`/`col_idx` over the block grid) with dense `block x block`
+//! value tiles. Assignment of nonzero blocks to tiles reuses
+//! [`crate::memory::mapping::linear_balanced_mapping`] — the same
+//! contiguous-balanced policy Poplar's `mapTensorLinearly` applies to
+//! dense tensors — so per-tile work stays within one block of the mean
+//! and the planner's load-balance assumption holds.
+
+use crate::memory::mapping::linear_balanced_mapping;
+use crate::sparse::pattern::BlockPattern;
+
+/// Block-compressed-sparse-row index of a pattern.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockCsr {
+    /// Block edge (values are `block x block` dense tiles).
+    pub block: usize,
+    pub block_rows: usize,
+    pub block_cols: usize,
+    /// `block_rows + 1` offsets into `col_idx`.
+    pub row_ptr: Vec<u32>,
+    /// Block-column index of each nonzero block, row-major.
+    pub col_idx: Vec<u32>,
+}
+
+impl BlockCsr {
+    pub fn from_pattern(p: &BlockPattern) -> BlockCsr {
+        let mut row_ptr = Vec::with_capacity(p.block_rows + 1);
+        let mut col_idx = Vec::new();
+        row_ptr.push(0u32);
+        for bi in 0..p.block_rows {
+            for bj in 0..p.block_cols {
+                if p.is_nonzero(bi, bj) {
+                    col_idx.push(bj as u32);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        BlockCsr {
+            block: p.spec.block,
+            block_rows: p.block_rows,
+            block_cols: p.block_cols,
+            row_ptr,
+            col_idx,
+        }
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Nonzero blocks in one block-row.
+    pub fn row_nnz(&self, bi: usize) -> usize {
+        (self.row_ptr[bi + 1] - self.row_ptr[bi]) as usize
+    }
+
+    /// Bytes of the dense value tiles at `elem_bytes` per element.
+    pub fn values_bytes(&self, elem_bytes: u64) -> u64 {
+        self.nnz_blocks() as u64 * (self.block * self.block) as u64 * elem_bytes
+    }
+
+    /// Bytes of the CSR index structure (u32 offsets + columns).
+    pub fn index_bytes(&self) -> u64 {
+        4 * (self.row_ptr.len() + self.col_idx.len()) as u64
+    }
+
+    /// Spread the nonzero blocks over `tiles` tiles in contiguous,
+    /// balanced runs (CSR order), via the dense mapping balancer.
+    pub fn assign_tiles(&self, tiles: usize) -> TileAssignment {
+        let mapping = linear_balanced_mapping(self.nnz_blocks(), tiles);
+        let per_tile_blocks: Vec<usize> = mapping
+            .iter()
+            .map(|ivs| ivs.iter().map(|iv| iv.len()).sum())
+            .collect();
+        TileAssignment::new(per_tile_blocks)
+    }
+}
+
+/// How many nonzero blocks each tile owns.
+#[derive(Clone, Debug)]
+pub struct TileAssignment {
+    pub per_tile_blocks: Vec<usize>,
+    pub max_blocks: usize,
+    pub active_tiles: usize,
+}
+
+impl TileAssignment {
+    pub fn new(per_tile_blocks: Vec<usize>) -> TileAssignment {
+        let max_blocks = per_tile_blocks.iter().copied().max().unwrap_or(0);
+        let active_tiles = per_tile_blocks.iter().filter(|&&b| b > 0).count();
+        TileAssignment { per_tile_blocks, max_blocks, active_tiles }
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.per_tile_blocks.iter().sum()
+    }
+
+    pub fn mean_blocks(&self) -> f64 {
+        if self.active_tiles == 0 {
+            0.0
+        } else {
+            self.total_blocks() as f64 / self.active_tiles as f64
+        }
+    }
+
+    /// Load balance of the assignment: mean / max over active tiles
+    /// (1.0 = perfectly even, the quantity BSP lockstep cares about).
+    pub fn balance(&self) -> f64 {
+        if self.max_blocks == 0 {
+            0.0
+        } else {
+            self.mean_blocks() / self.max_blocks as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::pattern::{PatternKind, SparsitySpec};
+
+    fn pattern(density: f64) -> BlockPattern {
+        BlockPattern::generate(
+            SparsitySpec::new(PatternKind::Random, 8, density, 7),
+            512,
+            1024,
+        )
+    }
+
+    #[test]
+    fn csr_roundtrips_the_pattern() {
+        let p = pattern(0.3);
+        let csr = BlockCsr::from_pattern(&p);
+        assert_eq!(csr.nnz_blocks(), p.nonzero_blocks());
+        assert_eq!(csr.row_ptr.len(), p.block_rows + 1);
+        // every (row, col) listed in the CSR is nonzero in the pattern
+        for bi in 0..csr.block_rows {
+            let lo = csr.row_ptr[bi] as usize;
+            let hi = csr.row_ptr[bi + 1] as usize;
+            for &bj in &csr.col_idx[lo..hi] {
+                assert!(p.is_nonzero(bi, bj as usize));
+            }
+            assert_eq!(csr.row_nnz(bi), hi - lo);
+        }
+    }
+
+    #[test]
+    fn dense_pattern_fills_every_row() {
+        let p = pattern(1.0);
+        let csr = BlockCsr::from_pattern(&p);
+        assert_eq!(csr.nnz_blocks(), p.total_blocks());
+        for bi in 0..csr.block_rows {
+            assert_eq!(csr.row_nnz(bi), csr.block_cols);
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let csr = BlockCsr::from_pattern(&pattern(0.5));
+        assert_eq!(
+            csr.values_bytes(4),
+            csr.nnz_blocks() as u64 * 64 * 4
+        );
+        assert_eq!(
+            csr.index_bytes(),
+            4 * (csr.row_ptr.len() + csr.col_idx.len()) as u64
+        );
+    }
+
+    #[test]
+    fn tile_assignment_is_balanced() {
+        let csr = BlockCsr::from_pattern(&pattern(0.5));
+        let asn = csr.assign_tiles(1472);
+        assert_eq!(asn.total_blocks(), csr.nnz_blocks());
+        assert_eq!(asn.per_tile_blocks.len(), 1472);
+        // linear balancing: max and min (over active tiles) differ by <= 1
+        let min_active = asn
+            .per_tile_blocks
+            .iter()
+            .copied()
+            .filter(|&b| b > 0)
+            .min()
+            .unwrap();
+        assert!(asn.max_blocks - min_active <= 1, "{} vs {min_active}", asn.max_blocks);
+        assert!(asn.balance() > 0.9, "balance {}", asn.balance());
+    }
+
+    #[test]
+    fn more_tiles_than_blocks() {
+        let p = BlockPattern::generate(
+            SparsitySpec::new(PatternKind::Random, 16, 0.1, 1),
+            64,
+            64,
+        );
+        let csr = BlockCsr::from_pattern(&p);
+        let asn = csr.assign_tiles(1472);
+        assert_eq!(asn.active_tiles, csr.nnz_blocks());
+        assert_eq!(asn.max_blocks, 1);
+    }
+}

@@ -1,0 +1,38 @@
+//! Block-sparse matmul subsystem (PopSparse-style static block-CSR).
+//!
+//! PopSparse (Li et al., arXiv 2303.16999) shows that the IPU's natural
+//! next matmul workload after the paper's dense squared/skewed study is
+//! *block-sparse* multiplication: `A` is sparse at block granularity
+//! (blocks of 4/8/16), the sparsity pattern is known at compile time, and
+//! the planner's job gets strictly harder because per-tile work becomes
+//! irregular. This module opens that workload on the existing stack:
+//!
+//! * [`pattern`] — seeded block-sparsity patterns (random / banded /
+//!   block-diagonal generators at a target density) plus the compact
+//!   [`pattern::SparsitySpec`] descriptor whose fingerprint extends the
+//!   serving layer's plan-cache key.
+//! * [`csr`] — the block-CSR layout (`row_ptr`/`col_idx` over block
+//!   coordinates) and per-tile nonzero-block assignment that reuses
+//!   [`crate::memory::mapping`]'s balancing.
+//! * [`planner`] — a sparsity-aware cost/search wrapper over
+//!   [`crate::planner`]: compute and exchange scale with the realized
+//!   density of the *densest* partition cell (BSP is lockstep, so the
+//!   bottleneck tile prices the phase) while the memory bill stays dense
+//!   (static block-CSR plans keep dense-equivalent buffers, so the
+//!   paper's §2.4 wall is unchanged).
+//!
+//! Reports carry both throughput conventions Domke et al.'s matrix-engine
+//! survey distinguishes: **dense-equivalent** TFlop/s (all `2mnk` flops
+//! over the sparse runtime) and **effective** TFlop/s (nonzero work
+//! only). The density x aspect-ratio sweep lives in
+//! `experiments::sparse_sweep` (`ipumm sparse`).
+
+pub mod csr;
+pub mod pattern;
+pub mod planner;
+
+pub use csr::{BlockCsr, TileAssignment};
+pub use pattern::{BlockPattern, PatternKind, SparsitySpec};
+pub use planner::{
+    sparse_plan_from_dense, sparse_search, sparse_search_spec, SparseCost, SparsePlan,
+};

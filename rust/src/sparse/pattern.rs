@@ -1,0 +1,420 @@
+//! Block-sparsity patterns: seeded generators and compact descriptors.
+//!
+//! Sparsity is static (PopSparse's regime: the pattern is fixed at
+//! compile time) and block-granular: `A[m, n]` is a grid of
+//! `block x block` tiles, each wholly zero or wholly present. A pattern
+//! is described by a tiny, hashable [`SparsitySpec`] — generator kind,
+//! block size, target density, seed — so the serving layer can key its
+//! plan cache on the spec's fingerprint without materializing the
+//! pattern; [`BlockPattern`] is the materialized occupancy grid the
+//! planner and graph builder consume.
+//!
+//! Generators are *nested across densities* for a fixed seed and kind
+//! (the nonzero set at density d1 <= d2 is a subset of the set at d2,
+//! except block-diagonal whose group boundaries shift), which is what
+//! makes sparse plan cost provably monotone in density — see
+//! `sparse::planner` and the property tests.
+
+use std::hash::{Hash, Hasher};
+
+use crate::planner::partition::MmShape;
+use crate::util::rng::Rng;
+use crate::util::units::div_ceil;
+
+/// Block edges PopSparse's codelets support (and the AMP digests well).
+pub const BLOCK_SIZES: [usize; 3] = [4, 8, 16];
+
+/// Pattern generator family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PatternKind {
+    /// Uniform random nonzero blocks (seeded permutation prefix, so the
+    /// nonzero sets nest across densities).
+    Random,
+    /// Diagonal band of blocks (half-width grown to the target density).
+    Banded,
+    /// Square diagonal groups (`~1/density` groups along the diagonal).
+    BlockDiagonal,
+}
+
+impl PatternKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PatternKind::Random => "random",
+            PatternKind::Banded => "banded",
+            PatternKind::BlockDiagonal => "blockdiag",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<PatternKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "random" => Some(PatternKind::Random),
+            "banded" | "band" => Some(PatternKind::Banded),
+            "blockdiag" | "block-diagonal" | "blockdiagonal" => Some(PatternKind::BlockDiagonal),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [PatternKind; 3] {
+        [PatternKind::Random, PatternKind::Banded, PatternKind::BlockDiagonal]
+    }
+}
+
+/// Compact, hashable sparsity descriptor — the serving layer's cache-key
+/// dimension. Density is stored in permille so the spec stays `Eq + Hash`
+/// (no floats in cache keys).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SparsitySpec {
+    pub kind: PatternKind,
+    /// Block edge, one of [`BLOCK_SIZES`].
+    pub block: usize,
+    /// Target nonzero-block density in 1/1000ths, in [1, 1000].
+    pub density_permille: u32,
+    /// Generator seed (two specs differing only in seed are distinct
+    /// cache entries — their patterns differ).
+    pub seed: u64,
+}
+
+impl SparsitySpec {
+    /// `density` is clamped to [0.001, 1.0] and quantized to permille.
+    pub fn new(kind: PatternKind, block: usize, density: f64, seed: u64) -> SparsitySpec {
+        assert!(
+            BLOCK_SIZES.contains(&block),
+            "block {block} not in supported sizes {BLOCK_SIZES:?}"
+        );
+        let density_permille = ((density * 1000.0).round() as i64).clamp(1, 1000) as u32;
+        SparsitySpec { kind, block, density_permille, seed }
+    }
+
+    /// The degenerate fully-dense spec (every block present).
+    pub fn dense(block: usize) -> SparsitySpec {
+        SparsitySpec::new(PatternKind::Random, block, 1.0, 0)
+    }
+
+    pub fn density(&self) -> f64 {
+        self.density_permille as f64 / 1000.0
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.density_permille == 1000
+    }
+
+    /// Fingerprint over every pattern-determining field — the sparsity
+    /// half of the serving layer's plan-cache key (cf.
+    /// `IpuArch::fingerprint`). Two specs that would generate different
+    /// patterns must not collide.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.kind.name().hash(&mut h);
+        self.block.hash(&mut h);
+        self.density_permille.hash(&mut h);
+        self.seed.hash(&mut h);
+        h.finish()
+    }
+
+    /// Human label, e.g. `random/b8/d0.50`.
+    pub fn label(&self) -> String {
+        format!("{}/b{}/d{:.2}", self.kind.name(), self.block, self.density())
+    }
+}
+
+/// Materialized block-occupancy grid of `A[m, n]` for one spec.
+#[derive(Clone, Debug)]
+pub struct BlockPattern {
+    pub spec: SparsitySpec,
+    /// Grid extents in blocks: `ceil(m / block)` x `ceil(n / block)`.
+    pub block_rows: usize,
+    pub block_cols: usize,
+    /// Row-major occupancy, `block_rows * block_cols` entries.
+    nz: Vec<bool>,
+}
+
+impl BlockPattern {
+    /// Generate the pattern for an `m x n` operand.
+    pub fn generate(spec: SparsitySpec, m: usize, n: usize) -> BlockPattern {
+        assert!(m > 0 && n > 0, "degenerate operand {m}x{n}");
+        let block_rows = div_ceil(m, spec.block);
+        let block_cols = div_ceil(n, spec.block);
+        let total = block_rows * block_cols;
+        let mut nz = vec![false; total];
+        if spec.is_dense() {
+            // exact by construction: density 1.0 must reproduce dense
+            nz.fill(true);
+        } else {
+            match spec.kind {
+                PatternKind::Random => {
+                    // nonzero set = prefix of one seeded permutation, so
+                    // densities nest and the realized count is exact
+                    let target = ((spec.density() * total as f64).ceil() as usize).clamp(1, total);
+                    let mut order: Vec<usize> = (0..total).collect();
+                    let mut rng = Rng::new(spec.seed ^ 0xB10C_5EED);
+                    for i in (1..total).rev() {
+                        let j = rng.gen_usize(0, i);
+                        order.swap(i, j);
+                    }
+                    for &b in order.iter().take(target) {
+                        nz[b] = true;
+                    }
+                }
+                PatternKind::Banded => {
+                    // half-width grows with density (nested); the band
+                    // follows the grid diagonal even for skewed grids
+                    let w = ((spec.density() * block_cols as f64) / 2.0).ceil() as usize;
+                    for bi in 0..block_rows {
+                        let centre = if block_rows <= 1 {
+                            0
+                        } else {
+                            bi * (block_cols - 1) / (block_rows - 1)
+                        };
+                        for bj in 0..block_cols {
+                            if bj.abs_diff(centre) <= w {
+                                nz[bi * block_cols + bj] = true;
+                            }
+                        }
+                    }
+                }
+                PatternKind::BlockDiagonal => {
+                    // ~1/density square groups along the diagonal
+                    let groups = ((1.0 / spec.density()).round() as usize).max(1);
+                    for bi in 0..block_rows {
+                        let gi = bi * groups / block_rows;
+                        for bj in 0..block_cols {
+                            let gj = bj * groups / block_cols;
+                            if gi == gj {
+                                nz[bi * block_cols + bj] = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        BlockPattern { spec, block_rows, block_cols, nz }
+    }
+
+    /// Pattern over a matmul's `A` operand.
+    pub fn for_shape(spec: SparsitySpec, shape: MmShape) -> BlockPattern {
+        BlockPattern::generate(spec, shape.m, shape.n)
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.block_rows * self.block_cols
+    }
+
+    pub fn nonzero_blocks(&self) -> usize {
+        self.nz.iter().filter(|&&b| b).count()
+    }
+
+    /// Fraction of blocks present (may differ slightly from the spec's
+    /// target — generators quantize).
+    pub fn realized_density(&self) -> f64 {
+        self.nonzero_blocks() as f64 / self.total_blocks() as f64
+    }
+
+    pub fn is_nonzero(&self, bi: usize, bj: usize) -> bool {
+        self.nz[bi * self.block_cols + bj]
+    }
+
+    /// Nonzero *elements* of the `m x n` operand (edge blocks clipped) —
+    /// the numerator of effective TFlop/s.
+    pub fn nnz_elems(&self, m: usize, n: usize) -> u64 {
+        let b = self.spec.block;
+        let mut total = 0u64;
+        for bi in 0..self.block_rows {
+            let rh = (m - bi * b).min(b);
+            for bj in 0..self.block_cols {
+                if self.nz[bi * self.block_cols + bj] {
+                    let cw = (n - bj * b).min(b);
+                    total += (rh * cw) as u64;
+                }
+            }
+        }
+        total
+    }
+
+    /// Per-cell density of a `pm x pn` partition grid, row-major
+    /// (`pm * pn` entries; a cell no block maps to is 0.0). The graph
+    /// builder uses this to give each tile's worklist its own cell's
+    /// density, so load imbalance is visible in the BSP trace.
+    pub fn cell_density_matrix(&self, pm: usize, pn: usize) -> Vec<f64> {
+        assert!(pm >= 1 && pn >= 1, "degenerate partition grid {pm}x{pn}");
+        let mut counts = vec![0u64; pm * pn];
+        let mut caps = vec![0u64; pm * pn];
+        for bi in 0..self.block_rows {
+            let ci = (bi * pm / self.block_rows).min(pm - 1);
+            for bj in 0..self.block_cols {
+                let cj = (bj * pn / self.block_cols).min(pn - 1);
+                let cell = ci * pn + cj;
+                caps[cell] += 1;
+                if self.nz[bi * self.block_cols + bj] {
+                    counts[cell] += 1;
+                }
+            }
+        }
+        counts
+            .iter()
+            .zip(&caps)
+            .map(|(c, cap)| if *cap == 0 { 0.0 } else { *c as f64 / *cap as f64 })
+            .collect()
+    }
+
+    /// Density of every `pm x pn` partition cell, reduced to
+    /// `(max, mean)` over non-empty cells. The **max** is the planner's
+    /// critical density: BSP is lockstep, so the densest cell's tile
+    /// prices the compute phase.
+    pub fn cell_densities(&self, pm: usize, pn: usize) -> (f64, f64) {
+        let pm = pm.clamp(1, self.block_rows);
+        let pn = pn.clamp(1, self.block_cols);
+        // clamped grids are surjective (pm <= block_rows, pn <= block_cols),
+        // so every cell holds at least one block and counts toward the mean
+        let cells = self.cell_density_matrix(pm, pn);
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for &d in &cells {
+            max = max.max(d);
+            sum += d;
+        }
+        (max, sum / cells.len() as f64)
+    }
+
+    /// Content fingerprint (spec + occupancy bits) for diagnostics.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.spec.fingerprint().hash(&mut h);
+        self.block_rows.hash(&mut h);
+        self.block_cols.hash(&mut h);
+        self.nz.hash(&mut h);
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kind: PatternKind, density: f64) -> SparsitySpec {
+        SparsitySpec::new(kind, 8, density, 42)
+    }
+
+    #[test]
+    fn dense_spec_fills_every_block() {
+        for kind in PatternKind::all() {
+            let p = BlockPattern::generate(spec(kind, 1.0), 256, 512);
+            assert_eq!(p.nonzero_blocks(), p.total_blocks(), "{kind:?}");
+            assert_eq!(p.realized_density(), 1.0);
+            assert_eq!(p.nnz_elems(256, 512), 256 * 512);
+        }
+    }
+
+    #[test]
+    fn random_density_is_exact() {
+        let p = BlockPattern::generate(spec(PatternKind::Random, 0.25), 512, 512);
+        // 64x64 blocks, target ceil(0.25 * 4096) = 1024
+        assert_eq!(p.nonzero_blocks(), 1024);
+    }
+
+    #[test]
+    fn random_and_banded_nest_across_densities() {
+        for kind in [PatternKind::Random, PatternKind::Banded] {
+            let lo = BlockPattern::generate(spec(kind, 0.2), 384, 768);
+            let hi = BlockPattern::generate(spec(kind, 0.7), 384, 768);
+            assert!(lo.nonzero_blocks() <= hi.nonzero_blocks());
+            for bi in 0..lo.block_rows {
+                for bj in 0..lo.block_cols {
+                    if lo.is_nonzero(bi, bj) {
+                        assert!(hi.is_nonzero(bi, bj), "{kind:?} not nested at ({bi},{bj})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = BlockPattern::generate(spec(PatternKind::Random, 0.3), 400, 400);
+        let b = BlockPattern::generate(spec(PatternKind::Random, 0.3), 400, 400);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = BlockPattern::generate(SparsitySpec::new(PatternKind::Random, 8, 0.3, 43), 400, 400);
+        assert_ne!(a.fingerprint(), c.fingerprint(), "seed must matter");
+    }
+
+    #[test]
+    fn banded_concentrates_near_diagonal() {
+        let p = BlockPattern::generate(spec(PatternKind::Banded, 0.1), 1024, 1024);
+        assert!(p.is_nonzero(0, 0));
+        assert!(p.is_nonzero(p.block_rows - 1, p.block_cols - 1));
+        assert!(!p.is_nonzero(0, p.block_cols - 1), "far corner must be zero");
+        let d = p.realized_density();
+        assert!((0.02..=0.3).contains(&d), "density {d}");
+    }
+
+    #[test]
+    fn block_diagonal_groups() {
+        let p = BlockPattern::generate(spec(PatternKind::BlockDiagonal, 0.25), 512, 512);
+        // 4 groups of 16x16 blocks each -> exactly 1/4 of blocks
+        assert_eq!(p.nonzero_blocks() * 4, p.total_blocks());
+        assert!(p.is_nonzero(0, 0));
+        assert!(!p.is_nonzero(0, p.block_cols - 1));
+    }
+
+    #[test]
+    fn cell_densities_bound_realized() {
+        let p = BlockPattern::generate(spec(PatternKind::Banded, 0.2), 2048, 2048);
+        let (max, mean) = p.cell_densities(8, 4);
+        assert!(max >= mean, "max {max} < mean {mean}");
+        assert!(max <= 1.0 && mean > 0.0);
+        // full pattern: every cell fully dense
+        let full = BlockPattern::generate(spec(PatternKind::Random, 1.0), 2048, 2048);
+        let (fmax, fmean) = full.cell_densities(8, 4);
+        assert_eq!((fmax, fmean), (1.0, 1.0));
+    }
+
+    #[test]
+    fn edge_blocks_clip_nnz_elems() {
+        // 100x100 with block 8 -> 13x13 blocks, edge blocks 4 wide/high
+        let p = BlockPattern::generate(spec(PatternKind::Random, 1.0), 100, 100);
+        assert_eq!(p.block_rows, 13);
+        assert_eq!(p.nnz_elems(100, 100), 100 * 100);
+    }
+
+    #[test]
+    fn fingerprints_distinguish_specs() {
+        let a = SparsitySpec::new(PatternKind::Random, 8, 0.5, 1);
+        assert_eq!(a.fingerprint(), a.fingerprint());
+        for b in [
+            SparsitySpec::new(PatternKind::Banded, 8, 0.5, 1),
+            SparsitySpec::new(PatternKind::Random, 16, 0.5, 1),
+            SparsitySpec::new(PatternKind::Random, 8, 0.25, 1),
+            SparsitySpec::new(PatternKind::Random, 8, 0.5, 2),
+        ] {
+            assert_ne!(a.fingerprint(), b.fingerprint(), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for kind in PatternKind::all() {
+            assert_eq!(PatternKind::by_name(kind.name()), Some(kind));
+        }
+        assert_eq!(PatternKind::by_name("block-diagonal"), Some(PatternKind::BlockDiagonal));
+        assert_eq!(PatternKind::by_name("dense"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in supported sizes")]
+    fn bad_block_size_rejected() {
+        SparsitySpec::new(PatternKind::Random, 32, 0.5, 0);
+    }
+
+    #[test]
+    fn spec_density_quantizes_and_clamps() {
+        assert_eq!(SparsitySpec::new(PatternKind::Random, 8, 0.3333, 0).density_permille, 333);
+        assert_eq!(SparsitySpec::new(PatternKind::Random, 8, 0.0, 0).density_permille, 1);
+        assert_eq!(SparsitySpec::new(PatternKind::Random, 8, 2.0, 0).density_permille, 1000);
+        assert!(SparsitySpec::dense(4).is_dense());
+    }
+
+    #[test]
+    fn label_is_compact() {
+        let s = SparsitySpec::new(PatternKind::Banded, 16, 0.25, 9);
+        assert_eq!(s.label(), "banded/b16/d0.25");
+    }
+}

@@ -7,6 +7,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::util::units::fmt_secs;
 
@@ -111,7 +112,55 @@ impl Bench {
         out
     }
 
-    /// Write the CSV next to `target/` so bench outputs are collectable.
+    /// Machine-readable twin of [`Self::to_csv`]: one deterministic JSON
+    /// document per bench group, so the perf trajectory can be tracked
+    /// across commits without parsing bench stdout.
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("group", self.group.as_str().into());
+        let mut results = Json::Arr(vec![]);
+        for r in &self.results {
+            let mut o = Json::obj();
+            o.set("name", r.name.as_str().into());
+            o.set("mean_s", r.summary.mean.into());
+            o.set("stddev_s", r.summary.stddev.into());
+            o.set("min_s", r.summary.min.into());
+            o.set("max_s", r.summary.max.into());
+            o.set("n", r.summary.n.into());
+            match r.throughput {
+                Some((value, unit)) => {
+                    o.set("throughput", value.into());
+                    o.set("throughput_unit", unit.into());
+                }
+                None => {
+                    o.set("throughput", Json::Null);
+                }
+            }
+            results.push(o);
+        }
+        doc.set("results", results);
+        doc
+    }
+
+    /// Write `BENCH_<group>.json` at the repo root, gated by
+    /// `IPUMM_BENCH_JSON=1` so default runs touch nothing outside
+    /// `target/`. The repo root is the crate manifest dir, so the file
+    /// lands in the same place no matter where the bench runs from.
+    pub fn dump_json(&self) {
+        if std::env::var("IPUMM_BENCH_JSON").ok().as_deref() != Some("1") {
+            return;
+        }
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join(format!("BENCH_{}.json", self.group.replace('/', "_")));
+        if let Err(e) = std::fs::write(&path, self.to_json().render()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            println!("(json -> {})", path.display());
+        }
+    }
+
+    /// Write the CSV next to `target/` so bench outputs are collectable
+    /// (and the JSON dump when `IPUMM_BENCH_JSON=1`).
     pub fn dump_csv(&self) {
         let dir = std::path::Path::new("target/bench-results");
         if std::fs::create_dir_all(dir).is_ok() {
@@ -122,6 +171,7 @@ impl Bench {
                 println!("(csv -> {})", path.display());
             }
         }
+        self.dump_json();
     }
 }
 
@@ -160,6 +210,36 @@ mod tests {
         let csv = b.to_csv();
         assert!(csv.starts_with("name,mean_s"));
         assert!(csv.contains("alpha,"));
+    }
+
+    #[test]
+    fn json_mirrors_results() {
+        let mut b = Bench::new("test").with_iters(0, 2);
+        b.run("alpha", || ());
+        b.throughput(3.5, "x");
+        b.run("beta", || ());
+        let json = b.to_json().render();
+        assert!(json.contains("\"group\": \"test\""));
+        assert!(json.contains("\"name\": \"alpha\""));
+        assert!(json.contains("\"throughput\": 3.5"));
+        assert!(json.contains("\"throughput_unit\": \"x\""));
+        assert!(json.contains("\"name\": \"beta\""));
+        assert!(json.contains("\"mean_s\""));
+    }
+
+    #[test]
+    fn json_dump_is_env_gated() {
+        // without IPUMM_BENCH_JSON=1, dump_json must write nothing
+        if std::env::var("IPUMM_BENCH_JSON").ok().as_deref() == Some("1") {
+            return; // the gate is open in this environment; nothing to test
+        }
+        let mut b = Bench::new("envgate-test").with_iters(0, 1);
+        b.run("x", || ());
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("BENCH_envgate-test.json");
+        let _ = std::fs::remove_file(&path);
+        b.dump_json();
+        assert!(!path.exists(), "dump_json must be a no-op without the env var");
     }
 
     #[test]

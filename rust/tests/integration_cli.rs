@@ -115,6 +115,30 @@ fn serve_reports_cache_and_buckets() {
 }
 
 #[test]
+fn sparse_prints_both_throughput_conventions() {
+    let csv_path = std::env::temp_dir().join("ipumm_cli_sparse.csv");
+    let csv_arg = csv_path.to_str().unwrap();
+    let (out, _, ok) = run(&[
+        "sparse", "--k", "1024", "--densities", "1.0,0.25", "--block", "8", "--csv", csv_arg,
+    ]);
+    assert!(ok);
+    assert!(out.contains("dense-equiv"));
+    assert!(out.contains("effective"));
+    assert!(out.contains("density 0.25"));
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(csv.starts_with("label,m,n,k,"));
+    assert!(csv.lines().count() > 10);
+    let _ = std::fs::remove_file(&csv_path);
+}
+
+#[test]
+fn sparse_rejects_bad_block() {
+    let (_, err, ok) = run(&["sparse", "--block", "32"]);
+    assert!(!ok);
+    assert!(err.contains("--block"), "stderr: {err}");
+}
+
+#[test]
 fn ablation_lists_mechanisms() {
     let (out, _, ok) = run(&["ablation"]);
     assert!(ok);

@@ -4,8 +4,11 @@
 use ipumm::arch::ipu::paper;
 use ipumm::arch::{GpuArch, IpuArch};
 use ipumm::coordinator::device::Backend;
-use ipumm::experiments::{fig4, fig5, memory_study, multi_ipu_x, phases, streaming, table1, vertices};
+use ipumm::experiments::{
+    fig4, fig5, memory_study, multi_ipu_x, phases, sparse_sweep, streaming, table1, vertices,
+};
 use ipumm::planner::partition::MmShape;
+use ipumm::sparse::pattern::PatternKind;
 
 // ---- T1 -------------------------------------------------------------
 
@@ -162,6 +165,53 @@ fn x2_pod_scaling_table() {
         .map(|r| r.report.as_ref().unwrap().tflops)
         .collect();
     assert!(tf[1] > tf[0] && tf[2] > tf[1], "{tf:?}");
+}
+
+// ---- S1 -------------------------------------------------------------
+
+#[test]
+fn s1_skew_advantage_only_degrades_gracefully_under_sparsity() {
+    // the question neither source paper answers alone: crossing the
+    // paper's skew axis with PopSparse's density axis. Gates: density
+    // 1.0 equals the dense path everywhere it fits, sparsity always
+    // speeds the model up, and OOM is a *shape* property, not a density
+    // one (the dense §2.4 wall is unchanged by sparsity)
+    let rows = sparse_sweep::run(
+        &IpuArch::gc200(),
+        22,
+        4,
+        2048,
+        8,
+        &[1.0, 0.25],
+        PatternKind::Random,
+        42,
+    );
+    assert_eq!(rows.len(), 9 * 2);
+    // rows come out point-major (both densities of one shape adjacent),
+    // so the dense-wall cross-check needs one search per shape, not row
+    for pair in rows.chunks(2) {
+        assert_eq!(pair[0].shape, pair[1].shape, "rows are point-major");
+        let dense_fits = ipumm::planner::search::search(&IpuArch::gc200(), pair[0].shape).is_ok();
+        for r in pair {
+            if r.spec.is_dense() {
+                if let Some(s) = r.speedup_vs_dense {
+                    assert!((s - 1.0).abs() < 1e-12, "{}: dense speedup {s}", r.label);
+                }
+            } else if let (Some(s), Some(eff), Some(deq)) =
+                (r.speedup_vs_dense, r.effective_tflops, r.dense_equiv_tflops)
+            {
+                assert!(s >= 1.0, "{}: sparsity slowed the model down", r.label);
+                assert!(eff <= deq + 1e-9, "{}: effective above dense-equiv", r.label);
+            }
+            // dense-OOM and sparse-OOM must agree per shape (dense wall)
+            assert_eq!(
+                dense_fits,
+                r.dense_equiv_tflops.is_some(),
+                "{}: sparsity must not move the memory wall",
+                r.label
+            );
+        }
+    }
 }
 
 // ---- cross-cutting ----------------------------------------------------

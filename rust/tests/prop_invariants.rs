@@ -16,6 +16,8 @@ use ipumm::planner::search::search;
 use ipumm::prop_assert;
 use ipumm::serve::{BucketLadder, PlanCache};
 use ipumm::sim::engine::SimEngine;
+use ipumm::sparse::pattern::{PatternKind, SparsitySpec, BLOCK_SIZES};
+use ipumm::sparse::planner::sparse_search_spec;
 use ipumm::util::prop::{check_default, Size};
 use ipumm::util::rng::Rng;
 
@@ -351,6 +353,142 @@ fn prop_bucket_never_smaller_than_request() {
                 "overprovision below 1 for {shape:?}"
             );
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_density_one_reproduces_dense_cost() {
+    // the sparse wrapper's anchor: a fully dense pattern must plan and
+    // price exactly like the dense planner, for every generator kind
+    let arch = IpuArch::gc200();
+    check_default("sparse density 1.0 == dense", |rng, size| {
+        let hi = size.scale(64, 2048);
+        let shape = MmShape::new(
+            rng.gen_usize(8, hi),
+            rng.gen_usize(8, hi),
+            rng.gen_usize(8, hi),
+        );
+        let kind = *rng.choose(&PatternKind::all());
+        let block = *rng.choose(&BLOCK_SIZES);
+        let spec = SparsitySpec::new(kind, block, 1.0, rng.next_u64());
+        match (sparse_search_spec(&arch, shape, spec), search(&arch, shape)) {
+            (Ok(sparse), Ok(dense)) => {
+                prop_assert!(
+                    sparse.cost.total_cycles == dense.cost.total_cycles,
+                    "sparse {} != dense {} for {shape:?} ({kind:?}, b{block})",
+                    sparse.cost.total_cycles,
+                    dense.cost.total_cycles
+                );
+                prop_assert!(
+                    sparse.partition() == dense.partition(),
+                    "partitions diverge for {shape:?}"
+                );
+                prop_assert!(
+                    sparse.effective_flops() == shape.flops(),
+                    "dense pattern must count all flops for {shape:?}"
+                );
+            }
+            (Err(_), Err(_)) => {} // dense wall hits both paths alike
+            _ => prop_assert!(false, "OOM verdicts diverge for {shape:?}"),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_cost_monotone_in_density() {
+    // nested generators (random, banded): lowering the density never
+    // raises the modeled cost, and every sparse plan beats-or-matches
+    // the dense plan it refined from
+    let arch = IpuArch::gc200();
+    check_default("sparse cost monotone in density", |rng, size| {
+        let hi = size.scale(96, 1536);
+        let shape = MmShape::new(
+            rng.gen_usize(16, hi),
+            rng.gen_usize(16, hi),
+            rng.gen_usize(16, hi),
+        );
+        let kind = *rng.choose(&[PatternKind::Random, PatternKind::Banded]);
+        let block = *rng.choose(&BLOCK_SIZES);
+        let seed = rng.next_u64();
+        let mut prev: Option<u64> = None;
+        for density in [0.1, 0.3, 0.6, 1.0] {
+            let spec = SparsitySpec::new(kind, block, density, seed);
+            match sparse_search_spec(&arch, shape, spec) {
+                Ok(plan) => {
+                    prop_assert!(
+                        plan.speedup_vs_dense() >= 1.0 - 1e-12,
+                        "sparsity slowed {shape:?} down at d={density}"
+                    );
+                    if let Some(prev) = prev {
+                        prop_assert!(
+                            prev <= plan.cost.total_cycles,
+                            "cost fell from {prev} to {} as density rose to \
+                             {density} for {shape:?} ({kind:?}, b{block})",
+                            plan.cost.total_cycles
+                        );
+                    }
+                    prev = Some(plan.cost.total_cycles);
+                }
+                Err(_) => return Ok(()), // dense wall: whole ladder OOMs
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_cache_hits_require_equal_fingerprints() {
+    // serving contract: one cache entry per sparsity fingerprint; a hit
+    // returns the memoized plan bit-for-bit, and any spec difference
+    // (kind, block, density, seed) is a distinct entry
+    let arch = IpuArch::gc200();
+    let cache = PlanCache::new(512);
+    check_default("sparse cache keyed by fingerprint", |rng, size| {
+        let hi = size.scale(64, 1024);
+        let shape = MmShape::new(
+            rng.gen_usize(8, hi),
+            rng.gen_usize(8, hi),
+            rng.gen_usize(8, hi),
+        );
+        let spec = SparsitySpec::new(
+            *rng.choose(&PatternKind::all()),
+            *rng.choose(&BLOCK_SIZES),
+            0.05 + 0.95 * rng.next_f64(),
+            rng.gen_range(0, 3),
+        );
+        let before = cache.stats();
+        let cold = cache.get_or_plan_sparse(&arch, shape, spec);
+        let warm = cache.get_or_plan_sparse(&arch, shape, spec);
+        let after = cache.stats();
+        prop_assert!(
+            after.hits >= before.hits + 1,
+            "second identical lookup must hit for {shape:?} {spec:?}"
+        );
+        match (cold, warm) {
+            (Ok(c), Ok(w)) => {
+                prop_assert!(
+                    c.cost.total_cycles == w.cost.total_cycles
+                        && c.partition() == w.partition(),
+                    "hit returned a different plan for {shape:?} {spec:?}"
+                );
+            }
+            (Err(_), Err(_)) => {}
+            _ => prop_assert!(false, "hit and cold verdicts diverge for {shape:?}"),
+        }
+        // a different seed is a different fingerprint: must not hit
+        let other = SparsitySpec { seed: spec.seed + 17, ..spec };
+        prop_assert!(
+            spec.fingerprint() != other.fingerprint(),
+            "fingerprint ignored the seed"
+        );
+        let misses_before = cache.stats().misses;
+        let _ = cache.get_or_plan_sparse(&arch, shape, other);
+        prop_assert!(
+            cache.stats().misses == misses_before + 1,
+            "different fingerprint must miss for {shape:?}"
+        );
         Ok(())
     });
 }
