@@ -6,7 +6,7 @@ fn main() {
     let mut b = Bench::new("memory").with_iters(1, 3);
     let mut rows = None;
     b.run("max_square_both_archs", || {
-        rows = Some(black_box(memory_study::run(&memory_study::default_archs())));
+        rows = Some(black_box(memory_study::run(&memory_study::default_archs(), None)));
     });
     println!("\n{}", memory_study::to_table(&rows.unwrap()).to_ascii());
     b.dump_csv();

@@ -1,22 +1,178 @@
 //! Planner micro-bench (perf target L3): plan-search latency per shape
-//! class. The search runs inside every simulated job, so its latency
-//! bounds sweep throughput.
+//! class, **before vs after** the search fast path. The search runs
+//! inside every simulated job and every serve-layer cold miss, so its
+//! latency bounds sweep throughput and cold-start tail latency.
+//!
+//! The `baseline` module freezes the seed planner (serial, MAC-only
+//! prune, per-iteration candidate allocation, linear max-square ladder of
+//! full searches) so one run records the pre-PR and post-PR numbers side
+//! by side. With `IPUMM_BENCH_JSON=1` the results land in
+//! `BENCH_planner.json`; the `x vs baseline` throughput annotations are
+//! the acceptance figures (>= 5x on `max_fitting_square`, >= 2x on cold
+//! `search` for the 8192-class skewed shapes).
+
 use ipumm::arch::IpuArch;
-use ipumm::planner::{search, MmShape};
+use ipumm::planner::search::{max_fitting_square, search, search_fits};
+use ipumm::planner::MmShape;
 use ipumm::util::bench::{black_box, Bench};
+
+/// The seed planner, re-implemented verbatim against the public cost
+/// model: the in-run "before" reference the speedups are measured from.
+mod baseline {
+    use ipumm::arch::IpuArch;
+    use ipumm::planner::cost::{consts, CostModel, PlanCost};
+    use ipumm::planner::{MmShape, Partition};
+
+    fn div_ceil(a: usize, b: usize) -> usize {
+        a.div_ceil(b)
+    }
+
+    fn axis_candidates(dim: usize, max: usize) -> Vec<usize> {
+        let hi = max.min(dim);
+        let mut out = Vec::new();
+        let mut v = 1usize;
+        while v <= hi {
+            out.push(v);
+            v = if v < 8 {
+                v + 1
+            } else if v < 64 {
+                v + 4
+            } else {
+                v + v / 8
+            };
+        }
+        if !out.contains(&hi) {
+            out.push(hi);
+        }
+        out
+    }
+
+    fn pn_candidates(n: usize, max: usize) -> Vec<usize> {
+        let mut out = vec![1usize];
+        let mut v = 2usize;
+        while v <= max.min(n) {
+            out.push(v);
+            v *= 2;
+        }
+        out
+    }
+
+    /// The seed's `search_with_config` body, default config.
+    pub fn search(arch: &IpuArch, shape: MmShape) -> Option<PlanCost> {
+        let model = CostModel::new(arch);
+        let tiles = arch.tiles;
+        let mut best: Option<PlanCost> = None;
+        let macs = arch.fp32_macs_per_tile_cycle as u64;
+        let total_macs = shape.m as u64 * shape.n as u64 * shape.k as u64;
+        let ideal_pm = ((shape.m as f64 * tiles as f64 / shape.k as f64).sqrt())
+            .round()
+            .max(1.0) as usize;
+        let mut pms = axis_candidates(div_ceil(shape.m, 4), tiles);
+        pms.sort_by_key(|&pm| pm.abs_diff(ideal_pm));
+        for &pm in &pms {
+            let max_pk = tiles / pm;
+            if max_pk == 0 {
+                continue;
+            }
+            let mut pks = axis_candidates(div_ceil(shape.k, 4), max_pk);
+            pks.sort_by_key(|&pk| pk.abs_diff(max_pk));
+            for &pk in &pks {
+                let max_pn = tiles / (pm * pk);
+                for &pn in &pn_candidates(shape.n, max_pn) {
+                    if let Some(b) = &best {
+                        let lower = total_macs / (pm * pn * pk) as u64 / macs;
+                        if lower >= b.total_cycles {
+                            continue;
+                        }
+                    }
+                    let sn = div_ceil(shape.n, pn);
+                    let mut prev_cn = 0usize;
+                    for &cn in &consts::CN_CANDIDATES {
+                        let cn = cn.min(sn);
+                        if cn == prev_cn {
+                            continue;
+                        }
+                        prev_cn = cn;
+                        let part = Partition { pm, pn, pk, cn };
+                        if !part.is_valid(shape, tiles) {
+                            continue;
+                        }
+                        if model.tile_bytes(shape, part) > arch.tile_sram_bytes {
+                            continue;
+                        }
+                        let cost = model.evaluate(shape, part);
+                        let better = match &best {
+                            None => true,
+                            Some(b) => cost.total_cycles < b.total_cycles,
+                        };
+                        if better {
+                            best = Some(cost);
+                        }
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// The seed's linear max-square ladder of full searches.
+    pub fn max_fitting_square(arch: &IpuArch, step: usize, limit: usize) -> usize {
+        let mut best = 0;
+        let mut s = step;
+        while s <= limit {
+            if search(arch, MmShape::square(s)).is_some() {
+                best = s;
+            } else if best > 0 {
+                break;
+            }
+            s += step;
+        }
+        best
+    }
+}
 
 fn main() {
     let arch = IpuArch::gc200();
-    let mut b = Bench::new("planner").with_iters(2, 15);
+    // iteration sizing comes from the shared Bench policy (IPUMM_BENCH_FAST)
+    let mut b = Bench::new("planner");
+
+    // cold search, before vs after, on the paper square and the
+    // 8192-class skewed shapes (the serve bucket ladder's heavy rungs)
     for (name, shape) in [
-        ("squared_1024", MmShape::square(1024)),
         ("squared_3584", MmShape::square(3584)),
-        ("left_skew", MmShape::new(16384, 512, 2048)),
-        ("right_skew", MmShape::new(512, 16384, 2048)),
-        ("oom_probe_6144", MmShape::square(6144)),
+        ("skew_left_8192", MmShape::new(8192, 512, 8192)),
+        ("skew_right_8192", MmShape::new(512, 8192, 8192)),
     ] {
-        b.run(name, || black_box(search(&arch, shape).map(|p| p.cost.total_cycles)));
+        b.run(&format!("search_{name}_baseline"), || {
+            black_box(baseline::search(&arch, shape).map(|c| c.total_cycles))
+        });
+        let before = b.results().last().unwrap().summary.mean;
+        b.run(&format!("search_{name}"), || {
+            black_box(search(&arch, shape).map(|p| p.cost.total_cycles))
+        });
+        let after = b.results().last().unwrap().summary.mean;
+        b.throughput(before / after, "x vs baseline");
     }
+
+    // the §2.4 memory wall: linear ladder of full searches vs bisection
+    // over the fits-only probe
+    b.run("max_fitting_square_baseline", || {
+        black_box(baseline::max_fitting_square(&arch, 128, 8192))
+    });
+    let before = b.results().last().unwrap().summary.mean;
+    b.run("max_fitting_square", || black_box(max_fitting_square(&arch, 128, 8192)));
+    let after = b.results().last().unwrap().summary.mean;
+    b.throughput(before / after, "x vs baseline");
+
+    // OOM probes: full search vs fits-only rejection
+    b.run("oom_probe_6144", || black_box(search(&arch, MmShape::square(6144)).is_ok()));
+    b.run("fits_probe_6144", || black_box(search_fits(&arch, MmShape::square(6144))));
+
+    // search-effort statistic on its own row so the annotation lands on
+    // the benchmark it describes
+    b.run("search_stats_3584", || {
+        black_box(search(&arch, MmShape::square(3584)).unwrap().candidates_evaluated)
+    });
     let evals = search(&arch, MmShape::square(3584)).unwrap().candidates_evaluated;
     b.throughput(evals as f64, "candidates/search");
     b.dump_csv();

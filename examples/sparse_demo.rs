@@ -24,7 +24,8 @@ fn main() {
 
     // -- 1. the density x skew grid (small budget keeps the demo fast) --
     let densities = [1.0, 0.5, 0.25, 0.1];
-    let rows = sparse_sweep::run(&arch, 20, 2, 1024, 8, &densities, PatternKind::Random, 42);
+    let rows =
+        sparse_sweep::run(&arch, 20, 2, 1024, 8, &densities, PatternKind::Random, 42, None);
     println!("{}", sparse_sweep::to_table(&rows).to_ascii());
 
     // -- 2. dense-reproduction gate ------------------------------------

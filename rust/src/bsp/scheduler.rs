@@ -36,6 +36,17 @@ impl<'a> BspEngine<'a> {
                         let v = graph.vertex(vid);
                         per_tile[v.tile] += self.vertex_cycles(&v.kind);
                     }
+                    // replicated groups: every spanned tile carries
+                    // `per_tile` identical vertices, so the sum expands to
+                    // count x per-vertex cycles — bit-identical to the
+                    // per-vertex form
+                    for &gid in &cs.groups {
+                        let g = graph.group(gid);
+                        let cycles = g.per_tile as u64 * self.vertex_cycles(&g.kind);
+                        for tile in g.span.iter() {
+                            per_tile[tile] += cycles;
+                        }
+                    }
                     let active: Vec<u64> =
                         per_tile.iter().copied().filter(|&c| c > 0).collect();
                     let max = active.iter().copied().max().unwrap_or(0);
@@ -181,6 +192,35 @@ mod tests {
         g.set_program(Program::Repeat(4, Box::new(Program::Execute(cs))));
         let four = BspEngine::new(&a).run(&g).total_cycles();
         assert_eq!(four, 4 * once);
+    }
+
+    #[test]
+    fn grouped_vertices_price_identically_to_individual() {
+        use crate::graph::vertex::TileSpan;
+        let a = arch();
+        let kind = VertexKind::AmpMacc { rows: 48, cols: 32, acc: 64 };
+        let re = VertexKind::Rearrange { bytes: 4096 };
+        // individual form: 3 tiles x (2 AmpMacc + 1 Rearrange)
+        let mut gi = Graph::new(a.tiles);
+        let cs = gi.add_compute_set("mm");
+        for tile in 0..3 {
+            gi.add_vertex(cs, kind.clone(), tile, vec![], vec![]);
+            gi.add_vertex(cs, kind.clone(), tile, vec![], vec![]);
+            gi.add_vertex(cs, re.clone(), tile, vec![], vec![]);
+        }
+        gi.set_program(Program::Execute(cs));
+        // grouped form of the same graph
+        let mut gg = Graph::new(a.tiles);
+        let cs = gg.add_compute_set("mm");
+        gg.add_vertex_group(cs, kind, TileSpan::range(0, 3), 2, vec![], vec![]);
+        gg.add_vertex_group(cs, re, TileSpan::range(0, 3), 1, vec![], vec![]);
+        gg.set_program(Program::Execute(cs));
+        let engine = BspEngine::new(&a);
+        let ti = engine.run(&gi);
+        let tg = engine.run(&gg);
+        assert_eq!(ti.total_cycles(), tg.total_cycles());
+        assert_eq!(ti.records[0].active_tiles, tg.records[0].active_tiles);
+        assert!((ti.records[0].tile_balance - tg.records[0].tile_balance).abs() < 1e-15);
     }
 
     #[test]

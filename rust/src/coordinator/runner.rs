@@ -26,38 +26,41 @@ impl Job {
     }
 }
 
-/// Run all jobs across a worker pool; results in submission order.
-///
-/// `workers: None` sizes the pool from [`default_workers`]
-/// (`available_parallelism` minus one) — the single sizing policy shared
-/// by the paper sweeps and the serving layer (`serve::service`). Pass
-/// `Some(n)` only to pin a count (tests, reproducible bench runs).
-pub fn run_jobs(jobs: Vec<Job>, workers: Option<usize>) -> MetricsTable {
+/// Order-preserving parallel map over `items` on the shared worker
+/// policy: `workers: None` sizes the pool from [`default_workers`]. Items
+/// are dealt dynamically (work stealing from one queue); results land in
+/// submission order regardless of scheduling, so any deterministic `f`
+/// yields a deterministic output for every worker count. This is the
+/// §Perf primitive the sweep drivers (`fig4` via [`run_jobs`],
+/// `memory_study`, `sparse_sweep`) plan their grid points through.
+pub fn par_map<T, R, F>(items: Vec<T>, workers: Option<usize>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
     let workers = workers
         .unwrap_or_else(default_workers)
         .max(1)
-        .min(jobs.len().max(1));
-    let n = jobs.len();
+        .min(n.max(1));
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
     let queue = Arc::new(Mutex::new(
-        jobs.into_iter().enumerate().collect::<Vec<(usize, Job)>>(),
+        items.into_iter().enumerate().collect::<Vec<(usize, T)>>(),
     ));
-    let (tx, rx) = mpsc::channel::<(usize, MetricsRecord)>();
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
 
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
+            let f = &f;
             scope.spawn(move || loop {
                 let item = queue.lock().expect("queue poisoned").pop();
-                let Some((idx, job)) = item else { break };
-                let outcome = run_shape(&job.backend, job.shape);
-                let rec = MetricsRecord {
-                    backend: job.backend.name(),
-                    label: job.label,
-                    shape: job.shape,
-                    outcome,
-                };
-                if tx.send((idx, rec)).is_err() {
+                let Some((idx, item)) = item else { break };
+                if tx.send((idx, f(item))).is_err() {
                     break;
                 }
             });
@@ -65,13 +68,34 @@ pub fn run_jobs(jobs: Vec<Job>, workers: Option<usize>) -> MetricsTable {
         drop(tx);
     });
 
-    let mut slots: Vec<Option<MetricsRecord>> = (0..n).map(|_| None).collect();
-    for (idx, rec) in rx {
-        slots[idx] = Some(rec);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (idx, r) in rx {
+        slots[idx] = Some(r);
     }
+    slots
+        .into_iter()
+        .map(|slot| slot.expect("worker dropped an item"))
+        .collect()
+}
+
+/// Run all jobs across a worker pool; results in submission order.
+///
+/// `workers: None` sizes the pool from [`default_workers`]
+/// (`available_parallelism` minus one) — the single sizing policy shared
+/// by the paper sweeps and the serving layer (`serve::service`). Pass
+/// `Some(n)` only to pin a count (tests, reproducible bench runs).
+pub fn run_jobs(jobs: Vec<Job>, workers: Option<usize>) -> MetricsTable {
     let mut table = MetricsTable::default();
-    for slot in slots {
-        table.push(slot.expect("worker dropped a job"));
+    for rec in par_map(jobs, workers, |job: Job| {
+        let outcome = run_shape(&job.backend, job.shape);
+        MetricsRecord {
+            backend: job.backend.name(),
+            label: job.label,
+            shape: job.shape,
+            outcome,
+        }
+    }) {
+        table.push(rec);
     }
     table
 }
@@ -133,5 +157,15 @@ mod tests {
     #[test]
     fn default_workers_is_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn par_map_preserves_order_for_any_worker_count() {
+        let items: Vec<usize> = (0..50).collect();
+        let expect: Vec<usize> = items.iter().map(|i| i * i).collect();
+        for workers in [Some(1), Some(3), Some(8), None] {
+            assert_eq!(par_map(items.clone(), workers, |i| i * i), expect);
+        }
+        assert!(par_map(Vec::<usize>::new(), Some(4), |i: usize| i).is_empty());
     }
 }

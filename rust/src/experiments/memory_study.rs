@@ -7,6 +7,7 @@
 //! is the *overhead* (exchange code, chunk buffers), not tensor bytes.
 
 use crate::arch::IpuArch;
+use crate::coordinator::runner::par_map;
 use crate::planner::partition::MmShape;
 use crate::planner::search::{max_fitting_square, search};
 use crate::util::table::Table;
@@ -25,29 +26,31 @@ pub struct MemoryRow {
     pub peak_fraction: f64,
 }
 
-pub fn run(archs: &[(IpuArch, usize)]) -> Vec<MemoryRow> {
-    archs
-        .iter()
-        .map(|(arch, paper_max)| {
-            let max_square = max_fitting_square(arch, 128, 8192);
-            let shape = MmShape::square(max_square);
-            let plan = search(arch, shape).expect("max square must fit");
-            let tensor_mb = shape.tensor_bytes() as f64 / 1e6;
-            let sram_mb = arch.total_sram_bytes() as f64 / 1e6;
-            MemoryRow {
-                arch_name: arch.name.to_string(),
-                max_square,
-                paper_max_square: *paper_max,
-                tensor_mb,
-                sram_mb,
-                tensor_fraction: tensor_mb / sram_mb,
-                max_tile_fraction: plan.cost.tile_bytes_total as f64
-                    / arch.tile_sram_bytes as f64,
-                tflops_at_max: plan.tflops(arch),
-                peak_fraction: plan.tflops(arch) / arch.peak_fp32_tflops(),
-            }
-        })
-        .collect()
+/// One row per architecture. §Perf: the per-arch walls bisect over the
+/// fits-only probe (see `planner::search::max_fitting_square`) and the
+/// rows are planned in parallel through the shared `run_jobs`/`par_map`
+/// worker policy (`workers: None` = `default_workers`; results stay in
+/// `archs` order for any count).
+pub fn run(archs: &[(IpuArch, usize)], workers: Option<usize>) -> Vec<MemoryRow> {
+    par_map(archs.to_vec(), workers, |(arch, paper_max)| {
+        let max_square = max_fitting_square(&arch, 128, 8192);
+        let shape = MmShape::square(max_square);
+        let plan = search(&arch, shape).expect("max square must fit");
+        let tensor_mb = shape.tensor_bytes() as f64 / 1e6;
+        let sram_mb = arch.total_sram_bytes() as f64 / 1e6;
+        MemoryRow {
+            arch_name: arch.name.to_string(),
+            max_square,
+            paper_max_square: paper_max,
+            tensor_mb,
+            sram_mb,
+            tensor_fraction: tensor_mb / sram_mb,
+            max_tile_fraction: plan.cost.tile_bytes_total as f64
+                / arch.tile_sram_bytes as f64,
+            tflops_at_max: plan.tflops(&arch),
+            peak_fraction: plan.tflops(&arch) / arch.peak_fp32_tflops(),
+        }
+    })
 }
 
 pub fn default_archs() -> Vec<(IpuArch, usize)> {
@@ -87,7 +90,7 @@ mod tests {
 
     #[test]
     fn gc200_wall_matches_paper() {
-        let rows = run(&[(IpuArch::gc200(), 3584)]);
+        let rows = run(&[(IpuArch::gc200(), 3584)], Some(1));
         let r = &rows[0];
         // paper: 3584; accept one 128-step of slack
         assert!(
@@ -105,7 +108,7 @@ mod tests {
 
     #[test]
     fn gc2_wall_matches_jia() {
-        let rows = run(&[(IpuArch::gc2(), 2944)]);
+        let rows = run(&[(IpuArch::gc2(), 2944)], Some(1));
         let r = &rows[0];
         // paper/Jia: 2944 at 60.7% of 31.1 TFlop/s
         assert!(
@@ -115,13 +118,13 @@ mod tests {
         );
         assert!((0.45..=0.75).contains(&r.peak_fraction), "{}", r.peak_fraction);
         // GC2's tensor fraction is higher than GC200's (35% vs 17%)
-        let gc200 = &run(&[(IpuArch::gc200(), 3584)])[0];
+        let gc200 = &run(&[(IpuArch::gc200(), 3584)], Some(1))[0];
         assert!(r.tensor_fraction > gc200.tensor_fraction);
     }
 
     #[test]
     fn table_renders() {
-        let t = to_table(&run(&default_archs()));
+        let t = to_table(&run(&default_archs(), Some(2)));
         assert_eq!(t.n_rows(), 2);
         assert!(t.to_ascii().contains("GC200"));
     }

@@ -11,6 +11,7 @@
 //! Fig. 4 path exactly.
 
 use crate::arch::IpuArch;
+use crate::coordinator::runner::par_map;
 use crate::coordinator::sweep::aspect_ratio_ladder;
 use crate::planner::cost::CostConfig;
 use crate::planner::partition::MmShape;
@@ -46,6 +47,11 @@ pub fn default_densities() -> Vec<f64> {
 /// Run the grid: the Fig. 5 ladder (m*n = 2^`mn_budget_log2`, ratios
 /// 4^i for |i| <= `half_steps`) at fixed `k`, crossed with `densities`,
 /// end-to-end on the simulator (graph build + BSP trace per point).
+///
+/// §Perf: ladder points are independent, so they plan/build/simulate in
+/// parallel through the shared `run_jobs`/`par_map` worker policy
+/// (`workers: None` = `default_workers`; rows stay in ladder x density
+/// order for any worker count).
 #[allow(clippy::too_many_arguments)]
 pub fn run(
     arch: &IpuArch,
@@ -56,53 +62,59 @@ pub fn run(
     densities: &[f64],
     kind: PatternKind,
     seed: u64,
+    workers: Option<usize>,
 ) -> Vec<SparseSweepRow> {
     let engine = SimEngine::new(arch.clone());
-    let mut rows = Vec::new();
-    for point in aspect_ratio_ladder(mn_budget_log2, half_steps, k) {
-        // one dense search per ladder point: the dense winner (and the
-        // OOM verdict) depend only on the shape, so every density on
-        // this point amortizes the same expensive search
-        let dense = search(arch, point.shape).ok();
-        for &density in densities {
-            let spec = SparsitySpec::new(kind, block, density, seed);
-            let row = match &dense {
-                Some(dense_plan) => {
-                    let pattern = BlockPattern::for_shape(spec, point.shape);
-                    let plan = sparse_plan_from_dense(
-                        arch,
-                        point.shape,
-                        &pattern,
-                        CostConfig::default(),
-                        dense_plan.clone(),
-                    );
-                    let report = engine.simulate_sparse_plan(point.shape, plan, &pattern);
-                    SparseSweepRow {
+    let point_rows = par_map(
+        aspect_ratio_ladder(mn_budget_log2, half_steps, k),
+        workers,
+        |point| {
+            // one dense search per ladder point: the dense winner (and the
+            // OOM verdict) depend only on the shape, so every density on
+            // this point amortizes the same expensive search
+            let dense = search(arch, point.shape).ok();
+            let mut rows = Vec::with_capacity(densities.len());
+            for &density in densities {
+                let spec = SparsitySpec::new(kind, block, density, seed);
+                let row = match &dense {
+                    Some(dense_plan) => {
+                        let pattern = BlockPattern::for_shape(spec, point.shape);
+                        let plan = sparse_plan_from_dense(
+                            arch,
+                            point.shape,
+                            &pattern,
+                            CostConfig::default(),
+                            dense_plan.clone(),
+                        );
+                        let report = engine.simulate_sparse_plan(point.shape, plan, &pattern);
+                        SparseSweepRow {
+                            label: point.label(),
+                            shape: point.shape,
+                            spec,
+                            realized_density: report.plan.realized_density,
+                            critical_density: report.plan.cost.critical_density,
+                            dense_equiv_tflops: Some(report.dense_equiv_tflops),
+                            effective_tflops: Some(report.effective_tflops),
+                            speedup_vs_dense: Some(report.plan.speedup_vs_dense()),
+                        }
+                    }
+                    None => SparseSweepRow {
                         label: point.label(),
                         shape: point.shape,
                         spec,
-                        realized_density: report.plan.realized_density,
-                        critical_density: report.plan.cost.critical_density,
-                        dense_equiv_tflops: Some(report.dense_equiv_tflops),
-                        effective_tflops: Some(report.effective_tflops),
-                        speedup_vs_dense: Some(report.plan.speedup_vs_dense()),
-                    }
-                }
-                None => SparseSweepRow {
-                    label: point.label(),
-                    shape: point.shape,
-                    spec,
-                    realized_density: density,
-                    critical_density: 0.0,
-                    dense_equiv_tflops: None,
-                    effective_tflops: None,
-                    speedup_vs_dense: None,
-                },
-            };
-            rows.push(row);
-        }
-    }
-    rows
+                        realized_density: density,
+                        critical_density: 0.0,
+                        dense_equiv_tflops: None,
+                        effective_tflops: None,
+                        speedup_vs_dense: None,
+                    },
+                };
+                rows.push(row);
+            }
+            rows
+        },
+    );
+    point_rows.into_iter().flatten().collect()
 }
 
 /// Best effective TFlop/s at one density across the whole ladder —
@@ -181,7 +193,32 @@ mod tests {
             &[1.0, 0.25],
             PatternKind::Random,
             42,
+            Some(2),
         )
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial() {
+        let serial = run(
+            &IpuArch::gc200(),
+            20,
+            2,
+            1024,
+            8,
+            &[1.0, 0.25],
+            PatternKind::Random,
+            42,
+            Some(1),
+        );
+        let parallel = small_grid();
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.label, p.label);
+            assert_eq!(s.shape, p.shape);
+            assert_eq!(s.spec, p.spec);
+            assert_eq!(s.dense_equiv_tflops, p.dense_equiv_tflops);
+            assert_eq!(s.effective_tflops, p.effective_tflops);
+        }
     }
 
     #[test]

@@ -7,14 +7,24 @@ use anyhow::{bail, Context, Result};
 use crate::exchange::plan::ExchangePlan;
 use crate::graph::program::{ExchangeId, Program, ProgramStep};
 use crate::graph::tensor::{DType, Tensor, TensorId, TileMapping};
-use crate::graph::vertex::{ComputeSet, ComputeSetId, Vertex, VertexId, VertexKind};
+use crate::graph::vertex::{
+    ComputeSet, ComputeSetId, TileSpan, Vertex, VertexGroup, VertexGroupId, VertexId, VertexKind,
+};
 
 /// A complete IPU program graph: data, codelets, exchanges, control.
+///
+/// Vertices come in two forms: individual [`Vertex`] records (irregular
+/// placements, tests) and replicated [`VertexGroup`]s — one record plus a
+/// count per `(kind, span)` class, the §Perf representation the matmul
+/// builders emit so materialization allocates O(supersteps), not
+/// O(tiles x vertices). Census, validation, BSP pricing, and memory
+/// accounting treat both forms identically.
 #[derive(Clone, Debug)]
 pub struct Graph {
     pub tiles: usize,
     tensors: Vec<Tensor>,
     vertices: Vec<Vertex>,
+    groups: Vec<VertexGroup>,
     compute_sets: Vec<ComputeSet>,
     exchanges: Vec<ExchangePlan>,
     pub program: Program,
@@ -26,6 +36,7 @@ impl Graph {
             tiles,
             tensors: Vec::new(),
             vertices: Vec::new(),
+            groups: Vec::new(),
             compute_sets: Vec::new(),
             exchanges: Vec::new(),
             program: Program::Sequence(vec![]),
@@ -52,7 +63,12 @@ impl Graph {
 
     pub fn add_compute_set(&mut self, name: &str) -> ComputeSetId {
         let id = ComputeSetId(self.compute_sets.len() as u32);
-        self.compute_sets.push(ComputeSet { id, name: name.to_string(), vertices: vec![] });
+        self.compute_sets.push(ComputeSet {
+            id,
+            name: name.to_string(),
+            vertices: vec![],
+            groups: vec![],
+        });
         id
     }
 
@@ -67,6 +83,24 @@ impl Graph {
         let id = VertexId(self.vertices.len() as u32);
         self.vertices.push(Vertex { id, kind, tile, inputs, outputs });
         self.compute_sets[cs.0 as usize].vertices.push(id);
+        id
+    }
+
+    /// Add `span.len() * per_tile` identical vertices as one replicated
+    /// record (§Perf: O(1) allocation instead of a per-tile loop).
+    pub fn add_vertex_group(
+        &mut self,
+        cs: ComputeSetId,
+        kind: VertexKind,
+        span: TileSpan,
+        per_tile: usize,
+        inputs: Vec<TensorId>,
+        outputs: Vec<TensorId>,
+    ) -> VertexGroupId {
+        debug_assert!(per_tile >= 1, "vertex group with zero replication");
+        let id = VertexGroupId(self.groups.len() as u32);
+        self.groups.push(VertexGroup { id, kind, span, per_tile, inputs, outputs });
+        self.compute_sets[cs.0 as usize].groups.push(id);
         id
     }
 
@@ -98,6 +132,14 @@ impl Graph {
         &self.vertices
     }
 
+    pub fn group(&self, id: VertexGroupId) -> &VertexGroup {
+        &self.groups[id.0 as usize]
+    }
+
+    pub fn groups(&self) -> &[VertexGroup] {
+        &self.groups
+    }
+
     pub fn compute_set(&self, id: ComputeSetId) -> &ComputeSet {
         &self.compute_sets[id.0 as usize]
     }
@@ -106,21 +148,26 @@ impl Graph {
         &self.exchanges[id.0 as usize]
     }
 
+    /// Total vertex count, expanding replicated groups.
     pub fn n_vertices(&self) -> usize {
-        self.vertices.len()
+        self.vertices.len() + self.groups.iter().map(|g| g.count()).sum::<usize>()
     }
 
     /// Vertex census by codelet family — the PopVision statistic behind
-    /// the paper's Finding 2.
+    /// the paper's Finding 2. Replicated groups expand arithmetically.
     pub fn vertex_census(&self) -> BTreeMap<&'static str, usize> {
         let mut census = BTreeMap::new();
         for v in &self.vertices {
             *census.entry(v.kind.family()).or_insert(0) += 1;
         }
+        for g in &self.groups {
+            *census.entry(g.kind.family()).or_insert(0) += g.count();
+        }
         census
     }
 
-    /// Vertices resident on each tile (state bytes live in tile memory).
+    /// *Individual* vertices resident on a tile (replicated groups are
+    /// not expanded here — use `groups()` for the grouped form).
     pub fn vertices_on_tile(&self, tile: usize) -> impl Iterator<Item = &Vertex> {
         self.vertices.iter().filter(move |v| v.tile == tile)
     }
@@ -147,6 +194,21 @@ impl Graph {
             for t in v.inputs.iter().chain(&v.outputs) {
                 if t.0 as usize >= self.tensors.len() {
                     bail!("vertex {:?} references missing tensor {:?}", v.id, t);
+                }
+            }
+        }
+        for g in &self.groups {
+            if let Some(max) = g.span.max_tile() {
+                if max >= self.tiles {
+                    bail!("group {:?} spans tile {} >= {}", g.id, max, self.tiles);
+                }
+            }
+            if g.per_tile == 0 {
+                bail!("group {:?} has zero replication", g.id);
+            }
+            for t in g.inputs.iter().chain(&g.outputs) {
+                if t.0 as usize >= self.tensors.len() {
+                    bail!("group {:?} references missing tensor {:?}", g.id, t);
                 }
             }
         }
@@ -259,5 +321,64 @@ mod tests {
         let g = tiny_graph();
         assert_eq!(g.vertices_on_tile(0).count(), 1);
         assert_eq!(g.vertices_on_tile(1).count(), 0);
+    }
+
+    #[test]
+    fn vertex_groups_expand_in_census_and_counts() {
+        let mut g = tiny_graph();
+        let cs = g.add_compute_set("grouped");
+        g.add_vertex_group(
+            cs,
+            VertexKind::Zero { elems: 4 },
+            TileSpan::range(0, 3),
+            2,
+            vec![],
+            vec![],
+        );
+        g.add_vertex_group(
+            cs,
+            VertexKind::Reduce { inputs: 2, width: 8 },
+            TileSpan::List(vec![1, 3]),
+            5,
+            vec![],
+            vec![],
+        );
+        // 1 individual AmpMacc + 3*2 Zero + 2*5 Reduce
+        assert_eq!(g.n_vertices(), 1 + 6 + 10);
+        let census = g.vertex_census();
+        assert_eq!(census.get("Zero"), Some(&6));
+        assert_eq!(census.get("Reduce"), Some(&10));
+        assert_eq!(g.compute_set(cs).groups.len(), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn group_on_invalid_tile_rejected() {
+        let mut g = tiny_graph();
+        let cs = g.add_compute_set("bad");
+        g.add_vertex_group(
+            cs,
+            VertexKind::Zero { elems: 1 },
+            TileSpan::range(2, 99),
+            1,
+            vec![],
+            vec![],
+        );
+        assert!(g.validate().unwrap_err().to_string().contains("spans tile 98"));
+    }
+
+    #[test]
+    fn group_with_missing_tensor_rejected() {
+        let mut g = tiny_graph();
+        let cs = g.add_compute_set("bad");
+        g.add_vertex_group(
+            cs,
+            VertexKind::Zero { elems: 1 },
+            TileSpan::range(0, 1),
+            1,
+            vec![TensorId(42)],
+            vec![],
+        );
+        assert!(g.validate().is_err());
     }
 }

@@ -106,12 +106,108 @@ pub struct Vertex {
     pub outputs: Vec<TensorId>,
 }
 
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VertexGroupId(pub u32);
+
+/// Tiles a replicated vertex group spans: a contiguous range for the
+/// planner's dense compute sets, or an explicit list for scattered
+/// placements (reducer tiles).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TileSpan {
+    /// Tiles `start..end` (half-open).
+    Range { start: usize, end: usize },
+    /// Explicit tiles, in placement order.
+    List(Vec<usize>),
+}
+
+impl TileSpan {
+    pub fn range(start: usize, end: usize) -> TileSpan {
+        debug_assert!(start <= end, "inverted tile range {start}..{end}");
+        TileSpan::Range { start, end }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TileSpan::Range { start, end } => end.saturating_sub(*start),
+            TileSpan::List(tiles) => tiles.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Largest tile index spanned (bounds checks in `Graph::validate`).
+    pub fn max_tile(&self) -> Option<usize> {
+        match self {
+            TileSpan::Range { start, end } => {
+                if end > start {
+                    Some(end - 1)
+                } else {
+                    None
+                }
+            }
+            TileSpan::List(tiles) => tiles.iter().copied().max(),
+        }
+    }
+
+    pub fn iter(&self) -> TileSpanIter<'_> {
+        match self {
+            TileSpan::Range { start, end } => TileSpanIter::Range(*start..*end),
+            TileSpan::List(tiles) => TileSpanIter::List(tiles.iter()),
+        }
+    }
+}
+
+/// Iterator over a [`TileSpan`]'s tiles (no allocation for ranges).
+pub enum TileSpanIter<'a> {
+    Range(std::ops::Range<usize>),
+    List(std::slice::Iter<'a, usize>),
+}
+
+impl Iterator for TileSpanIter<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        match self {
+            TileSpanIter::Range(r) => r.next(),
+            TileSpanIter::List(it) => it.next().copied(),
+        }
+    }
+}
+
+/// A replicated vertex group: one record standing for
+/// `span.len() * per_tile` identical vertices. §Perf: graph
+/// materialization allocates O(groups), not O(tiles x vertices); the
+/// census, BSP pricing, and memory accounting expand the replication
+/// arithmetically (every spanned tile carries `per_tile` copies of
+/// `kind`), so grouped and per-vertex graphs price bit-identically.
+#[derive(Clone, Debug)]
+pub struct VertexGroup {
+    pub id: VertexGroupId,
+    pub kind: VertexKind,
+    pub span: TileSpan,
+    /// Identical vertices per spanned tile.
+    pub per_tile: usize,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+}
+
+impl VertexGroup {
+    /// Vertices this group stands for.
+    pub fn count(&self) -> usize {
+        self.span.len() * self.per_tile
+    }
+}
+
 /// Vertices that execute together in one BSP compute phase.
 #[derive(Clone, Debug)]
 pub struct ComputeSet {
     pub id: ComputeSetId,
     pub name: String,
     pub vertices: Vec<VertexId>,
+    /// Replicated vertex groups executing in this phase.
+    pub groups: Vec<VertexGroupId>,
 }
 
 #[cfg(test)]
@@ -186,5 +282,33 @@ mod tests {
         let z = VertexKind::Zero { elems: 64 }.cycles(16);
         let c = VertexKind::Cast { elems: 64 }.cycles(16);
         assert!(z < c);
+    }
+
+    #[test]
+    fn tile_span_range_and_list_agree() {
+        let r = TileSpan::range(3, 7);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.iter().collect::<Vec<_>>(), vec![3, 4, 5, 6]);
+        assert_eq!(r.max_tile(), Some(6));
+        let l = TileSpan::List(vec![9, 2, 5]);
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![9, 2, 5]);
+        assert_eq!(l.max_tile(), Some(9));
+        let empty = TileSpan::range(4, 4);
+        assert!(empty.is_empty());
+        assert_eq!(empty.max_tile(), None);
+    }
+
+    #[test]
+    fn group_count_is_span_times_replication() {
+        let g = VertexGroup {
+            id: VertexGroupId(0),
+            kind: VertexKind::Zero { elems: 1 },
+            span: TileSpan::range(0, 10),
+            per_tile: 3,
+            inputs: vec![],
+            outputs: vec![],
+        };
+        assert_eq!(g.count(), 30);
     }
 }

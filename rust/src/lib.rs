@@ -3,7 +3,7 @@
 //! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
 //! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
 //!
-//! The crate has five roles (see DESIGN.md):
+//! The crate has six roles (see DESIGN.md):
 //!
 //! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
 //!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
@@ -35,7 +35,24 @@
 //!    `(shape, arch fingerprint)` the way PopLibs memoizes its planner in
 //!    production; and a bounded queue with batch coalescing
 //!    (`serve::queue`) feeds multi-backend dispatch (`serve::service`)
-//!    with per-bucket telemetry (`serve::telemetry`).
+//!    with per-bucket, per-sparsity telemetry (`serve::telemetry`).
+//! 6. **Performance fast path** — the plan→build→simulate hot path is
+//!    engineered for sweep- and serving-scale traffic without giving up
+//!    determinism: `planner::search` shards its `pm` candidate stripes
+//!    across scoped threads behind a shared atomic incumbent and a
+//!    certified grid lower bound (`CostModel::grid_lower_bound`), so any
+//!    worker count returns a bit-identical plan; `search_fits` answers
+//!    feasibility without the cycle model and `max_fitting_square`
+//!    bisects the §2.4 wall over it; graph materialization emits
+//!    replicated vertex groups (`graph::vertex::VertexGroup`) — one
+//!    record per (kind, tile-span) class — that the BSP engine, census,
+//!    and memory accountant expand arithmetically; sweep drivers fan
+//!    grid points over `coordinator::runner::par_map`; and the serve
+//!    plan cache shards its lock N-way by key hash. `benches/
+//!    bench_planner.rs` freezes the seed planner as an in-run baseline
+//!    and records before/after numbers to `BENCH_planner.json`
+//!    (`IPUMM_BENCH_JSON=1`); see README "Performance" for how to read
+//!    them and the worker policies (`IPUMM_SEARCH_WORKERS`, `--workers`).
 //!
 //! [`coordinator`] orchestrates benchmark jobs across these backends, and
 //! [`experiments`] regenerates each of the paper's tables and figures.

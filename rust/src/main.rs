@@ -176,8 +176,8 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
             println!("{}", vertices::to_table(&rows).to_ascii());
         }
         "memory" => {
-            let (_, _, _, _) = parse_common(raw)?;
-            let rows = memory_study::run(&memory_study::default_archs());
+            let (_, _, _, workers) = parse_common(raw)?;
+            let rows = memory_study::run(&memory_study::default_archs(), workers);
             println!("{}", memory_study::to_table(&rows).to_ascii());
         }
         "phases" => {
@@ -319,7 +319,7 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
             write_csv(&args, report.metrics.to_csv())?;
         }
         "sparse" => {
-            let (args, arch, _, _) = parse_common(raw)?;
+            let (args, arch, _, workers) = parse_common(raw)?;
             let k = args.opt_usize("k", 2048)?;
             let block = args.opt_usize("block", 8)?;
             anyhow::ensure!(
@@ -335,7 +335,7 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 .map(|s| s.trim().parse().context("bad --densities"))
                 .collect::<Result<_>>()?;
             let seed = args.opt_usize("seed", 42)? as u64;
-            let rows = sparse_sweep::run(&arch, 22, 4, k, block, &densities, kind, seed);
+            let rows = sparse_sweep::run(&arch, 22, 4, k, block, &densities, kind, seed, workers);
             println!("{}", sparse_sweep::to_table(&rows).to_ascii());
             for &d in &densities {
                 let permille = ((d * 1000.0).round() as i64).clamp(1, 1000) as u32;

@@ -105,13 +105,23 @@ impl<'a> MemoryAccountant<'a> {
 
         // vertex state + codelet code per family present
         let mut families_on_tile: Vec<Vec<&'static str>> = vec![Vec::new(); tiles];
+        let mut charge = |tile: usize, state: u64, fam: &'static str, mems: &mut Vec<TileMemory>| {
+            mems[tile].alloc_unchecked(RegionKind::VertexState, state);
+            if !families_on_tile[tile].contains(&fam) {
+                families_on_tile[tile].push(fam);
+                mems[tile].alloc_unchecked(RegionKind::VertexCode, overheads::CODE_BYTES_PER_FAMILY);
+            }
+        };
         for v in graph.vertices() {
-            mems[v.tile].alloc_unchecked(RegionKind::VertexState, v.kind.state_bytes() as u64);
-            let fam = v.kind.family();
-            if !families_on_tile[v.tile].contains(&fam) {
-                families_on_tile[v.tile].push(fam);
-                mems[v.tile]
-                    .alloc_unchecked(RegionKind::VertexCode, overheads::CODE_BYTES_PER_FAMILY);
+            charge(v.tile, v.kind.state_bytes() as u64, v.kind.family(), &mut mems);
+        }
+        // replicated groups expand arithmetically: each spanned tile holds
+        // `per_tile` copies of the state and one family-code charge
+        for g in graph.groups() {
+            let state = g.per_tile as u64 * g.kind.state_bytes() as u64;
+            let fam = g.kind.family();
+            for tile in g.span.iter() {
+                charge(tile, state, fam, &mut mems);
             }
         }
 
@@ -231,6 +241,39 @@ mod tests {
             VertexKind::BlockSparseMm { block: 8, nz_blocks: 100 }.state_bytes() as u64
         );
         assert_eq!(tile3.region(RegionKind::VertexCode), overheads::CODE_BYTES_PER_FAMILY);
+    }
+
+    #[test]
+    fn grouped_vertices_account_identically_to_individual() {
+        use crate::graph::vertex::TileSpan;
+        let a = arch();
+        let zero = VertexKind::Zero { elems: 8 };
+        let reduce = VertexKind::Reduce { inputs: 4, width: 40 };
+        let mut gi = Graph::new(a.tiles);
+        let cs = gi.add_compute_set("c");
+        for tile in 2..6 {
+            for _ in 0..3 {
+                gi.add_vertex(cs, zero.clone(), tile, vec![], vec![]);
+            }
+            gi.add_vertex(cs, reduce.clone(), tile, vec![], vec![]);
+        }
+        let mut gg = Graph::new(a.tiles);
+        let cs = gg.add_compute_set("c");
+        gg.add_vertex_group(cs, zero, TileSpan::range(2, 6), 3, vec![], vec![]);
+        gg.add_vertex_group(cs, reduce, TileSpan::List(vec![2, 3, 4, 5]), 1, vec![], vec![]);
+        let acct = MemoryAccountant::new(&a);
+        let ri = acct.account(&gi);
+        let rg = acct.account(&gg);
+        assert_eq!(ri.max_tile_used, rg.max_tile_used);
+        assert_eq!(ri.total_used, rg.total_used);
+        assert_eq!(
+            ri.region_total(RegionKind::VertexState),
+            rg.region_total(RegionKind::VertexState)
+        );
+        assert_eq!(
+            ri.region_total(RegionKind::VertexCode),
+            rg.region_total(RegionKind::VertexCode)
+        );
     }
 
     #[test]

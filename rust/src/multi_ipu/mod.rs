@@ -10,7 +10,7 @@
 
 use crate::arch::IpuArch;
 use crate::planner::partition::MmShape;
-use crate::planner::search::{search, PlannerError};
+use crate::planner::search::{bisect_max_fitting, search, search_fits, PlannerError};
 
 #[derive(Clone, Copy, Debug)]
 pub struct MultiIpuReport {
@@ -74,19 +74,14 @@ impl MultiIpu {
     }
 
     /// Largest fitting square across the pod (the §6 "maximum processable
-    /// matrices" improvement), at `step` granularity.
+    /// matrices" improvement), at `step` granularity. §Perf: a pod square
+    /// fits iff its k-shard clears the single-chip wall, so this bisects
+    /// over the fits-only probe like `planner::search::max_fitting_square`.
     pub fn max_fitting_square(&self, step: usize, limit: usize) -> usize {
-        let mut best = 0;
-        let mut s = step;
-        while s <= limit {
-            if self.simulate_mm(MmShape::square(s)).is_ok() {
-                best = s;
-            } else if best > 0 {
-                break;
-            }
-            s += step;
-        }
-        best
+        bisect_max_fitting(step, limit, |s| {
+            let k_shard = s.div_ceil(self.chips).max(1);
+            search_fits(&self.arch, MmShape::new(s, s, k_shard))
+        })
     }
 }
 

@@ -303,6 +303,64 @@ impl<'a> CostModel<'a> {
             + consts::FIXED_TILE_OVERHEAD_BYTES
     }
 
+    /// Certified lower bound on `evaluate(shape, {pm, pn, pk, cn}).total_cycles`
+    /// over *every* legal chunk size `cn` — the §Perf pruning bound the
+    /// search compares against its incumbent. Only cn-independent floors
+    /// are counted: exact (unquantized) MAC work, total chunk traffic over
+    /// the congested port, the per-step exchange setup at the minimum step
+    /// count, the prologue scatter, the sync floor, the C-cast epilogue,
+    /// and the reduction-stage entry for pn > 1. Floor-division slack is
+    /// compensated by subtracting one cycle per possible superstep, so the
+    /// bound is strictly below every priced candidate: pruning on
+    /// `bound > incumbent` can never discard a candidate tied with the
+    /// winner, which is what keeps serial and parallel searches
+    /// bit-identical.
+    pub fn grid_lower_bound(&self, shape: MmShape, pm: usize, pn: usize, pk: usize) -> u64 {
+        let part = Partition { pm, pn, pk, cn: 1 };
+        let (sm, sn, sk) = part.sub_block(shape);
+        let tiles_used = pm * pn * pk;
+        let macs = self.macs().max(1) as u64;
+        // superstep-count envelope over the cn ladder
+        let max_cn = consts::CN_CANDIDATES[consts::CN_CANDIDATES.len() - 1].min(sn).max(1);
+        let min_cn = consts::CN_CANDIDATES[0].min(sn).max(1);
+        let min_steps = sn.div_ceil(max_cn) as u64;
+        let max_steps = sn.div_ceil(min_cn) as u64;
+        // exact MAC floor (quantization and vertex overhead only add),
+        // minus one cycle per step for the per-step integer division
+        let mac_cycles =
+            ((sm as u64 * sn as u64 * sk as u64) / macs).saturating_sub(max_steps);
+        // chunk traffic: total bytes are cn-independent; sum-of-ceils >=
+        // ceil-of-sum, minus one cycle of f64 slack
+        let eb = self.eb();
+        let chunk_bytes = (sm + sk) as u64 * sn as u64 * eb;
+        let port = self.arch.exchange_bytes_per_tile_cycle * self.congestion(tiles_used);
+        let chunk_exchange = min_steps * consts::EXCHANGE_SETUP_CYCLES
+            + ((chunk_bytes as f64 / port).ceil() as u64).saturating_sub(1);
+        // prologue scatter + syncs, exactly as `evaluate` prices them
+        let ab_bytes =
+            eb * (shape.m as u64 * shape.n as u64 + shape.n as u64 * shape.k as u64);
+        let prologue =
+            self.exchange_cycles(ab_bytes / tiles_used.max(1) as u64, tiles_used);
+        let mut sync_cycles =
+            consts::SYNCS_PER_STEP * self.arch.sync_cycles * min_steps + self.arch.sync_cycles;
+        let mut reduction = 0u64;
+        if pn > 1 {
+            sync_cycles += consts::SYNCS_PER_STEP * self.arch.sync_cycles;
+            if self.config.reduce_stage_penalty {
+                reduction += consts::REDUCE_STAGE_SETUP_CYCLES
+                    + (pn as u64 - 1) * consts::REDUCE_STAGE_PER_SPLIT_CYCLES;
+            }
+            let landing = (pn as u64 - 1) * (sm * sk * 4) as u64;
+            reduction += self.exchange_cycles(landing, tiles_used);
+        }
+        let cast = if self.config.c_cast_epilogue {
+            (sm * sk) as u64 * consts::C_CAST_CYCLES_PER_ELEM
+        } else {
+            0
+        };
+        mac_cycles + chunk_exchange + prologue + sync_cycles + reduction + cast
+    }
+
     /// Price one candidate partition for `shape`.
     pub fn evaluate(&self, shape: MmShape, part: Partition) -> PlanCost {
         debug_assert!(part.is_valid(shape, self.arch.tiles));
@@ -534,6 +592,39 @@ mod tests {
         let (shape, part) = paper_3584_plan();
         let c = gc200_cost(shape, part);
         assert!(c.bytes_moved >= 2 * 3584 * 3584 * 4);
+    }
+
+    #[test]
+    fn grid_lower_bound_strictly_below_every_priced_candidate() {
+        // the search prunes on `bound > incumbent`, which is only sound if
+        // the bound sits strictly below evaluate() for every cn on the grid
+        let arch = IpuArch::gc200();
+        for config in [CostConfig::default(), CostConfig::without(Mechanism::VertexOverhead)] {
+            let model = CostModel::with_config(&arch, config);
+            for shape in [
+                MmShape::square(3584),
+                MmShape::square(96),
+                MmShape::new(512, 16384, 2048),
+                MmShape::new(8192, 512, 2048),
+                MmShape::new(7, 3, 5),
+            ] {
+                for (pm, pn, pk) in [(1, 1, 1), (40, 1, 36), (8, 4, 44), (3, 2, 5)] {
+                    let bound = model.grid_lower_bound(shape, pm, pn, pk);
+                    for cn in consts::CN_CANDIDATES {
+                        let part = Partition { pm, pn, pk, cn };
+                        if !part.is_valid(shape, arch.tiles) {
+                            continue;
+                        }
+                        let c = model.evaluate(shape, part);
+                        assert!(
+                            bound < c.total_cycles,
+                            "bound {bound} >= total {} for {shape:?} {part:?}",
+                            c.total_cycles
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -18,4 +18,6 @@ pub mod search;
 
 pub use cost::{CostModel, PlanCost};
 pub use partition::{MmShape, Partition};
-pub use search::{search, Plan, PlannerError};
+pub use search::{
+    max_fitting_square, search, search_fits, search_with_workers, Plan, PlannerError,
+};

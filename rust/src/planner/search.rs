@@ -3,6 +3,34 @@
 //! Mirrors the PopLibs planner: exhaustive search over a pruned partition
 //! space against the cost model. Failure to find *any* fitting plan is the
 //! "Out of memory" a Poplar user hits past the 3584^2 wall.
+//!
+//! ## §Perf — the search fast path
+//!
+//! The search is the hot path of every sweep and of a serve-layer cold
+//! miss, so it is engineered for speed without giving up determinism:
+//!
+//! * **Hoisted candidate ladders** — the `pm`/`pk`/`pn` candidate vectors
+//!   are built once per search ([`CandidateSpace`]), not re-allocated in
+//!   the inner loops; `pk` ladders are cached per `max_pk` value and the
+//!   `pn` ladder is a shared prefix-sliced vector.
+//! * **Certified grid pruning** — each `(pm, pn, pk)` grid is bounded by
+//!   [`CostModel::grid_lower_bound`], a cn-independent floor that sits
+//!   strictly below every priced candidate; grids that cannot beat the
+//!   incumbent skip pricing entirely.
+//! * **Parallel sharding** — `pm` candidates are dealt dynamically to
+//!   `std::thread::scope` workers sharing the incumbent bound through one
+//!   `AtomicU64`, so the prune works across threads. Because the bound is
+//!   strict, pruning can never discard a candidate tied with the winner,
+//!   and the merge picks the minimum by `(total_cycles, enumeration
+//!   rank)`: **any worker count returns a bit-identical plan** (see
+//!   `parallel_search_matches_serial_on_random_shapes`).
+//! * **Fits-only mode** — [`search_fits`] answers "does anything fit?"
+//!   without the cycle model, and [`max_fitting_square`] bisects over it
+//!   instead of walking a linear ladder of full searches
+//!   ([`max_fitting_square_linear`] keeps the reference implementation).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::arch::IpuArch;
 use crate::planner::cost::{consts, CostConfig, CostModel, PlanCost};
@@ -14,7 +42,10 @@ use crate::util::units::div_ceil;
 pub struct Plan {
     pub shape: MmShape,
     pub cost: PlanCost,
-    /// Candidates priced (search-effort statistic for the perf benches).
+    /// Valid candidates enumerated (search-effort statistic for the perf
+    /// benches). Counted before pruning, so the figure is a deterministic
+    /// function of `(arch, shape, config)` — identical for any worker
+    /// count, which is what lets cached plans replay search statistics.
     pub candidates_evaluated: usize,
 }
 
@@ -83,6 +114,140 @@ fn pn_candidates(n: usize, max: usize) -> Vec<usize> {
     out
 }
 
+/// The candidate space of one search, precomputed so the hot loops do no
+/// allocation (§Perf: the seed rebuilt the `pk` ladder per `pm` and the
+/// `pn` ladder per `(pm, pk)` pair).
+struct CandidateSpace {
+    /// `pm` candidates, sorted by distance to the balanced grid so a
+    /// strong incumbent is found early and the lower-bound prune cuts the
+    /// rest.
+    pms: Vec<usize>,
+    /// `pk` ladder per distinct `max_pk = tiles / pm` value, sorted by
+    /// distance to `max_pk`.
+    pks_by_max: HashMap<usize, Vec<usize>>,
+    /// Shared ascending `pn` ladder; per-grid candidates are a prefix.
+    pn_ladder: Vec<usize>,
+}
+
+impl CandidateSpace {
+    fn new(shape: MmShape, tiles: usize) -> CandidateSpace {
+        // pm/pk need at least 4 rows/cols per tile to be worth a split
+        let ideal_pm = ((shape.m as f64 * tiles as f64 / shape.k as f64).sqrt())
+            .round()
+            .max(1.0) as usize;
+        let mut pms = axis_candidates(div_ceil(shape.m, 4), tiles);
+        pms.sort_by_key(|&pm| pm.abs_diff(ideal_pm));
+        let mut pks_by_max: HashMap<usize, Vec<usize>> = HashMap::new();
+        for &pm in &pms {
+            let max_pk = tiles / pm;
+            if max_pk == 0 {
+                continue;
+            }
+            pks_by_max.entry(max_pk).or_insert_with(|| {
+                let mut pks = axis_candidates(div_ceil(shape.k, 4), max_pk);
+                pks.sort_by_key(|&pk| pk.abs_diff(max_pk));
+                pks
+            });
+        }
+        CandidateSpace { pms, pks_by_max, pn_ladder: pn_candidates(shape.n, tiles) }
+    }
+
+    /// `pn` candidates legal under `max_pn`: a prefix of the shared ladder.
+    fn pns(&self, max_pn: usize) -> &[usize] {
+        let end = self.pn_ladder.partition_point(|&v| v <= max_pn);
+        &self.pn_ladder[..end]
+    }
+}
+
+/// Global enumeration rank of a candidate — the serial visit order. Ties
+/// on `total_cycles` resolve to the smallest rank, reproducing the serial
+/// first-found-wins incumbent rule under any worker count.
+fn candidate_rank(pm_idx: usize, pk_idx: usize, pn_idx: usize, cn_idx: usize) -> u64 {
+    debug_assert!(pm_idx < 1 << 16 && pk_idx < 1 << 16 && pn_idx < 1 << 8 && cn_idx < 1 << 4);
+    ((pm_idx as u64) << 28) | ((pk_idx as u64) << 12) | ((pn_idx as u64) << 4) | cn_idx as u64
+}
+
+/// Search one `pm` stripe of the candidate space. Shared between the
+/// serial and parallel paths; `incumbent` carries the best total seen by
+/// *any* stripe so the grid prune works across threads.
+fn search_pm_stripe(
+    model: &CostModel,
+    shape: MmShape,
+    space: &CandidateSpace,
+    pm_idx: usize,
+    incumbent: &AtomicU64,
+    best: &mut Option<(PlanCost, u64)>,
+    evaluated: &mut usize,
+) {
+    let tiles = model.arch.tiles;
+    let pm = space.pms[pm_idx];
+    let max_pk = tiles / pm;
+    if max_pk == 0 {
+        return;
+    }
+    let pks = &space.pks_by_max[&max_pk];
+    for (pk_idx, &pk) in pks.iter().enumerate() {
+        let max_pn = tiles / (pm * pk);
+        for (pn_idx, &pn) in space.pns(max_pn).iter().enumerate() {
+            // §Perf pruning: a cn-independent certified floor vs the
+            // shared incumbent. The bound is strictly below every priced
+            // candidate, so `>` can never discard a tie with the winner —
+            // serial and parallel searches stay bit-identical.
+            let bound_vs = incumbent.load(Ordering::Relaxed);
+            let pruned = bound_vs != u64::MAX
+                && model.grid_lower_bound(shape, pm, pn, pk) > bound_vs;
+            let sn = div_ceil(shape.n, pn);
+            let mut prev_cn = 0usize;
+            for (cn_idx, &cn) in consts::CN_CANDIDATES.iter().enumerate() {
+                let cn = cn.min(sn);
+                if cn == prev_cn {
+                    continue; // clamped duplicate of the last candidate
+                }
+                prev_cn = cn;
+                let part = Partition { pm, pn, pk, cn };
+                if !part.is_valid(shape, tiles) {
+                    continue;
+                }
+                // counted before pruning: the statistic stays deterministic
+                *evaluated += 1;
+                if pruned {
+                    continue;
+                }
+                // memory-first rejection: skip the cycle model when the
+                // candidate cannot fit a tile (§Perf)
+                if model.tile_bytes(shape, part) > model.arch.tile_sram_bytes {
+                    continue;
+                }
+                let cost = model.evaluate(shape, part);
+                debug_assert!(cost.fits);
+                let rank = candidate_rank(pm_idx, pk_idx, pn_idx, cn_idx);
+                let replace = match best {
+                    None => true,
+                    Some((b, r)) => (cost.total_cycles, rank) < (b.total_cycles, *r),
+                };
+                if replace {
+                    *best = Some((cost, rank));
+                    incumbent.fetch_min(cost.total_cycles, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Worker threads for one search: the whole machine. Unlike
+/// `coordinator::runner::default_workers` there is no collector thread to
+/// reserve a core for — the search *is* the critical path. Override with
+/// `IPUMM_SEARCH_WORKERS` (1 forces the serial path).
+pub fn search_workers() -> usize {
+    std::env::var("IPUMM_SEARCH_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+}
+
 /// Find the fastest fitting plan for `shape` on `arch` (full model).
 pub fn search(arch: &IpuArch, shape: MmShape) -> Result<Plan, PlannerError> {
     search_with_config(arch, shape, CostConfig::default())
@@ -94,85 +259,201 @@ pub fn search_with_config(
     shape: MmShape,
     config: CostConfig,
 ) -> Result<Plan, PlannerError> {
-    let model = CostModel::with_config(arch, config);
-    let tiles = arch.tiles;
-    let mut best: Option<PlanCost> = None;
-    let mut evaluated = 0usize;
+    search_with_workers(arch, shape, config, search_workers())
+}
 
-    // pm/pk need at least 4 rows/cols per tile to be worth a split
-    let macs = arch.fp32_macs_per_tile_cycle as u64;
-    let total_macs = shape.m as u64 * shape.n as u64 * shape.k as u64;
-    // §Perf ordering: visit pm near the balanced grid first so a strong
-    // incumbent is found early and the lower-bound prune cuts the rest
-    let ideal_pm = ((shape.m as f64 * tiles as f64 / shape.k as f64).sqrt())
-        .round()
-        .max(1.0) as usize;
-    let mut pms = axis_candidates(div_ceil(shape.m, 4), tiles);
-    pms.sort_by_key(|&pm| pm.abs_diff(ideal_pm));
-    for &pm in &pms {
+/// Below this many `pm` stripes the search stays serial even when more
+/// workers are requested: spawning scoped threads costs on the order of
+/// a whole small-shape search, and the result is bit-identical either
+/// way (small serve buckets and nested sweep points hit this).
+const PARALLEL_MIN_PMS: usize = 16;
+
+/// [`search_with_config`] with an explicit worker count. Any count
+/// returns a bit-identical [`Plan`] (partition, cycles, statistics) —
+/// pass 1 to pin the serial path for baselines (shapes with fewer than
+/// [`PARALLEL_MIN_PMS`] `pm` stripes run serially regardless).
+pub fn search_with_workers(
+    arch: &IpuArch,
+    shape: MmShape,
+    config: CostConfig,
+    workers: usize,
+) -> Result<Plan, PlannerError> {
+    let model = CostModel::with_config(arch, config);
+    let space = CandidateSpace::new(shape, arch.tiles);
+    let n_pms = space.pms.len();
+    let workers = if n_pms < PARALLEL_MIN_PMS {
+        1
+    } else {
+        workers.max(1).min(n_pms)
+    };
+    let incumbent = AtomicU64::new(u64::MAX);
+
+    let (best, evaluated) = if workers <= 1 {
+        let mut best = None;
+        let mut evaluated = 0usize;
+        for pm_idx in 0..n_pms {
+            search_pm_stripe(&model, shape, &space, pm_idx, &incumbent, &mut best, &mut evaluated);
+        }
+        (best, evaluated)
+    } else {
+        // deal pm stripes dynamically for balance; every worker sees the
+        // near-ideal stripes early, so the shared incumbent tightens fast
+        let next_pm = AtomicUsize::new(0);
+        let stripe_results: Vec<(Option<(PlanCost, u64)>, usize)> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|_| {
+                        let model = &model;
+                        let space = &space;
+                        let incumbent = &incumbent;
+                        let next_pm = &next_pm;
+                        scope.spawn(move || {
+                            let mut best = None;
+                            let mut evaluated = 0usize;
+                            loop {
+                                let pm_idx = next_pm.fetch_add(1, Ordering::Relaxed);
+                                if pm_idx >= n_pms {
+                                    break;
+                                }
+                                search_pm_stripe(
+                                    model, shape, space, pm_idx, incumbent, &mut best,
+                                    &mut evaluated,
+                                );
+                            }
+                            (best, evaluated)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("planner worker panicked"))
+                    .collect()
+            });
+        let mut best: Option<(PlanCost, u64)> = None;
+        let mut evaluated = 0usize;
+        for (stripe_best, stripe_evaluated) in stripe_results {
+            evaluated += stripe_evaluated;
+            if let Some((cost, rank)) = stripe_best {
+                let replace = match &best {
+                    None => true,
+                    Some((b, r)) => (cost.total_cycles, rank) < (b.total_cycles, *r),
+                };
+                if replace {
+                    best = Some((cost, rank));
+                }
+            }
+        }
+        (best, evaluated)
+    };
+
+    match best {
+        Some((cost, _)) => Ok(Plan { shape, cost, candidates_evaluated: evaluated }),
+        None => Err(PlannerError::OutOfMemory { candidates_evaluated: evaluated }),
+    }
+}
+
+/// Does *any* partition of `shape` fit In-Processor memory? The cycle
+/// model is skipped entirely and the scan exits on the first fit, so a
+/// probe is orders of magnitude cheaper than a full search. Agrees with
+/// `search(..).is_ok()` by construction: the full search admits exactly
+/// the candidates that pass the `tile_bytes` bill (see
+/// `search_fits_agrees_with_full_search`).
+pub fn search_fits(arch: &IpuArch, shape: MmShape) -> bool {
+    search_fits_with_config(arch, shape, CostConfig::default())
+}
+
+/// Ablation variant of [`search_fits`].
+pub fn search_fits_with_config(arch: &IpuArch, shape: MmShape, config: CostConfig) -> bool {
+    let model = CostModel::with_config(arch, config);
+    let space = CandidateSpace::new(shape, arch.tiles);
+    let tiles = arch.tiles;
+    for &pm in &space.pms {
         let max_pk = tiles / pm;
         if max_pk == 0 {
             continue;
         }
-        let mut pks = axis_candidates(div_ceil(shape.k, 4), max_pk);
-        pks.sort_by_key(|&pk| pk.abs_diff(max_pk));
-        for &pk in &pks {
+        for &pk in &space.pks_by_max[&max_pk] {
             let max_pn = tiles / (pm * pk);
-            for &pn in &pn_candidates(shape.n, max_pn) {
-                // lower bound (§Perf pruning): no plan on this grid can
-                // beat pure AMP time on its tile count, independent of cn
-                if let Some(b) = &best {
-                    let lower = total_macs / (pm * pn * pk) as u64 / macs;
-                    if lower >= b.total_cycles {
-                        continue;
-                    }
-                }
+            for &pn in space.pns(max_pn) {
                 let sn = div_ceil(shape.n, pn);
                 let mut prev_cn = 0usize;
                 for &cn in &consts::CN_CANDIDATES {
                     let cn = cn.min(sn);
                     if cn == prev_cn {
-                        continue; // clamped duplicate of the last candidate
+                        continue;
                     }
                     prev_cn = cn;
                     let part = Partition { pm, pn, pk, cn };
-                    if !part.is_valid(shape, tiles) {
-                        continue;
-                    }
-                    evaluated += 1;
-                    // memory-first rejection: skip the cycle model when the
-                    // candidate cannot fit a tile (§Perf)
-                    if model.tile_bytes(shape, part) > arch.tile_sram_bytes {
-                        continue;
-                    }
-                    let cost = model.evaluate(shape, part);
-                    debug_assert!(cost.fits);
-                    let better = match &best {
-                        None => true,
-                        Some(b) => cost.total_cycles < b.total_cycles,
-                    };
-                    if better {
-                        best = Some(cost);
+                    if part.is_valid(shape, tiles)
+                        && model.tile_bytes(shape, part) <= arch.tile_sram_bytes
+                    {
+                        return true;
                     }
                 }
             }
         }
     }
-
-    match best {
-        Some(cost) => Ok(Plan { shape, cost, candidates_evaluated: evaluated }),
-        None => Err(PlannerError::OutOfMemory { candidates_evaluated: evaluated }),
-    }
+    false
 }
 
 /// Largest fitting squared MM (the paper's §2.4 memory-wall statistic),
-/// searched over multiples of `step`.
+/// searched over multiples of `step`. §Perf: bisects the wall over the
+/// fits-only probe [`search_fits`] — `O(log(limit/step))` memory bills
+/// instead of the seed's linear ladder of full searches
+/// ([`max_fitting_square_linear`]). Relies on fit being monotone in the
+/// problem size, which holds on every modeled architecture (verified
+/// against the linear scan in `bisection_matches_linear_scan_on_paper_archs`).
 pub fn max_fitting_square(arch: &IpuArch, step: usize, limit: usize) -> usize {
     max_fitting_square_with_config(arch, step, limit, CostConfig::default())
 }
 
 /// Ablation variant of [`max_fitting_square`].
 pub fn max_fitting_square_with_config(
+    arch: &IpuArch,
+    step: usize,
+    limit: usize,
+    config: CostConfig,
+) -> usize {
+    bisect_max_fitting(step, limit, |s| {
+        search_fits_with_config(arch, MmShape::square(s), config)
+    })
+}
+
+/// Shared bisection skeleton: the largest multiple of `step` in
+/// `[step, limit]` for which `fits` holds, assuming `fits` is monotone
+/// (true below some wall, false above). Used by the squared memory wall
+/// here and by `multi_ipu::MultiIpu::max_fitting_square`.
+pub fn bisect_max_fitting(step: usize, limit: usize, fits: impl Fn(usize) -> bool) -> usize {
+    assert!(step >= 1, "bisect_max_fitting needs step >= 1");
+    let hi_k = limit / step;
+    if hi_k == 0 || !fits(step) {
+        return 0;
+    }
+    if fits(hi_k * step) {
+        return hi_k * step;
+    }
+    // invariant: fits(lo * step), !fits(hi * step)
+    let (mut lo, mut hi) = (1usize, hi_k);
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid * step) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo * step
+}
+
+/// The seed's linear scan over full searches — kept as the reference
+/// implementation the bisection is validated against (tests and
+/// `benches/bench_planner.rs`).
+pub fn max_fitting_square_linear(arch: &IpuArch, step: usize, limit: usize) -> usize {
+    max_fitting_square_linear_with_config(arch, step, limit, CostConfig::default())
+}
+
+/// Ablation variant of [`max_fitting_square_linear`].
+pub fn max_fitting_square_linear_with_config(
     arch: &IpuArch,
     step: usize,
     limit: usize,
@@ -267,5 +548,90 @@ mod tests {
         let b = search(&arch, MmShape::new(1000, 700, 300)).unwrap();
         assert_eq!(a.cost.partition, b.cost.partition);
         assert_eq!(a.cost.total_cycles, b.cost.total_cycles);
+        assert_eq!(a.candidates_evaluated, b.candidates_evaluated);
+    }
+
+    #[test]
+    fn parallel_search_matches_serial_on_random_shapes() {
+        // acceptance gate: the parallel path returns a bit-identical
+        // Partition + total_cycles (and search statistic) to the serial
+        // path, across >= 20 random shapes including degenerate ones
+        use crate::util::rng::Rng;
+        let arch = IpuArch::gc200();
+        let mut rng = Rng::new(0xC0FFEE);
+        for case in 0..24 {
+            let hi = 64 + 180 * case; // ramp from small to well past the wall
+            let shape = MmShape::new(
+                rng.gen_usize(1, hi),
+                rng.gen_usize(1, hi),
+                rng.gen_usize(1, hi),
+            );
+            let serial = search_with_workers(&arch, shape, CostConfig::default(), 1);
+            for workers in [2, 4, 7] {
+                let par = search_with_workers(&arch, shape, CostConfig::default(), workers);
+                match (&serial, &par) {
+                    (Ok(s), Ok(p)) => {
+                        assert_eq!(s.cost.partition, p.cost.partition, "{shape:?} w={workers}");
+                        assert_eq!(
+                            s.cost.total_cycles, p.cost.total_cycles,
+                            "{shape:?} w={workers}"
+                        );
+                        assert_eq!(
+                            s.candidates_evaluated, p.candidates_evaluated,
+                            "{shape:?} w={workers}"
+                        );
+                    }
+                    (Err(a), Err(b)) => assert_eq!(a, b, "{shape:?} w={workers}"),
+                    _ => panic!("verdicts diverge for {shape:?} with {workers} workers"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn search_fits_agrees_with_full_search() {
+        use crate::util::rng::Rng;
+        let arch = IpuArch::gc200();
+        let mut rng = Rng::new(0xF17);
+        for case in 0..24 {
+            let hi = 64 + 200 * case;
+            let shape = MmShape::new(
+                rng.gen_usize(1, hi),
+                rng.gen_usize(1, hi),
+                rng.gen_usize(1, hi),
+            );
+            assert_eq!(
+                search_fits(&arch, shape),
+                search(&arch, shape).is_ok(),
+                "fits-only and full search disagree for {shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn bisection_matches_linear_scan_on_paper_archs() {
+        // acceptance gate: the bisected memory wall equals the seed's
+        // linear-scan answer on the paper architectures
+        for arch in [IpuArch::gc200(), IpuArch::gc2()] {
+            for (step, limit) in [(128, 8192), (256, 4096), (512, 2048)] {
+                assert_eq!(
+                    max_fitting_square(&arch, step, limit),
+                    max_fitting_square_linear(&arch, step, limit),
+                    "{} step {step} limit {limit}",
+                    arch.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bisection_edge_cases() {
+        let arch = IpuArch::gc200();
+        // limit below one step
+        assert_eq!(max_fitting_square(&arch, 512, 256), 0);
+        // everything fits up to the limit
+        assert_eq!(max_fitting_square(&arch, 256, 1024), 1024);
+        // the paper wall at the usual resolution
+        assert_eq!(max_fitting_square(&arch, 128, 8192), 3584);
     }
 }

@@ -19,8 +19,18 @@
 //! share an entry when their sparsity fingerprints are equal; dense
 //! requests key with `sparsity: None` and never collide with sparse
 //! entries for the same shape.
+//!
+//! §Perf: the lock is sharded N-way by key hash so a cold-start storm of
+//! distinct buckets never serializes behind one mutex — each shard owns
+//! an independent map + LRU clock, planning always happens outside any
+//! lock, and stats aggregate across shards. Small caches keep one shard
+//! (exact global LRU); production-sized ones trade global LRU precision
+//! for contention-free lookups (eviction is per shard, capacity is split
+//! evenly across shards).
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -89,28 +99,46 @@ struct Entry {
     last_used: u64,
 }
 
+#[derive(Default)]
 struct Inner {
     map: HashMap<PlanKey, Entry>,
     tick: u64,
     stats: CacheStats,
 }
 
-/// Bounded, thread-safe, least-recently-used plan cache.
+/// Bounded, thread-safe, least-recently-used plan cache with an N-way
+/// sharded lock (see the module docs).
 pub struct PlanCache {
-    inner: Mutex<Inner>,
+    shards: Vec<Mutex<Inner>>,
+    /// Per-shard entry budget; eviction is local to a shard.
+    shard_capacity: usize,
     capacity: usize,
 }
 
 impl PlanCache {
     /// `capacity` is the maximum number of cached (shape, arch) entries.
+    /// The shard count follows [`Self::default_shards`]: one shard per 64
+    /// entries of capacity, capped at 16.
     pub fn new(capacity: usize) -> PlanCache {
+        Self::with_shards(capacity, Self::default_shards(capacity))
+    }
+
+    /// Shard policy: small caches keep exact global LRU under one lock;
+    /// big ones spread contention across up to 16 locks.
+    pub fn default_shards(capacity: usize) -> usize {
+        (capacity / 64).clamp(1, 16)
+    }
+
+    /// Explicit shard count (tests, tuning). `shards` is clamped to
+    /// `[1, capacity]`; each shard gets `floor(capacity / shards)`
+    /// entries, so total population never exceeds `capacity` (a
+    /// non-divisible capacity under-commits by up to `shards - 1`).
+    pub fn with_shards(capacity: usize, shards: usize) -> PlanCache {
         assert!(capacity >= 1, "plan cache needs capacity >= 1");
+        let shards = shards.clamp(1, capacity);
         PlanCache {
-            inner: Mutex::new(Inner {
-                map: HashMap::new(),
-                tick: 0,
-                stats: CacheStats::default(),
-            }),
+            shards: (0..shards).map(|_| Mutex::new(Inner::default())).collect(),
+            shard_capacity: capacity / shards,
             capacity,
         }
     }
@@ -119,22 +147,43 @@ impl PlanCache {
         self.capacity
     }
 
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
     pub fn len(&self) -> usize {
-        self.lock().map.len()
+        self.shards.iter().map(|s| self.lock(s).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Aggregated counters across every shard.
     pub fn stats(&self) -> CacheStats {
-        let inner = self.lock();
-        CacheStats { entries: inner.map.len(), ..inner.stats }
+        let mut out = CacheStats::default();
+        for shard in &self.shards {
+            let inner = self.lock(shard);
+            out.hits += inner.stats.hits;
+            out.misses += inner.stats.misses;
+            out.evictions += inner.stats.evictions;
+            out.cold_plan_seconds += inner.stats.cold_plan_seconds;
+            out.entries += inner.map.len();
+        }
+        out
     }
 
     pub fn clear(&self) {
-        let mut inner = self.lock();
-        inner.map.clear();
+        for shard in &self.shards {
+            self.lock(shard).map.clear();
+        }
+    }
+
+    /// The shard owning `key` (stable hash of the full key).
+    fn shard_for(&self, key: &PlanKey) -> &Mutex<Inner> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
     }
 
     /// Memoized [`search`]: returns the cached plan (or cached OOM
@@ -208,9 +257,9 @@ impl PlanCache {
     }
 
     /// Hit path shared by the dense and sparse lookups: counts a hit and
-    /// refreshes LRU order on success, a miss otherwise.
+    /// refreshes shard-local LRU order on success, a miss otherwise.
     fn lookup(&self, key: &PlanKey) -> Option<CachedResult> {
-        let mut guard = self.lock();
+        let mut guard = self.lock(self.shard_for(key));
         let inner = &mut *guard;
         inner.tick += 1;
         let tick = inner.tick;
@@ -224,19 +273,20 @@ impl PlanCache {
         None
     }
 
-    /// Cold-miss insert shared by both paths, with LRU eviction.
+    /// Cold-miss insert shared by both paths, with shard-local LRU
+    /// eviction.
     fn insert(&self, key: PlanKey, result: CachedResult, seconds: f64) {
-        let mut guard = self.lock();
+        let mut guard = self.lock(self.shard_for(&key));
         let inner = &mut *guard;
         inner.tick += 1;
         let tick = inner.tick;
         inner.stats.cold_plan_seconds += seconds;
         inner.map.insert(key, Entry { result, last_used: tick });
-        // eviction is an O(capacity) scan, paid only on cold misses once
-        // the cache is full; misses also run a full planner search, which
-        // dwarfs the scan at realistic capacities. Revisit with an
+        // eviction is an O(shard capacity) scan, paid only on cold misses
+        // once the shard is full; misses also run a full planner search,
+        // which dwarfs the scan at realistic capacities. Revisit with an
         // ordered index if very large capacities become a hot path.
-        while inner.map.len() > self.capacity {
+        while inner.map.len() > self.shard_capacity {
             let lru = inner
                 .map
                 .iter()
@@ -251,14 +301,14 @@ impl PlanCache {
     /// Peek without planning or touching LRU order (diagnostics only).
     pub fn peek(&self, arch: &IpuArch, shape: MmShape) -> Option<Result<Plan, PlannerError>> {
         let key = PlanKey { shape, arch_fingerprint: arch.fingerprint(), sparsity: None };
-        self.lock().map.get(&key).and_then(|e| match &e.result {
+        self.lock(self.shard_for(&key)).map.get(&key).and_then(|e| match &e.result {
             CachedResult::Dense(result) => Some(result.clone()),
             CachedResult::Sparse(_) => None,
         })
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
-        self.inner.lock().expect("plan cache poisoned")
+    fn lock<'a>(&self, shard: &'a Mutex<Inner>) -> std::sync::MutexGuard<'a, Inner> {
+        shard.lock().expect("plan cache poisoned")
     }
 }
 
@@ -368,6 +418,67 @@ mod tests {
     #[test]
     fn hit_rate_zero_when_unused() {
         assert_eq!(PlanCache::new(1).stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn default_shard_policy_scales_with_capacity() {
+        assert_eq!(PlanCache::new(8).shards(), 1, "small caches keep exact LRU");
+        assert_eq!(PlanCache::new(256).shards(), 4);
+        assert_eq!(PlanCache::new(4096).shards(), 16, "shard count is capped");
+    }
+
+    #[test]
+    fn sharded_cache_spreads_keys_and_bounds_population() {
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::with_shards(32, 4);
+        assert_eq!(cache.shards(), 4);
+        for i in 0..48usize {
+            let _ = cache.get_or_plan(&arch, MmShape::new(32 + 8 * i, 64, 32));
+        }
+        assert!(cache.len() <= 32, "population {} above capacity", cache.len());
+        let s = cache.stats();
+        assert_eq!(s.misses, 48, "distinct shapes never hit");
+        assert_eq!(s.evictions as usize, 48 - cache.len());
+    }
+
+    #[test]
+    fn non_divisible_capacity_never_overcommits() {
+        // 3 shards under capacity 10: per-shard budget floors to 3, so
+        // the stated capacity is a true upper bound
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::with_shards(10, 3);
+        for i in 0..20usize {
+            let _ = cache.get_or_plan(&arch, MmShape::new(16 + 8 * i, 32, 16));
+        }
+        assert!(cache.len() <= 10, "population {} above capacity", cache.len());
+    }
+
+    #[test]
+    fn sharded_cold_storm_converges_across_threads() {
+        // the cold-start-storm scenario the sharding exists for: many
+        // workers missing on distinct buckets at once must neither lose
+        // entries nor miscount, and repeated rounds must hit
+        let cache = Arc::new(PlanCache::with_shards(64, 8));
+        let shapes: Vec<MmShape> =
+            (0..8).map(|i| MmShape::new(128 + 32 * i, 256, 128)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let cache = Arc::clone(&cache);
+                let shapes = shapes.clone();
+                scope.spawn(move || {
+                    for _ in 0..3 {
+                        for &s in &shapes {
+                            cache.get_or_plan(&IpuArch::gc200(), s).unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.entries, 8);
+        assert_eq!(s.hits + s.misses, 96);
+        // at most one duplicated search per (thread, shape) race
+        assert!(s.misses >= 8 && s.misses <= 32, "misses {}", s.misses);
     }
 
     #[test]

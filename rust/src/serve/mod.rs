@@ -13,7 +13,10 @@
 //!   (including out-of-memory verdicts) and exposes hit/miss/eviction
 //!   counters. Dense requests key with no sparsity dimension; sparse
 //!   requests only hit entries with an equal
-//!   [`crate::sparse::pattern::SparsitySpec`] fingerprint.
+//!   [`crate::sparse::pattern::SparsitySpec`] fingerprint. The lock is
+//!   sharded N-way by key hash and planning happens outside it, so a
+//!   cold-start storm of distinct buckets plans concurrently instead of
+//!   serializing behind one mutex.
 //! * [`bucket`] — **shape bucketing**: incoming `(m, n, k)` requests are
 //!   rounded up to a ladder of block classes so the skewed long tail
 //!   shares cached plans. The ladder's rungs are the same power-of-two /
@@ -25,8 +28,8 @@
 //!   across backends (IPU simulator, GPU model, and the real PJRT
 //!   runtime when artifacts are present) on a worker pool sized by the
 //!   same policy as [`crate::coordinator::runner`].
-//! * [`telemetry`] — per-bucket latency/throughput/cache records that
-//!   reuse [`crate::coordinator::metrics`] for rendering.
+//! * [`telemetry`] — per-`(bucket, sparsity)` latency/throughput/cache
+//!   records that reuse [`crate::coordinator::metrics`] for rendering.
 //!
 //! The demo driver is `examples/serve_demo.rs`; `benches/bench_serve.rs`
 //! measures cached-vs-cold planning throughput.

@@ -13,6 +13,7 @@ use crate::planner::partition::MmShape;
 use crate::serve::bucket::BucketLadder;
 use crate::serve::cache::CacheStats;
 use crate::serve::queue::QueueStats;
+use crate::sparse::pattern::SparsitySpec;
 use crate::util::stats::Summary;
 use crate::util::table::Table;
 
@@ -59,10 +60,16 @@ impl RequestRecord {
     }
 }
 
-/// Aggregated view of one bucket's traffic.
+/// Aggregated view of one `(bucket, sparsity)` traffic class. Dense and
+/// sparse requests of the same bucket are separate rows — they plan
+/// through different cache keys and run different codelets, so lumping
+/// them would average incomparable latencies (ROADMAP: per-sparsity
+/// telemetry grouping).
 #[derive(Clone, Debug)]
 pub struct BucketStats {
     pub bucket: MmShape,
+    /// Sparsity class of this row (`None` = the bucket's dense traffic).
+    pub sparsity: Option<SparsitySpec>,
     pub requests: usize,
     pub batches: usize,
     pub cache_hits: usize,
@@ -122,16 +129,22 @@ impl ServeReport {
         }
     }
 
-    /// Group request records per bucket, largest traffic first.
+    /// Group request records per `(bucket, sparsity)` class, largest
+    /// traffic first. Dense-only traces group exactly as before (one
+    /// `None` row per bucket).
     pub fn bucket_stats(&self) -> Vec<BucketStats> {
-        let mut buckets: Vec<MmShape> = self.requests.iter().map(|r| r.bucket).collect();
-        buckets.sort_by_key(|b| (b.m, b.n, b.k));
-        buckets.dedup();
-        let mut out: Vec<BucketStats> = buckets
+        let mut classes: Vec<(MmShape, Option<SparsitySpec>)> =
+            self.requests.iter().map(|r| (r.bucket, r.sparsity)).collect();
+        classes.sort_by_key(|(b, s)| (b.m, b.n, b.k, s.map(|spec| spec.fingerprint())));
+        classes.dedup();
+        let mut out: Vec<BucketStats> = classes
             .into_iter()
-            .map(|bucket| {
-                let recs: Vec<&RequestRecord> =
-                    self.requests.iter().filter(|r| r.bucket == bucket).collect();
+            .map(|(bucket, sparsity)| {
+                let recs: Vec<&RequestRecord> = self
+                    .requests
+                    .iter()
+                    .filter(|r| r.bucket == bucket && r.sparsity == sparsity)
+                    .collect();
                 let lat: Vec<f64> = recs.iter().map(|r| r.latency_seconds()).collect();
                 // batches = distinct (id of first request per batch) is not
                 // tracked per record; estimate from batch sizes: each
@@ -140,6 +153,7 @@ impl ServeReport {
                 let batches = recs.iter().map(|r| 1.0 / r.batch_size as f64).sum::<f64>();
                 BucketStats {
                     bucket,
+                    sparsity,
                     requests: recs.len(),
                     batches: batches.round() as usize,
                     cache_hits: recs.iter().filter(|r| r.cache_hit == Some(true)).count(),
@@ -166,8 +180,12 @@ impl ServeReport {
             ],
         );
         for s in self.bucket_stats() {
+            let label = match &s.sparsity {
+                Some(spec) => format!("{} {}", BucketLadder::label(s.bucket), spec.label()),
+                None => BucketLadder::label(s.bucket),
+            };
             t.row(&[
-                BucketLadder::label(s.bucket),
+                label,
                 s.requests.to_string(),
                 s.batches.to_string(),
                 format!("{:.0}%", 100.0 * s.cache_hits as f64 / s.requests as f64),
@@ -296,6 +314,36 @@ mod tests {
         assert_eq!(stats[0].batches, 2, "one solo + one coalesced pair");
         assert_eq!(stats[0].cache_hits, 2);
         assert!((stats[0].mean_batch - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_stats_split_per_sparsity_class() {
+        use crate::sparse::pattern::PatternKind;
+        let half = SparsitySpec::new(PatternKind::Random, 8, 0.5, 1);
+        let tenth = SparsitySpec::new(PatternKind::Banded, 8, 0.1, 1);
+        let with_spec = |id: u64, spec: Option<SparsitySpec>| {
+            let mut r = rec(id, 256, true, 1);
+            r.sparsity = spec;
+            r
+        };
+        let r = report(vec![
+            with_spec(0, None),
+            with_spec(1, Some(half)),
+            with_spec(2, Some(half)),
+            with_spec(3, Some(tenth)),
+        ]);
+        let stats = r.bucket_stats();
+        assert_eq!(stats.len(), 3, "one row per (bucket, sparsity) class");
+        assert_eq!(stats[0].sparsity, Some(half), "busiest class first");
+        assert_eq!(stats[0].requests, 2);
+        assert_eq!(
+            stats.iter().filter(|s| s.sparsity.is_none()).count(),
+            1,
+            "dense traffic keeps its own row"
+        );
+        let ascii = r.bucket_table().to_ascii();
+        assert!(ascii.contains(&half.label()), "{ascii}");
+        assert!(ascii.contains(&tenth.label()), "{ascii}");
     }
 
     #[test]

@@ -8,7 +8,7 @@ use crate::exchange::plan::{ExchangePattern, ExchangePlan};
 use crate::graph::builder::Graph;
 use crate::graph::program::Program;
 use crate::graph::tensor::DType;
-use crate::graph::vertex::VertexKind;
+use crate::graph::vertex::{TileSpan, VertexKind};
 use crate::memory::accounting::{MemoryAccountant, MemoryReport};
 use crate::memory::mapping::{grid_2d_mapping, linear_balanced_mapping};
 use crate::planner::cost::{consts, CostModel};
@@ -162,14 +162,36 @@ impl SimEngine {
         }
         let chunks_id = g.add_exchange(chunks);
 
-        // main compute set: the planner's 4 vertices per active tile
+        // main compute set: the planner's 4 vertices per active tile,
+        // materialized as 4 replicated groups (§Perf: O(1) records per
+        // superstep class instead of O(tiles) vertex allocations)
         let mm_cs = g.add_compute_set("mm");
-        for t in 0..tiles_used {
-            g.add_vertex(mm_cs, VertexKind::AmpMacc { rows: sm, cols: sk, acc: cn }, t, vec![a, b], vec![c]);
-            g.add_vertex(mm_cs, VertexKind::Rearrange { bytes: sm * cn * 4 }, t, vec![a], vec![]);
-            g.add_vertex(mm_cs, VertexKind::Rearrange { bytes: cn * sk * 4 }, t, vec![b], vec![]);
-            g.add_vertex(mm_cs, VertexKind::Zero { elems: sm * sk }, t, vec![], vec![c]);
-        }
+        let active = TileSpan::range(0, tiles_used);
+        g.add_vertex_group(
+            mm_cs,
+            VertexKind::AmpMacc { rows: sm, cols: sk, acc: cn },
+            active.clone(),
+            1,
+            vec![a, b],
+            vec![c],
+        );
+        g.add_vertex_group(
+            mm_cs,
+            VertexKind::Rearrange { bytes: sm * cn * 4 },
+            active.clone(),
+            1,
+            vec![a],
+            vec![],
+        );
+        g.add_vertex_group(
+            mm_cs,
+            VertexKind::Rearrange { bytes: cn * sk * 4 },
+            active.clone(),
+            1,
+            vec![b],
+            vec![],
+        );
+        g.add_vertex_group(mm_cs, VertexKind::Zero { elems: sm * sk }, active, 1, vec![], vec![c]);
 
         let mut program = vec![
             Program::Exchange(prologue_id),
@@ -205,16 +227,17 @@ impl SimEngine {
             let gather_id = g.add_exchange(gather);
             let reduce_cs = g.add_compute_set("reduce");
             let verts_per_reducer = div_ceil(pn * sm * sk, consts::REDUCE_GRAIN);
-            for (reducer, _) in &groups {
-                for _ in 0..verts_per_reducer {
-                    g.add_vertex(
-                        reduce_cs,
-                        VertexKind::Reduce { inputs: pn, width: consts::REDUCE_GRAIN / pn },
-                        *reducer,
-                        vec![c],
-                        vec![c],
-                    );
-                }
+            let reducers: Vec<usize> = groups.iter().map(|(reducer, _)| *reducer).collect();
+            if !reducers.is_empty() {
+                // one replicated record for the whole reduction stage
+                g.add_vertex_group(
+                    reduce_cs,
+                    VertexKind::Reduce { inputs: pn, width: consts::REDUCE_GRAIN / pn },
+                    TileSpan::List(reducers),
+                    verts_per_reducer,
+                    vec![c],
+                    vec![c],
+                );
             }
             program.push(Program::Exchange(gather_id));
             program.push(Program::Sync);
@@ -305,30 +328,49 @@ impl SimEngine {
         let mm_cs = g.add_compute_set("bsmm");
         let cells = pattern.cell_density_matrix(part.pm, pn);
         let step_blocks = div_ceil(sm, block) * div_ceil(cn, block) * div_ceil(sk, block);
-        for t in 0..tiles_used {
-            let im = t / (pn * pk);
-            let in_ = (t / pk) % pn;
-            let rho_cell = cells.get(im * pn + in_).copied().unwrap_or(0.0);
-            let nz = (rho_cell * step_blocks as f64).ceil() as usize;
-            if nz > 0 {
-                g.add_vertex(
-                    mm_cs,
-                    VertexKind::BlockSparseMm { block, nz_blocks: nz },
-                    t,
-                    vec![a, b],
-                    vec![c],
-                );
+        // tiles of one (im, in_) partition cell are contiguous runs of pk,
+        // and every tile in a cell shares its worklist size — so the
+        // compute set is O(pm * pn) replicated groups, not O(tiles)
+        // vertices (§Perf)
+        for im in 0..part.pm {
+            for in_ in 0..pn {
+                let start = (im * pn + in_) * pk;
+                let end = (start + pk).min(tiles_used);
+                if start >= end {
+                    continue;
+                }
+                let rho_cell = cells.get(im * pn + in_).copied().unwrap_or(0.0);
+                let nz = (rho_cell * step_blocks as f64).ceil() as usize;
+                if nz > 0 {
+                    g.add_vertex_group(
+                        mm_cs,
+                        VertexKind::BlockSparseMm { block, nz_blocks: nz },
+                        TileSpan::range(start, end),
+                        1,
+                        vec![a, b],
+                        vec![c],
+                    );
+                }
             }
-            g.add_vertex(
-                mm_cs,
-                VertexKind::Rearrange { bytes: a_chunk_bytes as usize },
-                t,
-                vec![a],
-                vec![],
-            );
-            g.add_vertex(mm_cs, VertexKind::Rearrange { bytes: cn * sk * 4 }, t, vec![b], vec![]);
-            g.add_vertex(mm_cs, VertexKind::Zero { elems: sm * sk }, t, vec![], vec![c]);
         }
+        let active = TileSpan::range(0, tiles_used);
+        g.add_vertex_group(
+            mm_cs,
+            VertexKind::Rearrange { bytes: a_chunk_bytes as usize },
+            active.clone(),
+            1,
+            vec![a],
+            vec![],
+        );
+        g.add_vertex_group(
+            mm_cs,
+            VertexKind::Rearrange { bytes: cn * sk * 4 },
+            active.clone(),
+            1,
+            vec![b],
+            vec![],
+        );
+        g.add_vertex_group(mm_cs, VertexKind::Zero { elems: sm * sk }, active, 1, vec![], vec![c]);
 
         let mut program = vec![
             Program::Exchange(prologue_id),
@@ -364,16 +406,16 @@ impl SimEngine {
             let gather_id = g.add_exchange(gather);
             let reduce_cs = g.add_compute_set("reduce");
             let verts_per_reducer = div_ceil(pn * sm * sk, consts::REDUCE_GRAIN);
-            for (reducer, _) in &groups {
-                for _ in 0..verts_per_reducer {
-                    g.add_vertex(
-                        reduce_cs,
-                        VertexKind::Reduce { inputs: pn, width: consts::REDUCE_GRAIN / pn },
-                        *reducer,
-                        vec![c],
-                        vec![c],
-                    );
-                }
+            let reducers: Vec<usize> = groups.iter().map(|(reducer, _)| *reducer).collect();
+            if !reducers.is_empty() {
+                g.add_vertex_group(
+                    reduce_cs,
+                    VertexKind::Reduce { inputs: pn, width: consts::REDUCE_GRAIN / pn },
+                    TileSpan::List(reducers),
+                    verts_per_reducer,
+                    vec![c],
+                    vec![c],
+                );
             }
             program.push(Program::Exchange(gather_id));
             program.push(Program::Sync);
@@ -427,6 +469,40 @@ mod tests {
         let plan = search(&e.arch, shape).unwrap();
         let g = e.build_graph(shape, &plan);
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn dense_graph_materializes_as_groups() {
+        // §Perf acceptance: the builder emits O(1) replicated records, not
+        // O(tiles) vertices — while the expanded census stays exact
+        let e = engine();
+        let shape = MmShape::new(512, 16384, 2048); // split reduction too
+        let plan = search(&e.arch, shape).unwrap();
+        let g = e.build_graph(shape, &plan);
+        assert!(g.vertices().is_empty(), "dense builder should emit only groups");
+        assert!(g.groups().len() <= 5, "{} group records", g.groups().len());
+        assert_eq!(g.n_vertices(), plan.cost.total_vertices());
+    }
+
+    #[test]
+    fn sparse_graph_materializes_as_cell_groups() {
+        use crate::sparse::pattern::PatternKind;
+        let e = engine();
+        let shape = MmShape::square(1024);
+        let spec = SparsitySpec::new(PatternKind::Banded, 8, 0.3, 5);
+        let pattern = BlockPattern::for_shape(spec, shape);
+        let plan = sparse_search(&e.arch, shape, &pattern).unwrap();
+        let g = e.build_sparse_graph(shape, &plan, &pattern);
+        let part = plan.partition();
+        assert!(g.vertices().is_empty(), "sparse builder should emit only groups");
+        // <= pm*pn worklist groups + 3 dense codelet groups + reduction
+        assert!(
+            g.groups().len() <= part.pm * part.pn + 4,
+            "{} group records for pm={} pn={}",
+            g.groups().len(),
+            part.pm,
+            part.pn
+        );
     }
 
     #[test]

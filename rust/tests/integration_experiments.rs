@@ -120,7 +120,7 @@ fn v1_census_within_10pct_of_paper() {
 
 #[test]
 fn m1_memory_walls_and_fractions() {
-    let rows = memory_study::run(&memory_study::default_archs());
+    let rows = memory_study::run(&memory_study::default_archs(), Some(2));
     let gc200 = &rows[0];
     let gc2 = &rows[1];
     // paper: 17% / 35% tensor occupancy at the wall (±5 points)
@@ -185,6 +185,7 @@ fn s1_skew_advantage_only_degrades_gracefully_under_sparsity() {
         &[1.0, 0.25],
         PatternKind::Random,
         42,
+        Some(2),
     );
     assert_eq!(rows.len(), 9 * 2);
     // rows come out point-major (both densities of one shape adjacent),
