@@ -12,7 +12,7 @@ use ipumm::planner::search::search;
 use ipumm::serve::PlanCache;
 use ipumm::sparse::csr::BlockCsr;
 use ipumm::sparse::pattern::{BlockPattern, PatternKind, SparsitySpec};
-use ipumm::sparse::planner::sparse_search;
+use ipumm::sparse::planner::{sparse_max_fitting_square, sparse_search};
 use ipumm::util::bench::{black_box, Bench};
 
 fn main() {
@@ -48,8 +48,22 @@ fn main() {
                 black_box(sparse_search(&arch, shape, &pattern).unwrap())
             });
             let plan = sparse_search(&arch, shape, &pattern).unwrap();
-            b.throughput(plan.speedup_vs_dense(), "x modeled speedup");
+            // these shapes fit dense, so the baseline always exists
+            b.throughput(plan.speedup_vs_dense().unwrap_or(1.0), "x modeled speedup");
         }
+    }
+
+    // density-dependent memory wall: bisect the max fitting square per
+    // density (the §2.4 statistic as a curve; density 1.0 must land on
+    // the paper's 3584). Tracked in BENCH_sparse.json by CI.
+    for permille in [1000u32, 500, 250, 100] {
+        let density = permille as f64 / 1000.0;
+        let spec = SparsitySpec::new(PatternKind::Random, 8, density, 42);
+        b.run(&format!("wall_bisect_gc200_d{permille}"), || {
+            black_box(sparse_max_fitting_square(&arch, spec, 128, 6144))
+        });
+        let wall = sparse_max_fitting_square(&arch, spec, 128, 6144);
+        b.throughput(wall as f64, "max fitting square");
     }
 
     // warm sparse plan-cache lookups: the serving fast path

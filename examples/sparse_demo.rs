@@ -8,7 +8,10 @@
 //! 3. **cache-separation gate**: a serve trace mixing dense and sparse
 //!    requests of the *same bucket* must keep one plan-cache entry per
 //!    sparsity fingerprint — sparse plans depend on the exact pattern,
-//!    so sharing an entry across fingerprints would serve wrong plans.
+//!    so sharing an entry across fingerprints would serve wrong plans;
+//! 4. **sparse-wall gate**: 4096^2 — strictly past the dense §2.4 wall —
+//!    must OOM dense (and at density 1.0, with the identical verdict)
+//!    but plan successfully at 25% density under the CSR-aware bill.
 //!
 //!     cargo run --release --example sparse_demo
 
@@ -16,8 +19,10 @@ use ipumm::arch::IpuArch;
 use ipumm::coordinator::device::{run_shape, Backend};
 use ipumm::experiments::sparse_sweep;
 use ipumm::planner::partition::MmShape;
+use ipumm::planner::search::search;
 use ipumm::serve::{MmService, ServiceConfig};
 use ipumm::sparse::pattern::{PatternKind, SparsitySpec};
+use ipumm::sparse::planner::sparse_search_spec;
 
 fn main() {
     let arch = IpuArch::gc200();
@@ -96,6 +101,44 @@ fn main() {
     if report.requests.len() != trace.len() || report.requests.iter().any(|r| r.oom) {
         eprintln!("FAIL: every mixed request must be served");
         std::process::exit(1);
+    }
+
+    // -- 4. sparse-wall gate -------------------------------------------
+    let wall_shape = MmShape::square(4096);
+    let dense_err = match search(&arch, wall_shape) {
+        Ok(_) => {
+            eprintln!("FAIL: 4096^2 must OOM dense (the §2.4 wall moved?)");
+            std::process::exit(1);
+        }
+        Err(e) => e,
+    };
+    let quarter = SparsitySpec::new(PatternKind::Random, 8, 0.25, 42);
+    match sparse_search_spec(&arch, wall_shape, quarter) {
+        Ok(plan) => {
+            let p = plan.partition();
+            println!(
+                "sparse-wall gate: 4096^2 OOMs dense but plans at d=0.25 \
+                 (pm={} pn={} pk={} cn={}, {} B on the heaviest tile of {} B SRAM)",
+                p.pm, p.pn, p.pk, p.cn, plan.cost.sparse_tile_bytes, arch.tile_sram_bytes
+            );
+            if !plan.cost.fits || plan.cost.sparse_tile_bytes > arch.tile_sram_bytes {
+                eprintln!("FAIL: sparse plan claims to fit but its bill overflows");
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("FAIL: 4096^2 at 25% density must plan sparse: {e}");
+            std::process::exit(1);
+        }
+    }
+    // density 1.0 must reproduce the dense OOM verdict bit-for-bit
+    let dense_spec = SparsitySpec::new(PatternKind::Random, 8, 1.0, 42);
+    match sparse_search_spec(&arch, wall_shape, dense_spec) {
+        Err(e) if e == dense_err => {}
+        other => {
+            eprintln!("FAIL: density 1.0 must keep the dense OOM verdict, got {other:?}");
+            std::process::exit(1);
+        }
     }
     println!("OK");
 }

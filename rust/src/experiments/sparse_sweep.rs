@@ -8,7 +8,11 @@
 //! throughput conventions (Domke et al.): dense-equivalent TFlop/s
 //! (what a dense replacement would need) and effective TFlop/s (nonzero
 //! work only). At density 1.0 the squared points reproduce the dense
-//! Fig. 4 path exactly.
+//! Fig. 4 path exactly. Every row also carries the **predicted memory
+//! wall** for its density (`sparse_max_fitting_square`): with the
+//! CSR-aware bill the §2.4 wall is a density curve, and ladder points
+//! past the dense wall plan through the sparse fallback instead of
+//! reporting a blanket OOM.
 
 use crate::arch::IpuArch;
 use crate::coordinator::runner::par_map;
@@ -18,8 +22,17 @@ use crate::planner::partition::MmShape;
 use crate::planner::search::search;
 use crate::sim::engine::SimEngine;
 use crate::sparse::pattern::{BlockPattern, PatternKind, SparsitySpec};
-use crate::sparse::planner::sparse_plan_from_dense;
+use crate::sparse::planner::{
+    sparse_max_fitting_square, sparse_plan_from_dense, sparse_search_past_dense_wall,
+};
 use crate::util::table::Table;
+
+/// Resolution of the per-density predicted-wall bisection (the paper
+/// plots the dense §2.4 wall at the same 128 step).
+pub const WALL_STEP: usize = 128;
+/// Upper bound of the wall bisection — comfortably above every modeled
+/// density's wall on the paper architectures.
+pub const WALL_LIMIT: usize = 6144;
 
 /// One (aspect ratio, density) grid point.
 #[derive(Clone, Debug)]
@@ -32,11 +45,18 @@ pub struct SparseSweepRow {
     pub realized_density: f64,
     /// Densest partition-cell density (the planner's scaling bottleneck).
     pub critical_density: f64,
-    /// `None` = past the (dense) §2.4 memory wall.
+    /// `None` = past this density's memory wall (with the CSR-aware bill
+    /// the wall is density-dependent; dense OOM no longer implies sparse
+    /// OOM).
     pub dense_equiv_tflops: Option<f64>,
     pub effective_tflops: Option<f64>,
-    /// Runtime ratio vs the dense plan of the same shape.
+    /// Runtime ratio vs the dense plan of the same shape; `None` past
+    /// the dense wall (no dense baseline exists there).
     pub speedup_vs_dense: Option<f64>,
+    /// Predicted max fitting square at this row's density on this arch
+    /// (`sparse_max_fitting_square`, step [`WALL_STEP`] up to
+    /// [`WALL_LIMIT`]) — the paper's §2.4 statistic as a density curve.
+    pub predicted_max_square: usize,
 }
 
 /// The density axis of the default grid.
@@ -65,6 +85,13 @@ pub fn run(
     workers: Option<usize>,
 ) -> Vec<SparseSweepRow> {
     let engine = SimEngine::new(arch.clone());
+    // the predicted wall depends only on (arch, spec): bisect once per
+    // density, fanned through the same worker policy as the ladder
+    // (each bisection is several full-space admission scans)
+    let walls: Vec<usize> = par_map(densities.to_vec(), workers, |density| {
+        let spec = SparsitySpec::new(kind, block, density, seed);
+        sparse_max_fitting_square(arch, spec, WALL_STEP, WALL_LIMIT)
+    });
     let point_rows = par_map(
         aspect_ratio_ladder(mn_budget_log2, half_steps, k),
         workers,
@@ -74,18 +101,34 @@ pub fn run(
             // this point amortizes the same expensive search
             let dense = search(arch, point.shape).ok();
             let mut rows = Vec::with_capacity(densities.len());
-            for &density in densities {
+            for (di, &density) in densities.iter().enumerate() {
                 let spec = SparsitySpec::new(kind, block, density, seed);
-                let row = match &dense {
-                    Some(dense_plan) => {
-                        let pattern = BlockPattern::for_shape(spec, point.shape);
-                        let plan = sparse_plan_from_dense(
+                let pattern = BlockPattern::for_shape(spec, point.shape);
+                let plan = match &dense {
+                    Some(dense_plan) => Some(sparse_plan_from_dense(
+                        arch,
+                        point.shape,
+                        &pattern,
+                        CostConfig::default(),
+                        dense_plan.clone(),
+                    )),
+                    // past the dense wall the CSR-aware bill may still
+                    // admit a plan at this density; the dense OOM verdict
+                    // is already known, so skip straight to the sparse
+                    // full-space search (fully dense specs keep the OOM)
+                    None if spec.is_dense() => None,
+                    None => {
+                        sparse_search_past_dense_wall(
                             arch,
                             point.shape,
                             &pattern,
                             CostConfig::default(),
-                            dense_plan.clone(),
-                        );
+                        )
+                        .ok()
+                    }
+                };
+                let row = match plan {
+                    Some(plan) => {
                         let report = engine.simulate_sparse_plan(point.shape, plan, &pattern);
                         SparseSweepRow {
                             label: point.label(),
@@ -95,7 +138,8 @@ pub fn run(
                             critical_density: report.plan.cost.critical_density,
                             dense_equiv_tflops: Some(report.dense_equiv_tflops),
                             effective_tflops: Some(report.effective_tflops),
-                            speedup_vs_dense: Some(report.plan.speedup_vs_dense()),
+                            speedup_vs_dense: report.plan.speedup_vs_dense(),
+                            predicted_max_square: walls[di],
                         }
                     }
                     None => SparseSweepRow {
@@ -107,6 +151,7 @@ pub fn run(
                         dense_equiv_tflops: None,
                         effective_tflops: None,
                         speedup_vs_dense: None,
+                        predicted_max_square: walls[di],
                     },
                 };
                 rows.push(row);
@@ -151,16 +196,18 @@ pub fn to_table(rows: &[SparseSweepRow]) -> Table {
     t
 }
 
-/// CSV twin of the table for downstream plotting.
+/// CSV twin of the table for downstream plotting. The
+/// `predicted_max_square` column is the per-density memory wall
+/// (constant across ladder points of one density).
 pub fn to_csv(rows: &[SparseSweepRow]) -> String {
     let mut out = String::from(
         "label,m,n,k,kind,block,density,realized_density,critical_density,\
-         dense_equiv_tflops,effective_tflops,speedup_vs_dense\n",
+         dense_equiv_tflops,effective_tflops,speedup_vs_dense,predicted_max_square\n",
     );
     for r in rows {
         let opt = |v: Option<f64>| v.map(|x| x.to_string()).unwrap_or_default();
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
             r.label,
             r.shape.m,
             r.shape.n,
@@ -173,6 +220,7 @@ pub fn to_csv(rows: &[SparseSweepRow]) -> String {
             opt(r.dense_equiv_tflops),
             opt(r.effective_tflops),
             opt(r.speedup_vs_dense),
+            r.predicted_max_square,
         ));
     }
     out
@@ -289,5 +337,37 @@ mod tests {
         let csv = to_csv(&rows);
         assert!(csv.starts_with("label,m,n,k,"));
         assert_eq!(csv.lines().count(), 1 + rows.len());
+        assert!(
+            csv.lines().next().unwrap().ends_with("predicted_max_square"),
+            "CSV must carry the per-density wall column"
+        );
+    }
+
+    #[test]
+    fn predicted_wall_grows_as_density_falls() {
+        // acceptance: the CSV's wall column turns the §2.4 wall into a
+        // density curve — 3584 at density 1.0 (the paper's number), and
+        // strictly larger at 25% density
+        let rows = small_grid();
+        let dense_wall = rows
+            .iter()
+            .find(|r| r.spec.is_dense())
+            .unwrap()
+            .predicted_max_square;
+        let sparse_wall = rows
+            .iter()
+            .find(|r| !r.spec.is_dense())
+            .unwrap()
+            .predicted_max_square;
+        assert_eq!(dense_wall, 3584, "density 1.0 must keep the paper's wall");
+        assert!(
+            sparse_wall >= 4096,
+            "25%-density wall {sparse_wall} should clear the 4096 acceptance shape"
+        );
+        // constant across ladder points of one density
+        for r in &rows {
+            let want = if r.spec.is_dense() { dense_wall } else { sparse_wall };
+            assert_eq!(r.predicted_max_square, want, "{} d{}", r.label, r.spec.density());
+        }
     }
 }

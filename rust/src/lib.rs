@@ -18,14 +18,19 @@
 //!    actually-performed, verified multiplication.
 //! 4. **Block-sparse workload** — [`sparse`] opens PopSparse's workload
 //!    (Li et al., arXiv 2303.16999) on the same stack: seeded block-CSR
-//!    sparsity patterns (`sparse::pattern`), the on-device layout and
-//!    balanced per-tile block assignment (`sparse::csr`), and a
-//!    sparsity-aware cost/search wrapper over the dense planner
-//!    (`sparse::planner`) that scales compute/exchange by realized
-//!    per-partition density while keeping the dense §2.4 memory wall.
-//!    Reports carry dense-equivalent *and* effective TFlop/s; the
-//!    density x skew grid is `experiments::sparse_sweep` (`ipumm
-//!    sparse`).
+//!    sparsity patterns (`sparse::pattern`), the on-device layout,
+//!    balanced per-tile block assignment, and per-tile residency
+//!    (`sparse::csr`), and a sparsity-aware cost/search wrapper over the
+//!    dense planner (`sparse::planner`) that scales compute/exchange by
+//!    densest-cell density *and* admits candidates by a CSR-aware memory
+//!    bill (`sparse_tile_bytes` over `CostModel::tile_bill`'s operand
+//!    split) — the §2.4 wall becomes density-dependent
+//!    (`sparse_max_fitting_square`), shapes past the dense wall plan
+//!    through a full-space sparse search, and density 1.0 reproduces the
+//!    dense plan and OOM verdict bit-for-bit. Reports carry
+//!    dense-equivalent *and* effective TFlop/s; the density x skew grid
+//!    is `experiments::sparse_sweep` (`ipumm sparse`), whose rows carry
+//!    the predicted per-density wall.
 //! 5. **Serving layer** — [`serve`] turns the one-shot pipeline into
 //!    matmul-as-a-service: requests are rounded up onto a bucketing
 //!    ladder (`serve::bucket`) whose rungs walk the same `{2^i, 3·2^(i-1)}`

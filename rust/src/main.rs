@@ -20,9 +20,11 @@
 //!                              --artifacts DIR + --features xla anchors
 //!                              cold buckets to real PJRT execution)
 //! ipumm sparse [--k N] [--block 4|8|16] [--kind random|banded|blockdiag]
-//!              [--densities 1.0,0.5,...] [--seed N]
+//!              [--densities 1.0,0.5,...] [--seed N] [--json FILE]
 //!                              block-sparse density x skew sweep
-//!                              (dense-equivalent + effective TFlop/s)
+//!                              (dense-equivalent + effective TFlop/s,
+//!                              per-density predicted memory wall;
+//!                              --json dumps the wall curve)
 //! ipumm streaming              §6 streaming-memory extension
 //! ipumm multiipu               §6 multi-IPU scaling extension
 //! ipumm e2e [--artifacts DIR]  end-to-end driver with real numerics
@@ -359,6 +361,35 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                         retention(at("right 2^8")),
                     );
                 }
+            }
+            // the §2.4 wall as a density curve (CSR-aware admission):
+            // constant per density, read off any row of that density
+            println!("predicted memory wall on {} (max fitting square):", arch.name);
+            let mut walls: Vec<(f64, usize)> = Vec::new();
+            for &d in &densities {
+                let permille = ((d * 1000.0).round() as i64).clamp(1, 1000) as u32;
+                if let Some(r) = rows.iter().find(|r| r.spec.density_permille == permille) {
+                    println!("  density {d:.2}: {}^2", r.predicted_max_square);
+                    walls.push((d, r.predicted_max_square));
+                }
+            }
+            if let Some(path) = args.opt("json") {
+                use ipumm::util::json::Json;
+                let mut arr = Json::Arr(Vec::new());
+                for (density, wall) in &walls {
+                    let mut o = Json::obj();
+                    o.set("density", Json::Num(*density));
+                    o.set("max_fitting_square", Json::Int(*wall as i64));
+                    arr.push(o);
+                }
+                let mut j = Json::obj();
+                j.set("arch", Json::Str(arch.name.to_string()));
+                j.set("kind", Json::Str(kind.name().to_string()));
+                j.set("block", Json::Int(block as i64));
+                j.set("seed", Json::Int(seed as i64));
+                j.set("predicted_walls", arr);
+                std::fs::write(path, j.render()).with_context(|| format!("writing {path}"))?;
+                println!("(json -> {path})");
             }
             write_csv(&args, sparse_sweep::to_csv(&rows))?;
         }

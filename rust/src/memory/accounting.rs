@@ -277,6 +277,58 @@ mod tests {
     }
 
     #[test]
+    fn accountant_charges_planner_csr_residency_for_sparse_graphs() {
+        // the sparse planner admits by `BlockCsr::residency_per_tile`;
+        // the accountant must charge exactly that in TensorData for the
+        // graph's CSR tensors — same equality discipline as the grouped
+        // == individual pricing above. Dense B + C live in TensorData
+        // too, so compare the summed CSR-tensor region directly.
+        use crate::planner::partition::MmShape;
+        use crate::sim::engine::SimEngine;
+        use crate::sparse::csr::BlockCsr;
+        use crate::sparse::pattern::{BlockPattern, PatternKind, SparsitySpec};
+        use crate::sparse::planner::sparse_search;
+
+        let a = arch();
+        let engine = SimEngine::new(a.clone());
+        let shape = MmShape::new(768, 1024, 512);
+        let spec = SparsitySpec::new(PatternKind::Banded, 16, 0.4, 9);
+        let pattern = BlockPattern::for_shape(spec, shape);
+        let plan = sparse_search(&a, shape, &pattern).unwrap();
+        let g = engine.build_sparse_graph(shape, &plan, &pattern);
+        let report = MemoryAccountant::new(&a).account(&g);
+        assert!(
+            g.tensors().iter().any(|t| t.name == "A_csr_col"),
+            "a 0.4-density pattern must take the CSR layout branch"
+        );
+
+        let csr = BlockCsr::from_pattern(&pattern);
+        let expected = csr.residency_per_tile(a.tiles, 4);
+        // the whole TensorData region minus the dense B and C shares is
+        // the CSR footprint, per tile
+        let dense_names = ["B", "C"];
+        for (tile, want) in expected.iter().enumerate() {
+            let dense_bytes: u64 = g
+                .tensors()
+                .iter()
+                .filter(|t| dense_names.contains(&t.name.as_str()))
+                .map(|t| t.bytes_on_tile(tile) as u64)
+                .sum();
+            let tensor_data = report.per_tile[tile].region(RegionKind::TensorData);
+            assert_eq!(
+                tensor_data - dense_bytes,
+                *want,
+                "tile {tile}: CSR TensorData diverges from planner residency"
+            );
+        }
+        // totals: values + index, once across the chip
+        assert_eq!(
+            expected.iter().sum::<u64>(),
+            csr.values_bytes(4) + csr.index_bytes()
+        );
+    }
+
+    #[test]
     fn exchange_costs_show_up() {
         let mut g = Graph::new(arch().tiles);
         let mut plan = ExchangePlan::new("x", ExchangePattern::Broadcast);

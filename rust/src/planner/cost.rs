@@ -77,6 +77,13 @@ pub struct CostConfig {
     pub reduce_stage_penalty: bool,
     /// C cast/rearrangement epilogue (keeps left-skew below squared).
     pub c_cast_epilogue: bool,
+    /// CSR-aware sparse memory admission: block-sparse plans bill the A
+    /// operand at its block-CSR footprint instead of the dense share, so
+    /// the §2.4 wall becomes density-dependent (see
+    /// `sparse::planner::sparse_tile_bytes`). Off = the pre-CSR behavior
+    /// where sparse candidates are admitted by the dense bill (the
+    /// ablation baseline). Dense planning ignores this knob entirely.
+    pub sparse_residency: bool,
 }
 
 impl Default for CostConfig {
@@ -89,6 +96,7 @@ impl Default for CostConfig {
             exchange_code_scaling: true,
             reduce_stage_penalty: true,
             c_cast_epilogue: true,
+            sparse_residency: true,
         }
     }
 }
@@ -169,6 +177,17 @@ pub struct PlanCost {
     // -- cycles ----------------------------------------------------------
     pub compute_cycles: u64,
     pub exchange_cycles: u64,
+    /// Per-superstep A/B chunk traffic — the only exchange bucket whose A
+    /// share moves with per-superstep chunk density (sparse scaling uses
+    /// the densest-cell density here).
+    pub exchange_chunk_cycles: u64,
+    /// One-shot prologue scatter of the A and B homes — its A share moves
+    /// with the whole-pattern *realized* density (only nonzero blocks are
+    /// scattered), never with per-superstep density.
+    pub exchange_prologue_cycles: u64,
+    /// Reduction-stage entry + partial-gather landing (pn > 1). Pure C
+    /// traffic: it never scales with A sparsity.
+    pub exchange_reduction_cycles: u64,
     pub sync_cycles: u64,
     pub total_cycles: u64,
     /// MAC cycles that do useful (unpadded, unquantized) work.
@@ -202,6 +221,53 @@ impl PlanCost {
     }
 }
 
+/// The per-tile memory bill of a candidate, split by operand component.
+///
+/// `total()` is exactly [`CostModel::tile_bytes`] — the split exists so
+/// sparse admission (`sparse::planner::sparse_tile_bytes`) can substitute
+/// the **A-side** components (home share → block-CSR footprint, chunk
+/// buffers → densest-cell scaling) while B, C, landing, and exchange code
+/// stay dense. Components are defined so they sum bit-for-bit to the
+/// dense bill: integer-division remainders of the shared home share are
+/// charged to `home_b`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileBill {
+    /// A's resident home share (`eb * m * n / tiles`).
+    pub home_a: u64,
+    /// B's resident home share plus the shared mapping overhead.
+    pub home_b: u64,
+    /// fp32 C accumulator block.
+    pub c_block: u64,
+    /// Reduction landing zones for pn > 1 partial gathers.
+    pub landing: u64,
+    /// Double-buffered A chunk + AMP rearrangement copy.
+    pub chunk_a: u64,
+    /// Double-buffered B chunk.
+    pub chunk_b: u64,
+    /// Per-superstep (unrolled) exchange program code.
+    pub exchange_code: u64,
+    /// Fixed vertex-state / codelet / control floor.
+    pub fixed: u64,
+}
+
+impl TileBill {
+    pub fn total(&self) -> u64 {
+        self.home_a
+            + self.home_b
+            + self.c_block
+            + self.landing
+            + self.chunk_a
+            + self.chunk_b
+            + self.exchange_code
+            + self.fixed
+    }
+
+    /// The A-operand share of the bill — what sparsity can shrink.
+    pub fn a_bytes(&self) -> u64 {
+        self.home_a + self.chunk_a
+    }
+}
+
 pub struct CostModel<'a> {
     pub arch: &'a IpuArch,
     pub config: CostConfig,
@@ -225,12 +291,12 @@ impl<'a> CostModel<'a> {
     }
 
     /// Operand element size under the configured precision.
-    fn eb(&self) -> u64 {
+    pub(crate) fn eb(&self) -> u64 {
         self.config.dtype.elem_bytes()
     }
 
     /// AMP MACs per tile-cycle under the configured precision.
-    fn macs(&self) -> u32 {
+    pub(crate) fn macs(&self) -> u32 {
         match self.config.dtype {
             MmDtype::F32 => self.arch.fp32_macs_per_tile_cycle,
             MmDtype::F16 => self.arch.fp16_macs_per_tile_cycle,
@@ -277,30 +343,44 @@ impl<'a> CostModel<'a> {
     /// infeasible candidates on this before paying for the cycle model —
     /// must stay consistent with `evaluate`'s memory section).
     pub fn tile_bytes(&self, shape: MmShape, part: Partition) -> u64 {
+        self.tile_bill(shape, part).total()
+    }
+
+    /// [`Self::tile_bytes`] split by operand component (see [`TileBill`]).
+    /// `tile_bill(..).total() == tile_bytes(..)` bit-for-bit.
+    pub fn tile_bill(&self, shape: MmShape, part: Partition) -> TileBill {
         let (sm, sn, sk) = part.sub_block(shape);
         let cn = part.cn.min(sn);
         let n_steps = div_ceil(sn, cn);
         let eb = self.eb();
-        let ab_bytes =
-            eb * (shape.m as u64 * shape.n as u64 + shape.n as u64 * shape.k as u64);
+        let a_bytes = eb * shape.m as u64 * shape.n as u64;
+        let ab_bytes = a_bytes + eb * shape.n as u64 * shape.k as u64;
         let home_bytes = ab_bytes / self.arch.tiles as u64 + 64;
-        let c_block_bytes = (sm * sk * 4) as u64; // fp32 accumulator
-        let chunk_bytes = consts::CHUNK_BUFFERS * ((sm + sk) as u64 * cn as u64 * eb)
-            + sm as u64 * cn as u64 * eb;
-        let landing_bytes = if part.pn > 1 {
-            (part.pn as u64 - 1) * c_block_bytes
+        // A's exact share; B absorbs the shared +64 and division remainder
+        let home_a = a_bytes / self.arch.tiles as u64;
+        let home_b = home_bytes - home_a;
+        let c_block = (sm * sk * 4) as u64; // fp32 accumulator
+        let chunk_a = consts::CHUNK_BUFFERS * (sm as u64 * cn as u64 * eb)
+            + sm as u64 * cn as u64 * eb; // buffers + AMP rearrangement copy
+        let chunk_b = consts::CHUNK_BUFFERS * (sk as u64 * cn as u64 * eb);
+        let landing = if part.pn > 1 {
+            (part.pn as u64 - 1) * c_block
         } else {
             0
         };
         let code_steps = if self.config.exchange_code_scaling { n_steps as u64 } else { 1 };
         let exchange_code =
             code_steps * (sm + cn + sk) as u64 * self.arch.exchange_code_row_bytes;
-        home_bytes
-            + c_block_bytes
-            + landing_bytes
-            + chunk_bytes
-            + exchange_code
-            + consts::FIXED_TILE_OVERHEAD_BYTES
+        TileBill {
+            home_a,
+            home_b,
+            c_block,
+            landing,
+            chunk_a,
+            chunk_b,
+            exchange_code,
+            fixed: consts::FIXED_TILE_OVERHEAD_BYTES,
+        }
     }
 
     /// Certified lower bound on `evaluate(shape, {pm, pn, pk, cn}).total_cycles`
@@ -382,11 +462,11 @@ impl<'a> CostModel<'a> {
             amp + re
         };
         let mut compute_cycles = full_steps as u64 * step_compute(cn);
-        let mut exchange_cycles =
+        let mut exchange_chunk_cycles =
             full_steps as u64 * self.exchange_cycles(chunk_recv_bytes(cn), tiles_used);
         if rem > 0 {
             compute_cycles += step_compute(rem);
-            exchange_cycles += self.exchange_cycles(chunk_recv_bytes(rem), tiles_used);
+            exchange_chunk_cycles += self.exchange_cycles(chunk_recv_bytes(rem), tiles_used);
         }
         let mut sync_cycles = consts::SYNCS_PER_STEP * self.arch.sync_cycles * n_steps as u64;
 
@@ -394,22 +474,23 @@ impl<'a> CostModel<'a> {
         let ab_bytes =
             eb * (shape.m as u64 * shape.n as u64 + shape.n as u64 * shape.k as u64);
         let prologue_per_tile = ab_bytes / tiles_used.max(1) as u64;
-        exchange_cycles += self.exchange_cycles(prologue_per_tile, tiles_used);
+        let exchange_prologue_cycles = self.exchange_cycles(prologue_per_tile, tiles_used);
         sync_cycles += self.arch.sync_cycles;
 
         // ---- reduction stage when the reduction dim is split -------------
         let c_block_bytes = (sm * sk * 4) as u64;
+        let mut exchange_reduction_cycles = 0u64;
         let mut reduce_vertices = 0usize;
         if part.pn > 1 {
             // stage-entry cost (C-partial rearrangement + program load)
             // plus a per-split gather round
             if self.config.reduce_stage_penalty {
-                exchange_cycles += consts::REDUCE_STAGE_SETUP_CYCLES
+                exchange_reduction_cycles += consts::REDUCE_STAGE_SETUP_CYCLES
                     + (part.pn as u64 - 1) * consts::REDUCE_STAGE_PER_SPLIT_CYCLES;
             }
             // gather partials to one reducer per output block
             let landing = (part.pn as u64 - 1) * c_block_bytes;
-            exchange_cycles += self.exchange_cycles(landing, tiles_used);
+            exchange_reduction_cycles += self.exchange_cycles(landing, tiles_used);
             sync_cycles += consts::SYNCS_PER_STEP * self.arch.sync_cycles;
             // reduction worklists, spread over the reducer's threads
             let partial_elems_per_reducer = part.pn * sm * sk;
@@ -436,37 +517,30 @@ impl<'a> CostModel<'a> {
         // ---- census ------------------------------------------------------
         let compute_vertices = consts::COMPUTE_VERTICES_PER_TILE * tiles_used;
 
-        // ---- memory bill on the heaviest tile -----------------------------
-        let home_bytes = ab_bytes / self.arch.tiles as u64 + 64;
-        let chunk_bytes =
-            consts::CHUNK_BUFFERS * chunk_recv_bytes(cn) + sm as u64 * cn as u64 * eb;
-        let landing_bytes = if part.pn > 1 {
-            (part.pn as u64 - 1) * c_block_bytes
-        } else {
-            0
-        };
-        let code_steps = if self.config.exchange_code_scaling { n_steps as u64 } else { 1 };
-        let exchange_code = code_steps
-            * (sm + cn + sk) as u64
-            * self.arch.exchange_code_row_bytes;
-        let tile_bytes_tensors = home_bytes + c_block_bytes + landing_bytes;
-        let tile_bytes_total = tile_bytes_tensors
-            + chunk_bytes
-            + exchange_code
-            + consts::FIXED_TILE_OVERHEAD_BYTES;
+        // ---- memory bill on the heaviest tile (component split) -----------
+        let bill = self.tile_bill(shape, part);
+        let chunk_bytes = bill.chunk_a + bill.chunk_b;
+        let exchange_code = bill.exchange_code;
+        let tile_bytes_tensors = bill.home_a + bill.home_b + bill.c_block + bill.landing;
+        let tile_bytes_total = bill.total();
 
         // ---- traffic total -------------------------------------------------
         let bytes_moved = ab_bytes // prologue
             + (chunk_recv_bytes(cn) * full_steps as u64
                 + if rem > 0 { chunk_recv_bytes(rem) } else { 0 })
                 * tiles_used as u64
-            + landing_bytes * (part.pm * part.pk) as u64;
+            + bill.landing * (part.pm * part.pk) as u64;
 
+        let exchange_cycles =
+            exchange_chunk_cycles + exchange_prologue_cycles + exchange_reduction_cycles;
         let total_cycles = compute_cycles + exchange_cycles + sync_cycles;
         PlanCost {
             partition: part,
             compute_cycles,
             exchange_cycles,
+            exchange_chunk_cycles,
+            exchange_prologue_cycles,
+            exchange_reduction_cycles,
             sync_cycles,
             total_cycles,
             useful_cycles,
@@ -624,6 +698,65 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn tile_bill_components_sum_to_tile_bytes() {
+        // the operand split must reproduce the dense bill bit-for-bit —
+        // it is what lets density 1.0 keep the paper's §2.4 wall exactly
+        let arch = IpuArch::gc200();
+        for config in [
+            CostConfig::default(),
+            CostConfig { dtype: MmDtype::F16, ..CostConfig::default() },
+            CostConfig::without(Mechanism::ExchangeCodeScaling),
+        ] {
+            let model = CostModel::with_config(&arch, config);
+            for shape in [
+                MmShape::square(3584),
+                MmShape::square(96),
+                MmShape::new(512, 16384, 2048),
+                MmShape::new(7, 3, 5),
+            ] {
+                for part in [
+                    Partition { pm: 40, pn: 1, pk: 36, cn: 128 },
+                    Partition { pm: 8, pn: 4, pk: 44, cn: 256 },
+                    Partition { pm: 1, pn: 1, pk: 1, cn: 64 },
+                ] {
+                    if !part.is_valid(shape, arch.tiles) {
+                        continue;
+                    }
+                    let bill = model.tile_bill(shape, part);
+                    assert_eq!(bill.total(), model.tile_bytes(shape, part));
+                    assert_eq!(bill.total(), model.evaluate(shape, part).tile_bytes_total);
+                    assert_eq!(bill.a_bytes(), bill.home_a + bill.chunk_a);
+                    assert_eq!((part.pn > 1), (bill.landing > 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_buckets_partition_exchange_cycles() {
+        // chunk + prologue + reduction must cover the whole exchange
+        // bucket (the sparse wrapper scales them independently)
+        let arch = IpuArch::gc200();
+        let model = CostModel::new(&arch);
+        for (shape, part) in [
+            paper_3584_plan(),
+            (MmShape::new(512, 16384, 2048), Partition { pm: 8, pn: 4, pk: 44, cn: 256 }),
+            (MmShape::square(1024), Partition { pm: 32, pn: 1, pk: 46, cn: 128 }),
+        ] {
+            let c = model.evaluate(shape, part);
+            assert_eq!(
+                c.exchange_cycles,
+                c.exchange_chunk_cycles
+                    + c.exchange_prologue_cycles
+                    + c.exchange_reduction_cycles,
+                "{shape:?} {part:?}"
+            );
+            assert!(c.exchange_chunk_cycles > 0 && c.exchange_prologue_cycles > 0);
+            assert_eq!(part.pn > 1, c.exchange_reduction_cycles > 0);
         }
     }
 

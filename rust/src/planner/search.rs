@@ -365,8 +365,27 @@ pub fn search_fits(arch: &IpuArch, shape: MmShape) -> bool {
 /// Ablation variant of [`search_fits`].
 pub fn search_fits_with_config(arch: &IpuArch, shape: MmShape, config: CostConfig) -> bool {
     let model = CostModel::with_config(arch, config);
-    let space = CandidateSpace::new(shape, arch.tiles);
-    let tiles = arch.tiles;
+    let mut found = false;
+    for_each_candidate(shape, arch.tiles, |part| {
+        if model.tile_bytes(shape, part) <= arch.tile_sram_bytes {
+            found = true;
+        }
+        found
+    });
+    found
+}
+
+/// Visit every valid candidate partition of the search space, in serial
+/// enumeration order, until `f` returns `true` (stop). Shared by
+/// [`search_fits_with_config`] and `sparse::planner`'s CSR-aware fits
+/// probe / past-the-wall search, so every admission scan walks exactly
+/// the space the full search prices.
+pub(crate) fn for_each_candidate(
+    shape: MmShape,
+    tiles: usize,
+    mut f: impl FnMut(Partition) -> bool,
+) {
+    let space = CandidateSpace::new(shape, tiles);
     for &pm in &space.pms {
         let max_pk = tiles / pm;
         if max_pk == 0 {
@@ -384,16 +403,16 @@ pub fn search_fits_with_config(arch: &IpuArch, shape: MmShape, config: CostConfi
                     }
                     prev_cn = cn;
                     let part = Partition { pm, pn, pk, cn };
-                    if part.is_valid(shape, tiles)
-                        && model.tile_bytes(shape, part) <= arch.tile_sram_bytes
-                    {
-                        return true;
+                    if !part.is_valid(shape, tiles) {
+                        continue;
+                    }
+                    if f(part) {
+                        return;
                     }
                 }
             }
         }
     }
-    false
 }
 
 /// Largest fitting squared MM (the paper's §2.4 memory-wall statistic),

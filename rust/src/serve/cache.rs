@@ -11,7 +11,13 @@
 //!
 //! Negative results (OOM) are cached too: shapes past the §2.4 memory
 //! wall are exactly the ones whose searches evaluate the most candidates
-//! before failing, so they benefit the most from memoization.
+//! before failing, so they benefit the most from memoization. OOM
+//! verdicts are **fingerprint-dependent** now that the sparse planner's
+//! memory wall moves with density: a dense OOM entry (`sparsity: None`)
+//! must never satisfy a sparse lookup for the same shape (which may plan
+//! fine at low density), and each density memoizes its own verdict —
+//! both fall out of the key carrying the sparsity fingerprint, and both
+//! are pinned by tests below.
 //!
 //! Block-sparse requests add a third key dimension: the
 //! [`SparsitySpec`] fingerprint. A sparse plan depends on the exact
@@ -520,6 +526,51 @@ mod tests {
         // the dense entry is still intact and hit by the dense path
         cache.get_or_plan(&arch, shape).unwrap();
         assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn dense_oom_does_not_poison_sparse_lookups() {
+        use crate::sparse::pattern::{PatternKind, SparsitySpec};
+        // 4096^2 is past the dense §2.4 wall but plans sparse at 25%
+        // density — a cached dense OOM verdict must not be served for
+        // the sparse key, and the sparse success must not overwrite the
+        // dense verdict
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(8);
+        let shape = MmShape::square(4096);
+        assert!(cache.get_or_plan(&arch, shape).is_err(), "dense 4096^2 must OOM");
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.25, 42);
+        let plan = cache
+            .get_or_plan_sparse(&arch, shape, spec)
+            .expect("sparse 4096^2 at 25% density must plan despite the cached dense OOM");
+        assert!(plan.cost.fits);
+        // both verdicts are now warm and independent
+        assert!(cache.get_or_plan(&arch, shape).is_err(), "dense verdict intact");
+        assert!(cache.get_or_plan_sparse(&arch, shape, spec).is_ok());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 2, 2));
+    }
+
+    #[test]
+    fn per_density_oom_verdicts_memoize_separately() {
+        use crate::sparse::pattern::{PatternKind, SparsitySpec};
+        // at 4096^2 the sparse wall is density-dependent: 25% fits,
+        // 100% reproduces the dense OOM — each density is its own entry
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(8);
+        let shape = MmShape::square(4096);
+        let fits = SparsitySpec::new(PatternKind::Random, 8, 0.25, 42);
+        let dense_d = SparsitySpec::new(PatternKind::Random, 8, 1.0, 42);
+        assert!(cache.get_or_plan_sparse(&arch, shape, fits).is_ok());
+        assert!(cache.get_or_plan_sparse(&arch, shape, dense_d).is_err());
+        // warm lookups return the memoized verdicts without re-planning
+        assert!(cache.get_or_plan_sparse(&arch, shape, fits).is_ok());
+        assert!(cache.get_or_plan_sparse(&arch, shape, dense_d).is_err());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (2, 2, 2));
+        // and a sparse success never satisfies a dense lookup
+        assert!(cache.get_or_plan(&arch, shape).is_err());
+        assert_eq!(cache.stats().entries, 3);
     }
 
     #[test]

@@ -345,8 +345,11 @@ impl MmService {
             seconds: plan.seconds(&self.config.arch),
             tflops: plan.effective_tflops(&self.config.arch),
             efficiency: plan.efficiency(),
-            vertices: Some(plan.dense_plan.cost.total_vertices()),
-            max_tile_bytes: Some(plan.cost.dense.tile_bytes_total),
+            // past the dense wall there is no dense baseline census
+            vertices: plan.dense_plan.as_ref().map(|d| d.cost.total_vertices()),
+            // the CSR-aware bill is the plan's true residency (the dense
+            // bill can exceed SRAM for past-the-wall sparse plans)
+            max_tile_bytes: Some(plan.cost.sparse_tile_bytes),
         }
     }
 

@@ -60,8 +60,11 @@ impl SimEngine {
     }
 
     /// Plan and simulate one block-sparse matmul (the A operand follows
-    /// `spec`). `Err` is the *dense* §2.4 wall — static block-CSR keeps
-    /// the dense memory bill (see `sparse::planner`).
+    /// `spec`). `Err` is the **density-dependent** sparse memory wall:
+    /// block-CSR keeps only the nonzero A blocks resident, so shapes past
+    /// the dense §2.4 wall can still plan at low enough density (see
+    /// `sparse::planner::sparse_tile_bytes`); a fully dense spec
+    /// reproduces the dense OOM verdict exactly.
     pub fn simulate_sparse_mm(
         &self,
         shape: MmShape,
@@ -273,12 +276,34 @@ impl SimEngine {
         let rho = plan.realized_density;
         let csr = BlockCsr::from_pattern(pattern);
 
-        // A is block-CSR: dense value tiles + index metadata, spread by
-        // the same balanced mapping policy as dense tensors
+        // A-layout choice, identical to the planner bill's
+        // (`sparse::planner::sparse_tile_bytes` caps the A home share at
+        // the dense share): store A as block-CSR only when that beats
+        // dense storage. Near full density the u32 index plus padded
+        // edge blocks overshoot the dense share, and both the bill and
+        // the graph fall back to a dense layout. In the CSR branch the
+        // mapping is byte-for-byte `BlockCsr::residency_per_tile` —
+        // dense value tiles balanced at *block* granularity, col_idx
+        // travelling with its blocks, row_ptr spread linearly — so the
+        // planner's sparse A home share equals what the accountant
+        // charges these tensors (asserted in `memory::accounting` tests).
         let block = pattern.spec.block;
-        let a_numel = csr.nnz_blocks() * block * block;
-        let a = g.add_tensor("A_bsr", &[csr.nnz_blocks(), block, block], DType::F32);
-        g.set_tile_mapping(a, linear_balanced_mapping(a_numel, tiles));
+        let dense_home_a = 4 * (shape.m as u64 * shape.n as u64) / tiles as u64;
+        let csr_layout = csr.max_tile_residency(tiles, 4) <= dense_home_a;
+        let a = if csr_layout {
+            let a = g.add_tensor("A_bsr", &[csr.nnz_blocks(), block, block], DType::F32);
+            g.set_tile_mapping(a, csr.value_elem_mapping(tiles));
+            let a_col = g.add_tensor("A_csr_col", &[csr.nnz_blocks()], DType::U32);
+            g.set_tile_mapping(a_col, csr.block_mapping(tiles));
+            let a_row = g.add_tensor("A_csr_row", &[csr.block_rows + 1], DType::U32);
+            g.set_tile_mapping(a_row, linear_balanced_mapping(csr.block_rows + 1, tiles));
+            a
+        } else {
+            // dense fallback: same layout as `build_graph`'s A
+            let a = g.add_tensor("A_bsr", &[shape.m, shape.n], DType::F32);
+            g.set_tile_mapping(a, linear_balanced_mapping(shape.m * shape.n, tiles));
+            a
+        };
         let b = g.add_tensor("B", &[shape.n, shape.k], DType::F32);
         g.set_tile_mapping(b, linear_balanced_mapping(shape.n * shape.k, tiles));
         let c = g.add_tensor("C", &[shape.m, shape.k], DType::F32);
@@ -291,8 +316,12 @@ impl SimEngine {
             }),
         );
 
-        // prologue: scatter the CSR values/index and dense B
-        let a_bytes = csr.values_bytes(4) + csr.index_bytes();
+        // prologue: scatter the resident A layout and dense B
+        let a_bytes = if csr_layout {
+            csr.values_bytes(4) + csr.index_bytes()
+        } else {
+            4 * shape.m as u64 * shape.n as u64
+        };
         let b_bytes = 4 * shape.n as u64 * shape.k as u64;
         let per_tile = (a_bytes + b_bytes) / tiles_used.max(1) as u64;
         let mut prologue = ExchangePlan::new("scatter-AB-bsr", ExchangePattern::Scatter);
@@ -603,6 +632,54 @@ mod tests {
             dense.tflops
         );
         assert_eq!(sparse.seconds, dense.seconds);
+    }
+
+    #[test]
+    fn sparse_graph_csr_tensors_match_planner_residency() {
+        // the equality discipline: the planner's sparse A home share
+        // (`BlockCsr::residency_per_tile`) is byte-for-byte what the
+        // built graph holds in its CSR tensors on every tile
+        use crate::sparse::pattern::PatternKind;
+        let e = engine();
+        let shape = MmShape::new(1000, 1536, 700);
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.3, 11);
+        let pattern = BlockPattern::for_shape(spec, shape);
+        let plan = sparse_search(&e.arch, shape, &pattern).unwrap();
+        let g = e.build_sparse_graph(shape, &plan, &pattern);
+        let csr = BlockCsr::from_pattern(&pattern);
+        let expected = csr.residency_per_tile(e.arch.tiles, 4);
+        let csr_tensors: Vec<_> = g
+            .tensors()
+            .iter()
+            .filter(|t| t.name.starts_with("A_bsr") || t.name.starts_with("A_csr"))
+            .collect();
+        assert_eq!(csr_tensors.len(), 3, "values + col_idx + row_ptr");
+        for tile in 0..e.arch.tiles {
+            let got: u64 = csr_tensors.iter().map(|t| t.bytes_on_tile(tile) as u64).sum();
+            assert_eq!(got, expected[tile], "tile {tile}");
+        }
+        let max_got = (0..e.arch.tiles)
+            .map(|tile| csr_tensors.iter().map(|t| t.bytes_on_tile(tile) as u64).sum::<u64>())
+            .max()
+            .unwrap();
+        assert_eq!(max_got, csr.max_tile_residency(e.arch.tiles, 4));
+    }
+
+    #[test]
+    fn sparse_simulation_past_dense_wall() {
+        // tentpole acceptance end-to-end: 4096^2 OOMs dense but builds,
+        // validates, and fits as a 25%-dense block-sparse graph
+        use crate::sparse::pattern::PatternKind;
+        let e = engine();
+        let shape = MmShape::square(4096);
+        assert!(e.simulate_mm(shape).is_err(), "4096^2 must OOM dense");
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.25, 42);
+        let r = e.simulate_sparse_mm(shape, spec).unwrap();
+        assert!(r.plan.dense_plan.is_none());
+        assert!(r.plan.cost.fits);
+        assert!(r.memory.fits(), "graph residency {} must fit", r.memory.max_tile_used);
+        assert!(r.effective_tflops > 0.0);
+        assert!(r.trace.total_cycles() > 0);
     }
 
     #[test]

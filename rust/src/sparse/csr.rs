@@ -8,6 +8,7 @@
 //! dense tensors — so per-tile work stays within one block of the mean
 //! and the planner's load-balance assumption holds.
 
+use crate::graph::tensor::{Interval, TileMapping};
 use crate::memory::mapping::linear_balanced_mapping;
 use crate::sparse::pattern::BlockPattern;
 
@@ -74,6 +75,58 @@ impl BlockCsr {
             .map(|ivs| ivs.iter().map(|iv| iv.len()).sum())
             .collect();
         TileAssignment::new(per_tile_blocks)
+    }
+
+    /// Element-level tile mapping of the dense value tiles: the block
+    /// assignment of [`Self::assign_tiles`], scaled to `block x block`
+    /// elements per block. This is the mapping `sim::build_sparse_graph`
+    /// gives the `A_bsr` tensor, so the accountant's per-tile tensor
+    /// bytes equal [`Self::residency_per_tile`]'s value component.
+    pub fn value_elem_mapping(&self, tiles: usize) -> TileMapping {
+        let bsq = self.block * self.block;
+        self.block_mapping(tiles)
+            .iter()
+            .map(|ivs| {
+                ivs.iter()
+                    .map(|iv| Interval::new(iv.begin * bsq, iv.end * bsq))
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Block-granular balanced assignment (one entry per nonzero block) —
+    /// also the mapping of the `col_idx` metadata (one u32 per block).
+    pub fn block_mapping(&self, tiles: usize) -> TileMapping {
+        linear_balanced_mapping(self.nnz_blocks(), tiles)
+    }
+
+    /// Per-tile resident bytes of the block-CSR `A` operand: dense value
+    /// tiles (balanced per [`Self::assign_tiles`]) plus the u32 index
+    /// metadata each tile holds (`col_idx` travels with its blocks,
+    /// `row_ptr` is spread linearly). This is the planner's sparse A home
+    /// share *and*, by construction, exactly what the memory accountant
+    /// charges for the CSR tensors of the built sparse graph — the
+    /// equality the sparse memory model is pinned by.
+    pub fn residency_per_tile(&self, tiles: usize, elem_bytes: u64) -> Vec<u64> {
+        let value_and_col = (self.block * self.block) as u64 * elem_bytes + 4;
+        let blocks = self.block_mapping(tiles);
+        let rowptr = linear_balanced_mapping(self.row_ptr.len(), tiles);
+        (0..tiles)
+            .map(|t| {
+                let nb: usize = blocks[t].iter().map(|iv| iv.len()).sum();
+                let rp: usize = rowptr[t].iter().map(|iv| iv.len()).sum();
+                nb as u64 * value_and_col + rp as u64 * 4
+            })
+            .collect()
+    }
+
+    /// Heaviest tile of [`Self::residency_per_tile`] — the sparse
+    /// planner's A home-share bill.
+    pub fn max_tile_residency(&self, tiles: usize, elem_bytes: u64) -> u64 {
+        self.residency_per_tile(tiles, elem_bytes)
+            .into_iter()
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -184,6 +237,47 @@ mod tests {
             .unwrap();
         assert!(asn.max_blocks - min_active <= 1, "{} vs {min_active}", asn.max_blocks);
         assert!(asn.balance() > 0.9, "balance {}", asn.balance());
+    }
+
+    #[test]
+    fn residency_sums_to_values_plus_index() {
+        // per-tile residency is a partition of the whole CSR footprint,
+        // and its heaviest tile tracks the balanced block assignment
+        let csr = BlockCsr::from_pattern(&pattern(0.37));
+        for tiles in [1usize, 7, 1472] {
+            let per_tile = csr.residency_per_tile(tiles, 4);
+            assert_eq!(per_tile.len(), tiles);
+            assert_eq!(
+                per_tile.iter().sum::<u64>(),
+                csr.values_bytes(4) + csr.index_bytes()
+            );
+            assert_eq!(
+                csr.max_tile_residency(tiles, 4),
+                per_tile.iter().copied().max().unwrap()
+            );
+        }
+        // one tile holds everything
+        assert_eq!(
+            csr.max_tile_residency(1, 4),
+            csr.values_bytes(4) + csr.index_bytes()
+        );
+    }
+
+    #[test]
+    fn value_elem_mapping_scales_block_assignment() {
+        let csr = BlockCsr::from_pattern(&pattern(0.5));
+        let tiles = 1472;
+        let elems = csr.value_elem_mapping(tiles);
+        let blocks = csr.block_mapping(tiles);
+        let bsq = csr.block * csr.block;
+        let mut covered = 0usize;
+        for (ev, bv) in elems.iter().zip(&blocks) {
+            let e: usize = ev.iter().map(|iv| iv.len()).sum();
+            let b: usize = bv.iter().map(|iv| iv.len()).sum();
+            assert_eq!(e, b * bsq);
+            covered += e;
+        }
+        assert_eq!(covered, csr.nnz_blocks() * bsq);
     }
 
     #[test]

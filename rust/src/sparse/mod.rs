@@ -17,9 +17,12 @@
 //! * [`planner`] — a sparsity-aware cost/search wrapper over
 //!   [`crate::planner`]: compute and exchange scale with the realized
 //!   density of the *densest* partition cell (BSP is lockstep, so the
-//!   bottleneck tile prices the phase) while the memory bill stays dense
-//!   (static block-CSR plans keep dense-equivalent buffers, so the
-//!   paper's §2.4 wall is unchanged).
+//!   bottleneck tile prices the phase), and the memory bill is
+//!   CSR-aware — the A operand is admitted at its block-CSR footprint
+//!   (`planner::sparse_tile_bytes`), so the paper's §2.4 wall becomes a
+//!   density-dependent curve (`planner::sparse_max_fitting_square`)
+//!   while density 1.0 reproduces the dense bill and OOM verdict
+//!   bit-for-bit.
 //!
 //! Reports carry both throughput conventions Domke et al.'s matrix-engine
 //! survey distinguishes: **dense-equivalent** TFlop/s (all `2mnk` flops
@@ -34,5 +37,7 @@ pub mod planner;
 pub use csr::{BlockCsr, TileAssignment};
 pub use pattern::{BlockPattern, PatternKind, SparsitySpec};
 pub use planner::{
-    sparse_plan_from_dense, sparse_search, sparse_search_spec, SparseCost, SparsePlan,
+    sparse_max_fitting_square, sparse_max_fitting_square_linear, sparse_plan_from_dense,
+    sparse_search, sparse_search_fits, sparse_search_spec, sparse_tile_bytes, SparseCost,
+    SparsePlan,
 };

@@ -275,6 +275,25 @@ impl BlockPattern {
         (max, sum / cells.len() as f64)
     }
 
+    /// Prefix-summed occupancy index: build once in O(blocks), then every
+    /// [`CellIndex::cell_densities`] query is O(pm * pn). The CSR-aware
+    /// admission scans ask for hundreds of distinct partition grids per
+    /// pattern (one per `(pm, pn)` the candidate space visits), which
+    /// would be O(blocks) each through [`Self::cell_densities`].
+    pub fn cell_index(&self) -> CellIndex {
+        let (rows, cols) = (self.block_rows, self.block_cols);
+        let mut prefix = vec![0u32; (rows + 1) * (cols + 1)];
+        for bi in 0..rows {
+            let mut row_run = 0u32;
+            for bj in 0..cols {
+                row_run += u32::from(self.nz[bi * cols + bj]);
+                prefix[(bi + 1) * (cols + 1) + (bj + 1)] =
+                    prefix[bi * (cols + 1) + (bj + 1)] + row_run;
+            }
+        }
+        CellIndex { block_rows: rows, block_cols: cols, prefix }
+    }
+
     /// Content fingerprint (spec + occupancy bits) for diagnostics.
     pub fn fingerprint(&self) -> u64 {
         let mut h = std::collections::hash_map::DefaultHasher::new();
@@ -283,6 +302,54 @@ impl BlockPattern {
         self.block_cols.hash(&mut h);
         self.nz.hash(&mut h);
         h.finish()
+    }
+}
+
+/// O(1)-per-cell occupancy queries over a [`BlockPattern`] (see
+/// [`BlockPattern::cell_index`]). Queries reproduce
+/// [`BlockPattern::cell_densities`] bit-for-bit: same cell boundaries,
+/// same accumulation order.
+pub struct CellIndex {
+    block_rows: usize,
+    block_cols: usize,
+    /// `(block_rows + 1) x (block_cols + 1)` 2-D prefix counts.
+    prefix: Vec<u32>,
+}
+
+impl CellIndex {
+    fn count(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> u64 {
+        let w = self.block_cols + 1;
+        (self.prefix[r1 * w + c1] as u64 + self.prefix[r0 * w + c0] as u64)
+            - (self.prefix[r0 * w + c1] as u64 + self.prefix[r1 * w + c0] as u64)
+    }
+
+    /// `(max, mean)` cell density of the `pm x pn` partition grid —
+    /// identical to [`BlockPattern::cell_densities`] for every grid.
+    pub fn cell_densities(&self, pm: usize, pn: usize) -> (f64, f64) {
+        let pm = pm.clamp(1, self.block_rows);
+        let pn = pn.clamp(1, self.block_cols);
+        // the same floor-partition boundaries cell_density_matrix induces:
+        // block row bi belongs to cell bi * pm / block_rows, so cell ci
+        // spans rows [ceil(ci * R / pm), ceil((ci + 1) * R / pm))
+        let row_at = |ci: usize| (ci * self.block_rows).div_ceil(pm);
+        let col_at = |cj: usize| (cj * self.block_cols).div_ceil(pn);
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for ci in 0..pm {
+            let (r0, r1) = (row_at(ci), row_at(ci + 1));
+            for cj in 0..pn {
+                let (c0, c1) = (col_at(cj), col_at(cj + 1));
+                let cap = ((r1 - r0) * (c1 - c0)) as u64;
+                let d = if cap == 0 {
+                    0.0
+                } else {
+                    self.count(r0, r1, c0, c1) as f64 / cap as f64
+                };
+                max = max.max(d);
+                sum += d;
+            }
+        }
+        (max, sum / (pm * pn) as f64)
     }
 }
 
@@ -365,6 +432,28 @@ mod tests {
         let full = BlockPattern::generate(spec(PatternKind::Random, 1.0), 2048, 2048);
         let (fmax, fmean) = full.cell_densities(8, 4);
         assert_eq!((fmax, fmean), (1.0, 1.0));
+    }
+
+    #[test]
+    fn cell_index_matches_cell_densities_exactly() {
+        // the prefix-sum index must be a bit-for-bit drop-in for the
+        // O(blocks) scan, for every grid the candidate space can visit
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xCE11);
+        for kind in PatternKind::all() {
+            for density in [0.08, 0.35, 1.0] {
+                let p = BlockPattern::generate(spec(kind, density), 1111, 733);
+                let idx = p.cell_index();
+                for _ in 0..40 {
+                    let pm = rng.gen_usize(1, 200);
+                    let pn = rng.gen_usize(1, 200);
+                    let (emax, emean) = p.cell_densities(pm, pn);
+                    let (imax, imean) = idx.cell_densities(pm, pn);
+                    assert_eq!(emax.to_bits(), imax.to_bits(), "{kind:?} d{density} {pm}x{pn}");
+                    assert_eq!(emean.to_bits(), imean.to_bits(), "{kind:?} d{density} {pm}x{pn}");
+                }
+            }
+        }
     }
 
     #[test]

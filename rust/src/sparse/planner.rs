@@ -1,40 +1,64 @@
 //! Sparsity-aware plan search: a wrapper over `planner::{cost, search}`.
 //!
-//! PopSparse keeps the *memory* picture of a static block-sparse matmul
-//! essentially dense (dense-equivalent buffers, unrolled exchange code),
-//! while *work* shrinks with the nonzero blocks each tile owns. The
+//! PopSparse keeps the *work* picture of a static block-sparse matmul
+//! proportional to the nonzero blocks each tile owns, and — unlike the
+//! seed model — its *memory* picture is sparse too: only the nonzero
+//! `A` blocks (plus their block-CSR index) are resident per tile. The
 //! wrapper models exactly that split:
 //!
-//! * **memory** — candidates are admitted by the *dense* memory bill
-//!   (`CostModel::tile_bytes`), so the paper's §2.4 wall is unchanged:
-//!   a shape that OOMs dense also OOMs sparse;
+//! * **memory** — candidates are admitted by [`sparse_tile_bytes`]: the
+//!   dense bill ([`CostModel::tile_bill`]) with the A-side components
+//!   substituted — the A home share becomes the block-CSR footprint
+//!   ([`BlockCsr::residency_per_tile`], balanced per tile the way the
+//!   graph builder maps it) and the A chunk buffers scale with the
+//!   densest-cell density. B, C, landing, and exchange code stay dense.
+//!   The paper's §2.4 wall becomes **density-dependent**: shapes past
+//!   the dense wall can plan sparse ([`sparse_max_fitting_square`]
+//!   reports the wall per density), while density 1.0 reproduces the
+//!   dense bill — and the dense OOM verdict — bit-for-bit. Each sparse
+//!   A component is capped at its dense share (a dense layout is always
+//!   a legal fallback), so admission is monotone: anything fitting dense
+//!   fits at every density.
 //! * **compute** — the dense compute bucket scales by the density of the
 //!   *densest* `pm x pn` partition cell (BSP is lockstep: the bottleneck
 //!   tile prices the phase, which is how block-sparse load imbalance
 //!   shows up as lost throughput);
-//! * **exchange** — only the A-chunk share of per-superstep traffic
-//!   scales with density (B stays dense), split by the `sm/(sm+sk)`
-//!   byte ratio; syncs are unchanged (every superstep still runs).
+//! * **exchange** — scaled per sub-bucket (the seed scaled the whole
+//!   bucket by the chunk factor, under-pricing reduction-heavy plans):
+//!   the per-superstep **chunk** A share scales by critical density, the
+//!   one-shot **prologue** A share by realized density (only nonzero
+//!   blocks are scattered), and the **reduction** landing is pure C
+//!   traffic — it stays dense. Syncs are unchanged (every superstep
+//!   still runs).
 //!
-//! The search seeds from the dense winner — optimal at density 1.0 by
-//! construction, so density 1.0 reproduces the dense plan's cost exactly
-//! — and refines the reduction split and chunk size, where sparsity
-//! shifts the optimum. Candidates are density-independent and the
+//! When the dense planner finds a winner, the search seeds from it —
+//! optimal at density 1.0 by construction — and refines the reduction
+//! split and chunk size. Past the dense wall there is no incumbent, so
+//! [`sparse_search`] falls back to a full scan of the candidate space
+//! under the sparse bill. Candidates are density-independent and the
 //! per-candidate cost is monotone in the nonzero set, which makes total
 //! sparse cost monotone non-increasing as density falls (for nested
 //! generators; see the property tests).
 
+use std::collections::HashMap;
+
 use crate::arch::IpuArch;
 use crate::planner::cost::{consts, CostConfig, CostModel, PlanCost};
 use crate::planner::partition::{MmShape, Partition};
-use crate::planner::search::{search_with_config, Plan, PlannerError};
+use crate::planner::search::{
+    bisect_max_fitting, for_each_candidate, search_fits_with_config, search_with_config, Plan,
+    PlannerError,
+};
+use crate::sparse::csr::BlockCsr;
 use crate::sparse::pattern::{BlockPattern, SparsitySpec};
 use crate::util::units::div_ceil;
 
-/// Dense candidate cost plus its sparsity-scaled cycle buckets.
+/// Dense candidate cost plus its sparsity-scaled cycle buckets and the
+/// CSR-aware memory bill.
 #[derive(Clone, Copy, Debug)]
 pub struct SparseCost {
-    /// The dense pricing of the same partition (memory authority).
+    /// The dense pricing of the same partition (cycle-bucket baseline;
+    /// its `fits` flag is the *dense* verdict, not the sparse one).
     pub dense: PlanCost,
     /// Density of the densest partition cell — the scaling bottleneck.
     pub critical_density: f64,
@@ -44,6 +68,15 @@ pub struct SparseCost {
     pub exchange_cycles: u64,
     pub sync_cycles: u64,
     pub total_cycles: u64,
+    /// Cycles of *actual* MAC work (`nnz_elems * k` spread over the used
+    /// tiles) — the effective-efficiency numerator. Equals the dense
+    /// `useful_cycles` at density 1.0.
+    pub useful_cycles: u64,
+    /// Heaviest-tile bytes under the CSR-aware bill
+    /// ([`sparse_tile_bytes`]); `<=` the dense `tile_bytes_total`.
+    pub sparse_tile_bytes: u64,
+    /// The sparse admission verdict: `sparse_tile_bytes` fits SRAM.
+    pub fits: bool,
 }
 
 /// The sparse search's winning plan.
@@ -52,14 +85,16 @@ pub struct SparsePlan {
     pub shape: MmShape,
     pub spec: SparsitySpec,
     /// The dense incumbent the wrapper refined from (and the plan served
-    /// at density 1.0).
-    pub dense_plan: Plan,
+    /// at density 1.0). `None` past the dense §2.4 wall, where only the
+    /// CSR-aware bill admits a plan and no dense baseline exists.
+    pub dense_plan: Option<Plan>,
     pub cost: SparseCost,
     /// Whole-pattern nonzero-block fraction.
     pub realized_density: f64,
     /// Nonzero elements of A (edge-clipped) — effective-flops numerator.
     pub nnz_elems: u64,
-    /// Sparse candidates priced on top of the dense search.
+    /// Sparse candidates priced: refinements on top of the dense search,
+    /// or the admitted slice of the full space past the dense wall.
     pub candidates_evaluated: usize,
 }
 
@@ -91,20 +126,23 @@ impl SparsePlan {
 
     /// Runtime ratio vs the dense plan for the same shape (>= 1.0: the
     /// dense winner is always a sparse candidate and sparsity only
-    /// removes work).
-    pub fn speedup_vs_dense(&self) -> f64 {
-        self.dense_plan.cost.total_cycles as f64 / self.cost.total_cycles.max(1) as f64
+    /// removes work). `None` past the dense wall — no dense baseline.
+    pub fn speedup_vs_dense(&self) -> Option<f64> {
+        self.dense_plan
+            .as_ref()
+            .map(|d| d.cost.total_cycles as f64 / self.cost.total_cycles.max(1) as f64)
     }
 
-    /// Model efficiency under the effective convention: nonzero MAC
-    /// cycles over the critical path.
+    /// Model efficiency under the effective convention: cycles of actual
+    /// MAC work over the critical path. Unclamped — pricing compute by
+    /// the *critical* (not realized) density keeps this `<= 1` under
+    /// load imbalance, which the old realized-density metric only
+    /// achieved by clamping.
     pub fn efficiency(&self) -> f64 {
         if self.cost.total_cycles == 0 {
             0.0
         } else {
-            (self.dense_plan.cost.useful_cycles as f64 * self.realized_density
-                / self.cost.total_cycles as f64)
-                .min(1.0)
+            self.cost.useful_cycles as f64 / self.cost.total_cycles as f64
         }
     }
 }
@@ -113,22 +151,117 @@ fn scale_cycles(cycles: u64, factor: f64) -> u64 {
     (cycles as f64 * factor).ceil() as u64
 }
 
+/// Scale a byte quantity by a density in `[0, 1]` — the ceil never
+/// exceeds the input, so density-scaled components stay capped at their
+/// dense share by construction.
+fn scale_bytes(bytes: u64, density: f64) -> u64 {
+    debug_assert!((0.0..=1.0).contains(&density), "density {density} out of range");
+    (bytes as f64 * density).ceil() as u64
+}
+
+/// Partition-independent facts about one pattern, hoisted out of the
+/// per-candidate loops (`nnz_elems` and the CSR residency are O(blocks)
+/// scans — pricing thousands of candidates must not repeat them).
+struct PatternStats {
+    realized: f64,
+    nnz_elems: u64,
+    /// Heaviest-tile block-CSR footprint (values + index) of the A
+    /// operand, balanced over the whole chip.
+    csr_resident: u64,
+}
+
+fn pattern_stats(model: &CostModel, shape: MmShape, pattern: &BlockPattern) -> PatternStats {
+    let csr = BlockCsr::from_pattern(pattern);
+    PatternStats {
+        realized: pattern.realized_density(),
+        nnz_elems: pattern.nnz_elems(shape.m, shape.n),
+        csr_resident: csr.max_tile_residency(model.arch.tiles, model.eb()),
+    }
+}
+
+/// The CSR-aware heaviest-tile memory bill of one candidate: the dense
+/// [`CostModel::tile_bill`] with the A home share replaced by the
+/// block-CSR footprint and the A chunk buffers scaled by the densest-cell
+/// density. Each A component is capped at its dense share (dense layout
+/// is always a legal fallback), so the bill is `<=` the dense bill at
+/// every density and equals it bit-for-bit at density 1.0. Under
+/// `config.sparse_residency == false` the dense bill is returned
+/// unchanged — the seed's dense-wall admission, kept as the ablation.
+pub fn sparse_tile_bytes(
+    model: &CostModel,
+    shape: MmShape,
+    part: Partition,
+    pattern: &BlockPattern,
+) -> u64 {
+    let stats = pattern_stats(model, shape, pattern);
+    let (critical, _) = pattern.cell_densities(part.pm, part.pn);
+    sparse_bill_bytes(model, shape, part, critical, stats.csr_resident)
+}
+
+/// [`sparse_tile_bytes`] from precomputed pattern facts (the admission
+/// scans pay the O(blocks) parts once, not per candidate).
+fn sparse_bill_bytes(
+    model: &CostModel,
+    shape: MmShape,
+    part: Partition,
+    critical: f64,
+    csr_resident: u64,
+) -> u64 {
+    let bill = model.tile_bill(shape, part);
+    if !model.config.sparse_residency {
+        return bill.total();
+    }
+    // the home cap is a real layout choice, not just a bound:
+    // `sim::build_sparse_graph` stores A dense whenever the CSR
+    // footprint (index + padded edge blocks) overshoots the dense share,
+    // so the billed residency is what the graph actually maps
+    let home_a = bill.home_a.min(csr_resident);
+    let chunk_a = scale_bytes(bill.chunk_a, critical);
+    bill.total() - bill.a_bytes() + home_a + chunk_a
+}
+
 /// Price one partition for a pattern: dense evaluation, then density
-/// scaling of the compute and A-traffic buckets.
+/// scaling of the compute and A-traffic buckets plus the CSR memory bill.
 pub fn sparse_cost(
     model: &CostModel,
     shape: MmShape,
     part: Partition,
     pattern: &BlockPattern,
 ) -> SparseCost {
-    let dense = model.evaluate(shape, part);
+    let stats = pattern_stats(model, shape, pattern);
     let (critical, mean) = pattern.cell_densities(part.pm, part.pn);
+    sparse_cost_inner(model, shape, part, critical, mean, &stats)
+}
+
+fn sparse_cost_inner(
+    model: &CostModel,
+    shape: MmShape,
+    part: Partition,
+    critical: f64,
+    mean: f64,
+    stats: &PatternStats,
+) -> SparseCost {
+    let dense = model.evaluate(shape, part);
     let (sm, _, sk) = part.sub_block(shape);
-    let a_frac = sm as f64 / (sm + sk) as f64;
+    // per-bucket A byte shares: chunks move sm vs sk columns per
+    // superstep; the prologue moves the whole m x n vs n x k homes
+    let a_frac_chunk = sm as f64 / (sm + sk) as f64;
+    let a_frac_prologue = shape.m as f64 / (shape.m + shape.k) as f64;
     let compute_cycles = scale_cycles(dense.compute_cycles, critical);
-    let exchange_cycles =
-        scale_cycles(dense.exchange_cycles, a_frac * critical + (1.0 - a_frac));
+    let chunk = scale_cycles(
+        dense.exchange_chunk_cycles,
+        a_frac_chunk * critical + (1.0 - a_frac_chunk),
+    );
+    let prologue = scale_cycles(
+        dense.exchange_prologue_cycles,
+        a_frac_prologue * stats.realized + (1.0 - a_frac_prologue),
+    );
+    // reduction traffic is C partials — dense regardless of A sparsity
+    let exchange_cycles = chunk + prologue + dense.exchange_reduction_cycles;
     let sync_cycles = dense.sync_cycles;
+    let useful_macs = stats.nnz_elems * shape.k as u64 / part.tiles_used().max(1) as u64;
+    let useful_cycles = useful_macs / model.macs() as u64;
+    let sparse_tile_bytes = sparse_bill_bytes(model, shape, part, critical, stats.csr_resident);
     SparseCost {
         dense,
         critical_density: critical,
@@ -137,6 +270,9 @@ pub fn sparse_cost(
         exchange_cycles,
         sync_cycles,
         total_cycles: compute_cycles + exchange_cycles + sync_cycles,
+        useful_cycles,
+        sparse_tile_bytes,
+        fits: sparse_tile_bytes <= model.arch.tile_sram_bytes,
     }
 }
 
@@ -168,7 +304,10 @@ fn candidate_partitions(shape: MmShape, seed: Partition) -> Vec<Partition> {
 }
 
 /// Find the fastest plan for `shape` under `pattern` (full cost model).
-/// `Err` is the *dense* §2.4 memory wall — unchanged by sparsity.
+/// `Err` is the **sparse** memory wall: with the CSR-aware bill a shape
+/// past the dense §2.4 wall can still plan at low enough density, and
+/// the verdict depends on the pattern. A fully dense pattern reproduces
+/// the dense plan — and the dense OOM verdict — bit-for-bit.
 pub fn sparse_search(
     arch: &IpuArch,
     shape: MmShape,
@@ -184,8 +323,17 @@ pub fn sparse_search_with_config(
     pattern: &BlockPattern,
     config: CostConfig,
 ) -> Result<SparsePlan, PlannerError> {
-    let dense_plan = search_with_config(arch, shape, config)?;
-    Ok(sparse_plan_from_dense(arch, shape, pattern, config, dense_plan))
+    match search_with_config(arch, shape, config) {
+        Ok(dense_plan) => Ok(sparse_plan_from_dense(arch, shape, pattern, config, dense_plan)),
+        Err(err) => {
+            if pattern.nonzero_blocks() == pattern.total_blocks() {
+                // fully dense IS the dense problem: reproduce the dense
+                // OOM verdict (statistics included) bit-for-bit
+                return Err(err);
+            }
+            sparse_search_past_dense_wall(arch, shape, pattern, config)
+        }
+    }
 }
 
 /// Price `pattern` against a *precomputed* dense plan for the same
@@ -193,7 +341,8 @@ pub fn sparse_search_with_config(
 /// depends only on the shape, so sweeps over many densities of one
 /// shape should run it once and amortize it here (the plan cache plays
 /// the same role for the serving layer). Infallible: a fitting dense
-/// plan is always a valid sparse candidate.
+/// plan always passes the sparse admission (the CSR bill never exceeds
+/// the dense bill), so it is always a valid sparse candidate.
 pub fn sparse_plan_from_dense(
     arch: &IpuArch,
     shape: MmShape,
@@ -202,17 +351,20 @@ pub fn sparse_plan_from_dense(
     dense_plan: Plan,
 ) -> SparsePlan {
     let model = CostModel::with_config(arch, config);
+    let stats = pattern_stats(&model, shape, pattern);
     if pattern.nonzero_blocks() == pattern.total_blocks() {
         // fully dense pattern IS the dense problem: serve the dense
         // winner verbatim (every scale factor is 1.0, and the dense
         // search's optimum is authoritative)
-        let cost = sparse_cost(&model, shape, dense_plan.partition(), pattern);
+        let part = dense_plan.partition();
+        let (critical, mean) = pattern.cell_densities(part.pm, part.pn);
+        let cost = sparse_cost_inner(&model, shape, part, critical, mean, &stats);
         return SparsePlan {
             shape,
             spec: pattern.spec,
             realized_density: 1.0,
-            nnz_elems: pattern.nnz_elems(shape.m, shape.n),
-            dense_plan,
+            nnz_elems: stats.nnz_elems,
+            dense_plan: Some(dense_plan),
             cost,
             candidates_evaluated: 1,
         };
@@ -223,13 +375,16 @@ pub fn sparse_plan_from_dense(
         if !part.is_valid(shape, arch.tiles) {
             continue;
         }
-        // dense memory admission: sparsity never relaxes the wall
-        if model.tile_bytes(shape, part) > arch.tile_sram_bytes {
+        let (critical, mean) = pattern.cell_densities(part.pm, part.pn);
+        // CSR-aware admission: the sparse bill, not the dense §2.4 wall
+        if sparse_bill_bytes(&model, shape, part, critical, stats.csr_resident)
+            > arch.tile_sram_bytes
+        {
             continue;
         }
         evaluated += 1;
-        let cost = sparse_cost(&model, shape, part, pattern);
-        debug_assert!(cost.dense.fits);
+        let cost = sparse_cost_inner(&model, shape, part, critical, mean, &stats);
+        debug_assert!(cost.fits);
         let better = match &best {
             None => true,
             Some(b) => cost.total_cycles < b.total_cycles,
@@ -243,12 +398,170 @@ pub fn sparse_plan_from_dense(
     SparsePlan {
         shape,
         spec: pattern.spec,
-        realized_density: pattern.realized_density(),
-        nnz_elems: pattern.nnz_elems(shape.m, shape.n),
-        dense_plan,
+        realized_density: stats.realized,
+        nnz_elems: stats.nnz_elems,
+        dense_plan: Some(dense_plan),
         cost,
         candidates_evaluated: evaluated,
     }
+}
+
+/// Full-space sparse search for shapes past the *dense* §2.4 wall: the
+/// dense planner found nothing, so there is no incumbent to refine from.
+/// Every candidate the dense search would enumerate is admitted by the
+/// CSR-aware bill instead and priced sparse. Serial enumeration order
+/// with strict improvement keeps the result deterministic.
+///
+/// Contract: the caller has already established that the dense search
+/// fails for `(arch, shape, config)` — sweeps that amortize one dense
+/// search per shape call this directly per density instead of paying a
+/// redundant full dense OOM enumeration through [`sparse_search`].
+pub(crate) fn sparse_search_past_dense_wall(
+    arch: &IpuArch,
+    shape: MmShape,
+    pattern: &BlockPattern,
+    config: CostConfig,
+) -> Result<SparsePlan, PlannerError> {
+    let model = CostModel::with_config(arch, config);
+    let stats = pattern_stats(&model, shape, pattern);
+    let index = pattern.cell_index();
+    let mut cells: HashMap<(usize, usize), (f64, f64)> = HashMap::new();
+    let mut best: Option<SparseCost> = None;
+    let mut valid = 0usize;
+    let mut admitted = 0usize;
+    for_each_candidate(shape, arch.tiles, |part| {
+        valid += 1;
+        let (critical, mean) = *cells
+            .entry((part.pm, part.pn))
+            .or_insert_with(|| index.cell_densities(part.pm, part.pn));
+        if sparse_bill_bytes(&model, shape, part, critical, stats.csr_resident)
+            > arch.tile_sram_bytes
+        {
+            return false;
+        }
+        admitted += 1;
+        let cost = sparse_cost_inner(&model, shape, part, critical, mean, &stats);
+        debug_assert!(cost.fits);
+        let better = match &best {
+            None => true,
+            Some(b) => cost.total_cycles < b.total_cycles,
+        };
+        if better {
+            best = Some(cost);
+        }
+        false
+    });
+    match best {
+        Some(cost) => Ok(SparsePlan {
+            shape,
+            spec: pattern.spec,
+            realized_density: stats.realized,
+            nnz_elems: stats.nnz_elems,
+            dense_plan: None,
+            cost,
+            candidates_evaluated: admitted,
+        }),
+        None => Err(PlannerError::OutOfMemory { candidates_evaluated: valid }),
+    }
+}
+
+/// Does *any* partition of `shape` fit under `spec`'s CSR-aware bill?
+/// The sparse twin of [`crate::planner::search::search_fits`]: no cycle
+/// model, early exit on the first admissible candidate, and agreement
+/// with `sparse_search(..).is_ok()` by construction. Fully dense specs
+/// defer to the dense probe (same verdict, no pattern scan).
+pub fn sparse_search_fits(arch: &IpuArch, shape: MmShape, spec: SparsitySpec) -> bool {
+    sparse_search_fits_with_config(arch, shape, spec, CostConfig::default())
+}
+
+/// Ablation variant of [`sparse_search_fits`].
+pub fn sparse_search_fits_with_config(
+    arch: &IpuArch,
+    shape: MmShape,
+    spec: SparsitySpec,
+    config: CostConfig,
+) -> bool {
+    let pattern = BlockPattern::for_shape(spec, shape);
+    if pattern.nonzero_blocks() == pattern.total_blocks() {
+        return search_fits_with_config(arch, shape, config);
+    }
+    let model = CostModel::with_config(arch, config);
+    let stats = pattern_stats(&model, shape, &pattern);
+    let index = pattern.cell_index();
+    let mut cells: HashMap<(usize, usize), f64> = HashMap::new();
+    let mut found = false;
+    for_each_candidate(shape, arch.tiles, |part| {
+        let critical = *cells
+            .entry((part.pm, part.pn))
+            .or_insert_with(|| index.cell_densities(part.pm, part.pn).0);
+        if sparse_bill_bytes(&model, shape, part, critical, stats.csr_resident)
+            <= arch.tile_sram_bytes
+        {
+            found = true;
+        }
+        found
+    });
+    found
+}
+
+/// Largest fitting squared block-sparse MM under `spec` — the paper's
+/// §2.4 memory-wall statistic per density. Bisects over the fits-only
+/// probe [`sparse_search_fits`], like the dense
+/// [`crate::planner::search::max_fitting_square`]; validated against
+/// [`sparse_max_fitting_square_linear`]. Non-decreasing as density falls
+/// (the CSR bill is monotone in the nonzero set for nested generators).
+pub fn sparse_max_fitting_square(
+    arch: &IpuArch,
+    spec: SparsitySpec,
+    step: usize,
+    limit: usize,
+) -> usize {
+    sparse_max_fitting_square_with_config(arch, spec, step, limit, CostConfig::default())
+}
+
+/// Ablation variant of [`sparse_max_fitting_square`].
+pub fn sparse_max_fitting_square_with_config(
+    arch: &IpuArch,
+    spec: SparsitySpec,
+    step: usize,
+    limit: usize,
+    config: CostConfig,
+) -> usize {
+    bisect_max_fitting(step, limit, |s| {
+        sparse_search_fits_with_config(arch, MmShape::square(s), spec, config)
+    })
+}
+
+/// Linear-scan reference for [`sparse_max_fitting_square`] (tests and
+/// benches — mirrors `max_fitting_square_linear`'s contract).
+pub fn sparse_max_fitting_square_linear(
+    arch: &IpuArch,
+    spec: SparsitySpec,
+    step: usize,
+    limit: usize,
+) -> usize {
+    sparse_max_fitting_square_linear_with_config(arch, spec, step, limit, CostConfig::default())
+}
+
+/// Ablation variant of [`sparse_max_fitting_square_linear`].
+pub fn sparse_max_fitting_square_linear_with_config(
+    arch: &IpuArch,
+    spec: SparsitySpec,
+    step: usize,
+    limit: usize,
+    config: CostConfig,
+) -> usize {
+    let mut best = 0;
+    let mut s = step;
+    while s <= limit {
+        if sparse_search_fits_with_config(arch, MmShape::square(s), spec, config) {
+            best = s;
+        } else if best > 0 {
+            break; // monotone past the wall
+        }
+        s += step;
+    }
+    best
 }
 
 /// Plan from a spec alone (materializes the pattern) — the serving
@@ -265,7 +578,7 @@ pub fn sparse_search_spec(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::planner::search::search;
+    use crate::planner::search::{max_fitting_square, search};
     use crate::sparse::pattern::PatternKind;
 
     fn arch() -> IpuArch {
@@ -289,8 +602,31 @@ mod tests {
                 "{kind:?}: sparse {} vs dense {}",
                 sparse.cost.total_cycles, dense.cost.total_cycles
             );
-            assert!((sparse.speedup_vs_dense() - 1.0).abs() < 1e-12);
+            assert!((sparse.speedup_vs_dense().unwrap() - 1.0).abs() < 1e-12);
             assert_eq!(sparse.effective_flops(), shape.flops());
+        }
+    }
+
+    #[test]
+    fn density_one_buckets_and_bill_exact() {
+        // the per-bucket exchange split and the CSR-aware bill must both
+        // collapse to the dense numbers at density 1.0 (satellite
+        // regression: the old whole-bucket scaling was exact here too,
+        // and the component substitution must not break it)
+        let a = arch();
+        let model = CostModel::new(&a);
+        for shape in [MmShape::square(1536), MmShape::new(512, 16384, 2048)] {
+            let dense = search(&a, shape).unwrap();
+            let part = dense.partition();
+            let pattern =
+                BlockPattern::for_shape(SparsitySpec::new(PatternKind::Random, 8, 1.0, 7), shape);
+            let sc = sparse_cost(&model, shape, part, &pattern);
+            assert_eq!(sc.compute_cycles, dense.cost.compute_cycles);
+            assert_eq!(sc.exchange_cycles, dense.cost.exchange_cycles);
+            assert_eq!(sc.sync_cycles, dense.cost.sync_cycles);
+            assert_eq!(sc.useful_cycles, dense.cost.useful_cycles);
+            assert_eq!(sc.sparse_tile_bytes, model.tile_bytes(shape, part));
+            assert_eq!(sc.sparse_tile_bytes, dense.cost.tile_bytes_total);
         }
     }
 
@@ -308,7 +644,7 @@ mod tests {
                     p.cost.total_cycles
                 );
             }
-            assert!(p.speedup_vs_dense() >= 1.0 - 1e-12);
+            assert!(p.speedup_vs_dense().unwrap() >= 1.0 - 1e-12);
             prev = Some(p.cost.total_cycles);
         }
     }
@@ -326,12 +662,142 @@ mod tests {
     }
 
     #[test]
-    fn dense_memory_wall_survives_sparsity() {
-        // far past the §2.4 wall: even a 10%-dense pattern must OOM,
-        // because static block-CSR keeps the dense memory bill
+    fn far_past_wall_still_ooms_sparse() {
+        // far past the wall even for the CSR bill: at 6144^2 the *dense*
+        // components alone (B home + B chunks + C block + exchange code)
+        // overflow the tile for every candidate, so even a 10%-dense
+        // pattern must OOM — the sparse wall is density-dependent, not
+        // gone
         let spec = SparsitySpec::new(PatternKind::Random, 8, 0.1, 1);
         let err = sparse_search_spec(&arch(), MmShape::square(6144), spec).unwrap_err();
         assert!(matches!(err, PlannerError::OutOfMemory { .. }));
+        assert!(!sparse_search_fits(&arch(), MmShape::square(6144), spec));
+    }
+
+    #[test]
+    fn past_dense_wall_low_density_plans() {
+        // the tentpole acceptance: 4096^2 OOMs dense (§2.4) but plans at
+        // 25% density under the CSR-aware bill; at density 1.0 the dense
+        // OOM verdict is reproduced bit-for-bit
+        let a = arch();
+        let shape = MmShape::square(4096);
+        let dense_err = search(&a, shape).unwrap_err();
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.25, 42);
+        let plan = sparse_search_spec(&a, shape, spec).unwrap();
+        assert!(plan.cost.fits);
+        assert!(plan.cost.sparse_tile_bytes <= a.tile_sram_bytes);
+        assert!(plan.dense_plan.is_none(), "no dense baseline past the wall");
+        assert!(plan.speedup_vs_dense().is_none());
+        assert!(plan.partition().is_valid(shape, a.tiles));
+        assert!(plan.cost.total_cycles > 0 && plan.candidates_evaluated > 0);
+        assert!(sparse_search_fits(&a, shape, spec));
+        // density 1.0: identical OOM verdict, fits probe agrees
+        let dense_spec = SparsitySpec::new(PatternKind::Random, 8, 1.0, 42);
+        let sparse_err = sparse_search_spec(&a, shape, dense_spec).unwrap_err();
+        assert_eq!(sparse_err, dense_err);
+        assert!(!sparse_search_fits(&a, shape, dense_spec));
+    }
+
+    #[test]
+    fn sparse_residency_knob_restores_dense_wall() {
+        // ablation: with the CSR residency off, admission falls back to
+        // the dense bill and the 4096^2 shape OOMs at every density
+        let a = arch();
+        let shape = MmShape::square(4096);
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.25, 42);
+        let config = CostConfig { sparse_residency: false, ..CostConfig::default() };
+        let pattern = BlockPattern::for_shape(spec, shape);
+        assert!(sparse_search_with_config(&a, shape, &pattern, config).is_err());
+        assert!(!sparse_search_fits_with_config(&a, shape, spec, config));
+        // and the bill itself degenerates to the dense one
+        let model = CostModel::with_config(&a, config);
+        let part = Partition { pm: 40, pn: 1, pk: 36, cn: 128 };
+        assert_eq!(
+            sparse_tile_bytes(&model, shape, part, &pattern),
+            model.tile_bytes(shape, part)
+        );
+    }
+
+    #[test]
+    fn sparse_bill_never_exceeds_dense_bill() {
+        // the dense-layout fallback cap: admission is monotone because
+        // the sparse bill is bounded by the dense bill at every density
+        let a = arch();
+        let model = CostModel::new(&a);
+        for shape in [MmShape::square(2048), MmShape::new(512, 8192, 1024)] {
+            for density in [0.1, 0.5, 0.999, 1.0] {
+                let pattern = BlockPattern::for_shape(
+                    SparsitySpec::new(PatternKind::Random, 8, density, 3),
+                    shape,
+                );
+                for part in [
+                    Partition { pm: 40, pn: 1, pk: 36, cn: 128 },
+                    Partition { pm: 8, pn: 4, pk: 44, cn: 256 },
+                ] {
+                    if !part.is_valid(shape, a.tiles) {
+                        continue;
+                    }
+                    assert!(
+                        sparse_tile_bytes(&model, shape, part, &pattern)
+                            <= model.tile_bytes(shape, part),
+                        "sparse bill above dense at d={density} for {shape:?} {part:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_exchange_no_longer_underscaled() {
+        // satellite regression: the seed scaled the whole exchange bucket
+        // (prologue and reduction landing included) by the A-chunk
+        // factor; the per-bucket split keeps reduction traffic dense, so
+        // a reduction-heavy plan must price at or above the old formula
+        let a = arch();
+        let model = CostModel::new(&a);
+        let shape = MmShape::new(512, 16384, 2048);
+        let dense = search(&a, shape).unwrap();
+        let part = dense.partition();
+        assert!(part.pn > 1, "need a reduction-heavy plan: {part:?}");
+        let pattern =
+            BlockPattern::for_shape(SparsitySpec::new(PatternKind::Random, 8, 0.25, 42), shape);
+        let sc = sparse_cost(&model, shape, part, &pattern);
+        let (sm, _, sk) = part.sub_block(shape);
+        let a_frac = sm as f64 / (sm + sk) as f64;
+        let old_factor = a_frac * sc.critical_density + (1.0 - a_frac);
+        let old = (sc.dense.exchange_cycles as f64 * old_factor).ceil() as u64;
+        assert!(
+            sc.exchange_cycles >= old,
+            "per-bucket exchange {} under-prices the old formula {}",
+            sc.exchange_cycles,
+            old
+        );
+        // the reduction share specifically survives unscaled
+        assert!(sc.exchange_cycles >= sc.dense.exchange_reduction_cycles);
+        assert!(sc.dense.exchange_reduction_cycles > 0);
+    }
+
+    #[test]
+    fn efficiency_unclamped_on_imbalanced_banded() {
+        // satellite regression: the old metric multiplied dense useful
+        // cycles by *realized* density while compute is priced by
+        // *critical* density — under banded imbalance that overstates,
+        // hidden only by the clamp. The nnz-based metric stays <= 1
+        // without any clamp (block-aligned shape: no edge padding).
+        for shape in [MmShape::square(2048), MmShape::new(512, 8192, 2048)] {
+            for density in [0.1, 0.2, 0.4] {
+                let p = plan_at(shape, PatternKind::Banded, density);
+                let raw = p.cost.useful_cycles as f64 / p.cost.total_cycles as f64;
+                assert!(raw > 0.0 && raw <= 1.0, "raw efficiency {raw} for {shape:?} d{density}");
+                assert_eq!(p.efficiency(), raw, "efficiency must be the unclamped ratio");
+                assert!(
+                    p.cost.critical_density > p.cost.mean_density,
+                    "banded pattern should be imbalanced ({} vs {})",
+                    p.cost.critical_density,
+                    p.cost.mean_density
+                );
+            }
+        }
     }
 
     #[test]
@@ -340,8 +806,12 @@ mod tests {
         let a = arch();
         let right = MmShape::new(512, 8192, 2048);
         let p = plan_at(right, PatternKind::Random, 0.5);
-        assert!(p.cost.dense.fits);
-        assert!(p.speedup_vs_dense() > 1.0, "sparsity should pay: {}", p.speedup_vs_dense());
+        assert!(p.cost.fits);
+        assert!(
+            p.speedup_vs_dense().unwrap() > 1.0,
+            "sparsity should pay: {:?}",
+            p.speedup_vs_dense()
+        );
         assert!(p.effective_tflops(&a) > 0.0);
     }
 
@@ -354,7 +824,8 @@ mod tests {
         let a = arch();
         let model = CostModel::new(&a);
         let pattern = BlockPattern::for_shape(p.spec, shape);
-        let seeded = sparse_cost(&model, shape, p.dense_plan.partition(), &pattern);
+        let dense_part = p.dense_plan.as_ref().unwrap().partition();
+        let seeded = sparse_cost(&model, shape, dense_part, &pattern);
         assert!(p.cost.total_cycles <= seeded.total_cycles);
         assert!(p.candidates_evaluated >= 2);
     }
@@ -375,5 +846,37 @@ mod tests {
             assert_eq!(sparse.cost.sync_cycles, dense.cost.sync_cycles);
         }
         assert!(sparse.cost.compute_cycles < dense.cost.compute_cycles);
+    }
+
+    #[test]
+    fn wall_bisection_matches_linear_and_tracks_density() {
+        let a = arch();
+        // density 1.0 defers to the dense probe: the paper's 3584 wall
+        let dense_spec = SparsitySpec::new(PatternKind::Random, 8, 1.0, 42);
+        assert_eq!(
+            sparse_max_fitting_square(&a, dense_spec, 128, 8192),
+            max_fitting_square(&a, 128, 8192)
+        );
+        assert_eq!(sparse_max_fitting_square(&a, dense_spec, 128, 8192), 3584);
+        // low density pushes the wall past 3584 (the acceptance shape
+        // 4096^2 fits at 25%), and bisection equals the linear scan
+        let quarter = SparsitySpec::new(PatternKind::Random, 8, 0.25, 42);
+        let wall = sparse_max_fitting_square(&a, quarter, 128, 6144);
+        assert!(wall >= 4096, "25%-density wall {wall} should clear 4096");
+        assert_eq!(
+            sparse_max_fitting_square(&a, quarter, 512, 5120),
+            sparse_max_fitting_square_linear(&a, quarter, 512, 5120)
+        );
+        // the wall never shrinks as density falls
+        let mut prev = 0usize;
+        for density in [1.0, 0.5, 0.25, 0.1] {
+            let spec = SparsitySpec::new(PatternKind::Random, 8, density, 42);
+            let w = sparse_max_fitting_square(&a, spec, 256, 6144);
+            assert!(
+                w >= prev || prev == 0,
+                "wall shrank from {prev} to {w} as density fell to {density}"
+            );
+            prev = w;
+        }
     }
 }

@@ -174,8 +174,9 @@ fn s1_skew_advantage_only_degrades_gracefully_under_sparsity() {
     // the question neither source paper answers alone: crossing the
     // paper's skew axis with PopSparse's density axis. Gates: density
     // 1.0 equals the dense path everywhere it fits, sparsity always
-    // speeds the model up, and OOM is a *shape* property, not a density
-    // one (the dense §2.4 wall is unchanged by sparsity)
+    // speeds the model up, and the memory wall is density-dependent
+    // *in one direction only*: sparsity can admit shapes the dense bill
+    // rejects, never the reverse
     let rows = sparse_sweep::run(
         &IpuArch::gc200(),
         22,
@@ -204,13 +205,24 @@ fn s1_skew_advantage_only_degrades_gracefully_under_sparsity() {
                 assert!(s >= 1.0, "{}: sparsity slowed the model down", r.label);
                 assert!(eff <= deq + 1e-9, "{}: effective above dense-equiv", r.label);
             }
-            // dense-OOM and sparse-OOM must agree per shape (dense wall)
-            assert_eq!(
-                dense_fits,
-                r.dense_equiv_tflops.is_some(),
-                "{}: sparsity must not move the memory wall",
-                r.label
-            );
+            // the wall only ever moves outward with sparsity: a fully
+            // dense row mirrors the dense verdict exactly, and anything
+            // fitting dense must fit at every density (CSR admission is
+            // capped at the dense bill)
+            if r.spec.is_dense() {
+                assert_eq!(
+                    dense_fits,
+                    r.dense_equiv_tflops.is_some(),
+                    "{}: density 1.0 must reproduce the dense verdict",
+                    r.label
+                );
+            } else if dense_fits {
+                assert!(
+                    r.dense_equiv_tflops.is_some(),
+                    "{}: fits dense but OOMs at lower density",
+                    r.label
+                );
+            }
         }
     }
 }
