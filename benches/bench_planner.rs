@@ -12,7 +12,8 @@
 //! `search` for the 8192-class skewed shapes).
 
 use ipumm::arch::IpuArch;
-use ipumm::planner::search::{max_fitting_square, search, search_fits};
+use ipumm::planner::cost::CostConfig;
+use ipumm::planner::search::{max_fitting_square, search, search_fits, search_with_workers};
 use ipumm::planner::MmShape;
 use ipumm::util::bench::{black_box, Bench};
 
@@ -132,6 +133,12 @@ mod baseline {
 }
 
 fn main() {
+    // pin the thread budget so the workers=1-vs-4 rows measure the same
+    // machine everywhere (a request above the core count just time-slices;
+    // the explicit env keeps the recorded speedups comparable across runs)
+    if std::env::var_os("IPUMM_THREAD_BUDGET").is_none() {
+        std::env::set_var("IPUMM_THREAD_BUDGET", "4");
+    }
     let arch = IpuArch::gc200();
     // iteration sizing comes from the shared Bench policy (IPUMM_BENCH_FAST)
     let mut b = Bench::new("planner");
@@ -163,6 +170,22 @@ fn main() {
     b.run("max_fitting_square", || black_box(max_fitting_square(&arch, 128, 8192)));
     let after = b.results().last().unwrap().summary.mean;
     b.throughput(before / after, "x vs baseline");
+
+    // worker scaling of one cold search under the governed pool. The
+    // `_w1`/`_w4` names deliberately do NOT form a `_baseline` pair: the
+    // bench-check gate compares implementations against the frozen seed,
+    // not serial-vs-parallel wall clock, which is noise-prone on shared
+    // runners — the speedup is recorded as a throughput annotation only.
+    let skew = MmShape::new(512, 8192, 8192);
+    b.run("search_skew_right_8192_w1", || {
+        black_box(search_with_workers(&arch, skew, CostConfig::default(), 1).is_ok())
+    });
+    let w1 = b.results().last().unwrap().summary.mean;
+    b.run("search_skew_right_8192_w4", || {
+        black_box(search_with_workers(&arch, skew, CostConfig::default(), 4).is_ok())
+    });
+    let w4 = b.results().last().unwrap().summary.mean;
+    b.throughput(w1 / w4, "x vs workers=1");
 
     // OOM probes: full search vs fits-only rejection
     b.run("oom_probe_6144", || black_box(search(&arch, MmShape::square(6144)).is_ok()));

@@ -7,15 +7,23 @@
 //! runtime the model says block sparsity buys at each density.
 
 use ipumm::arch::IpuArch;
+use ipumm::planner::cost::CostConfig;
 use ipumm::planner::partition::MmShape;
 use ipumm::planner::search::search;
 use ipumm::serve::PlanCache;
 use ipumm::sparse::csr::BlockCsr;
 use ipumm::sparse::pattern::{BlockPattern, PatternKind, SparsitySpec};
-use ipumm::sparse::planner::{sparse_max_fitting_square, sparse_search};
+use ipumm::sparse::planner::{
+    sparse_max_fitting_square, sparse_search, sparse_search_past_dense_wall_with_workers,
+};
 use ipumm::util::bench::{black_box, Bench};
 
 fn main() {
+    // pin the budget before first use so the workers=1-vs-4 cold-plan
+    // rows are comparable across machines (see bench_planner.rs)
+    if std::env::var_os("IPUMM_THREAD_BUDGET").is_none() {
+        std::env::set_var("IPUMM_THREAD_BUDGET", "4");
+    }
     let arch = IpuArch::gc200();
     let mut b = Bench::new("sparse");
 
@@ -52,6 +60,45 @@ fn main() {
             b.throughput(plan.speedup_vs_dense().unwrap_or(1.0), "x modeled speedup");
         }
     }
+
+    // the tentpole acceptance rows: cold past-the-wall sparse planning
+    // for a >3584^2 shape (4096^2 OOMs dense, plans at 25% density) at
+    // workers=1 (serial) vs workers=4 under the governed pm-stripe
+    // sharding. The recorded `x vs workers=1` throughput is the
+    // cold-plan speedup; the `_w1`/`_w4` names deliberately do not form
+    // a bench-check `_baseline` gate pair (serial-vs-parallel wall clock
+    // is noise-prone on shared runners — record, don't gate).
+    let wall_shape = MmShape::square(4096);
+    let wall_spec = SparsitySpec::new(PatternKind::Random, 8, 0.25, 42);
+    let wall_pattern = BlockPattern::for_shape(wall_spec, wall_shape);
+    assert!(search(&arch, wall_shape).is_err(), "4096^2 must OOM dense");
+    b.run("past_wall_plan_4096_d250_w1", || {
+        black_box(
+            sparse_search_past_dense_wall_with_workers(
+                &arch,
+                wall_shape,
+                &wall_pattern,
+                CostConfig::default(),
+                1,
+            )
+            .unwrap(),
+        )
+    });
+    let w1 = b.results().last().unwrap().summary.mean;
+    b.run("past_wall_plan_4096_d250_w4", || {
+        black_box(
+            sparse_search_past_dense_wall_with_workers(
+                &arch,
+                wall_shape,
+                &wall_pattern,
+                CostConfig::default(),
+                4,
+            )
+            .unwrap(),
+        )
+    });
+    let w4 = b.results().last().unwrap().summary.mean;
+    b.throughput(w1 / w4, "x vs workers=1");
 
     // density-dependent memory wall: bisect the max fitting square per
     // density (the §2.4 statistic as a curve; density 1.0 must land on

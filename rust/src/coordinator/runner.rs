@@ -1,16 +1,121 @@
-//! Worker-pool job runner.
+//! Worker-pool job runner and the process-wide thread-budget governor.
 //!
 //! Simulator and GPU-model jobs are pure CPU work with no shared state, so
 //! they fan out over a scoped thread pool (no tokio offline; std threads +
 //! mpsc). Results are re-ordered to match submission order so tables are
 //! deterministic regardless of scheduling.
+//!
+//! ## §Perf — the thread budget
+//!
+//! Every pool in the crate ([`par_map`], `planner::search_with_workers`,
+//! `sparse::planner`'s past-the-wall shards, `serve::MmService`'s batch
+//! workers) draws its threads from one shared [`ThreadBudget`]: a
+//! process-wide permit pool sized to the machine width. Worker counts
+//! (`--workers`, `IPUMM_SEARCH_WORKERS`, `workers:` arguments) are
+//! **requests** against the budget, not absolute counts — when sweeps
+//! nest planner searches inside sweep workers, the inner pools are
+//! granted whatever is left (always at least the calling thread), so
+//! sweep-workers × planner-workers can no longer oversubscribe the
+//! machine. Grants never block and never change results: every governed
+//! pool is deterministic for any worker count, so the governor only
+//! shapes wall-clock, never output.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::coordinator::device::{run_shape, Backend};
 use crate::coordinator::metrics::{MetricsRecord, MetricsTable};
 use crate::planner::partition::MmShape;
+
+/// Process-wide worker-thread permit pool (see the module docs). One
+/// global instance governs every pool in the crate; `new` exists for
+/// tests that need an isolated budget.
+pub struct ThreadBudget {
+    total: usize,
+    available: AtomicUsize,
+}
+
+/// A grant of worker threads from a [`ThreadBudget`]. Holds
+/// `workers() - 1` permits (the calling thread is always free, so every
+/// grant is at least 1 and [`ThreadBudget::acquire`] never blocks);
+/// dropping the lease returns the permits.
+pub struct BudgetLease<'a> {
+    budget: &'a ThreadBudget,
+    granted: usize,
+}
+
+impl<'a> BudgetLease<'a> {
+    /// Worker threads this lease entitles the holder to run (>= 1).
+    pub fn workers(&self) -> usize {
+        self.granted
+    }
+}
+
+impl Drop for BudgetLease<'_> {
+    fn drop(&mut self) {
+        let extra = self.granted.saturating_sub(1);
+        if extra > 0 {
+            self.budget.available.fetch_add(extra, Ordering::Relaxed);
+        }
+    }
+}
+
+impl ThreadBudget {
+    /// An isolated budget of `total` permits (tests / tuning).
+    pub fn new(total: usize) -> ThreadBudget {
+        let total = total.max(1);
+        ThreadBudget { total, available: AtomicUsize::new(total) }
+    }
+
+    /// The shared process-wide budget: machine width
+    /// (`available_parallelism`), overridable with `IPUMM_THREAD_BUDGET`
+    /// (read once, at first use — benches pin it for reproducible runs).
+    pub fn global() -> &'static ThreadBudget {
+        static GLOBAL: OnceLock<ThreadBudget> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let total = std::env::var("IPUMM_THREAD_BUDGET")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .filter(|&n: &usize| n >= 1)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+                });
+            ThreadBudget::new(total)
+        })
+    }
+
+    /// Total permits (the machine width this budget models).
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Permits currently free (diagnostics; racy by nature).
+    pub fn available(&self) -> usize {
+        self.available.load(Ordering::Relaxed)
+    }
+
+    /// Grant between 1 and `request` workers without blocking: the
+    /// calling thread is always allowed, and up to `request - 1` extra
+    /// permits are taken from whatever is free. Nested pools therefore
+    /// degrade to serial (grant 1) when the budget is exhausted instead
+    /// of oversubscribing the machine.
+    pub fn acquire(&self, request: usize) -> BudgetLease<'_> {
+        let wanted = request.max(1) - 1;
+        let mut taken = 0usize;
+        if wanted > 0 {
+            let _ = self.available.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |free| {
+                    taken = free.min(wanted);
+                    Some(free - taken)
+                },
+            );
+        }
+        BudgetLease { budget: self, granted: 1 + taken }
+    }
+}
 
 /// One unit of benchmark work.
 #[derive(Clone, Debug)]
@@ -33,6 +138,11 @@ impl Job {
 /// yields a deterministic output for every worker count. This is the
 /// §Perf primitive the sweep drivers (`fig4` via [`run_jobs`],
 /// `memory_study`, `sparse_sweep`) plan their grid points through.
+///
+/// The worker count is a *request* against [`ThreadBudget::global`]: a
+/// `par_map` nested inside another governed pool is granted whatever the
+/// budget has left (at least the calling thread), so nested sweeps stay
+/// within the machine width.
 pub fn par_map<T, R, F>(items: Vec<T>, workers: Option<usize>, f: F) -> Vec<R>
 where
     T: Send,
@@ -40,10 +150,16 @@ where
     F: Fn(T) -> R + Sync,
 {
     let n = items.len();
-    let workers = workers
+    let request = workers
         .unwrap_or_else(default_workers)
         .max(1)
         .min(n.max(1));
+    let lease = if request > 1 {
+        Some(ThreadBudget::global().acquire(request))
+    } else {
+        None
+    };
+    let workers = lease.as_ref().map_or(1, |l| l.workers());
     if workers <= 1 {
         return items.into_iter().map(f).collect();
     }
@@ -167,5 +283,60 @@ mod tests {
             assert_eq!(par_map(items.clone(), workers, |i| i * i), expect);
         }
         assert!(par_map(Vec::<usize>::new(), Some(4), |i: usize| i).is_empty());
+    }
+
+    #[test]
+    fn budget_grants_are_bounded_and_returned() {
+        let budget = ThreadBudget::new(4);
+        assert_eq!((budget.total(), budget.available()), (4, 4));
+        let a = budget.acquire(3); // takes 2 extra permits
+        assert_eq!(a.workers(), 3);
+        assert_eq!(budget.available(), 2);
+        let b = budget.acquire(8); // only 2 permits left -> 3 workers
+        assert_eq!(b.workers(), 3);
+        assert_eq!(budget.available(), 0);
+        let c = budget.acquire(5); // exhausted -> the calling thread only
+        assert_eq!(c.workers(), 1);
+        drop(b);
+        drop(c);
+        assert_eq!(budget.available(), 2);
+        drop(a);
+        assert_eq!(budget.available(), 4, "every permit returned");
+    }
+
+    #[test]
+    fn budget_request_of_one_takes_no_permits() {
+        let budget = ThreadBudget::new(2);
+        let lease = budget.acquire(1);
+        assert_eq!(lease.workers(), 1);
+        assert_eq!(budget.available(), 2, "serial requests are free");
+    }
+
+    #[test]
+    fn budget_never_blocks_even_at_zero() {
+        let budget = ThreadBudget::new(1);
+        let outer = budget.acquire(4);
+        assert_eq!(outer.workers(), 1, "budget of 1 is the calling thread");
+        let nested = budget.acquire(4);
+        assert_eq!(nested.workers(), 1, "nested acquire degrades to serial");
+    }
+
+    #[test]
+    fn global_budget_is_shared_and_positive() {
+        let g = ThreadBudget::global();
+        assert!(g.total() >= 1);
+        assert!(std::ptr::eq(g, ThreadBudget::global()), "one global pool");
+    }
+
+    #[test]
+    fn par_map_results_identical_under_exhausted_budget() {
+        // drain the global budget, then fan out: the grant degrades to 1
+        // worker but the output is bit-identical (determinism for any
+        // worker count is the governor's contract)
+        let items: Vec<usize> = (0..32).collect();
+        let expect: Vec<usize> = items.iter().map(|i| i * 3).collect();
+        let hog = ThreadBudget::global().acquire(usize::MAX - 1);
+        assert!(hog.workers() >= 1);
+        assert_eq!(par_map(items, Some(8), |i| i * 3), expect);
     }
 }

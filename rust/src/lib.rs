@@ -3,7 +3,7 @@
 //! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
 //! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
 //!
-//! The crate has six roles (see DESIGN.md):
+//! The crate has seven roles (see DESIGN.md):
 //!
 //! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
 //!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
@@ -58,6 +58,23 @@
 //!    and records before/after numbers to `BENCH_planner.json`
 //!    (`IPUMM_BENCH_JSON=1`); see README "Performance" for how to read
 //!    them and the worker policies (`IPUMM_SEARCH_WORKERS`, `--workers`).
+//! 7. **Machine-wide scaling governor** — every hot search loop scales
+//!    with the machine *without* oversubscribing it or giving up
+//!    determinism: candidates are priced by a **staged evaluator**
+//!    (`CostModel::evaluate_cycles` — cycles-only, one admission bill,
+//!    early-exit against the shared incumbent; the full `PlanCost` is
+//!    materialized only for the winner, property-tested identical to the
+//!    full-evaluate winner on both paper architectures); the sparse
+//!    past-the-wall search shards `pm` stripes like the dense one over a
+//!    hoisted `PatternContext`
+//!    (`sparse_search_past_dense_wall_with_workers` — bit-identical
+//!    `SparsePlan` for any worker count); and one process-wide permit
+//!    pool (`coordinator::runner::ThreadBudget`, machine width,
+//!    `IPUMM_THREAD_BUDGET` override) governs `par_map`, planner
+//!    searches, sparse shards, and serve's batch workers — worker counts
+//!    everywhere are *requests*, so nested pools degrade to serial
+//!    instead of oversubscribing. `ipumm bench-check` gates the recorded
+//!    `BENCH_*.json` trajectory against the in-run frozen baselines.
 //!
 //! [`coordinator`] orchestrates benchmark jobs across these backends, and
 //! [`experiments`] regenerates each of the paper's tables and figures.

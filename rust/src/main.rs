@@ -10,7 +10,9 @@
 //! ipumm memory                 §2.4 max-square memory study
 //! ipumm phases                 Fig. 3 BSP phase breakdown
 //! ipumm profile m n k [--json] PopVision-style profile of one shape
-//! ipumm plan m n k             show the planner's chosen partition
+//! ipumm plan m n k [--workers N]
+//!                              show the planner's chosen partition
+//!                              (prints the effective thread budget)
 //! ipumm run m n k [--real]     one shape on all backends (+PJRT verify)
 //! ipumm ablation               cost-model ablation study
 //! ipumm trace [--jobs N]       trace-driven latency/throughput study
@@ -25,6 +27,11 @@
 //!                              (dense-equivalent + effective TFlop/s,
 //!                              per-density predicted memory wall;
 //!                              --json dumps the wall curve)
+//! ipumm bench-check [--dir D] [--tolerance PCT]
+//!                              CI regression gate: parse BENCH_*.json
+//!                              and fail when a benchmark regressed more
+//!                              than PCT% (default 20) vs its in-run
+//!                              frozen baseline
 //! ipumm streaming              §6 streaming-memory extension
 //! ipumm multiipu               §6 multi-IPU scaling extension
 //! ipumm e2e [--artifacts DIR]  end-to-end driver with real numerics
@@ -47,9 +54,11 @@ use ipumm::experiments::{
     ablation, fig4, fig5, fp16, memory_study, multi_ipu_x, phases, sparse_sweep, streaming,
     table1, vertices,
 };
-use ipumm::sparse::pattern::PatternKind;
+use ipumm::coordinator::runner::ThreadBudget;
+use ipumm::planner::cost::CostConfig;
 use ipumm::planner::partition::MmShape;
-use ipumm::planner::search::search;
+use ipumm::planner::search::{search_with_workers, search_workers};
+use ipumm::sparse::pattern::PatternKind;
 use ipumm::profiler::popvision::PopVisionReport;
 #[cfg(feature = "xla")]
 use ipumm::runtime::blockmm::BlockMmExecutor;
@@ -62,7 +71,7 @@ use ipumm::util::units::{fmt_bytes, fmt_tflops};
 
 const OPTIONS: &[&str] = &[
     "arch", "gpu", "csv", "json", "workers", "max-size", "ks", "artifacts", "block", "chips",
-    "jobs", "seed", "cache", "batch", "warmup", "k", "kind", "densities",
+    "jobs", "seed", "cache", "batch", "warmup", "k", "kind", "densities", "dir", "tolerance",
 ];
 const FLAGS: &[&str] = &["real", "verbose"];
 
@@ -84,7 +93,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|sparse|streaming|multiipu|e2e|all> [args]"
+        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|sparse|bench-check|streaming|multiipu|e2e|all> [args]"
     );
     eprintln!("see rust/src/main.rs header for per-command options");
 }
@@ -114,6 +123,19 @@ fn shape_from(args: &Args) -> Result<MmShape> {
         args.pos_usize(1, "n")?,
         args.pos_usize(2, "k")?,
     ))
+}
+
+/// The effective worker budget for perf-reproducible runs: every
+/// `--workers` value is a request against the process-wide thread budget
+/// (see `coordinator::runner::ThreadBudget`), so the line a run prints is
+/// what actually bounds its parallelism.
+fn budget_line(workers: Option<usize>) -> String {
+    let b = ThreadBudget::global();
+    format!(
+        "thread budget: {} permits (override: IPUMM_THREAD_BUDGET); --workers request: {}",
+        b.total(),
+        workers.map_or_else(|| "auto".to_string(), |w| w.to_string()),
+    )
 }
 
 fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
@@ -207,9 +229,16 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
             }
         }
         "plan" => {
-            let (args, arch, _, _) = parse_common(raw)?;
+            let (args, arch, _, workers) = parse_common(raw)?;
             let shape = shape_from(&args)?;
-            match search(&arch, shape) {
+            println!("{}", budget_line(workers));
+            let result = search_with_workers(
+                &arch,
+                shape,
+                CostConfig::default(),
+                workers.unwrap_or_else(search_workers),
+            );
+            match result {
                 Ok(plan) => {
                     let p = plan.partition();
                     let c = &plan.cost;
@@ -337,6 +366,7 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 .map(|s| s.trim().parse().context("bad --densities"))
                 .collect::<Result<_>>()?;
             let seed = args.opt_usize("seed", 42)? as u64;
+            println!("{}", budget_line(workers));
             let rows = sparse_sweep::run(&arch, 22, 4, k, block, &densities, kind, seed, workers);
             println!("{}", sparse_sweep::to_table(&rows).to_ascii());
             for &d in &densities {
@@ -392,6 +422,61 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 println!("(json -> {path})");
             }
             write_csv(&args, sparse_sweep::to_csv(&rows))?;
+        }
+        "bench-check" => {
+            // CI regression gate over the perf-trajectory JSON the bench
+            // smoke step emits: every `<name>_baseline` row frozen by
+            // bench_planner/bench_sparse gates its `<name>` twin
+            let args = Args::parse(raw, OPTIONS, FLAGS)?;
+            let dir = args.opt_or("dir", ".");
+            let tolerance_pct = args.opt_usize("tolerance", 20)?;
+            let tolerance = tolerance_pct as f64 / 100.0;
+            let mut checked = 0usize;
+            let mut failures = 0usize;
+            for (file, required) in [("BENCH_planner.json", true), ("BENCH_sparse.json", false)] {
+                let path = std::path::Path::new(dir).join(file);
+                let text = match std::fs::read_to_string(&path) {
+                    Ok(text) => text,
+                    Err(e) if !required => {
+                        eprintln!("bench-check: skipping {} ({e})", path.display());
+                        continue;
+                    }
+                    Err(e) => bail!(
+                        "cannot read {} ({e}) — run the bench smoke step first \
+                         (IPUMM_BENCH_JSON=1 cargo bench --bench bench_planner ...)",
+                        path.display()
+                    ),
+                };
+                let doc = ipumm::util::json::Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                let verdicts = ipumm::util::bench::regression_verdicts(&doc, tolerance)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                for v in &verdicts {
+                    checked += 1;
+                    let status = if v.regressed {
+                        failures += 1;
+                        "FAIL"
+                    } else {
+                        "ok"
+                    };
+                    println!(
+                        "{status:>4}  {}/{:<44} {:>10.3}ms vs baseline {:>10.3}ms ({:.2}x)",
+                        v.group,
+                        v.name,
+                        v.mean_s * 1e3,
+                        v.baseline_mean_s * 1e3,
+                        v.ratio
+                    );
+                }
+            }
+            println!(
+                "bench-check: {checked} gated rows, {failures} regressions \
+                 (tolerance {tolerance_pct}%)"
+            );
+            anyhow::ensure!(
+                failures == 0,
+                "{failures} benchmark(s) regressed more than {tolerance_pct}% vs the in-run baseline"
+            );
         }
         "streaming" => {
             let (_, arch, _, _) = parse_common(raw)?;

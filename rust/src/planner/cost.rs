@@ -171,7 +171,7 @@ impl CostConfig {
 }
 
 /// Fully-priced candidate plan.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlanCost {
     pub partition: Partition,
     // -- cycles ----------------------------------------------------------
@@ -265,6 +265,34 @@ impl TileBill {
     /// The A-operand share of the bill — what sparsity can shrink.
     pub fn a_bytes(&self) -> u64 {
         self.home_a + self.chunk_a
+    }
+}
+
+/// The cycle buckets of one candidate, without the memory bill, vertex
+/// census, or traffic sections — what the staged search needs to rank
+/// candidates ([`CostModel::evaluate_cycles`]) and what the sparse
+/// wrapper's per-bucket density scaling consumes. Produced and consumed
+/// only through [`CostModel::cycle_costs`]/`cycle_costs_bounded`, so the
+/// buckets are the same numbers [`CostModel::evaluate`] reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct CycleCosts {
+    pub compute_cycles: u64,
+    pub exchange_chunk_cycles: u64,
+    pub exchange_prologue_cycles: u64,
+    pub exchange_reduction_cycles: u64,
+    pub sync_cycles: u64,
+    pub useful_cycles: u64,
+    pub supersteps: usize,
+    pub reduce_vertices: usize,
+}
+
+impl CycleCosts {
+    pub fn exchange_cycles(&self) -> u64 {
+        self.exchange_chunk_cycles + self.exchange_prologue_cycles + self.exchange_reduction_cycles
+    }
+
+    pub fn total(&self) -> u64 {
+        self.compute_cycles + self.exchange_cycles() + self.sync_cycles
     }
 }
 
@@ -441,8 +469,37 @@ impl<'a> CostModel<'a> {
         mac_cycles + chunk_exchange + prologue + sync_cycles + reduction + cast
     }
 
-    /// Price one candidate partition for `shape`.
-    pub fn evaluate(&self, shape: MmShape, part: Partition) -> PlanCost {
+    /// §Perf staged pricing: `evaluate`'s `total_cycles` — bit-for-bit —
+    /// without the memory bill, census, or traffic sections, or `None` as
+    /// soon as the running cycle total strictly exceeds `bound`. The
+    /// search's hot loop prices every surviving candidate through this
+    /// (bound = the shared incumbent) and materializes a full [`PlanCost`]
+    /// only for the final winner; since the running total only grows, a
+    /// `None` candidate's true total is `> bound`, so it can never beat or
+    /// tie the incumbent — staged and full searches pick identical winners
+    /// (see `staged_search_matches_full_evaluate_winner`).
+    pub fn evaluate_cycles(&self, shape: MmShape, part: Partition, bound: u64) -> Option<u64> {
+        self.cycle_costs_bounded(shape, part, Some(bound)).map(|c| c.total())
+    }
+
+    /// The cycle-bucket breakdown `evaluate` prices (no bill/census).
+    pub(crate) fn cycle_costs(&self, shape: MmShape, part: Partition) -> CycleCosts {
+        self.cycle_costs_bounded(shape, part, None)
+            .expect("unbounded cycle pricing never exits early")
+    }
+
+    /// Single source of truth for every cycle bucket, shared by
+    /// [`Self::evaluate`], the staged [`Self::evaluate_cycles`], and the
+    /// sparse wrapper's staged pricing. With `bound: Some(b)` the
+    /// accumulation exits early (returns `None`) once the partial total
+    /// strictly exceeds `b`; partial sums are monotone, so an early exit
+    /// proves the full total would exceed `b` too.
+    fn cycle_costs_bounded(
+        &self,
+        shape: MmShape,
+        part: Partition,
+        bound: Option<u64>,
+    ) -> Option<CycleCosts> {
         debug_assert!(part.is_valid(shape, self.arch.tiles));
         let macs = self.macs();
         let (sm, sn, sk) = part.sub_block(shape);
@@ -469,6 +526,12 @@ impl<'a> CostModel<'a> {
             exchange_chunk_cycles += self.exchange_cycles(chunk_recv_bytes(rem), tiles_used);
         }
         let mut sync_cycles = consts::SYNCS_PER_STEP * self.arch.sync_cycles * n_steps as u64;
+        if let Some(b) = bound {
+            // staged exit after the dominant main-loop buckets
+            if compute_cycles + exchange_chunk_cycles + sync_cycles > b {
+                return None;
+            }
+        }
 
         // ---- prologue: scatter A and B from home mapping -----------------
         let ab_bytes =
@@ -476,6 +539,13 @@ impl<'a> CostModel<'a> {
         let prologue_per_tile = ab_bytes / tiles_used.max(1) as u64;
         let exchange_prologue_cycles = self.exchange_cycles(prologue_per_tile, tiles_used);
         sync_cycles += self.arch.sync_cycles;
+        if let Some(b) = bound {
+            if compute_cycles + exchange_chunk_cycles + exchange_prologue_cycles + sync_cycles
+                > b
+            {
+                return None;
+            }
+        }
 
         // ---- reduction stage when the reduction dim is split -------------
         let c_block_bytes = (sm * sk * 4) as u64;
@@ -513,6 +583,46 @@ impl<'a> CostModel<'a> {
         let useful_macs =
             shape.m as u64 * shape.n as u64 * shape.k as u64 / tiles_used.max(1) as u64;
         let useful_cycles = useful_macs / macs as u64;
+
+        let costs = CycleCosts {
+            compute_cycles,
+            exchange_chunk_cycles,
+            exchange_prologue_cycles,
+            exchange_reduction_cycles,
+            sync_cycles,
+            useful_cycles,
+            supersteps: n_steps,
+            reduce_vertices,
+        };
+        if let Some(b) = bound {
+            if costs.total() > b {
+                return None;
+            }
+        }
+        Some(costs)
+    }
+
+    /// Price one candidate partition for `shape`.
+    pub fn evaluate(&self, shape: MmShape, part: Partition) -> PlanCost {
+        let CycleCosts {
+            compute_cycles,
+            exchange_chunk_cycles,
+            exchange_prologue_cycles,
+            exchange_reduction_cycles,
+            sync_cycles,
+            useful_cycles,
+            supersteps: n_steps,
+            reduce_vertices,
+        } = self.cycle_costs(shape, part);
+        let (sm, sn, sk) = part.sub_block(shape);
+        let tiles_used = part.tiles_used();
+        let cn = part.cn.min(sn);
+        let full_steps = sn / cn;
+        let rem = sn % cn;
+        let eb = self.eb();
+        let chunk_recv_bytes = |c: usize| (sm + sk) as u64 * c as u64 * eb;
+        let ab_bytes =
+            eb * (shape.m as u64 * shape.n as u64 + shape.n as u64 * shape.k as u64);
 
         // ---- census ------------------------------------------------------
         let compute_vertices = consts::COMPUTE_VERTICES_PER_TILE * tiles_used;
@@ -757,6 +867,72 @@ mod tests {
             );
             assert!(c.exchange_chunk_cycles > 0 && c.exchange_prologue_cycles > 0);
             assert_eq!(part.pn > 1, c.exchange_reduction_cycles > 0);
+        }
+    }
+
+    #[test]
+    fn staged_cycles_match_full_evaluate_bit_for_bit() {
+        // the staged evaluator must reproduce evaluate().total_cycles
+        // exactly (unbounded) and only ever return None for candidates
+        // strictly worse than the bound — the invariant the staged
+        // search's winner identity rests on
+        let arch = IpuArch::gc200();
+        for config in [
+            CostConfig::default(),
+            CostConfig { dtype: MmDtype::F16, ..CostConfig::default() },
+            CostConfig::without(Mechanism::ReduceStagePenalty),
+            CostConfig::without(Mechanism::CCastEpilogue),
+        ] {
+            let model = CostModel::with_config(&arch, config);
+            for shape in [
+                MmShape::square(3584),
+                MmShape::new(512, 16384, 2048),
+                MmShape::new(7, 3, 5),
+            ] {
+                for (pm, pn, pk) in [(40, 1, 36), (8, 4, 44), (1, 1, 1)] {
+                    for cn in consts::CN_CANDIDATES {
+                        let part = Partition { pm, pn, pk, cn };
+                        if !part.is_valid(shape, arch.tiles) {
+                            continue;
+                        }
+                        let full = model.evaluate(shape, part);
+                        let staged = model.evaluate_cycles(shape, part, u64::MAX);
+                        assert_eq!(staged, Some(full.total_cycles), "{shape:?} {part:?}");
+                        // bound exactly at the total: never pruned (ties survive)
+                        assert_eq!(
+                            model.evaluate_cycles(shape, part, full.total_cycles),
+                            Some(full.total_cycles)
+                        );
+                        // bound strictly below: pruned
+                        assert_eq!(
+                            model.evaluate_cycles(shape, part, full.total_cycles - 1),
+                            None
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_costs_buckets_match_evaluate() {
+        let arch = IpuArch::gc200();
+        let model = CostModel::new(&arch);
+        for (shape, part) in [
+            paper_3584_plan(),
+            (MmShape::new(512, 16384, 2048), Partition { pm: 8, pn: 4, pk: 44, cn: 256 }),
+        ] {
+            let cc = model.cycle_costs(shape, part);
+            let full = model.evaluate(shape, part);
+            assert_eq!(cc.compute_cycles, full.compute_cycles);
+            assert_eq!(cc.exchange_chunk_cycles, full.exchange_chunk_cycles);
+            assert_eq!(cc.exchange_prologue_cycles, full.exchange_prologue_cycles);
+            assert_eq!(cc.exchange_reduction_cycles, full.exchange_reduction_cycles);
+            assert_eq!(cc.sync_cycles, full.sync_cycles);
+            assert_eq!(cc.useful_cycles, full.useful_cycles);
+            assert_eq!(cc.supersteps, full.supersteps);
+            assert_eq!(cc.reduce_vertices, full.reduce_vertices);
+            assert_eq!(cc.total(), full.total_cycles);
         }
     }
 

@@ -116,8 +116,9 @@ fn pn_candidates(n: usize, max: usize) -> Vec<usize> {
 
 /// The candidate space of one search, precomputed so the hot loops do no
 /// allocation (§Perf: the seed rebuilt the `pk` ladder per `pm` and the
-/// `pn` ladder per `(pm, pk)` pair).
-struct CandidateSpace {
+/// `pn` ladder per `(pm, pk)` pair). Shared with `sparse::planner`, whose
+/// past-the-wall search shards the same `pm` stripes.
+pub(crate) struct CandidateSpace {
     /// `pm` candidates, sorted by distance to the balanced grid so a
     /// strong incumbent is found early and the lower-bound prune cuts the
     /// rest.
@@ -130,7 +131,7 @@ struct CandidateSpace {
 }
 
 impl CandidateSpace {
-    fn new(shape: MmShape, tiles: usize) -> CandidateSpace {
+    pub(crate) fn new(shape: MmShape, tiles: usize) -> CandidateSpace {
         // pm/pk need at least 4 rows/cols per tile to be worth a split
         let ideal_pm = ((shape.m as f64 * tiles as f64 / shape.k as f64).sqrt())
             .round()
@@ -157,6 +158,54 @@ impl CandidateSpace {
         let end = self.pn_ladder.partition_point(|&v| v <= max_pn);
         &self.pn_ladder[..end]
     }
+
+    /// Number of `pm` stripes — the sharding grain of the parallel
+    /// searches (dense and sparse past-the-wall).
+    pub(crate) fn n_pms(&self) -> usize {
+        self.pms.len()
+    }
+}
+
+/// Visit every valid candidate of one `pm` stripe, in serial enumeration
+/// order, passing each candidate's global [`candidate_rank`]. `f` returns
+/// `true` to stop; the function reports whether it was stopped. Shared by
+/// [`for_each_candidate`] and `sparse::planner`'s sharded past-the-wall
+/// search, so every consumer walks exactly the space the dense search
+/// prices, stripe by stripe.
+pub(crate) fn for_each_candidate_in_stripe(
+    space: &CandidateSpace,
+    tiles: usize,
+    shape: MmShape,
+    pm_idx: usize,
+    mut f: impl FnMut(Partition, u64) -> bool,
+) -> bool {
+    let pm = space.pms[pm_idx];
+    let max_pk = tiles / pm;
+    if max_pk == 0 {
+        return false;
+    }
+    for (pk_idx, &pk) in space.pks_by_max[&max_pk].iter().enumerate() {
+        let max_pn = tiles / (pm * pk);
+        for (pn_idx, &pn) in space.pns(max_pn).iter().enumerate() {
+            let sn = div_ceil(shape.n, pn);
+            let mut prev_cn = 0usize;
+            for (cn_idx, &cn) in consts::CN_CANDIDATES.iter().enumerate() {
+                let cn = cn.min(sn);
+                if cn == prev_cn {
+                    continue;
+                }
+                prev_cn = cn;
+                let part = Partition { pm, pn, pk, cn };
+                if !part.is_valid(shape, tiles) {
+                    continue;
+                }
+                if f(part, candidate_rank(pm_idx, pk_idx, pn_idx, cn_idx)) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
 }
 
 /// Global enumeration rank of a candidate — the serial visit order. Ties
@@ -167,16 +216,27 @@ fn candidate_rank(pm_idx: usize, pk_idx: usize, pn_idx: usize, cn_idx: usize) ->
     ((pm_idx as u64) << 28) | ((pk_idx as u64) << 12) | ((pn_idx as u64) << 4) | cn_idx as u64
 }
 
+/// A stripe's running winner under the staged evaluator: cycles, rank,
+/// and the partition — the full [`PlanCost`] is only materialized for
+/// the merged winner.
+type StagedBest = Option<(u64, u64, Partition)>;
+
 /// Search one `pm` stripe of the candidate space. Shared between the
 /// serial and parallel paths; `incumbent` carries the best total seen by
 /// *any* stripe so the grid prune works across threads.
+///
+/// §Perf staged pricing: each surviving candidate is priced by
+/// [`CostModel::evaluate_cycles`] (cycles only, early-exit against the
+/// shared incumbent) after one [`CostModel::tile_bytes`] admission bill —
+/// the seed billed every candidate twice (admission + `evaluate`'s
+/// memory section) and always paid the full `PlanCost` materialization.
 fn search_pm_stripe(
     model: &CostModel,
     shape: MmShape,
     space: &CandidateSpace,
     pm_idx: usize,
     incumbent: &AtomicU64,
-    best: &mut Option<(PlanCost, u64)>,
+    best: &mut StagedBest,
     evaluated: &mut usize,
 ) {
     let tiles = model.arch.tiles;
@@ -214,20 +274,28 @@ fn search_pm_stripe(
                     continue;
                 }
                 // memory-first rejection: skip the cycle model when the
-                // candidate cannot fit a tile (§Perf)
+                // candidate cannot fit a tile (§Perf). This is the only
+                // bill the candidate ever pays — the staged evaluator
+                // prices cycles without re-billing.
                 if model.tile_bytes(shape, part) > model.arch.tile_sram_bytes {
                     continue;
                 }
-                let cost = model.evaluate(shape, part);
-                debug_assert!(cost.fits);
+                // staged: cycles only, early-exit once the partial total
+                // exceeds the shared incumbent. A `None` candidate's true
+                // total is strictly above the incumbent, so it can never
+                // win or tie — dropping it is deterministic.
+                let bound = incumbent.load(Ordering::Relaxed);
+                let Some(total_cycles) = model.evaluate_cycles(shape, part, bound) else {
+                    continue;
+                };
                 let rank = candidate_rank(pm_idx, pk_idx, pn_idx, cn_idx);
                 let replace = match best {
                     None => true,
-                    Some((b, r)) => (cost.total_cycles, rank) < (b.total_cycles, *r),
+                    Some((b_total, b_rank, _)) => (total_cycles, rank) < (*b_total, *b_rank),
                 };
                 if replace {
-                    *best = Some((cost, rank));
-                    incumbent.fetch_min(cost.total_cycles, Ordering::Relaxed);
+                    *best = Some((total_cycles, rank, part));
+                    incumbent.fetch_min(total_cycles, Ordering::Relaxed);
                 }
             }
         }
@@ -266,12 +334,20 @@ pub fn search_with_config(
 /// workers are requested: spawning scoped threads costs on the order of
 /// a whole small-shape search, and the result is bit-identical either
 /// way (small serve buckets and nested sweep points hit this).
-const PARALLEL_MIN_PMS: usize = 16;
+pub(crate) const PARALLEL_MIN_PMS: usize = 16;
 
 /// [`search_with_config`] with an explicit worker count. Any count
 /// returns a bit-identical [`Plan`] (partition, cycles, statistics) —
 /// pass 1 to pin the serial path for baselines (shapes with fewer than
 /// [`PARALLEL_MIN_PMS`] `pm` stripes run serially regardless).
+///
+/// The count is a *request* against the process-wide
+/// [`ThreadBudget`](crate::coordinator::runner::ThreadBudget): nested
+/// searches (a sweep worker planning inside `par_map`, a serve worker on
+/// a cold miss) are granted whatever the budget has left — at least the
+/// calling thread — so planner workers never oversubscribe the machine.
+/// Because every grant runs the same deterministic merge, the governor
+/// affects wall-clock only, never the winner.
 pub fn search_with_workers(
     arch: &IpuArch,
     shape: MmShape,
@@ -281,11 +357,14 @@ pub fn search_with_workers(
     let model = CostModel::with_config(arch, config);
     let space = CandidateSpace::new(shape, arch.tiles);
     let n_pms = space.pms.len();
-    let workers = if n_pms < PARALLEL_MIN_PMS {
+    let request = if n_pms < PARALLEL_MIN_PMS {
         1
     } else {
         workers.max(1).min(n_pms)
     };
+    // hold the grant for the whole search; request 1 takes no permits
+    let lease = crate::coordinator::runner::ThreadBudget::global().acquire(request);
+    let workers = lease.workers();
     let incumbent = AtomicU64::new(u64::MAX);
 
     let (best, evaluated) = if workers <= 1 {
@@ -299,47 +378,46 @@ pub fn search_with_workers(
         // deal pm stripes dynamically for balance; every worker sees the
         // near-ideal stripes early, so the shared incumbent tightens fast
         let next_pm = AtomicUsize::new(0);
-        let stripe_results: Vec<(Option<(PlanCost, u64)>, usize)> =
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..workers)
-                    .map(|_| {
-                        let model = &model;
-                        let space = &space;
-                        let incumbent = &incumbent;
-                        let next_pm = &next_pm;
-                        scope.spawn(move || {
-                            let mut best = None;
-                            let mut evaluated = 0usize;
-                            loop {
-                                let pm_idx = next_pm.fetch_add(1, Ordering::Relaxed);
-                                if pm_idx >= n_pms {
-                                    break;
-                                }
-                                search_pm_stripe(
-                                    model, shape, space, pm_idx, incumbent, &mut best,
-                                    &mut evaluated,
-                                );
+        let stripe_results: Vec<(StagedBest, usize)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let model = &model;
+                    let space = &space;
+                    let incumbent = &incumbent;
+                    let next_pm = &next_pm;
+                    scope.spawn(move || {
+                        let mut best = None;
+                        let mut evaluated = 0usize;
+                        loop {
+                            let pm_idx = next_pm.fetch_add(1, Ordering::Relaxed);
+                            if pm_idx >= n_pms {
+                                break;
                             }
-                            (best, evaluated)
-                        })
+                            search_pm_stripe(
+                                model, shape, space, pm_idx, incumbent, &mut best,
+                                &mut evaluated,
+                            );
+                        }
+                        (best, evaluated)
                     })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("planner worker panicked"))
-                    .collect()
-            });
-        let mut best: Option<(PlanCost, u64)> = None;
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("planner worker panicked"))
+                .collect()
+        });
+        let mut best: StagedBest = None;
         let mut evaluated = 0usize;
         for (stripe_best, stripe_evaluated) in stripe_results {
             evaluated += stripe_evaluated;
-            if let Some((cost, rank)) = stripe_best {
+            if let Some((total, rank, part)) = stripe_best {
                 let replace = match &best {
                     None => true,
-                    Some((b, r)) => (cost.total_cycles, rank) < (b.total_cycles, *r),
+                    Some((b_total, b_rank, _)) => (total, rank) < (*b_total, *b_rank),
                 };
                 if replace {
-                    best = Some((cost, rank));
+                    best = Some((total, rank, part));
                 }
             }
         }
@@ -347,7 +425,14 @@ pub fn search_with_workers(
     };
 
     match best {
-        Some((cost, _)) => Ok(Plan { shape, cost, candidates_evaluated: evaluated }),
+        Some((total, _, part)) => {
+            // §Perf: the only full PlanCost materialization of the search
+            // — every other candidate paid cycles-only staged pricing
+            let cost = model.evaluate(shape, part);
+            debug_assert_eq!(cost.total_cycles, total, "staged total diverged from evaluate");
+            debug_assert!(cost.fits);
+            Ok(Plan { shape, cost, candidates_evaluated: evaluated })
+        }
         None => Err(PlannerError::OutOfMemory { candidates_evaluated: evaluated }),
     }
 }
@@ -379,38 +464,13 @@ pub fn search_fits_with_config(arch: &IpuArch, shape: MmShape, config: CostConfi
 /// enumeration order, until `f` returns `true` (stop). Shared by
 /// [`search_fits_with_config`] and `sparse::planner`'s CSR-aware fits
 /// probe / past-the-wall search, so every admission scan walks exactly
-/// the space the full search prices.
-pub(crate) fn for_each_candidate(
-    shape: MmShape,
-    tiles: usize,
-    mut f: impl FnMut(Partition) -> bool,
-) {
+/// the space the full search prices. Public so tests can build reference
+/// evaluators over the exact candidate enumeration the search uses.
+pub fn for_each_candidate(shape: MmShape, tiles: usize, mut f: impl FnMut(Partition) -> bool) {
     let space = CandidateSpace::new(shape, tiles);
-    for &pm in &space.pms {
-        let max_pk = tiles / pm;
-        if max_pk == 0 {
-            continue;
-        }
-        for &pk in &space.pks_by_max[&max_pk] {
-            let max_pn = tiles / (pm * pk);
-            for &pn in space.pns(max_pn) {
-                let sn = div_ceil(shape.n, pn);
-                let mut prev_cn = 0usize;
-                for &cn in &consts::CN_CANDIDATES {
-                    let cn = cn.min(sn);
-                    if cn == prev_cn {
-                        continue;
-                    }
-                    prev_cn = cn;
-                    let part = Partition { pm, pn, pk, cn };
-                    if !part.is_valid(shape, tiles) {
-                        continue;
-                    }
-                    if f(part) {
-                        return;
-                    }
-                }
-            }
+    for pm_idx in 0..space.n_pms() {
+        if for_each_candidate_in_stripe(&space, tiles, shape, pm_idx, |part, _| f(part)) {
+            return;
         }
     }
 }

@@ -28,15 +28,21 @@
 //!
 //! §Perf: the lock is sharded N-way by key hash so a cold-start storm of
 //! distinct buckets never serializes behind one mutex — each shard owns
-//! an independent map + LRU clock, planning always happens outside any
-//! lock, and stats aggregate across shards. Small caches keep one shard
-//! (exact global LRU); production-sized ones trade global LRU precision
-//! for contention-free lookups (eviction is per shard, capacity is split
-//! evenly across shards).
+//! an independent map, planning always happens outside any lock, and
+//! stats aggregate across shards. LRU order is **global** even though the
+//! locks are not: every touch stamps the entry from one shared atomic
+//! clock (no cross-shard lock), and eviction compares the shard-local
+//! oldest stamps across shards and removes the globally oldest — the
+//! per-shard-clock design this replaces let a hot shard evict entries
+//! younger than a cold shard's oldest. Capacity is likewise a global
+//! bound on the total population (a population counter triggers
+//! eviction), so sharding no longer under-commits non-divisible
+//! capacities.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -102,23 +108,26 @@ enum CachedResult {
 
 struct Entry {
     result: CachedResult,
+    /// Stamp from the cache-wide [`PlanCache::clock`] at the last touch —
+    /// globally comparable across shards.
     last_used: u64,
 }
 
 #[derive(Default)]
 struct Inner {
     map: HashMap<PlanKey, Entry>,
-    tick: u64,
     stats: CacheStats,
 }
 
 /// Bounded, thread-safe, least-recently-used plan cache with an N-way
-/// sharded lock (see the module docs).
+/// sharded lock and a sampled global LRU clock (see the module docs).
 pub struct PlanCache {
     shards: Vec<Mutex<Inner>>,
-    /// Per-shard entry budget; eviction is local to a shard.
-    shard_capacity: usize,
     capacity: usize,
+    /// Shared LRU clock: one `fetch_add` per touch, no cross-shard lock.
+    clock: AtomicU64,
+    /// Total entries across shards — the global capacity trigger.
+    population: AtomicUsize,
 }
 
 impl PlanCache {
@@ -136,16 +145,17 @@ impl PlanCache {
     }
 
     /// Explicit shard count (tests, tuning). `shards` is clamped to
-    /// `[1, capacity]`; each shard gets `floor(capacity / shards)`
-    /// entries, so total population never exceeds `capacity` (a
-    /// non-divisible capacity under-commits by up to `shards - 1`).
+    /// `[1, capacity]`; `capacity` bounds the **total** population — the
+    /// global clock lets eviction pick the globally oldest entry from
+    /// whichever shard holds it, so shards need no per-shard budget.
     pub fn with_shards(capacity: usize, shards: usize) -> PlanCache {
         assert!(capacity >= 1, "plan cache needs capacity >= 1");
         let shards = shards.clamp(1, capacity);
         PlanCache {
             shards: (0..shards).map(|_| Mutex::new(Inner::default())).collect(),
-            shard_capacity: capacity / shards,
             capacity,
+            clock: AtomicU64::new(0),
+            population: AtomicUsize::new(0),
         }
     }
 
@@ -181,7 +191,10 @@ impl PlanCache {
 
     pub fn clear(&self) {
         for shard in &self.shards {
-            self.lock(shard).map.clear();
+            let mut inner = self.lock(shard);
+            let removed = inner.map.len();
+            inner.map.clear();
+            self.population.fetch_sub(removed, Ordering::Relaxed);
         }
     }
 
@@ -262,13 +275,21 @@ impl PlanCache {
         (result, false, seconds)
     }
 
+    /// One tick of the shared LRU clock — globally ordered across shards.
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
     /// Hit path shared by the dense and sparse lookups: counts a hit and
-    /// refreshes shard-local LRU order on success, a miss otherwise.
+    /// stamps the entry from the global clock on success, a miss
+    /// otherwise.
     fn lookup(&self, key: &PlanKey) -> Option<CachedResult> {
         let mut guard = self.lock(self.shard_for(key));
+        // tick *inside* the shard lock: drawn outside, a stalled reader
+        // could stamp an entry with an older tick than a later touch,
+        // re-ordering LRU against real access order within the shard
+        let tick = self.tick();
         let inner = &mut *guard;
-        inner.tick += 1;
-        let tick = inner.tick;
         if let Some(entry) = inner.map.get_mut(key) {
             entry.last_used = tick;
             let result = entry.result.clone();
@@ -279,28 +300,64 @@ impl PlanCache {
         None
     }
 
-    /// Cold-miss insert shared by both paths, with shard-local LRU
-    /// eviction.
+    /// Cold-miss insert shared by both paths, with sampled-global-LRU
+    /// eviction: when the total population exceeds `capacity`, the
+    /// shard-local oldest stamps are compared across shards and the
+    /// globally oldest entry is evicted — from whichever shard holds it.
     fn insert(&self, key: PlanKey, result: CachedResult, seconds: f64) {
-        let mut guard = self.lock(self.shard_for(&key));
-        let inner = &mut *guard;
-        inner.tick += 1;
-        let tick = inner.tick;
-        inner.stats.cold_plan_seconds += seconds;
-        inner.map.insert(key, Entry { result, last_used: tick });
-        // eviction is an O(shard capacity) scan, paid only on cold misses
-        // once the shard is full; misses also run a full planner search,
-        // which dwarfs the scan at realistic capacities. Revisit with an
-        // ordered index if very large capacities become a hot path.
-        while inner.map.len() > self.shard_capacity {
-            let lru = inner
-                .map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| *k)
-                .expect("non-empty map above capacity");
-            inner.map.remove(&lru);
-            inner.stats.evictions += 1;
+        {
+            let mut guard = self.lock(self.shard_for(&key));
+            let tick = self.tick(); // inside the lock — see lookup()
+            let inner = &mut *guard;
+            inner.stats.cold_plan_seconds += seconds;
+            if inner.map.insert(key, Entry { result, last_used: tick }).is_none() {
+                self.population.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // eviction runs outside the inserting shard's lock (shards are
+        // locked one at a time — no lock-order cycles) and is an
+        // O(entries) scan paid only on cold misses at a full cache; the
+        // miss also ran a full planner search, which dwarfs the scan.
+        while self.population.load(Ordering::Relaxed) > self.capacity {
+            if !self.evict_globally_oldest() {
+                break; // raced to empty; nothing left to evict
+            }
+        }
+    }
+
+    /// Sample every shard's locally-oldest stamp and evict the globally
+    /// oldest entry. Returns false when the cache is empty. Concurrent
+    /// touches can re-stamp the sampled victim between the sample and the
+    /// removal — the re-check under the victim shard's lock then resamples
+    /// rather than evicting a freshly-used entry.
+    fn evict_globally_oldest(&self) -> bool {
+        let mut victim: Option<(usize, PlanKey, u64)> = None;
+        for (idx, shard) in self.shards.iter().enumerate() {
+            let inner = self.lock(shard);
+            if let Some((k, e)) = inner.map.iter().min_by_key(|(_, e)| e.last_used) {
+                let older = match &victim {
+                    None => true,
+                    Some((_, _, stamp)) => e.last_used < *stamp,
+                };
+                if older {
+                    victim = Some((idx, *k, e.last_used));
+                }
+            }
+        }
+        let Some((idx, key, stamp)) = victim else {
+            return false;
+        };
+        let mut inner = self.lock(&self.shards[idx]);
+        match inner.map.get(&key) {
+            // only evict the entry we sampled: if a concurrent touch
+            // refreshed it, resample on the next loop iteration
+            Some(e) if e.last_used == stamp => {
+                inner.map.remove(&key);
+                inner.stats.evictions += 1;
+                self.population.fetch_sub(1, Ordering::Relaxed);
+                true
+            }
+            _ => true, // entry moved on; report progress, caller re-checks
         }
     }
 
@@ -485,6 +542,65 @@ mod tests {
         assert_eq!(s.hits + s.misses, 96);
         // at most one duplicated search per (thread, shape) race
         assert!(s.misses >= 8 && s.misses <= 32, "misses {}", s.misses);
+    }
+
+    #[test]
+    fn cross_shard_pattern_evicts_globally_oldest() {
+        // the satellite regression: with per-shard clocks a hot shard
+        // evicted entries younger than a cold shard's oldest. The global
+        // clock + cross-shard victim sampling must evict the entry that
+        // is oldest by *global* access order, wherever it hashes.
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::with_shards(6, 3);
+        let shapes: Vec<MmShape> = (0..6).map(|i| MmShape::new(64 + 16 * i, 128, 64)).collect();
+        for &s in &shapes {
+            cache.get_or_plan(&arch, s).unwrap();
+        }
+        assert_eq!(cache.len(), 6);
+        // touch everything except shapes[2] — it becomes the global LRU
+        for &s in shapes.iter().enumerate().filter(|(i, _)| *i != 2).map(|(_, s)| s) {
+            cache.get_or_plan(&arch, s).unwrap();
+        }
+        cache.get_or_plan(&arch, MmShape::new(4096, 128, 64)).unwrap(); // 7th entry
+        assert_eq!(cache.len(), 6);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(
+            cache.peek(&arch, shapes[2]).is_none(),
+            "the globally oldest entry must be the victim"
+        );
+        for (i, &s) in shapes.iter().enumerate() {
+            if i != 2 {
+                assert!(cache.peek(&arch, s).is_some(), "younger entry {i} evicted");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_lru_matches_exact_single_shard_lru() {
+        // stronger form: for any access sequence, the sharded cache with
+        // the global clock keeps exactly the entries a one-shard (exact
+        // LRU) cache keeps — sampling the shard-local minima recovers the
+        // global minimum
+        let arch = IpuArch::gc200();
+        let exact = PlanCache::with_shards(8, 1);
+        let sharded = PlanCache::with_shards(8, 4);
+        let shapes: Vec<MmShape> =
+            (0..14).map(|i| MmShape::new(48 + 16 * i, 96, 48)).collect();
+        // interleaved inserts and touches
+        let sequence: Vec<usize> =
+            vec![0, 1, 2, 3, 4, 0, 5, 6, 1, 7, 8, 9, 2, 10, 11, 0, 12, 13, 3];
+        for &i in &sequence {
+            exact.get_or_plan(&arch, shapes[i]).unwrap();
+            sharded.get_or_plan(&arch, shapes[i]).unwrap();
+        }
+        assert_eq!(exact.len(), sharded.len());
+        for (i, &s) in shapes.iter().enumerate() {
+            assert_eq!(
+                exact.peek(&arch, s).is_some(),
+                sharded.peek(&arch, s).is_some(),
+                "shape {i} residency diverges from exact LRU"
+            );
+        }
     }
 
     #[test]

@@ -159,11 +159,17 @@ impl MmService {
     /// fingerprint (see `serve::cache`).
     pub fn serve_trace_mixed(&self, reqs: &[(MmShape, Option<SparsitySpec>)]) -> ServeReport {
         let queue = RequestQueue::new(self.config.queue_capacity);
-        let workers = self
-            .config
-            .workers
-            .unwrap_or_else(default_workers)
-            .max(1);
+        // the configured count is a request against the process-wide
+        // thread budget: a service embedded in a sweep (or several
+        // services in one process) cannot oversubscribe the machine, and
+        // nested cold-miss planner searches draw from the same pool
+        let lease = crate::coordinator::runner::ThreadBudget::global().acquire(
+            self.config
+                .workers
+                .unwrap_or_else(default_workers)
+                .max(1),
+        );
+        let workers = lease.workers();
         let records: Mutex<Vec<RequestRecord>> = Mutex::new(Vec::with_capacity(reqs.len()));
         // keyed by earliest rider id so the emitted table/CSV row order is
         // deterministic regardless of worker scheduling (run_jobs makes

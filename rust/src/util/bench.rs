@@ -142,12 +142,31 @@ impl Bench {
         doc
     }
 
-    /// Write `BENCH_<group>.json` at the repo root, gated by
-    /// `IPUMM_BENCH_JSON=1` so default runs touch nothing outside
-    /// `target/`. The repo root is the crate manifest dir, so the file
-    /// lands in the same place no matter where the bench runs from.
+    /// Should `BENCH_<group>.json` be written? Any non-empty
+    /// `IPUMM_BENCH_JSON` other than `0` opts in explicitly (`1`, `true`,
+    /// ...), `IPUMM_BENCH_JSON=0` (or empty) opts out explicitly, and
+    /// when the variable is unset **any CI environment emits
+    /// unconditionally** (`CI` is set by GitHub Actions and most other
+    /// providers) — the perf trajectory must accumulate per commit even
+    /// when a workflow step forgets the env var (the satellite
+    /// regression: three benched PRs produced an empty trajectory
+    /// because the var was scoped to one step).
+    fn json_dump_enabled() -> bool {
+        match std::env::var("IPUMM_BENCH_JSON").ok().as_deref() {
+            Some("0") | Some("") => false,
+            Some(_) => true,
+            None => std::env::var_os("CI").is_some(),
+        }
+    }
+
+    /// Write `BENCH_<group>.json` at the repo root when
+    /// [`Self::json_dump_enabled`] says so (explicit opt-in/out via
+    /// `IPUMM_BENCH_JSON`, unconditional under CI); default local runs
+    /// touch nothing outside `target/`. The repo root is the crate
+    /// manifest dir, so the file lands in the same place no matter where
+    /// the bench runs from.
     pub fn dump_json(&self) {
-        if std::env::var("IPUMM_BENCH_JSON").ok().as_deref() != Some("1") {
+        if !Self::json_dump_enabled() {
             return;
         }
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -181,6 +200,69 @@ impl Bench {
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// One `ipumm bench-check` verdict: a benchmark row compared against its
+/// in-run baseline twin.
+#[derive(Clone, Debug)]
+pub struct RegressionVerdict {
+    pub group: String,
+    pub name: String,
+    pub baseline_mean_s: f64,
+    pub mean_s: f64,
+    /// `mean / baseline` — above `1 + tolerance` fails the gate.
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// The CI regression gate's core: scan one `BENCH_<group>.json` document
+/// for `<name>_baseline` / `<name>` row pairs (the in-run seed baselines
+/// `bench_planner.rs` / `bench_sparse.rs` freeze) and compare means. A
+/// row regresses when `mean > baseline_mean * (1 + tolerance)` — e.g.
+/// `tolerance = 0.2` is the ">20% cold-plan latency regression" gate.
+/// Returns an error only for malformed documents; an empty verdict list
+/// means the file had no baseline pairs.
+pub fn regression_verdicts(doc: &Json, tolerance: f64) -> Result<Vec<RegressionVerdict>, String> {
+    let group = doc
+        .get("group")
+        .and_then(Json::as_str)
+        .ok_or("missing 'group'")?
+        .to_string();
+    let results = doc
+        .get("results")
+        .and_then(Json::items)
+        .ok_or("missing 'results' array")?;
+    let mut means: Vec<(String, f64)> = Vec::with_capacity(results.len());
+    for row in results {
+        let name = row
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("result row missing 'name'")?;
+        let mean = row
+            .get("mean_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("result '{name}' missing 'mean_s'"))?;
+        means.push((name.to_string(), mean));
+    }
+    let mut out = Vec::new();
+    for (name, baseline_mean_s) in &means {
+        let Some(current) = name.strip_suffix("_baseline") else {
+            continue;
+        };
+        let Some((_, mean_s)) = means.iter().find(|(n, _)| n == current) else {
+            continue; // a baseline row without a current twin is not a gate
+        };
+        let ratio = if *baseline_mean_s > 0.0 { mean_s / baseline_mean_s } else { f64::INFINITY };
+        out.push(RegressionVerdict {
+            group: group.clone(),
+            name: current.to_string(),
+            baseline_mean_s: *baseline_mean_s,
+            mean_s: *mean_s,
+            ratio,
+            regressed: ratio > 1.0 + tolerance,
+        });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -229,8 +311,9 @@ mod tests {
 
     #[test]
     fn json_dump_is_env_gated() {
-        // without IPUMM_BENCH_JSON=1, dump_json must write nothing
-        if std::env::var("IPUMM_BENCH_JSON").ok().as_deref() == Some("1") {
+        // without IPUMM_BENCH_JSON=1 (and outside CI, where the dump is
+        // unconditional), dump_json must write nothing
+        if Bench::json_dump_enabled() {
             return; // the gate is open in this environment; nothing to test
         }
         let mut b = Bench::new("envgate-test").with_iters(0, 1);
@@ -240,6 +323,87 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         b.dump_json();
         assert!(!path.exists(), "dump_json must be a no-op without the env var");
+    }
+
+    fn bench_doc(rows: &[(&str, f64)]) -> Json {
+        let mut doc = Json::obj();
+        doc.set("group", "planner".into());
+        let mut results = Json::Arr(vec![]);
+        for (name, mean) in rows {
+            let mut o = Json::obj();
+            o.set("name", (*name).into());
+            o.set("mean_s", (*mean).into());
+            results.push(o);
+        }
+        doc.set("results", results);
+        doc
+    }
+
+    #[test]
+    fn regression_verdicts_pair_baselines() {
+        let doc = bench_doc(&[
+            ("search_3584_baseline", 0.010),
+            ("search_3584", 0.004),     // 2.5x faster: passes
+            ("wall_baseline", 0.008),
+            ("wall", 0.012),            // 1.5x slower: regresses at 20%
+            ("unpaired_baseline", 1.0), // no current twin: skipped
+            ("loose_row", 0.5),         // no baseline: skipped
+        ]);
+        let verdicts = regression_verdicts(&doc, 0.2).unwrap();
+        assert_eq!(verdicts.len(), 2);
+        let search = verdicts.iter().find(|v| v.name == "search_3584").unwrap();
+        assert!(!search.regressed);
+        assert!((search.ratio - 0.4).abs() < 1e-12);
+        let wall = verdicts.iter().find(|v| v.name == "wall").unwrap();
+        assert!(wall.regressed, "ratio {} must fail the 20% gate", wall.ratio);
+        assert_eq!(wall.group, "planner");
+    }
+
+    #[test]
+    fn regression_tolerance_is_inclusive_at_the_boundary() {
+        // exactly +20% does not regress; anything above does
+        let doc = bench_doc(&[("x_baseline", 1.0), ("x", 1.2)]);
+        assert!(!regression_verdicts(&doc, 0.2).unwrap()[0].regressed);
+        let doc = bench_doc(&[("x_baseline", 1.0), ("x", 1.2001)]);
+        assert!(regression_verdicts(&doc, 0.2).unwrap()[0].regressed);
+    }
+
+    #[test]
+    fn regression_verdicts_reject_malformed_docs() {
+        assert!(regression_verdicts(&Json::obj(), 0.2).is_err());
+        let mut doc = Json::obj();
+        doc.set("group", "g".into());
+        assert!(regression_verdicts(&doc, 0.2).is_err(), "missing results");
+        let mut row = Json::obj();
+        row.set("name", "x".into()); // no mean_s
+        let mut doc = bench_doc(&[]);
+        match &mut doc {
+            Json::Obj(m) => {
+                m.insert("results".into(), Json::Arr(vec![row]));
+            }
+            _ => unreachable!(),
+        }
+        assert!(regression_verdicts(&doc, 0.2).is_err());
+    }
+
+    #[test]
+    fn regression_verdicts_round_trip_through_bench_json() {
+        // the real pipeline: Bench -> to_json -> render -> parse -> gate
+        let spin = || {
+            let mut acc = 0u64;
+            for i in 0..50_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        };
+        let mut b = Bench::new("planner").with_iters(0, 2);
+        b.run("probe_baseline", spin);
+        b.run("probe", spin);
+        let parsed = Json::parse(&b.to_json().render()).unwrap();
+        let verdicts = regression_verdicts(&parsed, 10.0).unwrap();
+        assert_eq!(verdicts.len(), 1);
+        assert_eq!(verdicts[0].name, "probe");
+        assert!(!verdicts[0].regressed, "10x tolerance cannot fail on noise");
     }
 
     #[test]

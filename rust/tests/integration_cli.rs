@@ -66,9 +66,68 @@ fn plan_shows_partition_and_oom() {
     let (out, _, ok) = run(&["plan", "1024", "1024", "1024"]);
     assert!(ok);
     assert!(out.contains("pm="));
+    assert!(out.contains("thread budget:"), "plan must print the effective budget");
     let (out, _, ok) = run(&["plan", "8192", "8192", "8192"]);
     assert!(ok);
     assert!(out.contains("memory wall"));
+}
+
+#[test]
+fn plan_workers_request_is_deterministic() {
+    // --workers is a request against the thread budget; any value must
+    // print the same plan (the governed pools are bit-deterministic)
+    let (w1, _, ok1) = run(&["plan", "2048", "2048", "2048", "--workers", "1"]);
+    let (w4, _, ok4) = run(&["plan", "2048", "2048", "2048", "--workers", "4"]);
+    assert!(ok1 && ok4);
+    assert!(w1.contains("--workers request: 1"));
+    assert!(w4.contains("--workers request: 4"));
+    let plan_line = |s: &str| {
+        s.lines()
+            .find(|l| l.contains("pm="))
+            .map(str::to_string)
+            .expect("plan line present")
+    };
+    assert_eq!(plan_line(&w1), plan_line(&w4), "worker count changed the plan");
+}
+
+#[test]
+fn bench_check_gates_regressions() {
+    let dir = std::env::temp_dir().join("ipumm_bench_check_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let dir_arg = dir.to_str().unwrap();
+
+    // missing BENCH_planner.json: fail with a pointer to the bench step
+    let (_, err, ok) = run(&["bench-check", "--dir", dir_arg]);
+    assert!(!ok);
+    assert!(err.contains("BENCH_planner.json"), "stderr: {err}");
+
+    // passing file: current row at parity with its frozen baseline
+    let passing = r#"{"group": "planner", "results": [
+        {"name": "search_baseline", "mean_s": 0.01},
+        {"name": "search", "mean_s": 0.005}
+    ]}"#;
+    std::fs::write(dir.join("BENCH_planner.json"), passing).unwrap();
+    let (out, _, ok) = run(&["bench-check", "--dir", dir_arg]);
+    assert!(ok);
+    assert!(out.contains("0 regressions"));
+    assert!(out.contains("search"));
+
+    // regressed file: >20% slower than the baseline fails the gate
+    let regressed = r#"{"group": "sparse", "results": [
+        {"name": "past_wall_baseline", "mean_s": 0.01},
+        {"name": "past_wall", "mean_s": 0.013}
+    ]}"#;
+    std::fs::write(dir.join("BENCH_sparse.json"), regressed).unwrap();
+    let (out, err, ok) = run(&["bench-check", "--dir", dir_arg]);
+    assert!(!ok, "a 1.3x regression must fail the 20% gate");
+    assert!(out.contains("FAIL"), "stdout: {out}");
+    assert!(err.contains("regressed"), "stderr: {err}");
+
+    // a looser tolerance admits the same file
+    let (_, _, ok) = run(&["bench-check", "--dir", dir_arg, "--tolerance", "50"]);
+    assert!(ok);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
@@ -122,6 +181,7 @@ fn sparse_prints_both_throughput_conventions() {
         "sparse", "--k", "1024", "--densities", "1.0,0.25", "--block", "8", "--csv", csv_arg,
     ]);
     assert!(ok);
+    assert!(out.contains("thread budget:"), "sparse must print the effective budget");
     assert!(out.contains("dense-equiv"));
     assert!(out.contains("effective"));
     assert!(out.contains("density 0.25"));

@@ -10,9 +10,10 @@ use ipumm::gpu::cublas_model::GpuModel;
 use ipumm::arch::GpuArch;
 use ipumm::memory::mapping::{grid_2d_mapping, linear_balanced_mapping};
 use ipumm::graph::tensor::{DType, Tensor, TensorId};
-use ipumm::planner::cost::CostModel;
+use ipumm::coordinator::runner::ThreadBudget;
+use ipumm::planner::cost::{CostConfig, CostModel, PlanCost};
 use ipumm::planner::partition::{MmShape, Partition};
-use ipumm::planner::search::{search, search_fits};
+use ipumm::planner::search::{for_each_candidate, search, search_fits, search_with_workers};
 use ipumm::prop_assert;
 use ipumm::serve::{BucketLadder, PlanCache};
 use ipumm::sim::engine::SimEngine;
@@ -20,7 +21,7 @@ use ipumm::sparse::csr::BlockCsr;
 use ipumm::sparse::pattern::{BlockPattern, PatternKind, SparsitySpec, BLOCK_SIZES};
 use ipumm::sparse::planner::{
     sparse_max_fitting_square, sparse_max_fitting_square_linear, sparse_search,
-    sparse_search_fits, sparse_search_spec,
+    sparse_search_fits, sparse_search_past_dense_wall_with_workers, sparse_search_spec,
 };
 use ipumm::util::prop::{check, check_default, PropConfig, Size};
 use ipumm::util::rng::Rng;
@@ -667,4 +668,169 @@ fn prop_oracle_matches_block_decomposition_in_pure_rust() {
         );
         Ok(())
     });
+}
+
+/// Reference "full evaluator" search: walk the exact candidate
+/// enumeration the planner uses, admit by the memory bill, price every
+/// survivor with the **full** `CostModel::evaluate`, first-found-wins on
+/// ties — the pre-staged algorithm the staged search must reproduce
+/// bit-for-bit (winner, PlanCost, and the search statistic).
+fn reference_full_search(arch: &IpuArch, shape: MmShape) -> (Option<PlanCost>, usize) {
+    let model = CostModel::new(arch);
+    let mut best: Option<PlanCost> = None;
+    let mut valid = 0usize;
+    for_each_candidate(shape, arch.tiles, |part| {
+        valid += 1;
+        if model.tile_bytes(shape, part) <= arch.tile_sram_bytes {
+            let cost = model.evaluate(shape, part);
+            let better = match &best {
+                None => true,
+                Some(b) => cost.total_cycles < b.total_cycles,
+            };
+            if better {
+                best = Some(cost);
+            }
+        }
+        false
+    });
+    (best, valid)
+}
+
+#[test]
+fn prop_staged_search_matches_full_evaluate_winner() {
+    // tentpole acceptance: the staged (cycles-only, early-exit,
+    // winner-materialized-last) search returns the same Plan AND the
+    // same full PlanCost as pricing every candidate with the full
+    // evaluator — on both paper architectures
+    for arch in [IpuArch::gc200(), IpuArch::gc2()] {
+        check("staged == full evaluator", PropConfig { cases: 12, base_seed: 0x57A6ED }, |rng, size| {
+            let hi = size.scale(96, 3800);
+            let shape = MmShape::new(
+                rng.gen_usize(1, hi),
+                rng.gen_usize(1, hi),
+                rng.gen_usize(1, hi),
+            );
+            let (reference, valid) = reference_full_search(&arch, shape);
+            match (search(&arch, shape), reference) {
+                (Ok(plan), Some(want)) => {
+                    prop_assert!(
+                        plan.cost == want,
+                        "staged PlanCost diverges for {shape:?} on {}: {:?} vs {:?}",
+                        arch.name,
+                        plan.cost,
+                        want
+                    );
+                    prop_assert!(
+                        plan.candidates_evaluated == valid,
+                        "search statistic {} != enumeration count {valid}",
+                        plan.candidates_evaluated
+                    );
+                }
+                (Err(_), None) => {}
+                (got, want) => prop_assert!(
+                    false,
+                    "verdicts diverge for {shape:?} on {}: search {:?} vs reference {:?}",
+                    arch.name,
+                    got.map(|p| p.cost.partition),
+                    want.map(|c| c.partition)
+                ),
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn prop_search_workers_bit_identical_incl_budget_exhausted() {
+    // determinism under the governor: workers {1, 2, 7} and a
+    // budget-exhausted request (every permit held elsewhere, so the
+    // grant degrades to 1) all return bit-identical plans on 24 random
+    // shapes spanning small to past-the-wall
+    let arch = IpuArch::gc200();
+    let mut rng = Rng::new(0x60E63);
+    for case in 0..24usize {
+        let hi = 64 + 160 * case;
+        let shape = MmShape::new(
+            rng.gen_usize(1, hi),
+            rng.gen_usize(1, hi),
+            rng.gen_usize(1, hi),
+        );
+        let config = CostConfig::default();
+        let serial = search_with_workers(&arch, shape, config, 1);
+        let mut variants = vec![
+            search_with_workers(&arch, shape, config, 2),
+            search_with_workers(&arch, shape, config, 7),
+        ];
+        {
+            let _hog = ThreadBudget::global().acquire(usize::MAX - 1);
+            variants.push(search_with_workers(&arch, shape, config, 7));
+        }
+        for (vi, variant) in variants.iter().enumerate() {
+            match (&serial, variant) {
+                (Ok(s), Ok(v)) => {
+                    assert_eq!(s.cost, v.cost, "{shape:?} variant {vi}");
+                    assert_eq!(
+                        s.candidates_evaluated, v.candidates_evaluated,
+                        "{shape:?} variant {vi}"
+                    );
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b, "{shape:?} variant {vi}"),
+                _ => panic!("verdicts diverge for {shape:?} variant {vi}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_past_wall_workers_bit_identical_incl_budget_exhausted() {
+    // the sharded past-the-wall sparse search: workers {1, 2, 7,
+    // budget-exhausted} return bit-identical SparsePlans (or identical
+    // OOM statistics) on 12 random past-the-dense-wall shapes
+    let arch = IpuArch::gc200();
+    let mut rng = Rng::new(0x5BA23E);
+    let config = CostConfig::default();
+    for case in 0..12usize {
+        // >3584-class squares and skews, randomly densified low enough
+        // that many (not all) plan under the CSR bill
+        let m = 3600 + rng.gen_usize(0, 1800);
+        let n = 3600 + rng.gen_usize(0, 1800);
+        let k = if case % 3 == 0 { rng.gen_usize(512, 2048) } else { 3600 + rng.gen_usize(0, 1800) };
+        let shape = MmShape::new(m, n, k);
+        let density = [0.1, 0.2, 0.3][case % 3];
+        let kind = PatternKind::all()[case % 3];
+        let pattern = BlockPattern::for_shape(SparsitySpec::new(kind, 8, density, case as u64), shape);
+        let serial =
+            sparse_search_past_dense_wall_with_workers(&arch, shape, &pattern, config, 1);
+        let mut variants = vec![
+            sparse_search_past_dense_wall_with_workers(&arch, shape, &pattern, config, 2),
+            sparse_search_past_dense_wall_with_workers(&arch, shape, &pattern, config, 7),
+        ];
+        {
+            let _hog = ThreadBudget::global().acquire(usize::MAX - 1);
+            variants.push(sparse_search_past_dense_wall_with_workers(
+                &arch, shape, &pattern, config, 7,
+            ));
+        }
+        for (vi, variant) in variants.iter().enumerate() {
+            match (&serial, variant) {
+                (Ok(s), Ok(v)) => {
+                    assert_eq!(s.partition(), v.partition(), "{shape:?} variant {vi}");
+                    assert_eq!(s.cost.total_cycles, v.cost.total_cycles, "{shape:?} v{vi}");
+                    assert_eq!(s.cost.compute_cycles, v.cost.compute_cycles, "{shape:?} v{vi}");
+                    assert_eq!(s.cost.exchange_cycles, v.cost.exchange_cycles, "{shape:?} v{vi}");
+                    assert_eq!(
+                        s.cost.sparse_tile_bytes, v.cost.sparse_tile_bytes,
+                        "{shape:?} v{vi}"
+                    );
+                    assert_eq!(
+                        s.candidates_evaluated, v.candidates_evaluated,
+                        "{shape:?} v{vi}"
+                    );
+                    assert_eq!(s.nnz_elems, v.nnz_elems, "{shape:?} v{vi}");
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b, "{shape:?} variant {vi}"),
+                _ => panic!("sparse verdicts diverge for {shape:?} variant {vi}"),
+            }
+        }
+    }
 }
