@@ -87,6 +87,19 @@ impl Trace {
     pub fn superstep_count(&self) -> usize {
         self.records.iter().filter(|r| r.phase == Phase::Compute).count()
     }
+
+    /// Timeline spans: each record paired with its cumulative start
+    /// offset (phases run back-to-back — BSP is lockstep), as
+    /// `(start_cycle, duration_cycles, record)`. This is what the obs
+    /// layer converts into model-time trace spans.
+    pub fn spans(&self) -> impl Iterator<Item = (u64, u64, &PhaseRecord)> {
+        let mut start = 0u64;
+        self.records.iter().map(move |r| {
+            let s = start;
+            start += r.cycles;
+            (s, r.cycles, r)
+        })
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +139,18 @@ mod tests {
         assert_eq!(t.total_cycles(), 0);
         assert_eq!(t.tile_utilization(), 0.0);
         assert_eq!(t.superstep_count(), 0);
+    }
+
+    #[test]
+    fn spans_accumulate_start_offsets() {
+        let mut t = Trace::default();
+        t.push(rec(Phase::Compute, 100, 0.9));
+        t.push(rec(Phase::Sync, 10, 0.0));
+        t.push(rec(Phase::Exchange, 40, 0.0));
+        let spans: Vec<(u64, u64)> = t.spans().map(|(s, d, _)| (s, d)).collect();
+        assert_eq!(spans, vec![(0, 100), (100, 10), (110, 40)]);
+        let (_, _, last) = t.spans().last().unwrap();
+        assert_eq!(last.phase, Phase::Exchange);
     }
 
     #[test]

@@ -113,6 +113,24 @@ impl ThreadBudget {
                 },
             );
         }
+        // Write-only telemetry: grants are decided above, so tracing can
+        // never change who gets how many permits.
+        if crate::obs::enabled() {
+            crate::obs::count("budget.requests", 1);
+            crate::obs::count("budget.granted_permits", taken as u64);
+            if taken < wanted {
+                crate::obs::count("budget.denied_permits", (wanted - taken) as u64);
+            }
+            if request > 1 && taken == 0 {
+                crate::obs::count("budget.degraded_serial", 1);
+                crate::obs::event(
+                    "budget",
+                    "degraded-to-serial",
+                    "budget",
+                    &[("requested", request.to_string())],
+                );
+            }
+        }
         BudgetLease { budget: self, granted: 1 + taken }
     }
 }

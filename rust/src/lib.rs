@@ -3,7 +3,7 @@
 //! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
 //! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
 //!
-//! The crate has seven roles (see DESIGN.md):
+//! The crate has eight roles (see DESIGN.md):
 //!
 //! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
 //!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
@@ -75,6 +75,20 @@
 //!    everywhere are *requests*, so nested pools degrade to serial
 //!    instead of oversubscribing. `ipumm bench-check` gates the recorded
 //!    `BENCH_*.json` trajectory against the in-run frozen baselines.
+//! 8. **Observability** — [`obs`] threads a deterministic-by-construction
+//!    tracing and counters subsystem through every layer above: a span
+//!    recorder with two clock domains (wall-time nanoseconds for real
+//!    work — planner stripe scans, serve batch draining, graph builds —
+//!    and model-time cycles for the simulated BSP superstep phases), a
+//!    process-wide counter/histogram registry summarized with
+//!    nearest-rank p99/p999 (`util::stats::Summary`), a Chrome
+//!    trace-event JSON exporter (`obs::chrome_trace_json` — serve
+//!    workers, planner stripes, and superstep tracks render in
+//!    `chrome://tracing`/Perfetto), and a text flamegraph digest
+//!    (`obs::flame_summary`). Surfaced as `ipumm serve --trace-out` and
+//!    `ipumm profile --chrome`. Tracing is zero-cost when off (one
+//!    relaxed atomic branch) and write-only — plans are bit-identical
+//!    with tracing on or off (property-tested).
 //!
 //! [`coordinator`] orchestrates benchmark jobs across these backends, and
 //! [`experiments`] regenerates each of the paper's tables and figures.
@@ -93,6 +107,7 @@ pub mod graph;
 pub mod ipu;
 pub mod memory;
 pub mod multi_ipu;
+pub mod obs;
 pub mod serve;
 pub mod sparse;
 pub mod util;

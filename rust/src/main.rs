@@ -10,6 +10,11 @@
 //! ipumm memory                 §2.4 max-square memory study
 //! ipumm phases                 Fig. 3 BSP phase breakdown
 //! ipumm profile m n k [--json] PopVision-style profile of one shape
+//!              [--chrome FILE] (--chrome records the run and writes a
+//!                              Chrome trace-event JSON: planner stripes
+//!                              in wall time + the BSP superstep timeline
+//!                              in model cycles; open in chrome://tracing
+//!                              or Perfetto)
 //! ipumm plan m n k [--workers N]
 //!                              show the planner's chosen partition
 //!                              (prints the effective thread budget)
@@ -17,10 +22,14 @@
 //! ipumm ablation               cost-model ablation study
 //! ipumm trace [--jobs N]       trace-driven latency/throughput study
 //! ipumm serve [--jobs N] [--cache N] [--batch N] [--warmup N]
+//!             [--trace-out FILE]
 //!                              matmul-as-a-service demo (plan cache,
 //!                              shape bucketing, coalescing dispatch;
 //!                              --artifacts DIR + --features xla anchors
-//!                              cold buckets to real PJRT execution)
+//!                              cold buckets to real PJRT execution;
+//!                              --trace-out records workers, planner,
+//!                              cache, and thread-budget activity to a
+//!                              Chrome trace-event JSON)
 //! ipumm sparse [--k N] [--block 4|8|16] [--kind random|banded|blockdiag]
 //!              [--densities 1.0,0.5,...] [--seed N] [--json FILE]
 //!                              block-sparse density x skew sweep
@@ -72,6 +81,7 @@ use ipumm::util::units::{fmt_bytes, fmt_tflops};
 const OPTIONS: &[&str] = &[
     "arch", "gpu", "csv", "json", "workers", "max-size", "ks", "artifacts", "block", "chips",
     "jobs", "seed", "cache", "batch", "warmup", "k", "kind", "densities", "dir", "tolerance",
+    "trace-out", "chrome",
 ];
 const FLAGS: &[&str] = &["real", "verbose"];
 
@@ -212,6 +222,10 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
         "profile" => {
             let (args, arch, _, _) = parse_common(raw)?;
             let shape = shape_from(&args)?;
+            let chrome_path = args.opt("chrome");
+            if chrome_path.is_some() {
+                ipumm::obs::enable();
+            }
             let engine = SimEngine::new(arch);
             let report = engine
                 .simulate_mm(shape)
@@ -226,6 +240,14 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 std::fs::write(path, pv.to_json().render())
                     .with_context(|| format!("writing {path}"))?;
                 println!("(json -> {path})");
+            }
+            if let Some(path) = chrome_path {
+                ipumm::obs::disable();
+                let data = ipumm::obs::take();
+                std::fs::write(path, ipumm::obs::chrome_trace_json(&data).render())
+                    .with_context(|| format!("writing {path}"))?;
+                println!("(chrome trace -> {path}; open in chrome://tracing or Perfetto)");
+                println!("{}", ipumm::obs::flame_summary(&data));
             }
         }
         "plan" => {
@@ -323,6 +345,10 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 artifacts: args.opt("artifacts").map(std::path::PathBuf::from),
                 ..ServiceConfig::default()
             };
+            let trace_path = args.opt("trace-out");
+            if trace_path.is_some() {
+                ipumm::obs::enable();
+            }
             let svc = MmService::new(config);
             if args.opt("artifacts").is_some() {
                 #[cfg(not(feature = "xla"))]
@@ -348,6 +374,28 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 100.0 * report.hit_rate_after(warmup)
             );
             write_csv(&args, report.metrics.to_csv())?;
+            if let Some(path) = trace_path {
+                // re-simulate the busiest dense bucket once while tracing
+                // is still on, so the exported trace carries all three
+                // layers: serve workers (wall), planner stripes (wall),
+                // and the bucket's BSP superstep timeline (model cycles)
+                if let Some(top) = report
+                    .bucket_stats()
+                    .into_iter()
+                    .find(|s| s.sparsity.is_none() && s.oom == 0)
+                {
+                    if let Ok(plan) = svc.cache().get_or_plan(&svc.config().arch, top.bucket) {
+                        let _ = SimEngine::new(svc.config().arch.clone())
+                            .simulate_plan(top.bucket, plan);
+                    }
+                }
+                ipumm::obs::disable();
+                let data = ipumm::obs::take();
+                std::fs::write(path, ipumm::obs::chrome_trace_json(&data).render())
+                    .with_context(|| format!("writing {path}"))?;
+                println!("(chrome trace -> {path}; open in chrome://tracing or Perfetto)");
+                println!("{}", ipumm::obs::flame_summary(&data));
+            }
         }
         "sparse" => {
             let (args, arch, _, workers) = parse_common(raw)?;

@@ -1,0 +1,117 @@
+//! Text flamegraph-style digest of recorded trace data.
+//!
+//! For terminals and CI logs where a Chrome trace viewer is not at hand:
+//! spans aggregate per `(track, name)` with a proportional bar, counters
+//! print sorted, histograms summarize with the tail percentiles.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::stats::Summary;
+
+use super::recorder::{ClockDomain, TraceData};
+
+const BAR_WIDTH: usize = 24;
+
+fn bar(frac: f64) -> String {
+    let n = ((frac * BAR_WIDTH as f64).round() as usize).clamp(1, BAR_WIDTH);
+    "#".repeat(n)
+}
+
+/// Aggregate rows of one clock domain: `(track, name) -> (total, count)`,
+/// rendered sorted by total duration, descending.
+fn domain_section(
+    out: &mut String,
+    data: &TraceData,
+    domain: ClockDomain,
+    header: &str,
+    fmt_total: impl Fn(u64) -> String,
+) {
+    let mut rows: BTreeMap<(&str, &str), (u64, usize)> = BTreeMap::new();
+    for span in data.spans.iter().filter(|s| s.domain == domain && !s.instant) {
+        let row = rows.entry((span.track.as_str(), span.name.as_str())).or_insert((0, 0));
+        row.0 += span.dur;
+        row.1 += 1;
+    }
+    if rows.is_empty() {
+        return;
+    }
+    let _ = writeln!(out, "{header}");
+    let mut sorted: Vec<_> = rows.into_iter().collect();
+    sorted.sort_by(|a, b| b.1 .0.cmp(&a.1 .0).then(a.0.cmp(&b.0)));
+    let max = sorted[0].1 .0.max(1);
+    for ((track, name), (total, count)) in sorted {
+        let _ = writeln!(
+            out,
+            "  {:>12} x{:<5} {:<24} {track} {name}",
+            fmt_total(total),
+            count,
+            bar(total as f64 / max as f64),
+        );
+    }
+}
+
+/// Render the whole [`TraceData`] as a text summary.
+pub fn flame_summary(data: &TraceData) -> String {
+    let mut out = String::from("== trace summary ==\n");
+    if data.is_empty() {
+        out.push_str("(no trace data recorded)\n");
+        return out;
+    }
+    domain_section(&mut out, data, ClockDomain::Wall, "wall-time spans:", |ns| {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    });
+    domain_section(&mut out, data, ClockDomain::Model, "model-time spans (cycles):", |cy| {
+        format!("{cy} cy")
+    });
+    if !data.counters.is_empty() {
+        out.push_str("counters:\n");
+        for (name, value) in &data.counters {
+            let _ = writeln!(out, "  {value:>12}  {name}");
+        }
+    }
+    if !data.histograms.is_empty() {
+        out.push_str("histograms:\n");
+        for (name, samples) in &data.histograms {
+            if samples.is_empty() {
+                continue;
+            }
+            let s = Summary::of(samples);
+            let _ = writeln!(
+                out,
+                "  {name}: n={} p50={:.3} p95={:.3} p99={:.3} p999={:.3} max={:.3}",
+                s.n, s.median, s.p95, s.p99, s.p999, s.max
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::Recorder;
+
+    #[test]
+    fn empty_summary_says_so() {
+        assert!(flame_summary(&TraceData::default()).contains("no trace data"));
+    }
+
+    #[test]
+    fn aggregates_and_orders_by_total() {
+        let r = Recorder::new();
+        r.model_span("bsp", "compute", "model", 0, 100, &[]);
+        r.model_span("bsp", "compute", "model", 140, 100, &[]);
+        r.model_span("bsp", "exchange", "model", 100, 40, &[]);
+        r.count("planner.candidates", 1234);
+        r.observe("latency_ms", 2.0);
+        let text = flame_summary(&r.take());
+        assert!(text.contains("model-time spans"));
+        assert!(text.contains("200 cy"));
+        assert!(text.contains("x2"));
+        // compute (200 cy) sorts above exchange (40 cy)
+        assert!(text.find("compute").unwrap() < text.find("exchange").unwrap());
+        assert!(text.contains("1234"));
+        assert!(text.contains("p999=2.000"));
+    }
+}

@@ -1,0 +1,161 @@
+//! Observability: end-to-end tracing and counters for every layer.
+//!
+//! A lightweight, deterministic-by-construction span recorder with two
+//! clock domains:
+//!
+//! * **wall time** — nanoseconds since the recorder epoch, for real work
+//!   (planner stripe scans, serve batch draining, graph builds);
+//! * **model time** — simulated cycles, for the BSP superstep phases the
+//!   engine prices ([`crate::bsp::trace::Trace`] records become spans).
+//!
+//! plus a process-wide counter / histogram registry and a Chrome
+//! trace-event JSON exporter ([`chrome_trace_json`], built on
+//! [`crate::util::json`]) whose output loads in `chrome://tracing` and
+//! Perfetto. [`flame_summary`] renders the same data as a text
+//! flamegraph-style digest for terminals.
+//!
+//! Two invariants the rest of the tree relies on:
+//!
+//! * **zero-cost when off** — every recording entry point is a no-op
+//!   behind one relaxed atomic load ([`enabled`]); [`now`] returns `None`
+//!   when tracing is off so disabled runs never even read the clock;
+//! * **observation never influences planning** — instrumentation is
+//!   strictly write-only: nothing in the planner, sparse search, serve
+//!   pipeline, or governor reads recorder state, so plans are
+//!   bit-identical with tracing on or off (property-tested in
+//!   `tests/prop_invariants.rs`).
+//!
+//! The global recorder is enabled explicitly (`ipumm serve --trace-out`,
+//! `ipumm profile --chrome`); library code only ever *records*. Tests
+//! that need isolation construct their own [`Recorder`] instances.
+
+pub mod chrome;
+pub mod flame;
+pub mod recorder;
+
+pub use chrome::chrome_trace_json;
+pub use flame::flame_summary;
+pub use recorder::{ClockDomain, Recorder, SpanRecord, TraceData};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RECORDER: OnceLock<Recorder> = OnceLock::new();
+
+fn global() -> &'static Recorder {
+    RECORDER.get_or_init(Recorder::new)
+}
+
+/// Is the global recorder collecting? One relaxed load — the whole cost
+/// of instrumentation in a disabled run.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start collecting into the global recorder (resetting any previous
+/// data and re-anchoring the wall-time epoch).
+pub fn enable() {
+    global().reset();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop collecting. Recorded data stays until [`take`] drains it.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Drain everything recorded so far.
+pub fn take() -> TraceData {
+    global().take()
+}
+
+/// `Some(Instant::now())` while tracing, `None` otherwise — the wall-span
+/// start handle. Pairing with [`wall_span_since`] keeps even the clock
+/// read off the disabled hot path.
+#[inline]
+pub fn now() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Close a wall-time span opened with [`now`]. A `None` start (tracing
+/// was off at open time) is a no-op, as is tracing having been disabled
+/// since.
+pub fn wall_span_since(
+    start: Option<Instant>,
+    track: &str,
+    name: &str,
+    cat: &'static str,
+    args: &[(&'static str, String)],
+) {
+    if let Some(start) = start {
+        if enabled() {
+            global().wall_span_since(start, track, name, cat, args);
+        }
+    }
+}
+
+/// Record a model-time span: `start`/`dur` are simulated cycles.
+pub fn model_span(
+    track: &str,
+    name: &str,
+    cat: &'static str,
+    start_cycles: u64,
+    dur_cycles: u64,
+    args: &[(&'static str, String)],
+) {
+    if enabled() {
+        global().model_span(track, name, cat, start_cycles, dur_cycles, args);
+    }
+}
+
+/// Record a wall-time instant event (e.g. an incumbent improvement).
+pub fn event(track: &str, name: &str, cat: &'static str, args: &[(&'static str, String)]) {
+    if enabled() {
+        global().event(track, name, cat, args);
+    }
+}
+
+/// Bump a named counter by `delta`.
+pub fn count(name: &str, delta: u64) {
+    if enabled() {
+        global().count(name, delta);
+    }
+}
+
+/// Append one sample to a named histogram (summarized with p50/p95/p99/
+/// p999 at export time).
+pub fn observe(name: &str, value: f64) {
+    if enabled() {
+        global().observe(name, value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NB: lib unit tests share one process; these exercise only the
+    // *disabled* global path (the CLI and prop-test binaries own the
+    // enabled path) so parallel test threads never race on the toggle.
+    #[test]
+    fn disabled_global_is_inert() {
+        assert!(!enabled());
+        assert!(now().is_none());
+        wall_span_since(None, "t", "n", "c", &[]);
+        model_span("t", "n", "c", 0, 10, &[]);
+        event("t", "n", "c", &[]);
+        count("x", 1);
+        observe("h", 1.0);
+        let data = take();
+        assert!(data.spans.is_empty());
+        assert!(data.counters.is_empty());
+        assert!(data.histograms.is_empty());
+    }
+}

@@ -1,0 +1,225 @@
+//! The span / counter / histogram recorder behind [`crate::obs`].
+//!
+//! One mutex around an append-only [`TraceData`]; recording sites hold it
+//! only long enough to push a record. The wall-time epoch is re-anchored
+//! on [`Recorder::reset`] so exported timestamps start near zero.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Which clock a span's `start`/`dur` are measured on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ClockDomain {
+    /// Real time: nanoseconds since the recorder epoch.
+    Wall,
+    /// Simulated time: BSP engine cycles.
+    Model,
+}
+
+/// One recorded span (or instant event, when `dur == 0 && instant`).
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub domain: ClockDomain,
+    /// Display track — one row in the Chrome timeline (e.g.
+    /// `serve/worker-0`, `planner/w1`, `bsp/superstep`).
+    pub track: String,
+    pub name: String,
+    /// Chrome trace-event category (filterable in the viewer).
+    pub cat: &'static str,
+    /// Wall: ns since epoch. Model: start cycle.
+    pub start: u64,
+    /// Wall: ns. Model: cycles.
+    pub dur: u64,
+    pub args: Vec<(&'static str, String)>,
+    pub instant: bool,
+}
+
+/// Everything one tracing session collected.
+#[derive(Clone, Debug, Default)]
+pub struct TraceData {
+    pub spans: Vec<SpanRecord>,
+    pub counters: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, Vec<f64>>,
+}
+
+impl TraceData {
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty() && self.counters.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Number of spans on one clock domain (acceptance checks).
+    pub fn span_count(&self, domain: ClockDomain) -> usize {
+        self.spans.iter().filter(|s| s.domain == domain).count()
+    }
+}
+
+struct Inner {
+    epoch: Instant,
+    data: TraceData,
+}
+
+/// A span/counter recorder. The process-wide instance lives behind
+/// [`crate::obs::enable`]; tests construct their own for isolation.
+pub struct Recorder {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Recorder {
+    fn default() -> Recorder {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            inner: Mutex::new(Inner { epoch: Instant::now(), data: TraceData::default() }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // a poisoned recorder mutex only ever means a panicking test
+        // thread; the data is append-only so it is still coherent
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Clear all data and re-anchor the wall-time epoch.
+    pub fn reset(&self) {
+        let mut g = self.lock();
+        g.epoch = Instant::now();
+        g.data = TraceData::default();
+    }
+
+    /// Drain the collected data, leaving the recorder empty.
+    pub fn take(&self) -> TraceData {
+        std::mem::take(&mut self.lock().data)
+    }
+
+    /// Record a wall-time span that started at `started` and ends now.
+    pub fn wall_span_since(
+        &self,
+        started: Instant,
+        track: &str,
+        name: &str,
+        cat: &'static str,
+        args: &[(&'static str, String)],
+    ) {
+        let dur = started.elapsed().as_nanos() as u64;
+        let mut g = self.lock();
+        let start = started.saturating_duration_since(g.epoch).as_nanos() as u64;
+        g.data.spans.push(SpanRecord {
+            domain: ClockDomain::Wall,
+            track: track.to_string(),
+            name: name.to_string(),
+            cat,
+            start,
+            dur,
+            args: args.to_vec(),
+            instant: false,
+        });
+    }
+
+    /// Record a model-time span (simulated cycles).
+    pub fn model_span(
+        &self,
+        track: &str,
+        name: &str,
+        cat: &'static str,
+        start_cycles: u64,
+        dur_cycles: u64,
+        args: &[(&'static str, String)],
+    ) {
+        self.lock().data.spans.push(SpanRecord {
+            domain: ClockDomain::Model,
+            track: track.to_string(),
+            name: name.to_string(),
+            cat,
+            start: start_cycles,
+            dur: dur_cycles,
+            args: args.to_vec(),
+            instant: false,
+        });
+    }
+
+    /// Record a wall-time instant event at "now".
+    pub fn event(&self, track: &str, name: &str, cat: &'static str, args: &[(&'static str, String)]) {
+        let at = Instant::now();
+        let mut g = self.lock();
+        let start = at.saturating_duration_since(g.epoch).as_nanos() as u64;
+        g.data.spans.push(SpanRecord {
+            domain: ClockDomain::Wall,
+            track: track.to_string(),
+            name: name.to_string(),
+            cat,
+            start,
+            dur: 0,
+            args: args.to_vec(),
+            instant: true,
+        });
+    }
+
+    pub fn count(&self, name: &str, delta: u64) {
+        *self.lock().data.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn observe(&self, name: &str, value: f64) {
+        self.lock().data.histograms.entry(name.to_string()).or_default().push(value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_both_domains() {
+        let r = Recorder::new();
+        let t0 = Instant::now();
+        r.model_span("bsp", "compute s0", "model", 0, 120, &[("tiles", "8".to_string())]);
+        r.wall_span_since(t0, "planner/w0", "search", "planner", &[]);
+        r.event("planner/w0", "incumbent", "planner", &[]);
+        let data = r.take();
+        assert_eq!(data.spans.len(), 3);
+        assert_eq!(data.span_count(ClockDomain::Model), 1);
+        assert_eq!(data.span_count(ClockDomain::Wall), 2);
+        let model = &data.spans[0];
+        assert_eq!(model.start, 0);
+        assert_eq!(model.dur, 120);
+        assert_eq!(model.args, vec![("tiles", "8".to_string())]);
+        assert!(data.spans[2].instant);
+        // drained
+        assert!(r.take().is_empty());
+    }
+
+    #[test]
+    fn counters_accumulate_and_histograms_append() {
+        let r = Recorder::new();
+        r.count("cache.hits", 2);
+        r.count("cache.hits", 3);
+        r.observe("queue_wait_ms", 1.5);
+        r.observe("queue_wait_ms", 2.5);
+        let data = r.take();
+        assert_eq!(data.counters["cache.hits"], 5);
+        assert_eq!(data.histograms["queue_wait_ms"], vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn reset_clears_and_reanchors() {
+        let r = Recorder::new();
+        r.count("x", 1);
+        r.reset();
+        assert!(r.take().is_empty());
+    }
+
+    #[test]
+    fn wall_span_started_before_epoch_saturates() {
+        // enable() re-anchors the epoch; a span handle captured just
+        // before must clamp to 0, not panic or wrap
+        let t0 = Instant::now();
+        let r = Recorder::new();
+        r.wall_span_since(t0, "t", "n", "c", &[]);
+        let data = r.take();
+        assert_eq!(data.spans[0].start, 0);
+    }
+}

@@ -221,6 +221,65 @@ fn candidate_rank(pm_idx: usize, pk_idx: usize, pn_idx: usize, cn_idx: usize) ->
 /// the merged winner.
 type StagedBest = Option<(u64, u64, Partition)>;
 
+/// Per-stripe observability tallies (see [`crate::obs`]). Accumulated in
+/// stack locals unconditionally — a handful of integer bumps per
+/// candidate — and only *recorded* when tracing is enabled, so the search
+/// never branches on recorder state mid-candidate and plans stay
+/// bit-identical with tracing on or off. Shared with the sparse
+/// past-the-wall search, which tallies the same stages.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct StripeObs {
+    /// Valid candidates enumerated (pre-prune — the `candidates_evaluated`
+    /// statistic).
+    pub(crate) enumerated: u64,
+    /// Skipped by the certified grid lower bound.
+    pub(crate) pruned: u64,
+    /// Passed the memory-bill admission.
+    pub(crate) admitted: u64,
+    /// Fully priced by the staged evaluator.
+    pub(crate) staged_priced: u64,
+    /// Abandoned mid-pricing once the partial total crossed the incumbent.
+    pub(crate) early_exited: u64,
+    /// Stripe-local incumbent improvements.
+    pub(crate) improvements: u64,
+}
+
+impl StripeObs {
+    pub(crate) fn add(&mut self, other: &StripeObs) {
+        self.enumerated += other.enumerated;
+        self.pruned += other.pruned;
+        self.admitted += other.admitted;
+        self.staged_priced += other.staged_priced;
+        self.early_exited += other.early_exited;
+        self.improvements += other.improvements;
+    }
+
+    /// Chrome-trace span args for one stripe.
+    pub(crate) fn span_args(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("enumerated", self.enumerated.to_string()),
+            ("pruned", self.pruned.to_string()),
+            ("admitted", self.admitted.to_string()),
+            ("staged_priced", self.staged_priced.to_string()),
+            ("early_exited", self.early_exited.to_string()),
+            ("improvements", self.improvements.to_string()),
+        ]
+    }
+
+    /// Publish the whole-search totals to the counter registry.
+    pub(crate) fn record_counters(&self, prefix: &str) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        crate::obs::count(&format!("{prefix}.candidates.enumerated"), self.enumerated);
+        crate::obs::count(&format!("{prefix}.candidates.pruned"), self.pruned);
+        crate::obs::count(&format!("{prefix}.candidates.admitted"), self.admitted);
+        crate::obs::count(&format!("{prefix}.candidates.staged_priced"), self.staged_priced);
+        crate::obs::count(&format!("{prefix}.candidates.early_exited"), self.early_exited);
+        crate::obs::count(&format!("{prefix}.incumbent_improvements"), self.improvements);
+    }
+}
+
 /// Search one `pm` stripe of the candidate space. Shared between the
 /// serial and parallel paths; `incumbent` carries the best total seen by
 /// *any* stripe so the grid prune works across threads.
@@ -237,7 +296,7 @@ fn search_pm_stripe(
     pm_idx: usize,
     incumbent: &AtomicU64,
     best: &mut StagedBest,
-    evaluated: &mut usize,
+    stats: &mut StripeObs,
 ) {
     let tiles = model.arch.tiles;
     let pm = space.pms[pm_idx];
@@ -269,8 +328,9 @@ fn search_pm_stripe(
                     continue;
                 }
                 // counted before pruning: the statistic stays deterministic
-                *evaluated += 1;
+                stats.enumerated += 1;
                 if pruned {
+                    stats.pruned += 1;
                     continue;
                 }
                 // memory-first rejection: skip the cycle model when the
@@ -280,14 +340,17 @@ fn search_pm_stripe(
                 if model.tile_bytes(shape, part) > model.arch.tile_sram_bytes {
                     continue;
                 }
+                stats.admitted += 1;
                 // staged: cycles only, early-exit once the partial total
                 // exceeds the shared incumbent. A `None` candidate's true
                 // total is strictly above the incumbent, so it can never
                 // win or tie — dropping it is deterministic.
                 let bound = incumbent.load(Ordering::Relaxed);
                 let Some(total_cycles) = model.evaluate_cycles(shape, part, bound) else {
+                    stats.early_exited += 1;
                     continue;
                 };
+                stats.staged_priced += 1;
                 let rank = candidate_rank(pm_idx, pk_idx, pn_idx, cn_idx);
                 let replace = match best {
                     None => true,
@@ -296,6 +359,23 @@ fn search_pm_stripe(
                 if replace {
                     *best = Some((total_cycles, rank, part));
                     incumbent.fetch_min(total_cycles, Ordering::Relaxed);
+                    stats.improvements += 1;
+                    // write-only: the event never feeds back into pruning
+                    // (arg formatting stays behind the enabled branch)
+                    if crate::obs::enabled() {
+                        crate::obs::event(
+                            "planner",
+                            "incumbent-improved",
+                            "planner",
+                            &[
+                                ("total_cycles", total_cycles.to_string()),
+                                ("pm", part.pm.to_string()),
+                                ("pn", part.pn.to_string()),
+                                ("pk", part.pk.to_string()),
+                                ("cn", part.cn.to_string()),
+                            ],
+                        );
+                    }
                 }
             }
         }
@@ -366,39 +446,63 @@ pub fn search_with_workers(
     let lease = crate::coordinator::runner::ThreadBudget::global().acquire(request);
     let workers = lease.workers();
     let incumbent = AtomicU64::new(u64::MAX);
+    let t_search = crate::obs::now();
 
-    let (best, evaluated) = if workers <= 1 {
+    let (best, totals) = if workers <= 1 {
         let mut best = None;
-        let mut evaluated = 0usize;
+        let mut totals = StripeObs::default();
         for pm_idx in 0..n_pms {
-            search_pm_stripe(&model, shape, &space, pm_idx, &incumbent, &mut best, &mut evaluated);
+            let t_stripe = crate::obs::now();
+            let mut stats = StripeObs::default();
+            search_pm_stripe(&model, shape, &space, pm_idx, &incumbent, &mut best, &mut stats);
+            totals.add(&stats);
+            if t_stripe.is_some() {
+                crate::obs::wall_span_since(
+                    t_stripe,
+                    "planner/w0",
+                    &format!("stripe pm={}", space.pms[pm_idx]),
+                    "planner",
+                    &stats.span_args(),
+                );
+            }
         }
-        (best, evaluated)
+        (best, totals)
     } else {
         // deal pm stripes dynamically for balance; every worker sees the
         // near-ideal stripes early, so the shared incumbent tightens fast
         let next_pm = AtomicUsize::new(0);
-        let stripe_results: Vec<(StagedBest, usize)> = std::thread::scope(|scope| {
+        let stripe_results: Vec<(StagedBest, StripeObs)> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers)
-                .map(|_| {
+                .map(|w| {
                     let model = &model;
                     let space = &space;
                     let incumbent = &incumbent;
                     let next_pm = &next_pm;
                     scope.spawn(move || {
                         let mut best = None;
-                        let mut evaluated = 0usize;
+                        let mut totals = StripeObs::default();
                         loop {
                             let pm_idx = next_pm.fetch_add(1, Ordering::Relaxed);
                             if pm_idx >= n_pms {
                                 break;
                             }
+                            let t_stripe = crate::obs::now();
+                            let mut stats = StripeObs::default();
                             search_pm_stripe(
-                                model, shape, space, pm_idx, incumbent, &mut best,
-                                &mut evaluated,
+                                model, shape, space, pm_idx, incumbent, &mut best, &mut stats,
                             );
+                            totals.add(&stats);
+                            if t_stripe.is_some() {
+                                crate::obs::wall_span_since(
+                                    t_stripe,
+                                    &format!("planner/w{w}"),
+                                    &format!("stripe pm={}", space.pms[pm_idx]),
+                                    "planner",
+                                    &stats.span_args(),
+                                );
+                            }
                         }
-                        (best, evaluated)
+                        (best, totals)
                     })
                 })
                 .collect();
@@ -408,9 +512,9 @@ pub fn search_with_workers(
                 .collect()
         });
         let mut best: StagedBest = None;
-        let mut evaluated = 0usize;
-        for (stripe_best, stripe_evaluated) in stripe_results {
-            evaluated += stripe_evaluated;
+        let mut totals = StripeObs::default();
+        for (stripe_best, stripe_totals) in stripe_results {
+            totals.add(&stripe_totals);
             if let Some((total, rank, part)) = stripe_best {
                 let replace = match &best {
                     None => true,
@@ -421,8 +525,20 @@ pub fn search_with_workers(
                 }
             }
         }
-        (best, evaluated)
+        (best, totals)
     };
+
+    let evaluated = totals.enumerated as usize;
+    if t_search.is_some() {
+        totals.record_counters("planner");
+        crate::obs::wall_span_since(
+            t_search,
+            "planner",
+            &format!("search {}x{}x{}", shape.m, shape.n, shape.k),
+            "planner",
+            &[("workers", workers.to_string()), ("candidates", evaluated.to_string())],
+        );
+    }
 
     match best {
         Some((total, _, part)) => {

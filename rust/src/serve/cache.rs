@@ -189,6 +189,20 @@ impl PlanCache {
         out
     }
 
+    /// Per-shard counters, in shard order. Each element has the same
+    /// shape as [`Self::stats`] restricted to one shard; summing the
+    /// vector component-wise reproduces the aggregate (tested), which is
+    /// what makes per-shard hot-spot diagnosis trustworthy.
+    pub fn shard_stats(&self) -> Vec<CacheStats> {
+        self.shards
+            .iter()
+            .map(|shard| {
+                let inner = self.lock(shard);
+                CacheStats { entries: inner.map.len(), ..inner.stats }
+            })
+            .collect()
+    }
+
     pub fn clear(&self) {
         for shard in &self.shards {
             let mut inner = self.lock(shard);
@@ -236,6 +250,7 @@ impl PlanCache {
         let t0 = Instant::now();
         let result = search(arch, shape);
         let seconds = t0.elapsed().as_secs_f64();
+        crate::obs::observe("cache.cold_plan_seconds", seconds);
         self.insert(key, CachedResult::Dense(result.clone()), seconds);
         (result, false, seconds)
     }
@@ -271,6 +286,7 @@ impl PlanCache {
         let t0 = Instant::now();
         let result = sparse_search_spec(arch, shape, spec);
         let seconds = t0.elapsed().as_secs_f64();
+        crate::obs::observe("cache.cold_plan_seconds", seconds);
         self.insert(key, CachedResult::Sparse(result.clone()), seconds);
         (result, false, seconds)
     }
@@ -294,9 +310,11 @@ impl PlanCache {
             entry.last_used = tick;
             let result = entry.result.clone();
             inner.stats.hits += 1;
+            crate::obs::count("cache.hits", 1);
             return Some(result);
         }
         inner.stats.misses += 1;
+        crate::obs::count("cache.misses", 1);
         None
     }
 
@@ -354,6 +372,7 @@ impl PlanCache {
             Some(e) if e.last_used == stamp => {
                 inner.map.remove(&key);
                 inner.stats.evictions += 1;
+                crate::obs::count("cache.evictions", 1);
                 self.population.fetch_sub(1, Ordering::Relaxed);
                 true
             }
@@ -687,6 +706,30 @@ mod tests {
         // and a sparse success never satisfies a dense lookup
         assert!(cache.get_or_plan(&arch, shape).is_err());
         assert_eq!(cache.stats().entries, 3);
+    }
+
+    #[test]
+    fn shard_stats_sum_to_global_aggregate() {
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::with_shards(8, 4);
+        // 12 distinct shapes through capacity 8 forces evictions; the
+        // second pass mixes hits with re-plans of evicted entries
+        for i in 0..12usize {
+            let _ = cache.get_or_plan(&arch, MmShape::new(32 + 8 * i, 64, 32));
+        }
+        for i in 0..6usize {
+            let _ = cache.get_or_plan(&arch, MmShape::new(32 + 8 * i, 64, 32));
+        }
+        let shards = cache.shard_stats();
+        assert_eq!(shards.len(), 4);
+        let total = cache.stats();
+        assert_eq!(shards.iter().map(|s| s.hits).sum::<u64>(), total.hits);
+        assert_eq!(shards.iter().map(|s| s.misses).sum::<u64>(), total.misses);
+        assert_eq!(shards.iter().map(|s| s.evictions).sum::<u64>(), total.evictions);
+        assert_eq!(shards.iter().map(|s| s.entries).sum::<usize>(), total.entries);
+        let cold: f64 = shards.iter().map(|s| s.cold_plan_seconds).sum();
+        assert!((cold - total.cold_plan_seconds).abs() < 1e-9);
+        assert!(total.evictions > 0, "test must exercise the eviction path");
     }
 
     #[test]

@@ -159,6 +159,7 @@ impl RequestQueue {
         }
         if inner.queue.len() >= self.capacity {
             inner.stats.rejected += 1;
+            crate::obs::count("queue.rejected", 1);
             return Err(AdmissionError::QueueFull { capacity: self.capacity });
         }
         self.push(&mut inner, req);
@@ -232,6 +233,10 @@ impl RequestQueue {
                     inner.queue = kept;
                 }
                 self.not_full.notify_all();
+                crate::obs::count("queue.batches", 1);
+                if requests.len() > 1 {
+                    crate::obs::count("queue.coalesced_riders", (requests.len() - 1) as u64);
+                }
                 return Some(Batch { bucket, sparsity, requests });
             }
             if inner.closed {

@@ -176,6 +176,7 @@ impl MmService {
         // the same guarantee via submission order)
         let batch_records: Mutex<Vec<(u64, MetricsRecord)>> = Mutex::new(Vec::new());
         let cache_baseline = self.cache.stats();
+        let shard_baseline = self.cache.shard_stats();
 
         // A worker that unwinds must close the queue on its way out:
         // otherwise a blocked producer waits forever on a condvar nobody
@@ -187,13 +188,17 @@ impl MmService {
             }
         }
 
+        let t_trace = crate::obs::now();
         let t0 = Instant::now();
         std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| {
-                    let _guard = CloseOnDrop(&queue);
+            for w in 0..workers {
+                let queue = &queue;
+                let records = &records;
+                let batch_records = &batch_records;
+                scope.spawn(move || {
+                    let _guard = CloseOnDrop(queue);
                     while let Some(batch) = queue.next_batch(self.config.max_batch) {
-                        self.process_batch(batch, &records, &batch_records);
+                        self.process_batch(w, batch, records, batch_records);
                     }
                 });
             }
@@ -212,6 +217,15 @@ impl MmService {
             queue.close();
         });
         let wall_seconds = t0.elapsed().as_secs_f64();
+        if t_trace.is_some() {
+            crate::obs::wall_span_since(
+                t_trace,
+                "serve",
+                &format!("serve_trace ({} requests)", reqs.len()),
+                "serve",
+                &[("workers", workers.to_string())],
+            );
+        }
 
         let mut requests = records.into_inner().expect("records poisoned");
         requests.sort_by_key(|r| r.id);
@@ -226,6 +240,13 @@ impl MmService {
             // per-run delta: a warm service's lifetime counters would
             // otherwise masquerade as this trace's behavior
             cache: self.cache.stats().since(&cache_baseline),
+            cache_shards: self
+                .cache
+                .shard_stats()
+                .iter()
+                .zip(&shard_baseline)
+                .map(|(now, base)| now.since(base))
+                .collect(),
             queue: queue.stats(),
             requests,
             metrics,
@@ -237,12 +258,17 @@ impl MmService {
     /// record per rider.
     fn process_batch(
         &self,
+        worker: usize,
         batch: Batch,
         records: &Mutex<Vec<RequestRecord>>,
         batch_records: &Mutex<Vec<(u64, MetricsRecord)>>,
     ) {
+        let t_batch = crate::obs::now();
         let drained_at = Instant::now();
         let bucket = batch.bucket;
+        // batch identity = smallest rider id: unique per batch, and the
+        // key the deterministic table/CSV ordering already sorts by
+        let first_id = batch.requests.iter().map(|r| r.id).min().unwrap_or(0);
         let (outcome, backend, cache_hit, plan_seconds) =
             self.dispatch(bucket, batch.sparsity);
         // anchor cold dense buckets to the real path; hits, cache-less
@@ -263,17 +289,20 @@ impl MmService {
         {
             let mut recs = records.lock().expect("records poisoned");
             for req in &batch.requests {
+                let queue_seconds = drained_at
+                    .saturating_duration_since(req.submitted)
+                    .as_secs_f64();
+                crate::obs::observe("serve.queue_seconds", queue_seconds);
                 recs.push(RequestRecord {
                     id: req.id,
                     shape: req.shape,
                     bucket,
                     sparsity: req.sparsity,
                     backend: backend.clone(),
+                    batch_id: first_id,
                     batch_size: n,
                     cache_hit,
-                    queue_seconds: drained_at
-                        .saturating_duration_since(req.submitted)
-                        .as_secs_f64(),
+                    queue_seconds,
                     plan_seconds: plan_seconds / n as f64,
                     device_seconds,
                     real_seconds,
@@ -281,7 +310,20 @@ impl MmService {
                 });
             }
         }
-        let first_id = batch.requests.iter().map(|r| r.id).min().unwrap_or(0);
+        if t_batch.is_some() {
+            crate::obs::wall_span_since(
+                t_batch,
+                &format!("serve/worker-{worker}"),
+                &format!("batch {}", BucketLadder::label(bucket)),
+                "serve",
+                &[
+                    ("riders", n.to_string()),
+                    ("batch_id", first_id.to_string()),
+                    ("cache_hit", format!("{cache_hit:?}")),
+                    ("oom", oom.to_string()),
+                ],
+            );
+        }
         let label = match &batch.sparsity {
             Some(spec) => format!("{} {}", BucketLadder::label(bucket), spec.label()),
             None => BucketLadder::label(bucket),
@@ -474,6 +516,28 @@ mod tests {
         assert_eq!((second.cache.hits, second.cache.misses), (1, 0));
         assert_eq!(second.cache.entries, 1, "entries stay absolute");
         assert_eq!(second.requests[0].cache_hit, Some(true));
+    }
+
+    #[test]
+    fn report_shard_stats_sum_to_global_delta() {
+        let svc = service(DispatchPolicy::IpuWithGpuFallback);
+        let report = svc.serve_trace(&mixed_trace());
+        assert_eq!(report.cache_shards.len(), svc.cache().shards());
+        let sum = |f: fn(&crate::serve::cache::CacheStats) -> u64| {
+            report.cache_shards.iter().map(f).sum::<u64>()
+        };
+        assert_eq!(sum(|s| s.hits), report.cache.hits);
+        assert_eq!(sum(|s| s.misses), report.cache.misses);
+        assert_eq!(sum(|s| s.evictions), report.cache.evictions);
+        assert_eq!(
+            report.cache_shards.iter().map(|s| s.entries).sum::<usize>(),
+            report.cache.entries
+        );
+        // batch ids in the live path are the min rider id per batch:
+        // distinct ids must agree with the batch records emitted
+        let ids: std::collections::BTreeSet<u64> =
+            report.requests.iter().map(|r| r.batch_id).collect();
+        assert_eq!(ids.len(), report.batches);
     }
 
     #[test]

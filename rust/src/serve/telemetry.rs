@@ -29,6 +29,11 @@ pub struct RequestRecord {
     pub sparsity: Option<crate::sparse::pattern::SparsitySpec>,
     /// Backend that served it (coordinator backend naming).
     pub backend: String,
+    /// Identity of the coalesced batch it rode in: the smallest rider id,
+    /// which is unique per batch (every request joins exactly one batch).
+    /// Counting distinct `batch_id`s is exact where the old
+    /// `sum(1/batch_size)` float estimate could drift.
+    pub batch_id: u64,
     /// Size of the coalesced batch it rode in.
     pub batch_size: usize,
     /// Whether the batch's plan lookup hit the cache; `None` when the
@@ -90,6 +95,10 @@ pub struct ServeReport {
     /// trace started; `entries` is the absolute population — see
     /// `CacheStats::since`). Lifetime totals live on `MmService::cache`.
     pub cache: CacheStats,
+    /// The same per-run deltas split per cache shard, in shard order.
+    /// Component-wise sums reproduce [`Self::cache`] (tested), so a hot
+    /// shard is directly visible. Empty for hand-built reports.
+    pub cache_shards: Vec<CacheStats>,
     pub queue: QueueStats,
     pub batches: usize,
     /// Wall-clock seconds for the whole run (producer + workers).
@@ -146,16 +155,16 @@ impl ServeReport {
                     .filter(|r| r.bucket == bucket && r.sparsity == sparsity)
                     .collect();
                 let lat: Vec<f64> = recs.iter().map(|r| r.latency_seconds()).collect();
-                // batches = distinct (id of first request per batch) is not
-                // tracked per record; estimate from batch sizes: each
-                // request reports its batch size, so sum(1/size) counts
-                // each batch exactly once.
-                let batches = recs.iter().map(|r| 1.0 / r.batch_size as f64).sum::<f64>();
+                // every rider carries its batch's identity, so distinct
+                // ids count batches exactly (the old sum(1/batch_size)
+                // float estimate survives only as a test cross-check)
+                let batches: std::collections::BTreeSet<u64> =
+                    recs.iter().map(|r| r.batch_id).collect();
                 BucketStats {
                     bucket,
                     sparsity,
                     requests: recs.len(),
-                    batches: batches.round() as usize,
+                    batches: batches.len(),
                     cache_hits: recs.iter().filter(|r| r.cache_hit == Some(true)).count(),
                     oom: recs.iter().filter(|r| r.oom).count(),
                     latency: Summary::of(&lat),
@@ -175,8 +184,8 @@ impl ServeReport {
         let mut t = Table::new(
             "serve: per-bucket latency / cache / batching",
             &[
-                "bucket", "req", "batches", "hit%", "oom", "p50", "p95", "overprov",
-                "avg batch",
+                "bucket", "req", "batches", "hit%", "oom", "p50", "p95", "p99",
+                "overprov", "avg batch",
             ],
         );
         for s in self.bucket_stats() {
@@ -192,6 +201,7 @@ impl ServeReport {
                 s.oom.to_string(),
                 format!("{:.3} ms", s.latency.median * 1e3),
                 format!("{:.3} ms", s.latency.p95 * 1e3),
+                format!("{:.3} ms", s.latency.p99 * 1e3),
                 format!("{:.2}x", s.mean_overprovision),
                 format!("{:.1}", s.mean_batch),
             ]);
@@ -222,9 +232,11 @@ impl ServeReport {
         } else {
             let s = Summary::of(&lat);
             format!(
-                "request latency p50 {:.3} ms / p95 {:.3} ms; queue peak depth {}, {} rejected",
+                "request latency p50 {:.3} / p95 {:.3} / p99 {:.3} / p999 {:.3} ms; queue peak depth {}, {} rejected",
                 s.median * 1e3,
                 s.p95 * 1e3,
+                s.p99 * 1e3,
+                s.p999 * 1e3,
                 self.queue.max_depth,
                 self.queue.rejected,
             )
@@ -244,6 +256,7 @@ mod tests {
             bucket: MmShape::square(bucket),
             sparsity: None,
             backend: "ipu-sim/GC200".into(),
+            batch_id: id, // solo batch by default; tests override for riders
             batch_size: batch,
             cache_hit: Some(hit),
             queue_seconds: 1e-4,
@@ -264,6 +277,7 @@ mod tests {
             requests,
             metrics: MetricsTable::default(),
             cache: CacheStats { hits: 3, misses: 1, ..CacheStats::default() },
+            cache_shards: Vec::new(),
             queue: QueueStats::default(),
             batches,
             wall_seconds: 0.5,
@@ -301,12 +315,13 @@ mod tests {
 
     #[test]
     fn bucket_stats_group_and_count_batches() {
-        let r = report(vec![
-            rec(0, 256, false, 1),
-            rec(1, 256, true, 2),
-            rec(2, 256, true, 2),
-            rec(3, 512, false, 1),
-        ]);
+        // riders 1 and 2 share one batch (batch_id = first rider id)
+        let pair = |id: u64| {
+            let mut r = rec(id, 256, true, 2);
+            r.batch_id = 1;
+            r
+        };
+        let r = report(vec![rec(0, 256, false, 1), pair(1), pair(2), rec(3, 512, false, 1)]);
         let stats = r.bucket_stats();
         assert_eq!(stats.len(), 2);
         assert_eq!(stats[0].bucket, MmShape::square(256), "busiest first");
@@ -314,6 +329,31 @@ mod tests {
         assert_eq!(stats[0].batches, 2, "one solo + one coalesced pair");
         assert_eq!(stats[0].cache_hits, 2);
         assert!((stats[0].mean_batch - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_batches_count_distinct_batch_ids() {
+        // three batches of sizes 1, 2, 3: distinct ids are exact by
+        // construction — no float accumulation involved
+        let mk = |id: u64, bid: u64, size: usize| {
+            let mut r = rec(id, 256, true, size);
+            r.batch_id = bid;
+            r
+        };
+        let r = report(vec![
+            mk(0, 0, 1),
+            mk(1, 1, 2),
+            mk(2, 1, 2),
+            mk(3, 3, 3),
+            mk(4, 3, 3),
+            mk(5, 3, 3),
+        ]);
+        let stats = r.bucket_stats();
+        assert_eq!(stats[0].batches, 3);
+        // cross-check: on complete batches the retired sum(1/batch_size)
+        // estimate agrees with the exact count
+        let est: f64 = r.requests.iter().map(|q| 1.0 / q.batch_size as f64).sum();
+        assert_eq!(est.round() as usize, 3);
     }
 
     #[test]

@@ -38,9 +38,11 @@ impl SimEngine {
 
     /// Materialize + execute a specific plan (used by ablations).
     pub fn simulate_plan(&self, shape: MmShape, plan: Plan) -> SimReport {
+        let t_sim = crate::obs::now();
         let graph = self.build_graph(shape, &plan);
         debug_assert!(graph.validate().is_ok(), "{:?}", graph.validate());
         let trace = BspEngine::new(&self.arch).run(&graph);
+        self.record_trace_obs(shape, &trace, t_sim);
         let memory: MemoryReport = MemoryAccountant::new(&self.arch).account(&graph);
         let model = CostModel::new(&self.arch);
         let seconds = self.arch.cycles_to_secs(plan.cost.total_cycles);
@@ -82,9 +84,11 @@ impl SimEngine {
         plan: SparsePlan,
         pattern: &BlockPattern,
     ) -> SparseSimReport {
+        let t_sim = crate::obs::now();
         let graph = self.build_sparse_graph(shape, &plan, pattern);
         debug_assert!(graph.validate().is_ok(), "{:?}", graph.validate());
         let trace = BspEngine::new(&self.arch).run(&graph);
+        self.record_trace_obs(shape, &trace, t_sim);
         let memory: MemoryReport = MemoryAccountant::new(&self.arch).account(&graph);
         SparseSimReport {
             arch_name: self.arch.name.to_string(),
@@ -98,6 +102,44 @@ impl SimEngine {
             memory,
             plan,
         }
+    }
+
+    /// Record one simulated run into the obs layer, when tracing is on:
+    /// every BSP phase record becomes a **model-time** span (cycles, laid
+    /// back-to-back on a per-shape track — BSP is lockstep) and the whole
+    /// build+run gets a wall-time span. Write-only: the trace and report
+    /// are untouched, so simulation output is identical with tracing off.
+    fn record_trace_obs(
+        &self,
+        shape: MmShape,
+        trace: &crate::bsp::trace::Trace,
+        t_sim: Option<std::time::Instant>,
+    ) {
+        if t_sim.is_none() {
+            return;
+        }
+        let track = format!("bsp/{}x{}x{}", shape.m, shape.n, shape.k);
+        for (start, dur, rec) in trace.spans() {
+            crate::obs::model_span(
+                &track,
+                &format!("{} {}", rec.phase.name(), rec.label),
+                "bsp",
+                start,
+                dur,
+                &[
+                    ("tile_balance", format!("{:.3}", rec.tile_balance)),
+                    ("active_tiles", rec.active_tiles.to_string()),
+                ],
+            );
+        }
+        crate::obs::count("sim.supersteps", trace.superstep_count() as u64);
+        crate::obs::wall_span_since(
+            t_sim,
+            "sim",
+            &format!("simulate {}x{}x{}", shape.m, shape.n, shape.k),
+            "sim",
+            &[("model_cycles", trace.total_cycles().to_string())],
+        );
     }
 
     /// Materialize the plan as a Poplar-like graph:

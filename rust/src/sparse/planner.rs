@@ -50,7 +50,8 @@ use crate::planner::cost::{consts, CostConfig, CostModel, PlanCost};
 use crate::planner::partition::{MmShape, Partition};
 use crate::planner::search::{
     bisect_max_fitting, for_each_candidate, for_each_candidate_in_stripe, search_fits_with_config,
-    search_with_config, search_workers, CandidateSpace, Plan, PlannerError, PARALLEL_MIN_PMS,
+    search_with_config, search_workers, CandidateSpace, Plan, PlannerError, StripeObs,
+    PARALLEL_MIN_PMS,
 };
 use crate::sparse::csr::BlockCsr;
 use crate::sparse::pattern::{BlockPattern, CellIndex, SparsitySpec};
@@ -515,51 +516,66 @@ pub fn sparse_search_past_dense_wall_with_workers(
 
     // (staged total, enumeration rank, partition, critical, mean)
     type StripeBest = Option<(u64, u64, Partition, f64, f64)>;
-    let stripe =
-        |pm_idx: usize, best: &mut StripeBest, valid: &mut usize, admitted: &mut usize,
-         cells: &mut HashMap<(usize, usize), (f64, f64)>| {
-            for_each_candidate_in_stripe(&space, arch.tiles, shape, pm_idx, |part, rank| {
-                *valid += 1;
-                let (critical, mean) = *cells
-                    .entry((part.pm, part.pn))
-                    .or_insert_with(|| ctx.index.cell_densities(part.pm, part.pn));
-                if sparse_bill_bytes(&model, shape, part, critical, ctx.stats.csr_resident)
-                    > arch.tile_sram_bytes
-                {
-                    return false;
-                }
-                *admitted += 1;
-                let total =
-                    sparse_staged_total(&model, shape, part, critical, ctx.stats.realized);
-                let replace = match best {
-                    None => true,
-                    Some((b_total, b_rank, ..)) => (total, rank) < (*b_total, *b_rank),
-                };
-                if replace {
-                    *best = Some((total, rank, part, critical, mean));
-                }
-                false
-            });
-        };
+    let stripe = |pm_idx: usize,
+                  best: &mut StripeBest,
+                  stats: &mut StripeObs,
+                  cells: &mut HashMap<(usize, usize), (f64, f64)>| {
+        for_each_candidate_in_stripe(&space, arch.tiles, shape, pm_idx, |part, rank| {
+            stats.enumerated += 1;
+            let (critical, mean) = *cells
+                .entry((part.pm, part.pn))
+                .or_insert_with(|| ctx.index.cell_densities(part.pm, part.pn));
+            if sparse_bill_bytes(&model, shape, part, critical, ctx.stats.csr_resident)
+                > arch.tile_sram_bytes
+            {
+                return false;
+            }
+            stats.admitted += 1;
+            let total = sparse_staged_total(&model, shape, part, critical, ctx.stats.realized);
+            stats.staged_priced += 1;
+            let replace = match best {
+                None => true,
+                Some((b_total, b_rank, ..)) => (total, rank) < (*b_total, *b_rank),
+            };
+            if replace {
+                *best = Some((total, rank, part, critical, mean));
+                stats.improvements += 1;
+            }
+            false
+        });
+    };
 
-    let (best, valid, admitted) = if workers <= 1 {
+    let t_search = crate::obs::now();
+    let (best, totals) = if workers <= 1 {
         let mut best: StripeBest = None;
-        let (mut valid, mut admitted) = (0usize, 0usize);
+        let mut totals = StripeObs::default();
         let mut cells = HashMap::new();
         for pm_idx in 0..n_pms {
-            stripe(pm_idx, &mut best, &mut valid, &mut admitted, &mut cells);
+            let t_stripe = crate::obs::now();
+            let mut stats = StripeObs::default();
+            stripe(pm_idx, &mut best, &mut stats, &mut cells);
+            totals.add(&stats);
+            if t_stripe.is_some() {
+                crate::obs::wall_span_since(
+                    t_stripe,
+                    "sparse/w0",
+                    &format!("stripe {pm_idx}"),
+                    "sparse",
+                    &stats.span_args(),
+                );
+            }
         }
-        (best, valid, admitted)
+        (best, totals)
     } else {
         let next_pm = AtomicUsize::new(0);
-        let stripe_results: Vec<(StripeBest, usize, usize)> = std::thread::scope(|scope| {
+        let stripe_results: Vec<(StripeBest, StripeObs)> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers)
-                .map(|_| {
+                .map(|w| {
                     let stripe = &stripe;
                     let next_pm = &next_pm;
                     scope.spawn(move || {
                         let mut best: StripeBest = None;
-                        let (mut valid, mut admitted) = (0usize, 0usize);
+                        let mut totals = StripeObs::default();
                         // per-worker cell-density memo: stripes repeat
                         // (pm, pn) grids, the index makes misses O(pm*pn)
                         let mut cells = HashMap::new();
@@ -568,9 +584,21 @@ pub fn sparse_search_past_dense_wall_with_workers(
                             if pm_idx >= n_pms {
                                 break;
                             }
-                            stripe(pm_idx, &mut best, &mut valid, &mut admitted, &mut cells);
+                            let t_stripe = crate::obs::now();
+                            let mut stats = StripeObs::default();
+                            stripe(pm_idx, &mut best, &mut stats, &mut cells);
+                            totals.add(&stats);
+                            if t_stripe.is_some() {
+                                crate::obs::wall_span_since(
+                                    t_stripe,
+                                    &format!("sparse/w{w}"),
+                                    &format!("stripe {pm_idx}"),
+                                    "sparse",
+                                    &stats.span_args(),
+                                );
+                            }
                         }
-                        (best, valid, admitted)
+                        (best, totals)
                     })
                 })
                 .collect();
@@ -580,10 +608,9 @@ pub fn sparse_search_past_dense_wall_with_workers(
                 .collect()
         });
         let mut best: StripeBest = None;
-        let (mut valid, mut admitted) = (0usize, 0usize);
-        for (stripe_best, stripe_valid, stripe_admitted) in stripe_results {
-            valid += stripe_valid;
-            admitted += stripe_admitted;
+        let mut totals = StripeObs::default();
+        for (stripe_best, stripe_totals) in stripe_results {
+            totals.add(&stripe_totals);
             if let Some((total, rank, part, critical, mean)) = stripe_best {
                 let replace = match &best {
                     None => true,
@@ -594,8 +621,20 @@ pub fn sparse_search_past_dense_wall_with_workers(
                 }
             }
         }
-        (best, valid, admitted)
+        (best, totals)
     };
+
+    let (valid, admitted) = (totals.enumerated as usize, totals.admitted as usize);
+    if t_search.is_some() {
+        totals.record_counters("sparse");
+        crate::obs::wall_span_since(
+            t_search,
+            "planner",
+            &format!("sparse_past_wall {}x{}x{}", shape.m, shape.n, shape.k),
+            "sparse",
+            &[("workers", workers.to_string()), ("admitted", admitted.to_string())],
+        );
+    }
 
     match best {
         Some((total, _, part, critical, mean)) => {

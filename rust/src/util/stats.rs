@@ -10,6 +10,10 @@ pub struct Summary {
     pub max: f64,
     pub median: f64,
     pub p95: f64,
+    /// Nearest-rank tail percentiles ([`percentile_nearest`]) — exact
+    /// order statistics, well-defined even on tiny samples.
+    pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -32,6 +36,8 @@ impl Summary {
             max: sorted[n - 1],
             median: percentile_sorted(&sorted, 50.0),
             p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_nearest(&sorted, 99.0),
+            p999: percentile_nearest(&sorted, 99.9),
         }
     }
 
@@ -53,6 +59,18 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     let hi = rank.ceil() as usize;
     let frac = rank - lo as f64;
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice, p in (0,100]:
+/// the ceil(p/100 * n)-th order statistic (1-based, clamped to [1, n]).
+/// Unlike the interpolated [`percentile_sorted`] this always returns an
+/// observed sample, so tail percentiles stay meaningful on tiny n (p99
+/// of 10 samples is the max, not an extrapolation).
+pub fn percentile_nearest(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// Geometric mean — used for cross-shape speedup aggregation in reports.
@@ -88,6 +106,25 @@ mod tests {
         assert_eq!(s.stddev, 0.0);
         assert_eq!(s.median, 7.0);
         assert_eq!(s.p95, 7.0);
+        assert_eq!(s.p99, 7.0);
+        assert_eq!(s.p999, 7.0);
+    }
+
+    #[test]
+    fn nearest_rank_tail_percentiles() {
+        // 1..=1000: p99 is the 990th order statistic, p999 the 999th
+        let v: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest(&v, 99.0), 990.0);
+        assert_eq!(percentile_nearest(&v, 99.9), 999.0);
+        assert_eq!(percentile_nearest(&v, 100.0), 1000.0);
+        let s = Summary::of(&v);
+        assert_eq!(s.p99, 990.0);
+        assert_eq!(s.p999, 999.0);
+        // tiny samples: always an observed value, never extrapolated
+        let tiny = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_nearest(&tiny, 99.0), 3.0);
+        assert_eq!(percentile_nearest(&tiny, 50.0), 2.0);
+        assert_eq!(percentile_nearest(&tiny, 0.0), 1.0);
     }
 
     #[test]

@@ -782,6 +782,105 @@ fn prop_search_workers_bit_identical_incl_budget_exhausted() {
 }
 
 #[test]
+fn prop_search_bit_identical_with_recorder_enabled() {
+    // observability neutrality: instrumentation is write-only, so the
+    // dense staged search and the sparse past-the-wall search must
+    // return bit-identical plans (or identical OOM statistics) with the
+    // global trace recorder enabled vs disabled, at workers {1, 4}.
+    // This test owns the process-global toggle: lib unit tests only ever
+    // exercise the disabled path, and this binary's other tests are
+    // neutrality-safe by the very property proven here.
+    let arch = IpuArch::gc200();
+    let config = CostConfig::default();
+    let mut rng = Rng::new(0x0B5E);
+    for case in 0..6usize {
+        let hi = 64 + 520 * case; // small squares up to past-the-wall
+        let shape = MmShape::new(
+            rng.gen_usize(1, hi),
+            rng.gen_usize(1, hi),
+            rng.gen_usize(1, hi),
+        );
+        for workers in [1usize, 4] {
+            ipumm::obs::disable();
+            let plain = search_with_workers(&arch, shape, config, workers);
+            ipumm::obs::enable();
+            let traced = search_with_workers(&arch, shape, config, workers);
+            ipumm::obs::disable();
+            let data = ipumm::obs::take();
+            match (&plain, &traced) {
+                (Ok(p), Ok(t)) => {
+                    assert_eq!(p.cost, t.cost, "{shape:?} workers {workers}");
+                    assert_eq!(
+                        p.candidates_evaluated, t.candidates_evaluated,
+                        "{shape:?} workers {workers}"
+                    );
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b, "{shape:?} workers {workers}"),
+                _ => panic!("traced and plain verdicts diverge for {shape:?}"),
+            }
+            // the traced run must actually have recorded planner spans
+            // (whole-search span on track "planner", per-stripe spans on
+            // planner/wN) and the whole-search counters
+            assert!(
+                data.spans.iter().any(|s| s.track.starts_with("planner")),
+                "no planner spans recorded for {shape:?} workers {workers}"
+            );
+            assert!(
+                data.counters.contains_key("planner.candidates.enumerated"),
+                "no planner counters recorded for {shape:?} workers {workers}"
+            );
+        }
+    }
+    let mut rng = Rng::new(0x0B5E5);
+    for case in 0..4usize {
+        let shape = MmShape::new(
+            3600 + rng.gen_usize(0, 1800),
+            3600 + rng.gen_usize(0, 1800),
+            3600 + rng.gen_usize(0, 1800),
+        );
+        let density = [0.1, 0.2][case % 2];
+        let kind = PatternKind::all()[case % 3];
+        let pattern =
+            BlockPattern::for_shape(SparsitySpec::new(kind, 8, density, case as u64), shape);
+        for workers in [1usize, 4] {
+            ipumm::obs::disable();
+            let plain =
+                sparse_search_past_dense_wall_with_workers(&arch, shape, &pattern, config, workers);
+            ipumm::obs::enable();
+            let traced =
+                sparse_search_past_dense_wall_with_workers(&arch, shape, &pattern, config, workers);
+            ipumm::obs::disable();
+            let data = ipumm::obs::take();
+            match (&plain, &traced) {
+                (Ok(p), Ok(t)) => {
+                    assert_eq!(p.partition(), t.partition(), "{shape:?} workers {workers}");
+                    assert_eq!(
+                        p.cost.total_cycles, t.cost.total_cycles,
+                        "{shape:?} workers {workers}"
+                    );
+                    assert_eq!(
+                        p.candidates_evaluated, t.candidates_evaluated,
+                        "{shape:?} workers {workers}"
+                    );
+                    assert_eq!(p.nnz_elems, t.nnz_elems, "{shape:?} workers {workers}");
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b, "{shape:?} workers {workers}"),
+                _ => panic!("traced and plain sparse verdicts diverge for {shape:?}"),
+            }
+            assert!(
+                data.spans
+                    .iter()
+                    .any(|s| s.track == "planner" || s.track.starts_with("sparse")),
+                "no sparse-search spans recorded for {shape:?} workers {workers}"
+            );
+        }
+    }
+    // leave the global recorder off and drained for any test that follows
+    ipumm::obs::disable();
+    let _ = ipumm::obs::take();
+}
+
+#[test]
 fn prop_sparse_past_wall_workers_bit_identical_incl_budget_exhausted() {
     // the sharded past-the-wall sparse search: workers {1, 2, 7,
     // budget-exhausted} return bit-identical SparsePlans (or identical
