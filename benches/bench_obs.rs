@@ -1,0 +1,91 @@
+//! Streaming-metrics bench: quantile-sketch observe/merge cost vs the
+//! retired Vec<f64> + whole-run `Summary::of` approach.
+//!
+//! The interesting deltas: a sketch observe is a handful of float ops
+//! plus one indexed add (no allocation after warmup), merging two
+//! sketches is one O(buckets) pass regardless of sample counts, and
+//! the windowed aggregation path stays linear in events. These rows
+//! carry no `_baseline` twins, so `ipumm bench-check` treats them as
+//! advisory in-run; cross-run drift shows up in `--against` output.
+
+use ipumm::obs::sketch::QuantileSketch;
+use ipumm::obs::slo::{evaluate, SloSpec};
+use ipumm::obs::window::{windowed, MetricEvent, WindowSpec};
+use ipumm::util::bench::{black_box, Bench};
+use ipumm::util::rng::Rng;
+use ipumm::util::stats::Summary;
+
+const STREAM: usize = 100_000;
+
+fn samples() -> Vec<f64> {
+    // log-uniform latencies across 1µs..1s — the shape a mixed serve
+    // trace produces
+    let mut rng = Rng::new(7);
+    (0..STREAM)
+        .map(|_| 1e-6 * (6.0 * rng.next_f64()).exp())
+        .collect()
+}
+
+fn events() -> Vec<MetricEvent> {
+    let vals = samples();
+    vals.iter()
+        .enumerate()
+        .map(|(i, &v)| MetricEvent {
+            pos: i as u64,
+            class: if i % 3 == 0 { "512x512x512" } else { "1024x512x256" }.to_string(),
+            latency_s: v,
+            cache_lookup: true,
+            cache_hit: i % 4 != 0,
+            queue_depth: (i % 7) as u64,
+            oom: false,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("obs");
+    let vals = samples();
+
+    b.run("sketch_observe_100k", || {
+        let mut s = QuantileSketch::new();
+        for &v in &vals {
+            s.observe(v);
+        }
+        black_box(s.quantile(0.99))
+    });
+
+    // the retired representation this PR replaced: buffer every sample,
+    // sort at summary time
+    b.run("vec_push_summary_100k", || {
+        let mut buf = Vec::new();
+        for &v in &vals {
+            buf.push(v);
+        }
+        black_box(Summary::of(&buf).p99)
+    });
+
+    let mut left = QuantileSketch::new();
+    let mut right = QuantileSketch::new();
+    for (i, &v) in vals.iter().enumerate() {
+        if i % 2 == 0 {
+            left.observe(v);
+        } else {
+            right.observe(v);
+        }
+    }
+    b.run("sketch_merge", || {
+        let mut m = left.clone();
+        m.merge(&right);
+        black_box(m.count())
+    });
+
+    let evs = events();
+    b.run("window_tumbling_100k", || {
+        black_box(windowed(&evs, WindowSpec::tumbling(1000)).len())
+    });
+
+    let slo = SloSpec::parse("p99<5ms@99%/1000").expect("valid spec");
+    b.run("slo_evaluate_100k", || black_box(evaluate(&slo, &evs).compliance));
+
+    b.dump_csv();
+}

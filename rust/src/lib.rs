@@ -3,7 +3,7 @@
 //! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
 //! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
 //!
-//! The crate has eight roles (see DESIGN.md):
+//! The crate has nine roles (see DESIGN.md):
 //!
 //! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
 //!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
@@ -89,6 +89,21 @@
 //!    `ipumm profile --chrome`. Tracing is zero-cost when off (one
 //!    relaxed atomic branch) and write-only — plans are bit-identical
 //!    with tracing on or off (property-tested).
+//! 9. **Streaming metrics & SLO monitoring** — on top of the recorder,
+//!    [`obs`] carries a fixed-memory streaming pipeline: a mergeable
+//!    log-bucketed quantile sketch (`obs::sketch::QuantileSketch`,
+//!    bounded relative error, O(buckets) memory for any stream length)
+//!    backs every histogram and merges across sharded serve workers;
+//!    tumbling/sliding windows (`obs::window`) aggregate per-request
+//!    events into per-`(bucket, sparsity)` rps / hit-rate / queue-depth /
+//!    latency rows keyed by request id for determinism
+//!    (`ServeReport::timeline`); declarative SLOs (`obs::slo`,
+//!    `"p99<5ms@99%/100"`) get error-budget accounting and fast/slow
+//!    multi-window burn-rate verdicts; and `obs::export` renders it all
+//!    as Prometheus text exposition plus a JSON snapshot (`ipumm serve
+//!    --metrics-out`, gated by `ipumm slo-check`). Cross-run perf drift
+//!    is gated by `ipumm bench-check --against` over baseline-normalized
+//!    bench means (`util::bench::trend_verdicts`).
 //!
 //! [`coordinator`] orchestrates benchmark jobs across these backends, and
 //! [`experiments`] regenerates each of the paper's tables and figures.

@@ -22,25 +22,38 @@
 //! ipumm ablation               cost-model ablation study
 //! ipumm trace [--jobs N]       trace-driven latency/throughput study
 //! ipumm serve [--jobs N] [--cache N] [--batch N] [--warmup N]
-//!             [--trace-out FILE]
+//!             [--trace-out FILE] [--metrics-out FILE]
+//!             [--slo "p99<5ms@99%[;...]"] [--window N]
 //!                              matmul-as-a-service demo (plan cache,
 //!                              shape bucketing, coalescing dispatch;
 //!                              --artifacts DIR + --features xla anchors
 //!                              cold buckets to real PJRT execution;
 //!                              --trace-out records workers, planner,
 //!                              cache, and thread-budget activity to a
-//!                              Chrome trace-event JSON)
+//!                              Chrome trace-event JSON; --metrics-out
+//!                              writes Prometheus text at FILE plus a
+//!                              JSON snapshot at FILE.json with the
+//!                              per-window timeline; --slo evaluates
+//!                              ';'-separated SLO specs and exits
+//!                              nonzero when one is violated)
+//! ipumm slo-check --slo SPEC [--jobs N] [--seed N] [--window N]
+//!           | --snapshot FILE  SLO gate: serve the demo trace (or read
+//!                              a --metrics-out JSON snapshot) and exit
+//!                              nonzero when any SLO is violated
 //! ipumm sparse [--k N] [--block 4|8|16] [--kind random|banded|blockdiag]
 //!              [--densities 1.0,0.5,...] [--seed N] [--json FILE]
 //!                              block-sparse density x skew sweep
 //!                              (dense-equivalent + effective TFlop/s,
 //!                              per-density predicted memory wall;
 //!                              --json dumps the wall curve)
-//! ipumm bench-check [--dir D] [--tolerance PCT]
+//! ipumm bench-check [--dir D] [--tolerance PCT] [--against PREV_DIR]
 //!                              CI regression gate: parse BENCH_*.json
 //!                              and fail when a benchmark regressed more
 //!                              than PCT% (default 20) vs its in-run
-//!                              frozen baseline
+//!                              frozen baseline; --against additionally
+//!                              compares baseline-normalized means to a
+//!                              previous run's BENCH_*.json (the CI
+//!                              cross-run trend gate)
 //! ipumm streaming              §6 streaming-memory extension
 //! ipumm multiipu               §6 multi-IPU scaling extension
 //! ipumm e2e [--artifacts DIR]  end-to-end driver with real numerics
@@ -81,7 +94,7 @@ use ipumm::util::units::{fmt_bytes, fmt_tflops};
 const OPTIONS: &[&str] = &[
     "arch", "gpu", "csv", "json", "workers", "max-size", "ks", "artifacts", "block", "chips",
     "jobs", "seed", "cache", "batch", "warmup", "k", "kind", "densities", "dir", "tolerance",
-    "trace-out", "chrome",
+    "trace-out", "chrome", "metrics-out", "slo", "window", "against", "snapshot",
 ];
 const FLAGS: &[&str] = &["real", "verbose"];
 
@@ -103,7 +116,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|sparse|bench-check|streaming|multiipu|e2e|all> [args]"
+        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|sparse|bench-check|slo-check|streaming|multiipu|e2e|all> [args]"
     );
     eprintln!("see rust/src/main.rs header for per-command options");
 }
@@ -396,6 +409,92 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 println!("(chrome trace -> {path}; open in chrome://tracing or Perfetto)");
                 println!("{}", ipumm::obs::flame_summary(&data));
             }
+            let metrics_path = args.opt("metrics-out");
+            let slo_arg = args.opt("slo");
+            if metrics_path.is_some() || slo_arg.is_some() {
+                let window = args.opt_usize("window", 100)? as u64;
+                anyhow::ensure!(window >= 1, "--window must be >= 1");
+                let slos = match slo_arg {
+                    Some(text) => ipumm::obs::slo::SloSpec::parse_list(text)
+                        .map_err(|e| anyhow::anyhow!("--slo: {e}"))?,
+                    None => Vec::new(),
+                };
+                let snap = report.metrics_snapshot(window, &slos);
+                for v in &snap.slos {
+                    println!("{}", v.line());
+                }
+                if let Some(path) = metrics_path {
+                    std::fs::write(path, snap.prometheus_text())
+                        .with_context(|| format!("writing {path}"))?;
+                    let json_path = format!("{path}.json");
+                    std::fs::write(&json_path, snap.to_json().render())
+                        .with_context(|| format!("writing {json_path}"))?;
+                    println!(
+                        "(metrics -> {path} [Prometheus text], {json_path} [JSON snapshot, \
+                         {}-request windows])",
+                        window
+                    );
+                }
+                anyhow::ensure!(
+                    !snap.any_slo_violated(),
+                    "SLO violated over the served trace (see verdict lines above)"
+                );
+            }
+        }
+        "slo-check" => {
+            let (args, arch, gpu, workers) = parse_common(raw)?;
+            if let Some(path) = args.opt("snapshot") {
+                // gate a previously-exported snapshot without re-serving
+                use ipumm::util::json::Json;
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading {path}"))?;
+                let doc = Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+                let slos = doc
+                    .get("slos")
+                    .and_then(Json::items)
+                    .with_context(|| format!("{path}: no 'slos' array"))?;
+                anyhow::ensure!(
+                    !slos.is_empty(),
+                    "{path} records no SLO verdicts — re-run serve with --slo and --metrics-out"
+                );
+                let mut violated = 0usize;
+                for v in slos {
+                    let spec = v.get("spec").and_then(Json::as_str).unwrap_or("?");
+                    let bad = matches!(v.get("violated"), Some(Json::Bool(true)));
+                    println!("{:>4}  SLO {spec}", if bad { "FAIL" } else { "ok" });
+                    violated += bad as usize;
+                }
+                anyhow::ensure!(violated == 0, "{violated} SLO(s) violated in {path}");
+            } else {
+                let slo_text = args.opt("slo").context(
+                    "slo-check needs --slo \"p99<5ms@99%\" (';'-separated) or --snapshot FILE",
+                )?;
+                let slos = ipumm::obs::slo::SloSpec::parse_list(slo_text)
+                    .map_err(|e| anyhow::anyhow!("--slo: {e}"))?;
+                let n_jobs = args.opt_usize("jobs", 200)?;
+                let seed = args.opt_usize("seed", 42)? as u64;
+                let window = args.opt_usize("window", 100)? as u64;
+                anyhow::ensure!(window >= 1, "--window must be >= 1");
+                let spec = ipumm::coordinator::trace::TraceSpec::paper_mix(n_jobs, seed);
+                let shapes: Vec<MmShape> = spec.jobs.iter().map(|(_, s)| *s).collect();
+                let svc = MmService::new(ServiceConfig {
+                    arch,
+                    gpu,
+                    workers,
+                    ..ServiceConfig::default()
+                });
+                let report = svc.serve_trace(&shapes);
+                let snap = report.metrics_snapshot(window, &slos);
+                for v in &snap.slos {
+                    println!("{}", v.line());
+                }
+                anyhow::ensure!(
+                    !snap.any_slo_violated(),
+                    "SLO violated over the demo trace ({n_jobs} requests, seed {seed})"
+                );
+                println!("slo-check: all {} SLO(s) met", snap.slos.len());
+            }
         }
         "sparse" => {
             let (args, arch, _, workers) = parse_common(raw)?;
@@ -481,7 +580,11 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
             let tolerance = tolerance_pct as f64 / 100.0;
             let mut checked = 0usize;
             let mut failures = 0usize;
-            for (file, required) in [("BENCH_planner.json", true), ("BENCH_sparse.json", false)] {
+            for (file, required) in [
+                ("BENCH_planner.json", true),
+                ("BENCH_sparse.json", false),
+                ("BENCH_obs.json", false),
+            ] {
                 let path = std::path::Path::new(dir).join(file);
                 let text = match std::fs::read_to_string(&path) {
                     Ok(text) => text,
@@ -525,6 +628,62 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 failures == 0,
                 "{failures} benchmark(s) regressed more than {tolerance_pct}% vs the in-run baseline"
             );
+            // cross-run trend gate: compare against a previous run's
+            // artifacts (CI restores them from the branch-keyed cache)
+            if let Some(prev_dir) = args.opt("against") {
+                let mut trend_checked = 0usize;
+                let mut trend_failures = 0usize;
+                for file in ["BENCH_planner.json", "BENCH_sparse.json", "BENCH_obs.json"] {
+                    let cur_path = std::path::Path::new(dir).join(file);
+                    let prev_path = std::path::Path::new(prev_dir).join(file);
+                    let (Ok(cur_text), Ok(prev_text)) = (
+                        std::fs::read_to_string(&cur_path),
+                        std::fs::read_to_string(&prev_path),
+                    ) else {
+                        eprintln!(
+                            "bench-check: no cross-run pair for {file} (need both {} and {})",
+                            cur_path.display(),
+                            prev_path.display()
+                        );
+                        continue;
+                    };
+                    let cur = ipumm::util::json::Json::parse(&cur_text)
+                        .map_err(|e| anyhow::anyhow!("{}: {e}", cur_path.display()))?;
+                    let prev = ipumm::util::json::Json::parse(&prev_text)
+                        .map_err(|e| anyhow::anyhow!("{}: {e}", prev_path.display()))?;
+                    let verdicts = ipumm::util::bench::trend_verdicts(&cur, &prev, tolerance)
+                        .map_err(|e| anyhow::anyhow!("{file}: {e}"))?;
+                    for v in &verdicts {
+                        trend_checked += v.normalized as usize;
+                        let status = if v.regressed {
+                            trend_failures += 1;
+                            "FAIL"
+                        } else if v.normalized {
+                            "ok"
+                        } else {
+                            "info"
+                        };
+                        println!(
+                            "{status:>4}  {}/{:<44} {:>10.3}ms vs prev {:>10.3}ms (drift {:.2}x{})",
+                            v.group,
+                            v.name,
+                            v.current_s * 1e3,
+                            v.prev_s * 1e3,
+                            v.drift,
+                            if v.normalized { ", baseline-normalized" } else { ", raw — advisory" },
+                        );
+                    }
+                }
+                println!(
+                    "bench-check --against: {trend_checked} gated rows, {trend_failures} \
+                     cross-run regressions (tolerance {tolerance_pct}%)"
+                );
+                anyhow::ensure!(
+                    trend_failures == 0,
+                    "{trend_failures} benchmark(s) drifted more than {tolerance_pct}% vs the \
+                     previous run in {prev_dir}"
+                );
+            }
         }
         "streaming" => {
             let (_, arch, _, _) = parse_common(raw)?;

@@ -17,7 +17,6 @@
 use std::collections::BTreeMap;
 
 use crate::util::json::Json;
-use crate::util::stats::Summary;
 
 use super::recorder::{ClockDomain, TraceData};
 
@@ -106,11 +105,11 @@ pub fn chrome_trace_json(data: &TraceData) -> Json {
     doc.set("counters", counters);
 
     let mut hists = Json::obj();
-    for (name, samples) in &data.histograms {
-        if samples.is_empty() {
+    for (name, sketch) in &data.histograms {
+        if sketch.is_empty() {
             continue;
         }
-        let s = Summary::of(samples);
+        let s = sketch.summary();
         let mut h = Json::obj();
         h.set("n", s.n.into());
         h.set("mean", s.mean.into());

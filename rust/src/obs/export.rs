@@ -1,0 +1,403 @@
+//! Metrics exposition: Prometheus text format and a JSON snapshot.
+//!
+//! [`MetricsSnapshot`] is the serialization boundary of the streaming
+//! metrics pipeline: the serving layer folds its per-request events
+//! into one snapshot (whole-run class aggregates, the windowed
+//! timeline, and SLO verdicts), and this module renders it two ways:
+//!
+//! * [`MetricsSnapshot::prometheus_text`] — the Prometheus text
+//!   exposition format (`# HELP`/`# TYPE` preambles, counter and gauge
+//!   samples, and one `summary`-typed family per latency distribution
+//!   with `quantile` labels plus `_sum`/`_count`), ready for a
+//!   file-based scrape (`ipumm serve --metrics-out F` writes it; a
+//!   node-exporter textfile collector or a CI validator picks it up);
+//! * [`MetricsSnapshot::to_json`] — a deterministic JSON document on
+//!   [`crate::util::json`] carrying the full timeline (per-window
+//!   p50/p99 per traffic class — the view Prometheus' whole-run
+//!   families cannot express) and the machine-readable SLO verdicts
+//!   (`ipumm slo-check --snapshot` consumes it).
+//!
+//! Everything renders deterministically: counters and gauges are
+//! `BTreeMap`s, classes and windows arrive sorted from
+//! [`crate::obs::window`], and [`crate::util::json::Json`] objects
+//! render with sorted keys.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+use super::sketch::QuantileSketch;
+use super::slo::{evaluate, SloSpec, SloVerdict};
+use super::window::{windowed, MetricEvent, WindowSpec, WindowStats};
+
+/// Whole-run aggregate for one traffic class.
+#[derive(Clone, Debug)]
+pub struct ClassAggregate {
+    pub class: String,
+    pub requests: u64,
+    pub lookups: u64,
+    pub hits: u64,
+    pub oom: u64,
+    pub latency: QuantileSketch,
+}
+
+/// One serving run's exportable metrics state.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    /// Monotone counters (full metric names, e.g.
+    /// `ipumm_serve_requests_total`).
+    pub counters: BTreeMap<String, u64>,
+    /// Point-in-time gauges (e.g. `ipumm_serve_wall_seconds`).
+    pub gauges: BTreeMap<String, f64>,
+    /// Whole-run per-class aggregates, sorted by class label.
+    pub classes: Vec<ClassAggregate>,
+    pub window: WindowSpec,
+    /// Windowed view of the same events (JSON-only; see module docs).
+    pub timeline: Vec<WindowStats>,
+    pub slos: Vec<SloVerdict>,
+}
+
+impl MetricsSnapshot {
+    /// Fold an event stream into a snapshot: whole-run class
+    /// aggregates, a tumbling/sliding timeline, and one verdict per
+    /// SLO spec.
+    pub fn build(
+        events: &[MetricEvent],
+        counters: BTreeMap<String, u64>,
+        gauges: BTreeMap<String, f64>,
+        window: WindowSpec,
+        slos: &[SloSpec],
+    ) -> MetricsSnapshot {
+        let mut classes: BTreeMap<String, ClassAggregate> = BTreeMap::new();
+        for ev in events {
+            let agg = classes.entry(ev.class.clone()).or_insert_with(|| ClassAggregate {
+                class: ev.class.clone(),
+                requests: 0,
+                lookups: 0,
+                hits: 0,
+                oom: 0,
+                latency: QuantileSketch::new(),
+            });
+            agg.requests += 1;
+            if ev.cache_lookup {
+                agg.lookups += 1;
+                agg.hits += ev.cache_hit as u64;
+            }
+            agg.oom += ev.oom as u64;
+            agg.latency.observe(ev.latency_s);
+        }
+        MetricsSnapshot {
+            counters,
+            gauges,
+            classes: classes.into_values().collect(),
+            window,
+            timeline: windowed(events, window),
+            slos: slos.iter().map(|s| evaluate(s, events)).collect(),
+        }
+    }
+
+    /// Any SLO verdict violated?
+    pub fn any_slo_violated(&self) -> bool {
+        self.slos.iter().any(|v| v.violated)
+    }
+
+    /// Prometheus text exposition (see module docs). Valid for a
+    /// textfile collector: every sample line is
+    /// `name{labels} value` with sanitized names and escaped labels.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, value) in &self.counters {
+            let name = sanitize_metric_name(name);
+            let _ = writeln!(out, "# HELP {name} ipumm serve counter.");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        for (name, value) in &self.gauges {
+            let name = sanitize_metric_name(name);
+            let _ = writeln!(out, "# HELP {name} ipumm serve gauge.");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {value}");
+        }
+        if !self.classes.is_empty() {
+            let name = "ipumm_serve_latency_seconds";
+            let _ = writeln!(
+                out,
+                "# HELP {name} End-to-end request latency per traffic class."
+            );
+            let _ = writeln!(out, "# TYPE {name} summary");
+            for c in &self.classes {
+                let class = escape_label_value(&c.class);
+                for (q, label) in
+                    [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99"), (0.999, "0.999")]
+                {
+                    let _ = writeln!(
+                        out,
+                        "{name}{{class=\"{class}\",quantile=\"{label}\"}} {}",
+                        c.latency.quantile(q)
+                    );
+                }
+                let _ =
+                    writeln!(out, "{name}_sum{{class=\"{class}\"}} {}", c.latency.sum());
+                let _ = writeln!(
+                    out,
+                    "{name}_count{{class=\"{class}\"}} {}",
+                    c.latency.count()
+                );
+            }
+        }
+        if !self.slos.is_empty() {
+            for (metric, help) in [
+                ("ipumm_slo_compliance", "Good-request fraction per SLO."),
+                ("ipumm_slo_budget_consumed", "Error-budget consumption per SLO (1.0 = spent exactly)."),
+                ("ipumm_slo_violated", "1 when the SLO's whole-run compliance missed its target."),
+            ] {
+                let _ = writeln!(out, "# HELP {metric} {help}");
+                let _ = writeln!(out, "# TYPE {metric} gauge");
+                for v in &self.slos {
+                    let slo = escape_label_value(&v.spec.raw);
+                    let value = match metric {
+                        "ipumm_slo_compliance" => v.compliance,
+                        "ipumm_slo_budget_consumed" => v.budget_consumed,
+                        _ => v.violated as u64 as f64,
+                    };
+                    let _ = writeln!(out, "{metric}{{slo=\"{slo}\"}} {value}");
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot: counters, gauges, whole-run class summaries, the
+    /// per-window timeline (p50/p99 per class per window), SLO
+    /// verdicts, and the sketch configuration. Parses back through
+    /// [`Json::parse`] byte-stable.
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+
+        let mut counters = Json::obj();
+        for (name, value) in &self.counters {
+            counters.set(name, (*value).into());
+        }
+        doc.set("counters", counters);
+
+        let mut gauges = Json::obj();
+        for (name, value) in &self.gauges {
+            gauges.set(name, (*value).into());
+        }
+        doc.set("gauges", gauges);
+
+        let mut classes = Json::Arr(Vec::new());
+        for c in &self.classes {
+            let mut o = Json::obj();
+            o.set("class", c.class.as_str().into());
+            o.set("requests", c.requests.into());
+            o.set("lookups", c.lookups.into());
+            o.set("hits", c.hits.into());
+            o.set("oom", c.oom.into());
+            o.set("latency", sketch_json(&c.latency));
+            classes.push(o);
+        }
+        doc.set("classes", classes);
+
+        let mut window = Json::obj();
+        window.set("width", self.window.width.into());
+        window.set("stride", self.window.stride.into());
+        doc.set("window", window);
+
+        let mut timeline = Json::Arr(Vec::new());
+        for w in &self.timeline {
+            timeline.push(window_json(w));
+        }
+        doc.set("timeline", timeline);
+
+        let mut slos = Json::Arr(Vec::new());
+        for v in &self.slos {
+            slos.push(v.to_json());
+        }
+        doc.set("slos", slos);
+
+        let probe = QuantileSketch::new();
+        let mut sketch = Json::obj();
+        sketch.set("relative_error", probe.relative_error().into());
+        sketch.set("buckets", probe.buckets().into());
+        sketch.set("memory_bytes", probe.memory_bytes().into());
+        doc.set("sketch", sketch);
+        doc
+    }
+}
+
+fn sketch_json(s: &QuantileSketch) -> Json {
+    let mut o = Json::obj();
+    o.set("n", s.count().into());
+    if !s.is_empty() {
+        let sum = s.summary();
+        o.set("mean", sum.mean.into());
+        o.set("min", sum.min.into());
+        o.set("p50", sum.median.into());
+        o.set("p95", sum.p95.into());
+        o.set("p99", sum.p99.into());
+        o.set("p999", sum.p999.into());
+        o.set("max", sum.max.into());
+    }
+    o
+}
+
+fn window_json(w: &WindowStats) -> Json {
+    let mut o = Json::obj();
+    o.set("start", w.start.into());
+    o.set("end", w.end.into());
+    let mut classes = Json::Arr(Vec::new());
+    for c in &w.classes {
+        let mut co = Json::obj();
+        co.set("class", c.class.as_str().into());
+        co.set("requests", c.requests.into());
+        co.set("hits", c.hits.into());
+        co.set("lookups", c.lookups.into());
+        co.set("oom", c.oom.into());
+        co.set("hit_rate", c.hit_rate().into());
+        co.set("mean_queue_depth", c.mean_queue_depth().into());
+        if !c.latency.is_empty() {
+            co.set("p50", c.latency.quantile(0.5).into());
+            co.set("p99", c.latency.quantile(0.99).into());
+            co.set("max", c.latency.max().into());
+        }
+        classes.push(co);
+    }
+    o.set("classes", classes);
+    o
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; map everything else
+/// (the recorder's dotted names, dashes) to `_`.
+pub fn sanitize_metric_name(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+/// Escape a label value per the exposition format: backslash, quote,
+/// newline.
+pub fn escape_label_value(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(pos: u64, class: &str, latency_s: f64, hit: bool) -> MetricEvent {
+        MetricEvent {
+            pos,
+            class: class.to_string(),
+            latency_s,
+            cache_lookup: true,
+            cache_hit: hit,
+            queue_depth: 1,
+            oom: false,
+        }
+    }
+
+    fn snapshot() -> MetricsSnapshot {
+        let events: Vec<MetricEvent> = (0..40)
+            .map(|i| {
+                ev(
+                    i,
+                    if i % 2 == 0 { "256x256x256" } else { "512x512x512" },
+                    1e-3 * (1 + i % 5) as f64,
+                    i % 4 != 0,
+                )
+            })
+            .collect();
+        let mut counters = BTreeMap::new();
+        counters.insert("ipumm_serve_requests_total".to_string(), 40);
+        counters.insert("ipumm_serve_batches_total".to_string(), 12);
+        let mut gauges = BTreeMap::new();
+        gauges.insert("ipumm_serve_wall_seconds".to_string(), 0.25);
+        let slos = [SloSpec::parse("p99<10ms@99%/10").unwrap()];
+        MetricsSnapshot::build(&events, counters, gauges, WindowSpec::tumbling(10), &slos)
+    }
+
+    #[test]
+    fn prometheus_text_has_families_counters_and_slos() {
+        let text = snapshot().prometheus_text();
+        assert!(text.contains("# TYPE ipumm_serve_requests_total counter"));
+        assert!(text.contains("ipumm_serve_requests_total 40"));
+        assert!(text.contains("# TYPE ipumm_serve_latency_seconds summary"));
+        assert!(text.contains("ipumm_serve_latency_seconds{class=\"256x256x256\",quantile=\"0.99\"}"));
+        assert!(text.contains("ipumm_serve_latency_seconds_count{class=\"256x256x256\"} 20"));
+        assert!(text.contains("ipumm_slo_violated{slo=\"p99<10ms@99%/10\"} 0"));
+        // every non-comment line is `name_or_name{labels} value`
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (head, value) = line.rsplit_once(' ').expect("sample line has a value");
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in '{line}'");
+            let name = head.split('{').next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+                "bad metric name in '{line}'"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_json_round_trips_and_carries_windows() {
+        let doc = snapshot().to_json();
+        let text = doc.render();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.render(), text, "render-stable");
+        let timeline = parsed.get("timeline").and_then(Json::items).unwrap();
+        assert_eq!(timeline.len(), 4, "40 requests / width 10");
+        let w0 = &timeline[0];
+        assert_eq!(w0.get("start").and_then(Json::as_f64), Some(0.0));
+        let classes = w0.get("classes").and_then(Json::items).unwrap();
+        assert_eq!(classes.len(), 2);
+        // the acceptance surface: per-window p50/p99 per class
+        assert!(classes[0].get("p50").and_then(Json::as_f64).is_some());
+        assert!(classes[0].get("p99").and_then(Json::as_f64).is_some());
+        let slos = parsed.get("slos").and_then(Json::items).unwrap();
+        assert_eq!(slos.len(), 1);
+        assert!(matches!(slos[0].get("violated"), Some(Json::Bool(false))));
+        assert!(parsed.get("sketch").and_then(|s| s.get("buckets")).is_some());
+    }
+
+    #[test]
+    fn quantiles_are_monotone_within_a_family() {
+        let snap = snapshot();
+        for c in &snap.classes {
+            let (p50, p95, p99) = (
+                c.latency.quantile(0.5),
+                c.latency.quantile(0.95),
+                c.latency.quantile(0.99),
+            );
+            assert!(p50 <= p95 && p95 <= p99, "{}: {p50} {p95} {p99}", c.class);
+        }
+    }
+
+    #[test]
+    fn sanitize_and_escape() {
+        assert_eq!(sanitize_metric_name("queue.rejected"), "queue_rejected");
+        assert_eq!(sanitize_metric_name("serve-latency"), "serve_latency");
+        assert_eq!(sanitize_metric_name("9lives"), "_9lives");
+        assert_eq!(escape_label_value("a\"b\\c"), "a\\\"b\\\\c");
+    }
+
+    #[test]
+    fn violated_slo_is_visible() {
+        let events: Vec<MetricEvent> = (0..20).map(|i| ev(i, "c", 1.0, true)).collect();
+        let slos = [SloSpec::parse("p99<1ms@99%").unwrap()];
+        let snap = MetricsSnapshot::build(
+            &events,
+            BTreeMap::new(),
+            BTreeMap::new(),
+            WindowSpec::tumbling(10),
+            &slos,
+        );
+        assert!(snap.any_slo_violated());
+        assert!(snap.prometheus_text().contains("ipumm_slo_violated{slo=\"p99<1ms@99%\"} 1"));
+    }
+}

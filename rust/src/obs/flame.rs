@@ -2,12 +2,14 @@
 //!
 //! For terminals and CI logs where a Chrome trace viewer is not at hand:
 //! spans aggregate per `(track, name)` with a proportional bar, counters
-//! print sorted, histograms summarize with the tail percentiles.
+//! print sorted, histograms summarize with the tail percentiles, and a
+//! final section reports what the recorder itself retained (spans,
+//! bytes, sketch memory) so instrumentation cost is observable.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use crate::util::stats::Summary;
+use crate::util::units::fmt_bytes;
 
 use super::recorder::{ClockDomain, TraceData};
 
@@ -72,11 +74,11 @@ pub fn flame_summary(data: &TraceData) -> String {
     }
     if !data.histograms.is_empty() {
         out.push_str("histograms:\n");
-        for (name, samples) in &data.histograms {
-            if samples.is_empty() {
+        for (name, sketch) in &data.histograms {
+            if sketch.is_empty() {
                 continue;
             }
-            let s = Summary::of(samples);
+            let s = sketch.summary();
             let _ = writeln!(
                 out,
                 "  {name}: n={} p50={:.3} p95={:.3} p99={:.3} p999={:.3} max={:.3}",
@@ -84,6 +86,18 @@ pub fn flame_summary(data: &TraceData) -> String {
             );
         }
     }
+    let o = data.overhead();
+    out.push_str("recorder overhead:\n");
+    let _ = writeln!(
+        out,
+        "  {} spans retained ({}), {} counters, {} histograms ({} samples folded into {} of sketches)",
+        o.spans,
+        fmt_bytes(o.span_bytes as u64),
+        o.counters,
+        o.histograms,
+        o.histogram_samples,
+        fmt_bytes(o.sketch_bytes as u64),
+    );
     out
 }
 
@@ -113,5 +127,8 @@ mod tests {
         assert!(text.find("compute").unwrap() < text.find("exchange").unwrap());
         assert!(text.contains("1234"));
         assert!(text.contains("p999=2.000"));
+        assert!(text.contains("recorder overhead:"));
+        assert!(text.contains("3 spans retained"));
+        assert!(text.contains("1 samples folded"));
     }
 }

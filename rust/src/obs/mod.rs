@@ -14,6 +14,21 @@
 //! Perfetto. [`flame_summary`] renders the same data as a text
 //! flamegraph-style digest for terminals.
 //!
+//! On top of the recorder sits the streaming metrics pipeline:
+//!
+//! * [`sketch`] — a mergeable, fixed-memory log-bucketed quantile
+//!   sketch ([`QuantileSketch`]) with a documented relative-error
+//!   bound; it backs every histogram here (memory O(buckets), never
+//!   O(samples)) and merges across sharded serve workers;
+//! * [`window`] — tumbling/sliding window aggregation of per-request
+//!   events into per-class rps / hit-rate / queue-depth / latency
+//!   rows, keyed by request id or queue timestamp for determinism;
+//! * [`slo`] — declarative SLO specs (`p99<5ms@99%/100`), error-budget
+//!   accounting and multi-window burn-rate alerts, producing
+//!   machine-readable verdicts;
+//! * [`export`] — Prometheus text exposition + JSON snapshot
+//!   (`ipumm serve --metrics-out`, `ipumm slo-check`).
+//!
 //! Two invariants the rest of the tree relies on:
 //!
 //! * **zero-cost when off** — every recording entry point is a no-op
@@ -30,12 +45,17 @@
 //! that need isolation construct their own [`Recorder`] instances.
 
 pub mod chrome;
+pub mod export;
 pub mod flame;
 pub mod recorder;
+pub mod sketch;
+pub mod slo;
+pub mod window;
 
 pub use chrome::chrome_trace_json;
 pub use flame::flame_summary;
-pub use recorder::{ClockDomain, Recorder, SpanRecord, TraceData};
+pub use recorder::{ClockDomain, Recorder, RecorderOverhead, SpanRecord, TraceData};
+pub use sketch::QuantileSketch;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::OnceLock;
@@ -129,11 +149,20 @@ pub fn count(name: &str, delta: u64) {
     }
 }
 
-/// Append one sample to a named histogram (summarized with p50/p95/p99/
-/// p999 at export time).
+/// Fold one sample into a named histogram sketch (read back as
+/// p50/p95/p99/p999 at export time; memory stays O(buckets)).
 pub fn observe(name: &str, value: f64) {
     if enabled() {
         global().observe(name, value);
+    }
+}
+
+/// Merge a locally-aggregated [`QuantileSketch`] into a named global
+/// histogram in one lock acquisition. Sharded serve workers use this:
+/// observe into a worker-local sketch per sample, merge once at exit.
+pub fn merge_sketch(name: &str, sketch: &QuantileSketch) {
+    if enabled() {
+        global().merge_sketch(name, sketch);
     }
 }
 
@@ -153,6 +182,9 @@ mod tests {
         event("t", "n", "c", &[]);
         count("x", 1);
         observe("h", 1.0);
+        let mut local = QuantileSketch::new();
+        local.observe(1.0);
+        merge_sketch("h", &local);
         let data = take();
         assert!(data.spans.is_empty());
         assert!(data.counters.is_empty());

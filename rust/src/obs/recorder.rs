@@ -8,6 +8,8 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::sketch::QuantileSketch;
+
 /// Which clock a span's `start`/`dur` are measured on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum ClockDomain {
@@ -36,11 +38,16 @@ pub struct SpanRecord {
 }
 
 /// Everything one tracing session collected.
+///
+/// Histograms are [`QuantileSketch`]es, not raw sample vectors: memory
+/// per histogram is O(buckets) regardless of how many values a run
+/// observes (the O(samples) `Vec<f64>` this replaced made million-
+/// request serve runs retain every latency forever).
 #[derive(Clone, Debug, Default)]
 pub struct TraceData {
     pub spans: Vec<SpanRecord>,
     pub counters: BTreeMap<String, u64>,
-    pub histograms: BTreeMap<String, Vec<f64>>,
+    pub histograms: BTreeMap<String, QuantileSketch>,
 }
 
 impl TraceData {
@@ -52,6 +59,46 @@ impl TraceData {
     pub fn span_count(&self, domain: ClockDomain) -> usize {
         self.spans.iter().filter(|s| s.domain == domain).count()
     }
+
+    /// What the instrumentation itself cost this session — so the
+    /// recorder's overhead is observable like everything else
+    /// (`ipumm profile` and the flame digest print it).
+    pub fn overhead(&self) -> RecorderOverhead {
+        let span_bytes: usize = self
+            .spans
+            .iter()
+            .map(|s| {
+                std::mem::size_of::<SpanRecord>()
+                    + s.track.len()
+                    + s.name.len()
+                    + s.args.iter().map(|(_, v)| v.len()).sum::<usize>()
+            })
+            .sum();
+        RecorderOverhead {
+            spans: self.spans.len(),
+            counters: self.counters.len(),
+            histograms: self.histograms.len(),
+            span_bytes,
+            sketch_bytes: self.histograms.values().map(|s| s.memory_bytes()).sum(),
+            histogram_samples: self.histograms.values().map(|s| s.count()).sum(),
+        }
+    }
+}
+
+/// Self-measurement of the recorder: how much it retained and what that
+/// retention costs in bytes. `sketch_bytes` stays flat as
+/// `histogram_samples` grows — the bounded-memory guarantee.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecorderOverhead {
+    pub spans: usize,
+    pub counters: usize,
+    pub histograms: usize,
+    /// Approximate heap retained by span records (struct + owned strings).
+    pub span_bytes: usize,
+    /// Heap retained by all histogram sketches.
+    pub sketch_bytes: usize,
+    /// Total samples folded into histograms (not retained individually).
+    pub histogram_samples: u64,
 }
 
 struct Inner {
@@ -164,7 +211,28 @@ impl Recorder {
     }
 
     pub fn observe(&self, name: &str, value: f64) {
-        self.lock().data.histograms.entry(name.to_string()).or_default().push(value);
+        self.lock()
+            .data
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(QuantileSketch::new)
+            .observe(value);
+    }
+
+    /// Fold a locally-built sketch into a named histogram in one lock
+    /// acquisition — the sharded-worker path: each serve worker
+    /// aggregates into a thread-local sketch and merges once at exit
+    /// instead of taking the recorder lock per sample.
+    pub fn merge_sketch(&self, name: &str, sketch: &QuantileSketch) {
+        if sketch.is_empty() {
+            return;
+        }
+        self.lock()
+            .data
+            .histograms
+            .entry(name.to_string())
+            .or_insert_with(QuantileSketch::new)
+            .merge(sketch);
     }
 }
 
@@ -193,7 +261,7 @@ mod tests {
     }
 
     #[test]
-    fn counters_accumulate_and_histograms_append() {
+    fn counters_accumulate_and_histograms_fold_into_sketches() {
         let r = Recorder::new();
         r.count("cache.hits", 2);
         r.count("cache.hits", 3);
@@ -201,7 +269,46 @@ mod tests {
         r.observe("queue_wait_ms", 2.5);
         let data = r.take();
         assert_eq!(data.counters["cache.hits"], 5);
-        assert_eq!(data.histograms["queue_wait_ms"], vec![1.5, 2.5]);
+        let h = &data.histograms["queue_wait_ms"];
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 4.0);
+        assert_eq!(h.min(), 1.5);
+        assert_eq!(h.max(), 2.5);
+    }
+
+    #[test]
+    fn merge_sketch_equals_per_sample_observe() {
+        let direct = Recorder::new();
+        let merged = Recorder::new();
+        let mut local = QuantileSketch::new();
+        for i in 0..100 {
+            let v = 1e-3 * (i + 1) as f64;
+            direct.observe("lat", v);
+            local.observe(v);
+        }
+        merged.merge_sketch("lat", &local);
+        merged.merge_sketch("lat", &QuantileSketch::new()); // empty: no-op
+        let a = direct.take();
+        let b = merged.take();
+        assert_eq!(a.histograms["lat"], b.histograms["lat"]);
+    }
+
+    #[test]
+    fn overhead_reports_retention() {
+        let r = Recorder::new();
+        r.model_span("bsp", "compute", "model", 0, 10, &[("tiles", "8".to_string())]);
+        r.count("c", 1);
+        for i in 0..1000 {
+            r.observe("lat", 1e-3 * (i + 1) as f64);
+        }
+        let data = r.take();
+        let o = data.overhead();
+        assert_eq!(o.spans, 1);
+        assert_eq!(o.counters, 1);
+        assert_eq!(o.histograms, 1);
+        assert_eq!(o.histogram_samples, 1000);
+        assert!(o.span_bytes > 0);
+        assert_eq!(o.sketch_bytes, data.histograms["lat"].memory_bytes());
     }
 
     #[test]

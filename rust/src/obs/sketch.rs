@@ -1,0 +1,396 @@
+//! Fixed-memory, mergeable quantile sketch for streaming latency
+//! distributions.
+//!
+//! The recorder's histograms (and the serve workers' latency streams)
+//! must not grow with the number of observations: a million-request
+//! serve run buffering every sample in a `Vec<f64>` is exactly the
+//! pathology this module removes. [`QuantileSketch`] is a DDSketch/HDR
+//! style log-bucketed histogram:
+//!
+//! * **deterministic bucket boundaries** — bucket `i` covers
+//!   `(γ^(i-1), γ^i]` with `γ = (1+α)/(1-α)` fixed at construction, so
+//!   two sketches built anywhere (different workers, different runs)
+//!   agree bucket-for-bucket and merge by adding counts;
+//! * **bounded relative error** — a quantile estimate `q̂` of the exact
+//!   nearest-rank sample `q` satisfies `|q̂ - q| <= α·q` (default
+//!   α = [`DEFAULT_RELATIVE_ERROR`] = 1%), because the reported bucket
+//!   midpoint `2γ^i/(γ+1)` is within α of every value in the bucket;
+//! * **O(buckets) memory, not O(samples)** — the count array covers
+//!   [`MIN_VALUE`], [`MAX_VALUE`] (1 ns .. ~31 years in seconds) in
+//!   ~2100 fixed buckets (~17 KiB), independent of how many samples
+//!   stream through ([`Self::memory_bytes`] is property-tested constant
+//!   over a 100k+ stream in `tests/prop_invariants.rs`).
+//!
+//! Exact `count`/`sum`/`sum_sq`/`min`/`max` ride alongside the buckets,
+//! so [`Self::summary`] reports exact mean/stddev/min/max and
+//! sketch-estimated p50/p95/p99/p999 in the same
+//! [`crate::util::stats::Summary`] shape the rest of the tree consumes.
+//! Rank selection is nearest-rank (`ceil(q·n)`), matching
+//! [`crate::util::stats::percentile_nearest`]; the rank-1 and rank-n
+//! queries return the exact `min`/`max`, so tiny samples keep exact
+//! tails.
+//!
+//! Values below [`MIN_VALUE`] (including zero and negatives) land in a
+//! dedicated underflow bucket reported as `0.0` — an absolute error
+//! bound of 1 ns instead of a relative one. Values above [`MAX_VALUE`]
+//! clamp into the top bucket (`max` stays exact).
+
+use crate::util::stats::Summary;
+
+/// Default relative-error bound α for [`QuantileSketch::new`].
+pub const DEFAULT_RELATIVE_ERROR: f64 = 0.01;
+
+/// Smallest value with a relative-error guarantee (1 ns, in seconds).
+pub const MIN_VALUE: f64 = 1e-9;
+
+/// Largest value with a relative-error guarantee (~31 years, in seconds).
+pub const MAX_VALUE: f64 = 1e9;
+
+/// A mergeable, fixed-memory log-bucketed quantile sketch (see the
+/// module docs for the guarantees).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantileSketch {
+    gamma: f64,
+    inv_log_gamma: f64,
+    min_index: i32,
+    /// `counts[i]` counts samples in `(γ^(min_index+i-1), γ^(min_index+i)]`.
+    counts: Vec<u64>,
+    /// Samples below [`MIN_VALUE`] (zero, negative, sub-ns).
+    zero_count: u64,
+    count: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> QuantileSketch {
+        QuantileSketch::new()
+    }
+}
+
+impl QuantileSketch {
+    /// A sketch with the default [`DEFAULT_RELATIVE_ERROR`] bound.
+    pub fn new() -> QuantileSketch {
+        QuantileSketch::with_relative_error(DEFAULT_RELATIVE_ERROR)
+    }
+
+    /// A sketch with relative-error bound `alpha` in (0, 1). Sketches
+    /// merge only with sketches of the same `alpha`.
+    pub fn with_relative_error(alpha: f64) -> QuantileSketch {
+        assert!(alpha > 0.0 && alpha < 1.0, "relative error {alpha} out of (0,1)");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        let inv_log_gamma = 1.0 / gamma.ln();
+        let min_index = (MIN_VALUE.ln() * inv_log_gamma).ceil() as i32;
+        let max_index = (MAX_VALUE.ln() * inv_log_gamma).ceil() as i32;
+        QuantileSketch {
+            gamma,
+            inv_log_gamma,
+            min_index,
+            counts: vec![0; (max_index - min_index + 1) as usize],
+            zero_count: 0,
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one sample. Non-finite values are counted as `0.0`.
+    pub fn observe(&mut self, value: f64) {
+        let v = if value.is_finite() { value } else { 0.0 };
+        self.count += 1;
+        self.sum += v;
+        self.sum_sq += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v < MIN_VALUE {
+            self.zero_count += 1;
+        } else {
+            let top = self.min_index + self.counts.len() as i32 - 1;
+            let idx =
+                ((v.ln() * self.inv_log_gamma).ceil() as i32).clamp(self.min_index, top);
+            self.counts[(idx - self.min_index) as usize] += 1;
+        }
+    }
+
+    /// Merge another sketch's counts into this one (bucket-wise
+    /// addition — the merged sketch is exactly the sketch of the
+    /// concatenated sample streams). Panics if the configurations
+    /// (relative error, bucket layout) differ.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert!(
+            self.gamma == other.gamma
+                && self.min_index == other.min_index
+                && self.counts.len() == other.counts.len(),
+            "cannot merge sketches with different configurations"
+        );
+        if other.count == 0 {
+            return;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.zero_count += other.zero_count;
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank quantile estimate for `q` in [0, 1]: the bucket
+    /// midpoint holding the `ceil(q·n)`-th smallest sample, within the
+    /// configured relative error of the exact order statistic (clamped
+    /// into the observed `[min, max]`; ranks 1 and n are exact).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!(self.count > 0, "quantile on empty sketch");
+        assert!((0.0..=1.0).contains(&q), "quantile {q} out of [0,1]");
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if rank == 1 {
+            return self.min;
+        }
+        if rank == self.count {
+            return self.max;
+        }
+        let mut seen = self.zero_count;
+        if rank <= seen {
+            return 0.0_f64.max(self.min).min(self.max);
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let idx = self.min_index + i as i32;
+                // bucket (γ^(idx-1), γ^idx]: the midpoint 2γ^idx/(γ+1)
+                // is within α of every value the bucket can hold
+                let rep = 2.0 * self.gamma.powi(idx) / (self.gamma + 1.0);
+                return rep.max(self.min).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact number of samples observed.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0 on an empty sketch).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// Exact smallest sample. Panics on an empty sketch.
+    pub fn min(&self) -> f64 {
+        assert!(self.count > 0, "min on empty sketch");
+        self.min
+    }
+
+    /// Exact largest sample. Panics on an empty sketch.
+    pub fn max(&self) -> f64 {
+        assert!(self.count > 0, "max on empty sketch");
+        self.max
+    }
+
+    /// The configured relative-error bound α.
+    pub fn relative_error(&self) -> f64 {
+        (self.gamma - 1.0) / (self.gamma + 1.0)
+    }
+
+    /// Number of buckets (fixed at construction).
+    pub fn buckets(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Retained bytes — a function of the bucket count only, never of
+    /// how many samples were observed.
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<QuantileSketch>()
+            + self.counts.len() * std::mem::size_of::<u64>()
+    }
+
+    /// [`Summary`]-shaped readout: exact n/mean/stddev/min/max, sketch
+    /// p50/p95/p99/p999 (each within α of the exact nearest-rank
+    /// value). Panics on an empty sketch, like `Summary::of` on an
+    /// empty slice.
+    pub fn summary(&self) -> Summary {
+        assert!(self.count > 0, "summary of empty sketch");
+        let n = self.count as f64;
+        let var = if self.count > 1 {
+            ((self.sum_sq - self.sum * self.sum / n) / (n - 1.0)).max(0.0)
+        } else {
+            0.0
+        };
+        Summary {
+            n: self.count as usize,
+            mean: self.sum / n,
+            stddev: var.sqrt(),
+            min: self.min,
+            max: self.max,
+            median: self.quantile(0.5),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            p999: self.quantile(0.999),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentile_nearest;
+
+    #[test]
+    fn empty_and_single_sample() {
+        let mut s = QuantileSketch::new();
+        assert!(s.is_empty());
+        s.observe(7.0e-3);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.quantile(0.5), 7.0e-3, "rank 1 == rank n == exact");
+        let sum = s.summary();
+        assert_eq!(sum.n, 1);
+        assert_eq!(sum.p999, 7.0e-3);
+        assert_eq!(sum.stddev, 0.0);
+    }
+
+    #[test]
+    fn constant_stream_is_exact_at_every_quantile() {
+        let mut s = QuantileSketch::new();
+        for _ in 0..10_000 {
+            s.observe(5.0e-3);
+        }
+        for q in [0.0, 0.5, 0.95, 0.99, 0.999, 1.0] {
+            // min/max clamp pins every estimate to the one observed value
+            assert_eq!(s.quantile(q), 5.0e-3, "q={q}");
+        }
+        assert!((s.mean() - 5.0e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn quantiles_within_documented_relative_error() {
+        let mut rng = Rng::new(7);
+        let mut s = QuantileSketch::new();
+        let mut exact = Vec::new();
+        for _ in 0..20_000 {
+            // log-uniform over ~6 decades: microseconds to tens of seconds
+            let v = 1e-6 * 10f64.powf(7.0 * rng.next_f64());
+            s.observe(v);
+            exact.push(v);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let alpha = s.relative_error();
+        for q in [0.5, 0.9, 0.95, 0.99, 0.999] {
+            let truth = percentile_nearest(&exact, q * 100.0);
+            let est = s.quantile(q);
+            // small slack over α for bucket-boundary float rounding
+            assert!(
+                (est - truth).abs() <= truth * alpha * 1.05 + 1e-12,
+                "q={q}: est {est} vs exact {truth} (α={alpha})"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_single_sketch_over_concatenated_stream() {
+        let mut rng = Rng::new(11);
+        let mut whole = QuantileSketch::new();
+        let mut parts: Vec<QuantileSketch> = (0..4).map(|_| QuantileSketch::new()).collect();
+        for i in 0..8_000 {
+            let v = 1e-4 * (1.0 + rng.next_f64());
+            whole.observe(v);
+            parts[i % 4].observe(v);
+        }
+        let mut merged = QuantileSketch::new();
+        for p in &parts {
+            merged.merge(p);
+        }
+        // bucket counts are integers: the merge is exactly the whole-run
+        // sketch, not merely close to it
+        assert_eq!(merged, whole);
+        assert_eq!(merged.count(), 8_000);
+    }
+
+    #[test]
+    fn merge_into_empty_adopts_min_max() {
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        b.observe(1.0);
+        b.observe(3.0);
+        a.merge(&b);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 3.0);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "different configurations")]
+    fn merge_rejects_config_mismatch() {
+        let mut a = QuantileSketch::new();
+        let b = QuantileSketch::with_relative_error(0.05);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn memory_is_constant_in_sample_count() {
+        let mut s = QuantileSketch::new();
+        let before = s.memory_bytes();
+        for i in 0..50_000 {
+            s.observe(1e-6 * (i + 1) as f64);
+        }
+        assert_eq!(s.memory_bytes(), before, "memory must be O(buckets)");
+        assert!(before < 64 * 1024, "sketch should stay under 64 KiB, got {before}");
+        assert_eq!(s.buckets(), QuantileSketch::new().buckets());
+    }
+
+    #[test]
+    fn underflow_bucket_reports_zero() {
+        let mut s = QuantileSketch::new();
+        for _ in 0..10 {
+            s.observe(0.0);
+        }
+        s.observe(1e-12); // sub-ns: no relative guarantee, 1 ns absolute
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.max(), 1e-12, "exact max survives the underflow bucket");
+    }
+
+    #[test]
+    fn summary_mean_and_stddev_are_exact() {
+        let samples = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut s = QuantileSketch::new();
+        for &v in &samples {
+            s.observe(v);
+        }
+        let exact = Summary::of(&samples);
+        let sk = s.summary();
+        assert!((sk.mean - exact.mean).abs() < 1e-12);
+        assert!((sk.stddev - exact.stddev).abs() < 1e-9);
+        assert_eq!(sk.min, exact.min);
+        assert_eq!(sk.max, exact.max);
+        assert_eq!(sk.n, exact.n);
+    }
+
+    #[test]
+    fn bimodal_stream_resolves_both_modes() {
+        let mut s = QuantileSketch::new();
+        for i in 0..1000 {
+            s.observe(if i % 10 == 9 { 0.1 } else { 0.001 });
+        }
+        // 90% fast mode, 10% slow mode: p50 sits on the fast mode,
+        // p95/p99 on the slow one
+        assert!((s.quantile(0.5) - 0.001).abs() <= 0.001 * 0.011);
+        assert!((s.quantile(0.95) - 0.1).abs() <= 0.1 * 0.011);
+        assert!((s.quantile(0.99) - 0.1).abs() <= 0.1 * 0.011);
+    }
+}

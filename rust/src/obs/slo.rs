@@ -1,0 +1,477 @@
+//! Declarative latency SLOs: spec parsing, error-budget accounting, and
+//! multi-window burn-rate evaluation.
+//!
+//! A spec reads `p99<5ms@99%/100`:
+//!
+//! * `p99` — the monitored percentile (informational: it names the tail
+//!   the threshold is aimed at, and supplies the default target);
+//! * `<5ms` — the latency threshold; a request is **good** when its
+//!   end-to-end latency is strictly below it and it did not OOM. Units:
+//!   `ns`, `us`, `ms`, `s`;
+//! * `@99%` — the compliance target: the SLO is met when at least this
+//!   fraction of requests is good. Defaults to the monitored percentile
+//!   (`p99` → 99%), so `p99<5ms` alone means "99% of requests under
+//!   5 ms";
+//! * `/100` — the evaluation window in requests (tumbling, keyed by
+//!   request id so verdicts are deterministic). Defaults to
+//!   [`DEFAULT_WINDOW`].
+//!
+//! **Error budget**: the allowed bad fraction is `1 - target`. The
+//! verdict reports how much of it the run consumed
+//! (`budget_consumed = bad_fraction / (1 - target)`; above 1.0 the SLO
+//! is violated).
+//!
+//! **Burn rate** (Google SRE style, adapted to request-count windows):
+//! the budget-consumption *speed*, `bad_fraction / (1 - target)`,
+//! evaluated over two window lengths — the spec's short window and a
+//! long window [`LONG_WINDOW_FACTOR`]× wider. A run is **burning** when
+//! some short window burns at ≥ [`FAST_BURN`]× *and* the long window
+//! containing it at ≥ [`SLOW_BURN`]× — the fast signal catches a spike,
+//! the slow one confirms it is not a one-off. `burning` is an early
+//! warning; the hard `violated` verdict is whole-run compliance below
+//! target.
+
+use crate::util::json::Json;
+
+use super::window::MetricEvent;
+
+/// Default evaluation window (requests) when a spec has no `/W` suffix.
+pub const DEFAULT_WINDOW: u64 = 100;
+
+/// The long burn-rate window is this many short windows wide.
+pub const LONG_WINDOW_FACTOR: u64 = 10;
+
+/// Short-window burn-rate alert threshold (×budget speed).
+pub const FAST_BURN: f64 = 10.0;
+
+/// Long-window burn-rate alert threshold (×budget speed).
+pub const SLOW_BURN: f64 = 2.0;
+
+/// One parsed latency SLO.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloSpec {
+    /// The original spec text (label in reports and metric exports).
+    pub raw: String,
+    /// Monitored percentile in (0, 100), e.g. 99.0.
+    pub percentile: f64,
+    /// Latency threshold in seconds; good means strictly below.
+    pub threshold_s: f64,
+    /// Required good fraction in (0, 1).
+    pub target: f64,
+    /// Evaluation window in requests.
+    pub window: u64,
+}
+
+impl SloSpec {
+    /// Parse `pP<T[@G%][/W]`, e.g. `p99<5ms@99.5%/200`. See the module
+    /// docs for semantics.
+    pub fn parse(text: &str) -> Result<SloSpec, String> {
+        let raw = text.trim().to_string();
+        let rest = raw
+            .strip_prefix('p')
+            .ok_or_else(|| format!("SLO '{raw}': must start with 'p' (e.g. p99<5ms)"))?;
+        let (pct_str, rest) = rest
+            .split_once('<')
+            .ok_or_else(|| format!("SLO '{raw}': missing '<threshold'"))?;
+        let percentile: f64 = pct_str
+            .parse()
+            .map_err(|_| format!("SLO '{raw}': bad percentile '{pct_str}'"))?;
+        if !(0.0 < percentile && percentile < 100.0) {
+            return Err(format!("SLO '{raw}': percentile must be in (0,100)"));
+        }
+        let (thresh_str, rest) = match rest.split_once('@') {
+            Some((t, tail)) => (t, Some(tail)),
+            None => (rest, None),
+        };
+        // the window suffix may follow the threshold or the target
+        let (thresh_str, window_after_thresh) = split_window(thresh_str)?;
+        let threshold_s = parse_duration_s(thresh_str)
+            .map_err(|e| format!("SLO '{raw}': {e}"))?;
+        let (target, window) = match rest {
+            None => (percentile / 100.0, window_after_thresh),
+            Some(tail) => {
+                let (target_str, window_after_target) = split_window(tail)?;
+                let target_str = target_str.strip_suffix('%').ok_or_else(|| {
+                    format!("SLO '{raw}': target must end in '%' (e.g. @99%)")
+                })?;
+                let pct: f64 = target_str
+                    .parse()
+                    .map_err(|_| format!("SLO '{raw}': bad target '{target_str}'"))?;
+                if !(0.0 < pct && pct < 100.0) {
+                    return Err(format!("SLO '{raw}': target must be in (0,100)%"));
+                }
+                (pct / 100.0, window_after_target.or(window_after_thresh))
+            }
+        };
+        Ok(SloSpec {
+            raw,
+            percentile,
+            threshold_s,
+            target,
+            window: window.unwrap_or(DEFAULT_WINDOW),
+        })
+    }
+
+    /// Parse a `;`-separated list of specs (the CLI `--slo` form).
+    pub fn parse_list(text: &str) -> Result<Vec<SloSpec>, String> {
+        text.split(';')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(SloSpec::parse)
+            .collect()
+    }
+
+    /// Is one request within this SLO?
+    pub fn is_good(&self, ev: &MetricEvent) -> bool {
+        !ev.oom && ev.latency_s < self.threshold_s
+    }
+}
+
+fn split_window(s: &str) -> Result<(&str, Option<u64>), String> {
+    match s.split_once('/') {
+        None => Ok((s, None)),
+        Some((head, w)) => {
+            let window: u64 =
+                w.parse().map_err(|_| format!("bad window '/{w}' (want /requests)"))?;
+            if window == 0 {
+                return Err("window must be >= 1".to_string());
+            }
+            Ok((head, Some(window)))
+        }
+    }
+}
+
+/// Parse `5ms` / `250us` / `1.5s` / `800ns` to seconds.
+pub fn parse_duration_s(s: &str) -> Result<f64, String> {
+    let s = s.trim();
+    let (num, scale) = if let Some(n) = s.strip_suffix("ns") {
+        (n, 1e-9)
+    } else if let Some(n) = s.strip_suffix("us") {
+        (n, 1e-6)
+    } else if let Some(n) = s.strip_suffix("ms") {
+        (n, 1e-3)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1.0)
+    } else {
+        return Err(format!("duration '{s}' needs a unit (ns/us/ms/s)"));
+    };
+    let v: f64 = num.trim().parse().map_err(|_| format!("bad duration '{s}'"))?;
+    if v <= 0.0 {
+        return Err(format!("duration '{s}' must be positive"));
+    }
+    Ok(v * scale)
+}
+
+/// Burn rate of one window: `[start, end)`, bad/total, and the budget
+/// consumption speed.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowBurn {
+    pub start: u64,
+    pub end: u64,
+    pub total: u64,
+    pub bad: u64,
+    /// `bad_fraction / (1 - target)` — 1.0 burns the budget exactly at
+    /// the sustainable rate.
+    pub burn: f64,
+}
+
+/// Machine-readable SLO evaluation result.
+#[derive(Clone, Debug)]
+pub struct SloVerdict {
+    pub spec: SloSpec,
+    pub total: u64,
+    pub good: u64,
+    pub bad: u64,
+    /// Good fraction over the whole run (1.0 on an empty run).
+    pub compliance: f64,
+    /// Allowed bad fraction, `1 - target`.
+    pub budget: f64,
+    /// `bad_fraction / budget`; > 1.0 means the budget is overspent.
+    pub budget_consumed: f64,
+    /// Worst short-window burn rate (window of `spec.window` requests).
+    pub worst_short: Option<WindowBurn>,
+    /// Worst long-window burn rate ([`LONG_WINDOW_FACTOR`]× wider).
+    pub worst_long: Option<WindowBurn>,
+    /// Short windows whose own compliance missed the target.
+    pub windows_violated: usize,
+    pub windows_total: usize,
+    /// Fast-and-slow burn alert (see module docs) — early warning.
+    pub burning: bool,
+    /// Whole-run compliance below target — the hard gate.
+    pub violated: bool,
+}
+
+impl SloVerdict {
+    /// One human-readable verdict line for CLI output.
+    pub fn line(&self) -> String {
+        let state = if self.violated {
+            "VIOLATED"
+        } else if self.burning {
+            "ok (burning)"
+        } else {
+            "ok"
+        };
+        let worst = match &self.worst_short {
+            Some(w) => format!(
+                ", worst window [{}, {}) burned {:.2}x",
+                w.start, w.end, w.burn
+            ),
+            None => String::new(),
+        };
+        format!(
+            "SLO {}: {state} — compliance {:.3}% (target {:.3}%), error budget {:.0}% consumed{worst}",
+            self.spec.raw,
+            self.compliance * 100.0,
+            self.spec.target * 100.0,
+            self.budget_consumed * 100.0,
+        )
+    }
+
+    /// JSON form for the metrics snapshot (`ipumm slo-check --snapshot`
+    /// reads `spec` and `violated` back out of this).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("spec", self.spec.raw.as_str().into());
+        o.set("percentile", self.spec.percentile.into());
+        o.set("threshold_s", self.spec.threshold_s.into());
+        o.set("target", self.spec.target.into());
+        o.set("window", self.spec.window.into());
+        o.set("total", self.total.into());
+        o.set("good", self.good.into());
+        o.set("bad", self.bad.into());
+        o.set("compliance", self.compliance.into());
+        o.set("budget", self.budget.into());
+        o.set("budget_consumed", self.budget_consumed.into());
+        o.set("windows_violated", self.windows_violated.into());
+        o.set("windows_total", self.windows_total.into());
+        if let Some(w) = &self.worst_short {
+            let mut b = Json::obj();
+            b.set("start", w.start.into());
+            b.set("end", w.end.into());
+            b.set("burn", w.burn.into());
+            o.set("worst_short", b);
+        }
+        if let Some(w) = &self.worst_long {
+            let mut b = Json::obj();
+            b.set("start", w.start.into());
+            b.set("end", w.end.into());
+            b.set("burn", w.burn.into());
+            o.set("worst_long", b);
+        }
+        o.set("burning", self.burning.into());
+        o.set("violated", self.violated.into());
+        o
+    }
+}
+
+fn window_burns(spec: &SloSpec, events: &[MetricEvent], width: u64) -> Vec<WindowBurn> {
+    let budget = (1.0 - spec.target).max(f64::EPSILON);
+    let mut per: std::collections::BTreeMap<u64, (u64, u64)> = std::collections::BTreeMap::new();
+    for ev in events {
+        let start = ev.pos / width * width;
+        let slot = per.entry(start).or_insert((0, 0));
+        slot.0 += 1;
+        slot.1 += !spec.is_good(ev) as u64;
+    }
+    per.into_iter()
+        .map(|(start, (total, bad))| WindowBurn {
+            start,
+            end: start + width,
+            total,
+            bad,
+            burn: (bad as f64 / total as f64) / budget,
+        })
+        .collect()
+}
+
+/// Evaluate one SLO over an event stream (positions are request ids).
+pub fn evaluate(spec: &SloSpec, events: &[MetricEvent]) -> SloVerdict {
+    let total = events.len() as u64;
+    let good = events.iter().filter(|e| spec.is_good(e)).count() as u64;
+    let bad = total - good;
+    let compliance = if total == 0 { 1.0 } else { good as f64 / total as f64 };
+    let budget = 1.0 - spec.target;
+    let budget_consumed = if total == 0 {
+        0.0
+    } else {
+        (bad as f64 / total as f64) / budget.max(f64::EPSILON)
+    };
+
+    let shorts = window_burns(spec, events, spec.window);
+    let longs = window_burns(spec, events, spec.window * LONG_WINDOW_FACTOR);
+    let worst = |burns: &[WindowBurn]| {
+        burns
+            .iter()
+            .copied()
+            .max_by(|a, b| a.burn.partial_cmp(&b.burn).unwrap())
+    };
+    let worst_short = worst(&shorts);
+    let worst_long = worst(&longs);
+    // fast alert in some short window, confirmed by the long window
+    // containing it
+    let burning = shorts.iter().any(|s| {
+        s.burn >= FAST_BURN
+            && longs
+                .iter()
+                .find(|l| l.start <= s.start && s.start < l.end)
+                .is_some_and(|l| l.burn >= SLOW_BURN)
+    });
+    let windows_violated = shorts
+        .iter()
+        .filter(|w| ((w.total - w.bad) as f64 / w.total as f64) < spec.target)
+        .count();
+
+    SloVerdict {
+        spec: spec.clone(),
+        total,
+        good,
+        bad,
+        compliance,
+        budget,
+        budget_consumed,
+        worst_short,
+        worst_long,
+        windows_violated,
+        windows_total: shorts.len(),
+        burning,
+        violated: compliance < spec.target,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(pos: u64, latency_s: f64) -> MetricEvent {
+        MetricEvent {
+            pos,
+            class: "c".to_string(),
+            latency_s,
+            cache_lookup: true,
+            cache_hit: true,
+            queue_depth: 0,
+            oom: false,
+        }
+    }
+
+    #[test]
+    fn parses_full_and_minimal_specs() {
+        let s = SloSpec::parse("p99<5ms@99.5%/200").unwrap();
+        assert_eq!(s.percentile, 99.0);
+        assert!((s.threshold_s - 5e-3).abs() < 1e-15);
+        assert!((s.target - 0.995).abs() < 1e-12);
+        assert_eq!(s.window, 200);
+
+        // target defaults to the monitored percentile, window to 100
+        let s = SloSpec::parse("p95<250us").unwrap();
+        assert!((s.threshold_s - 250e-6).abs() < 1e-18);
+        assert!((s.target - 0.95).abs() < 1e-12);
+        assert_eq!(s.window, DEFAULT_WINDOW);
+
+        // window may follow the threshold when no target is given
+        let s = SloSpec::parse("p50<1s/50").unwrap();
+        assert_eq!(s.window, 50);
+        assert_eq!(s.threshold_s, 1.0);
+
+        let list = SloSpec::parse_list("p99<5ms; p50<1ms@90%").unwrap();
+        assert_eq!(list.len(), 2);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "99<5ms",      // no p
+            "p99",         // no threshold
+            "p99<5",       // no unit
+            "p99<5ms@99",  // no %
+            "p0<5ms",      // percentile out of range
+            "p99<5ms/0",   // zero window
+            "p99<-1ms",    // negative duration
+            "p101<5ms",    // >100
+        ] {
+            assert!(SloSpec::parse(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn duration_units() {
+        assert!((parse_duration_s("800ns").unwrap() - 8e-7).abs() < 1e-18);
+        assert!((parse_duration_s("250us").unwrap() - 2.5e-4).abs() < 1e-15);
+        assert!((parse_duration_s("5ms").unwrap() - 5e-3).abs() < 1e-12);
+        assert!((parse_duration_s("1.5s").unwrap() - 1.5).abs() < 1e-12);
+        assert!(parse_duration_s("5").is_err());
+    }
+
+    #[test]
+    fn compliant_run_keeps_its_budget() {
+        let spec = SloSpec::parse("p99<5ms@99%/10").unwrap();
+        let events: Vec<MetricEvent> = (0..100).map(|i| ev(i, 1e-3)).collect();
+        let v = evaluate(&spec, &events);
+        assert!(!v.violated);
+        assert!(!v.burning);
+        assert_eq!(v.compliance, 1.0);
+        assert_eq!(v.budget_consumed, 0.0);
+        assert_eq!(v.windows_total, 10);
+        assert_eq!(v.windows_violated, 0);
+    }
+
+    #[test]
+    fn violated_run_overspends_budget() {
+        let spec = SloSpec::parse("p99<5ms@99%/10").unwrap();
+        // 5% of requests breach the threshold: 5x the 1% budget
+        let events: Vec<MetricEvent> =
+            (0..100).map(|i| ev(i, if i % 20 == 0 { 1.0 } else { 1e-3 })).collect();
+        let v = evaluate(&spec, &events);
+        assert!(v.violated);
+        assert!((v.compliance - 0.95).abs() < 1e-12);
+        assert!((v.budget_consumed - 5.0).abs() < 1e-9);
+        assert!(v.windows_violated > 0);
+    }
+
+    #[test]
+    fn oom_requests_always_count_against_the_slo() {
+        let spec = SloSpec::parse("p99<5ms@50%").unwrap();
+        let mut bad = ev(0, 1e-6); // fast, but OOM
+        bad.oom = true;
+        let v = evaluate(&spec, &[bad, ev(1, 1e-6), ev(2, 1e-6)]);
+        assert_eq!(v.bad, 1);
+        assert!(!v.violated, "2/3 good still beats a 50% target");
+    }
+
+    #[test]
+    fn burn_alert_needs_fast_and_slow_windows() {
+        let spec = SloSpec::parse("p99<5ms@99%/10").unwrap();
+        // one saturated window of 10 bad requests in a 200-request run:
+        // short burn 100x (>= FAST), long burn over 100 requests is
+        // 10/100/0.01 = 10x (>= SLOW) -> burning; but overall compliance
+        // 190/200 = 95% < 99% is also violated
+        let events: Vec<MetricEvent> =
+            (0..200).map(|i| ev(i, if (50..60).contains(&i) { 1.0 } else { 1e-3 })).collect();
+        let v = evaluate(&spec, &events);
+        assert!(v.burning);
+        let w = v.worst_short.unwrap();
+        assert_eq!((w.start, w.end), (50, 60));
+        assert!((w.burn - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_is_vacuously_compliant() {
+        let spec = SloSpec::parse("p99<5ms").unwrap();
+        let v = evaluate(&spec, &[]);
+        assert!(!v.violated);
+        assert_eq!(v.compliance, 1.0);
+        assert_eq!(v.windows_total, 0);
+    }
+
+    #[test]
+    fn verdict_json_round_trips() {
+        let spec = SloSpec::parse("p99<5ms@99%/10").unwrap();
+        let events: Vec<MetricEvent> = (0..30).map(|i| ev(i, 1e-3)).collect();
+        let v = evaluate(&spec, &events);
+        let doc = Json::parse(&v.to_json().render()).unwrap();
+        assert_eq!(doc.get("spec").and_then(Json::as_str), Some("p99<5ms@99%/10"));
+        assert_eq!(doc.get("violated").and_then(Json::as_f64), None, "bool, not number");
+        assert!(matches!(doc.get("violated"), Some(Json::Bool(false))));
+        assert_eq!(doc.get("total").and_then(Json::as_f64), Some(30.0));
+    }
+}

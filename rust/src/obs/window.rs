@@ -1,0 +1,331 @@
+//! Tumbling and sliding window aggregation over per-request metric
+//! events.
+//!
+//! The serving layer's whole-run summaries hide everything interesting
+//! about a long trace: a warmup spike, a hot bucket arriving in a
+//! burst, a queue building depth. Windowing answers "what did latency /
+//! hit rate / queue depth look like *during* the run" with fixed memory
+//! per window (each window holds one [`QuantileSketch`] per traffic
+//! class, never raw samples).
+//!
+//! Windows are keyed by an abstract monotone position `pos` — the
+//! request id in the deterministic test path, or a queue timestamp in
+//! nanoseconds when wall-clock windows are wanted. A [`WindowSpec`]
+//! with `stride == width` is tumbling (each event lands in exactly one
+//! window, so recombining all windows reproduces the whole run — the
+//! cross-check property in `tests/prop_invariants.rs`); `stride <
+//! width` is sliding (overlapping windows, each event counted in
+//! `width / stride` of them).
+//!
+//! Events aggregate per `(window, class)` where `class` is an opaque
+//! label — the serving layer uses the `(bucket, sparsity)` label, so
+//! dense and sparse traffic of one bucket stay separate rows exactly as
+//! in [`crate::serve::telemetry::BucketStats`].
+
+use std::collections::BTreeMap;
+
+use super::sketch::QuantileSketch;
+
+/// Window geometry over event positions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowSpec {
+    /// Window width in positions (requests or nanoseconds).
+    pub width: u64,
+    /// Distance between consecutive window starts; `== width` tumbles.
+    pub stride: u64,
+}
+
+impl WindowSpec {
+    /// Non-overlapping windows: `[0,w), [w,2w), ...`
+    pub fn tumbling(width: u64) -> WindowSpec {
+        assert!(width >= 1, "window width must be >= 1");
+        WindowSpec { width, stride: width }
+    }
+
+    /// Overlapping windows starting every `stride` positions.
+    pub fn sliding(width: u64, stride: u64) -> WindowSpec {
+        assert!(width >= 1, "window width must be >= 1");
+        assert!(
+            stride >= 1 && stride <= width,
+            "stride must be in [1, width], got {stride} for width {width}"
+        );
+        WindowSpec { width, stride }
+    }
+
+    pub fn is_tumbling(&self) -> bool {
+        self.stride == self.width
+    }
+
+    /// Start positions of every window containing `pos` (ascending).
+    pub fn windows_of(&self, pos: u64) -> Vec<u64> {
+        let lo = pos.saturating_sub(self.width - 1);
+        // first aligned start >= lo
+        let first = lo.div_ceil(self.stride) * self.stride;
+        let mut starts = Vec::new();
+        let mut w = first;
+        while w <= pos {
+            starts.push(w);
+            w += self.stride;
+        }
+        starts
+    }
+}
+
+/// One per-request observation, the unit the window layer aggregates.
+/// Built from [`crate::serve::telemetry::RequestRecord`]s by
+/// `ServeReport::events`, but deliberately serve-agnostic so obs stays
+/// a lower layer.
+#[derive(Clone, Debug)]
+pub struct MetricEvent {
+    /// Monotone window position: request id or queue timestamp (ns).
+    pub pos: u64,
+    /// Traffic-class label, e.g. `1024x512x256` or
+    /// `1024x1024x1024 random/b8/d0.50`.
+    pub class: String,
+    /// End-to-end latency in seconds.
+    pub latency_s: f64,
+    /// Whether the dispatch consulted the plan cache at all.
+    pub cache_lookup: bool,
+    /// Whether that lookup hit (meaningful only when `cache_lookup`).
+    pub cache_hit: bool,
+    /// Queue depth left behind when this request's batch was drained.
+    pub queue_depth: u64,
+    /// Request could not be served on any backend.
+    pub oom: bool,
+}
+
+/// Aggregates for one traffic class within one window.
+#[derive(Clone, Debug)]
+pub struct ClassWindow {
+    pub class: String,
+    pub requests: u64,
+    /// Requests whose dispatch consulted the cache.
+    pub lookups: u64,
+    /// ... of which hit.
+    pub hits: u64,
+    pub oom: u64,
+    queue_depth_sum: u64,
+    /// Latency distribution — a sketch, never raw samples.
+    pub latency: QuantileSketch,
+}
+
+impl ClassWindow {
+    fn new(class: &str) -> ClassWindow {
+        ClassWindow {
+            class: class.to_string(),
+            requests: 0,
+            lookups: 0,
+            hits: 0,
+            oom: 0,
+            queue_depth_sum: 0,
+            latency: QuantileSketch::new(),
+        }
+    }
+
+    fn push(&mut self, ev: &MetricEvent) {
+        self.requests += 1;
+        if ev.cache_lookup {
+            self.lookups += 1;
+            self.hits += ev.cache_hit as u64;
+        }
+        self.oom += ev.oom as u64;
+        self.queue_depth_sum += ev.queue_depth;
+        self.latency.observe(ev.latency_s);
+    }
+
+    /// Cache hit fraction over requests that looked up (0 if none did).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 { 0.0 } else { self.hits as f64 / self.lookups as f64 }
+    }
+
+    /// Mean drain-time queue depth over the window's requests.
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum as f64 / self.requests as f64
+        }
+    }
+
+    /// Request rate per position unit (requests per request-slot, or
+    /// per nanosecond for timestamp-keyed windows).
+    pub fn rate(&self, spec: WindowSpec) -> f64 {
+        self.requests as f64 / spec.width as f64
+    }
+}
+
+/// One materialized window: `[start, end)` over positions, one
+/// [`ClassWindow`] per traffic class (sorted by class label).
+#[derive(Clone, Debug)]
+pub struct WindowStats {
+    pub start: u64,
+    /// Exclusive end: `start + width`.
+    pub end: u64,
+    pub classes: Vec<ClassWindow>,
+}
+
+impl WindowStats {
+    pub fn total_requests(&self) -> u64 {
+        self.classes.iter().map(|c| c.requests).sum()
+    }
+
+    pub fn class(&self, name: &str) -> Option<&ClassWindow> {
+        self.classes.iter().find(|c| c.class == name)
+    }
+
+    /// All classes' latency sketches merged into one.
+    pub fn merged_latency(&self) -> QuantileSketch {
+        let mut out = QuantileSketch::new();
+        for c in &self.classes {
+            out.merge(&c.latency);
+        }
+        out
+    }
+}
+
+/// Streaming window aggregator: push events in any order, then
+/// [`Self::finish`] into sorted [`WindowStats`].
+#[derive(Debug)]
+pub struct WindowAggregator {
+    spec: WindowSpec,
+    windows: BTreeMap<u64, BTreeMap<String, ClassWindow>>,
+}
+
+impl WindowAggregator {
+    pub fn new(spec: WindowSpec) -> WindowAggregator {
+        WindowAggregator { spec, windows: BTreeMap::new() }
+    }
+
+    pub fn spec(&self) -> WindowSpec {
+        self.spec
+    }
+
+    pub fn push(&mut self, ev: &MetricEvent) {
+        for start in self.spec.windows_of(ev.pos) {
+            self.windows
+                .entry(start)
+                .or_default()
+                .entry(ev.class.clone())
+                .or_insert_with(|| ClassWindow::new(&ev.class))
+                .push(ev);
+        }
+    }
+
+    /// Materialize: windows ascending by start, classes ascending by
+    /// label within each window — fully deterministic given the events.
+    pub fn finish(self) -> Vec<WindowStats> {
+        let width = self.spec.width;
+        self.windows
+            .into_iter()
+            .map(|(start, classes)| WindowStats {
+                start,
+                end: start + width,
+                classes: classes.into_values().collect(),
+            })
+            .collect()
+    }
+}
+
+/// Aggregate a whole event stream in one call.
+pub fn windowed(events: &[MetricEvent], spec: WindowSpec) -> Vec<WindowStats> {
+    let mut agg = WindowAggregator::new(spec);
+    for ev in events {
+        agg.push(ev);
+    }
+    agg.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(pos: u64, class: &str, latency_s: f64, hit: bool) -> MetricEvent {
+        MetricEvent {
+            pos,
+            class: class.to_string(),
+            latency_s,
+            cache_lookup: true,
+            cache_hit: hit,
+            queue_depth: pos % 3,
+            oom: false,
+        }
+    }
+
+    #[test]
+    fn tumbling_assigns_each_event_once() {
+        let spec = WindowSpec::tumbling(10);
+        assert_eq!(spec.windows_of(0), vec![0]);
+        assert_eq!(spec.windows_of(9), vec![0]);
+        assert_eq!(spec.windows_of(10), vec![10]);
+        assert_eq!(spec.windows_of(25), vec![20]);
+    }
+
+    #[test]
+    fn sliding_assigns_overlapping_windows() {
+        let spec = WindowSpec::sliding(10, 5);
+        // pos 12 is inside [5,15) and [10,20)
+        assert_eq!(spec.windows_of(12), vec![5, 10]);
+        // pos 3 only fits the first aligned window [0,10)
+        assert_eq!(spec.windows_of(3), vec![0]);
+    }
+
+    #[test]
+    fn aggregates_per_class_within_windows() {
+        let events = vec![
+            ev(0, "a", 1e-3, true),
+            ev(1, "b", 2e-3, false),
+            ev(2, "a", 3e-3, true),
+            ev(10, "a", 4e-3, true),
+        ];
+        let wins = windowed(&events, WindowSpec::tumbling(10));
+        assert_eq!(wins.len(), 2);
+        assert_eq!((wins[0].start, wins[0].end), (0, 10));
+        assert_eq!(wins[0].total_requests(), 3);
+        let a = wins[0].class("a").unwrap();
+        assert_eq!(a.requests, 2);
+        assert_eq!(a.hit_rate(), 1.0);
+        assert_eq!(a.latency.count(), 2);
+        let b = wins[0].class("b").unwrap();
+        assert_eq!(b.hit_rate(), 0.0);
+        assert_eq!(wins[1].total_requests(), 1);
+    }
+
+    #[test]
+    fn tumbling_windows_recombine_to_the_whole_run() {
+        let events: Vec<MetricEvent> =
+            (0..97).map(|i| ev(i, "a", 1e-4 * (i + 1) as f64, i % 2 == 0)).collect();
+        let mut whole = QuantileSketch::new();
+        for e in &events {
+            whole.observe(e.latency_s);
+        }
+        let wins = windowed(&events, WindowSpec::tumbling(13));
+        let mut merged = QuantileSketch::new();
+        let mut total = 0;
+        for w in &wins {
+            merged.merge(&w.merged_latency());
+            total += w.total_requests();
+        }
+        assert_eq!(total, 97, "tumbling windows partition the stream");
+        assert_eq!(merged, whole, "recombined sketch is bit-identical");
+    }
+
+    #[test]
+    fn sliding_windows_count_events_multiple_times() {
+        let events: Vec<MetricEvent> = (0..20).map(|i| ev(i, "a", 1e-3, true)).collect();
+        let wins = windowed(&events, WindowSpec::sliding(10, 5));
+        let total: u64 = wins.iter().map(|w| w.total_requests()).sum();
+        // each event lands in width/stride = 2 windows, except the first
+        // stride's worth which only the [0,10) window covers
+        assert!(total > 20, "overlap must multiply coverage, got {total}");
+    }
+
+    #[test]
+    fn mean_queue_depth_and_rate() {
+        let events = vec![ev(0, "a", 1e-3, true), ev(1, "a", 1e-3, true)];
+        let wins = windowed(&events, WindowSpec::tumbling(4));
+        let a = wins[0].class("a").unwrap();
+        // depths 0 and 1 -> mean 0.5; 2 requests over width 4 -> rate 0.5
+        assert!((a.mean_queue_depth() - 0.5).abs() < 1e-12);
+        assert!((a.rate(WindowSpec::tumbling(4)) - 0.5).abs() < 1e-12);
+    }
+}

@@ -59,6 +59,9 @@ pub struct Batch {
     /// Shared sparsity of every rider (`None` = dense batch).
     pub sparsity: Option<SparsitySpec>,
     pub requests: Vec<MmRequest>,
+    /// Queue depth left behind when this batch was drained — the
+    /// windowed queue-depth signal in serve telemetry.
+    pub queued_behind: usize,
 }
 
 impl Batch {
@@ -237,7 +240,8 @@ impl RequestQueue {
                 if requests.len() > 1 {
                     crate::obs::count("queue.coalesced_riders", (requests.len() - 1) as u64);
                 }
-                return Some(Batch { bucket, sparsity, requests });
+                let queued_behind = inner.queue.len();
+                return Some(Batch { bucket, sparsity, requests, queued_behind });
             }
             if inner.closed {
                 return None;
@@ -282,6 +286,7 @@ mod tests {
             b1.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![0, 2, 3]
         );
+        assert_eq!(b1.queued_behind, 1, "the 1024 request stays queued");
         let b2 = q.next_batch(8).unwrap();
         assert_eq!(b2.bucket, MmShape::square(1024));
         assert_eq!(b2.len(), 1);

@@ -23,6 +23,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::arch::{GpuArch, IpuArch};
+use crate::obs::sketch::QuantileSketch;
 use crate::coordinator::device::{run_shape, Backend, RunOutcome};
 use crate::coordinator::metrics::{MetricsRecord, MetricsTable};
 use crate::coordinator::runner::default_workers;
@@ -175,6 +176,11 @@ impl MmService {
         // deterministic regardless of worker scheduling (run_jobs makes
         // the same guarantee via submission order)
         let batch_records: Mutex<Vec<(u64, MetricsRecord)>> = Mutex::new(Vec::new());
+        // each worker folds latencies into a local sketch (no shared
+        // lock on the per-sample path); merged in worker order below so
+        // the report sketch is deterministic for a given rider->worker
+        // assignment
+        let worker_sketches: Mutex<Vec<(usize, QuantileSketch)>> = Mutex::new(Vec::new());
         let cache_baseline = self.cache.stats();
         let shard_baseline = self.cache.shard_stats();
 
@@ -195,11 +201,18 @@ impl MmService {
                 let queue = &queue;
                 let records = &records;
                 let batch_records = &batch_records;
+                let worker_sketches = &worker_sketches;
                 scope.spawn(move || {
                     let _guard = CloseOnDrop(queue);
+                    let mut lat = QuantileSketch::new();
+                    let mut qwait = QuantileSketch::new();
                     while let Some(batch) = queue.next_batch(self.config.max_batch) {
-                        self.process_batch(w, batch, records, batch_records);
+                        self.process_batch(w, batch, records, batch_records, &mut lat, &mut qwait);
                     }
+                    // one global-recorder merge per worker, not per sample
+                    crate::obs::merge_sketch("serve.latency_seconds", &lat);
+                    crate::obs::merge_sketch("serve.queue_seconds", &qwait);
+                    worker_sketches.lock().expect("sketches poisoned").push((w, lat));
                 });
             }
             for (i, &(shape, sparsity)) in reqs.iter().enumerate() {
@@ -235,8 +248,15 @@ impl MmService {
         for (_, rec) in batch_recs {
             metrics.push(rec);
         }
+        let mut shards = worker_sketches.into_inner().expect("sketches poisoned");
+        shards.sort_by_key(|(w, _)| *w);
+        let mut latency_sketch = QuantileSketch::new();
+        for (_, s) in &shards {
+            latency_sketch.merge(s);
+        }
         ServeReport {
             batches: metrics.len(),
+            latency_sketch,
             // per-run delta: a warm service's lifetime counters would
             // otherwise masquerade as this trace's behavior
             cache: self.cache.stats().since(&cache_baseline),
@@ -262,6 +282,8 @@ impl MmService {
         batch: Batch,
         records: &Mutex<Vec<RequestRecord>>,
         batch_records: &Mutex<Vec<(u64, MetricsRecord)>>,
+        lat: &mut QuantileSketch,
+        qwait: &mut QuantileSketch,
     ) {
         let t_batch = crate::obs::now();
         let drained_at = Instant::now();
@@ -292,7 +314,9 @@ impl MmService {
                 let queue_seconds = drained_at
                     .saturating_duration_since(req.submitted)
                     .as_secs_f64();
-                crate::obs::observe("serve.queue_seconds", queue_seconds);
+                let amortized_plan = plan_seconds / n as f64;
+                qwait.observe(queue_seconds);
+                lat.observe(queue_seconds + amortized_plan + device_seconds);
                 recs.push(RequestRecord {
                     id: req.id,
                     shape: req.shape,
@@ -303,7 +327,8 @@ impl MmService {
                     batch_size: n,
                     cache_hit,
                     queue_seconds,
-                    plan_seconds: plan_seconds / n as f64,
+                    queue_depth: batch.queued_behind,
+                    plan_seconds: amortized_plan,
                     device_seconds,
                     real_seconds,
                     oom,
@@ -624,6 +649,26 @@ mod tests {
                 RunOutcome::Ok { seconds: ds, .. },
             ) => assert!(ss < ds, "sparse {ss}s should beat dense {ds}s"),
             _ => panic!("both dispatches must succeed"),
+        }
+    }
+
+    #[test]
+    fn report_latency_sketch_covers_every_request() {
+        let svc = service(DispatchPolicy::IpuWithGpuFallback);
+        let report = svc.serve_trace(&mixed_trace());
+        assert_eq!(report.latency_sketch.count(), report.requests.len() as u64);
+        // the merged worker sketches hold the same value multiset as the
+        // request records, so every bucket count — and hence every
+        // quantile — matches a directly-built sketch (sums can differ in
+        // the last bits across merge orders, so compare quantiles)
+        let mut direct = QuantileSketch::new();
+        for r in &report.requests {
+            direct.observe(r.latency_seconds());
+        }
+        assert_eq!(report.latency_sketch.min(), direct.min());
+        assert_eq!(report.latency_sketch.max(), direct.max());
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(report.latency_sketch.quantile(q), direct.quantile(q), "q={q}");
         }
     }
 

@@ -8,7 +8,13 @@
 //! queue wait, amortized planning time, cache hit, batch size — and
 //! aggregate into per-bucket latency summaries.
 
+use std::collections::BTreeMap;
+
 use crate::coordinator::metrics::MetricsTable;
+use crate::obs::export::MetricsSnapshot;
+use crate::obs::sketch::QuantileSketch;
+use crate::obs::slo::SloSpec;
+use crate::obs::window::{windowed, MetricEvent, WindowSpec, WindowStats};
 use crate::planner::partition::MmShape;
 use crate::serve::bucket::BucketLadder;
 use crate::serve::cache::CacheStats;
@@ -41,6 +47,9 @@ pub struct RequestRecord {
     pub cache_hit: Option<bool>,
     /// Wall seconds spent queued before a worker drained the batch.
     pub queue_seconds: f64,
+    /// Queue depth left behind when this request's batch was drained
+    /// ([`crate::serve::queue::Batch::queued_behind`]).
+    pub queue_depth: usize,
     /// Planner wall seconds charged to this request (cold search time
     /// divided over the batch; 0 on a cache hit).
     pub plan_seconds: f64,
@@ -103,6 +112,10 @@ pub struct ServeReport {
     pub batches: usize,
     /// Wall-clock seconds for the whole run (producer + workers).
     pub wall_seconds: f64,
+    /// End-to-end latency distribution as a fixed-memory sketch: each
+    /// worker folds its requests into a local sketch and the service
+    /// merges them (deterministically, in worker order) at join time.
+    pub latency_sketch: QuantileSketch,
 }
 
 impl ServeReport {
@@ -243,6 +256,69 @@ impl ServeReport {
         };
         format!("{line1}\n{line2}\n{line3}")
     }
+
+    /// The `(bucket, sparsity)` traffic-class label the tables use —
+    /// also the window/export class key, so timeline rows line up with
+    /// [`Self::bucket_table`] rows.
+    fn class_label(bucket: MmShape, sparsity: &Option<SparsitySpec>) -> String {
+        match sparsity {
+            Some(spec) => format!("{} {}", BucketLadder::label(bucket), spec.label()),
+            None => BucketLadder::label(bucket),
+        }
+    }
+
+    /// Per-request metric events for the obs window/SLO/export layers,
+    /// positioned by request id so windowing is deterministic across
+    /// worker counts and machines.
+    pub fn events(&self) -> Vec<MetricEvent> {
+        self.requests
+            .iter()
+            .map(|r| MetricEvent {
+                pos: r.id,
+                class: Self::class_label(r.bucket, &r.sparsity),
+                latency_s: r.latency_seconds(),
+                cache_lookup: r.cache_hit.is_some(),
+                cache_hit: r.cache_hit == Some(true),
+                queue_depth: r.queue_depth as u64,
+                oom: r.oom,
+            })
+            .collect()
+    }
+
+    /// Tumbling-window view of the run: per-class rps / hit rate /
+    /// queue depth / latency sketch for each `width`-request window.
+    pub fn timeline(&self, width: u64) -> Vec<WindowStats> {
+        windowed(&self.events(), WindowSpec::tumbling(width))
+    }
+
+    /// Fold the whole run into an exportable [`MetricsSnapshot`]:
+    /// counters, gauges, per-class aggregates, a `window`-request
+    /// tumbling timeline, and one verdict per SLO spec.
+    pub fn metrics_snapshot(&self, window: u64, slos: &[SloSpec]) -> MetricsSnapshot {
+        let events = self.events();
+        let mut counters = BTreeMap::new();
+        counters.insert("ipumm_serve_requests_total".to_string(), self.requests.len() as u64);
+        counters.insert("ipumm_serve_batches_total".to_string(), self.batches as u64);
+        counters.insert("ipumm_serve_cache_hits_total".to_string(), self.cache.hits);
+        counters.insert("ipumm_serve_cache_misses_total".to_string(), self.cache.misses);
+        counters.insert("ipumm_serve_cache_evictions_total".to_string(), self.cache.evictions);
+        counters.insert("ipumm_serve_queue_rejected_total".to_string(), self.queue.rejected);
+        counters.insert("ipumm_serve_queue_throttled_total".to_string(), self.queue.throttled);
+        counters.insert(
+            "ipumm_serve_oom_total".to_string(),
+            self.requests.iter().filter(|r| r.oom).count() as u64,
+        );
+        let mut gauges = BTreeMap::new();
+        gauges.insert("ipumm_serve_wall_seconds".to_string(), self.wall_seconds);
+        gauges.insert("ipumm_serve_throughput_rps".to_string(), self.throughput_rps());
+        gauges.insert("ipumm_serve_cache_hit_rate".to_string(), self.hit_rate());
+        gauges.insert(
+            "ipumm_serve_cold_plan_seconds".to_string(),
+            self.cache.cold_plan_seconds,
+        );
+        gauges.insert("ipumm_serve_queue_max_depth".to_string(), self.queue.max_depth as f64);
+        MetricsSnapshot::build(&events, counters, gauges, WindowSpec::tumbling(window), slos)
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +336,7 @@ mod tests {
             batch_size: batch,
             cache_hit: Some(hit),
             queue_seconds: 1e-4,
+            queue_depth: 1,
             plan_seconds: if hit { 0.0 } else { 1e-2 },
             device_seconds: 1e-3,
             real_seconds: None,
@@ -273,6 +350,10 @@ mod tests {
             .map(|r| 1.0 / r.batch_size as f64)
             .sum::<f64>()
             .round() as usize;
+        let mut latency_sketch = QuantileSketch::new();
+        for r in &requests {
+            latency_sketch.observe(r.latency_seconds());
+        }
         ServeReport {
             requests,
             metrics: MetricsTable::default(),
@@ -281,6 +362,7 @@ mod tests {
             queue: QueueStats::default(),
             batches,
             wall_seconds: 0.5,
+            latency_sketch,
         }
     }
 
@@ -411,5 +493,54 @@ mod tests {
         assert_eq!(r.hit_rate(), 0.0);
         assert!(r.summary().contains("no requests"));
         assert!(r.bucket_stats().is_empty());
+        assert!(r.events().is_empty());
+        assert!(r.timeline(10).is_empty());
+    }
+
+    #[test]
+    fn events_carry_class_labels_matching_the_bucket_table() {
+        use crate::sparse::pattern::PatternKind;
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.5, 1);
+        let mut sparse = rec(1, 256, true, 1);
+        sparse.sparsity = Some(spec);
+        let r = report(vec![rec(0, 256, false, 1), sparse]);
+        let events = r.events();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].class, "256x256x256");
+        assert_eq!(events[1].class, format!("256x256x256 {}", spec.label()));
+        assert_eq!(events[0].pos, 0);
+        assert!(events[0].cache_lookup && !events[0].cache_hit);
+        assert!(events[1].cache_hit);
+        assert_eq!(events[0].queue_depth, 1);
+    }
+
+    #[test]
+    fn timeline_windows_by_request_id() {
+        let recs: Vec<RequestRecord> = (0..25).map(|i| rec(i, 256, true, 1)).collect();
+        let r = report(recs);
+        let tl = r.timeline(10);
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl[0].total_requests(), 10);
+        assert_eq!(tl[2].total_requests(), 5);
+        assert_eq!(tl[2].start, 20);
+    }
+
+    #[test]
+    fn metrics_snapshot_counts_and_gates() {
+        let r = report(vec![rec(0, 256, false, 1), rec(1, 256, true, 1), rec(2, 512, true, 1)]);
+        let loose = crate::obs::slo::SloSpec::parse("p99<60s@99%").unwrap();
+        let tight = crate::obs::slo::SloSpec::parse("p50<1ns@50%").unwrap();
+        let snap = r.metrics_snapshot(10, &[loose, tight]);
+        assert_eq!(snap.counters["ipumm_serve_requests_total"], 3);
+        assert_eq!(snap.counters["ipumm_serve_cache_hits_total"], 3);
+        assert_eq!(snap.classes.len(), 2);
+        assert_eq!(snap.timeline.len(), 1);
+        assert_eq!(snap.slos.len(), 2);
+        assert!(!snap.slos[0].violated, "60s threshold passes");
+        assert!(snap.slos[1].violated, "1ns threshold cannot pass");
+        assert!(snap.any_slo_violated());
+        let text = snap.prometheus_text();
+        assert!(text.contains("ipumm_serve_requests_total 3"));
+        assert!(text.contains("ipumm_serve_latency_seconds{class=\"256x256x256\",quantile=\"0.5\"}"));
     }
 }

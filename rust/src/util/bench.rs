@@ -223,6 +223,31 @@ pub struct RegressionVerdict {
 /// Returns an error only for malformed documents; an empty verdict list
 /// means the file had no baseline pairs.
 pub fn regression_verdicts(doc: &Json, tolerance: f64) -> Result<Vec<RegressionVerdict>, String> {
+    let (group, means) = doc_means(doc)?;
+    let mut out = Vec::new();
+    for (name, baseline_mean_s) in &means {
+        let Some(current) = name.strip_suffix("_baseline") else {
+            continue;
+        };
+        let Some((_, mean_s)) = means.iter().find(|(n, _)| n == current) else {
+            continue; // a baseline row without a current twin is not a gate
+        };
+        let ratio = if *baseline_mean_s > 0.0 { mean_s / baseline_mean_s } else { f64::INFINITY };
+        out.push(RegressionVerdict {
+            group: group.clone(),
+            name: current.to_string(),
+            baseline_mean_s: *baseline_mean_s,
+            mean_s: *mean_s,
+            ratio,
+            regressed: ratio > 1.0 + tolerance,
+        });
+    }
+    Ok(out)
+}
+
+/// Parse one `BENCH_<group>.json` document into `(group, [(name,
+/// mean_s)])` — shared by the in-run and cross-run gates.
+fn doc_means(doc: &Json) -> Result<(String, Vec<(String, f64)>), String> {
     let group = doc
         .get("group")
         .and_then(Json::as_str)
@@ -244,22 +269,82 @@ pub fn regression_verdicts(doc: &Json, tolerance: f64) -> Result<Vec<RegressionV
             .ok_or_else(|| format!("result '{name}' missing 'mean_s'"))?;
         means.push((name.to_string(), mean));
     }
+    Ok((group, means))
+}
+
+/// One `ipumm bench-check --against <dir>` verdict: a benchmark row in
+/// the current run compared to the same row in a previous run's
+/// artifact.
+#[derive(Clone, Debug)]
+pub struct TrendVerdict {
+    pub group: String,
+    pub name: String,
+    /// Previous run's mean (raw seconds).
+    pub prev_s: f64,
+    /// Current run's mean (raw seconds).
+    pub current_s: f64,
+    /// The gated quantity. When both runs carry a `<name>_baseline`
+    /// twin this is the ratio of baseline-normalized means —
+    /// `(cur/cur_base) / (prev/prev_base)` — so absolute machine speed
+    /// cancels and only the benchmark's cost *relative to its frozen
+    /// seed baseline* is compared across runs. Without baseline twins
+    /// it is the raw `cur/prev` ratio.
+    pub drift: f64,
+    /// True when `drift` was baseline-normalized (and therefore
+    /// machine-speed-robust enough to gate on).
+    pub normalized: bool,
+    /// Only normalized rows regress; raw rows are advisory, because two
+    /// CI hosts can legitimately differ by more than any tolerance.
+    pub regressed: bool,
+}
+
+/// The cross-run trend gate: compare the current `BENCH_<group>.json`
+/// against the same group's document from a previous run (restored from
+/// the CI cache by branch). Rows present in both runs produce one
+/// [`TrendVerdict`] each; rows whose runs both carry a positive
+/// `<name>_baseline` twin are baseline-normalized and gate at
+/// `drift > 1 + tolerance`, the rest are advisory (`regressed` stays
+/// false). `_baseline` rows themselves never produce verdicts.
+pub fn trend_verdicts(
+    current: &Json,
+    previous: &Json,
+    tolerance: f64,
+) -> Result<Vec<TrendVerdict>, String> {
+    let (group, cur) = doc_means(current)?;
+    let (prev_group, prev) = doc_means(previous)?;
+    if group != prev_group {
+        return Err(format!(
+            "group mismatch: current '{group}' vs previous '{prev_group}'"
+        ));
+    }
+    let mean_of = |rows: &[(String, f64)], name: &str| -> Option<f64> {
+        rows.iter().find(|(n, _)| n == name).map(|(_, m)| *m)
+    };
     let mut out = Vec::new();
-    for (name, baseline_mean_s) in &means {
-        let Some(current) = name.strip_suffix("_baseline") else {
+    for (name, current_s) in &cur {
+        if name.ends_with("_baseline") {
             continue;
+        }
+        let Some(prev_s) = mean_of(&prev, name) else {
+            continue; // new benchmark this run: nothing to compare
         };
-        let Some((_, mean_s)) = means.iter().find(|(n, _)| n == current) else {
-            continue; // a baseline row without a current twin is not a gate
+        let base = format!("{name}_baseline");
+        let bases = (mean_of(&cur, &base), mean_of(&prev, &base));
+        let (drift, normalized) = match bases {
+            (Some(cb), Some(pb)) if cb > 0.0 && pb > 0.0 && prev_s > 0.0 => {
+                ((current_s / cb) / (prev_s / pb), true)
+            }
+            _ if prev_s > 0.0 => (current_s / prev_s, false),
+            _ => (f64::INFINITY, false),
         };
-        let ratio = if *baseline_mean_s > 0.0 { mean_s / baseline_mean_s } else { f64::INFINITY };
-        out.push(RegressionVerdict {
+        out.push(TrendVerdict {
             group: group.clone(),
-            name: current.to_string(),
-            baseline_mean_s: *baseline_mean_s,
-            mean_s: *mean_s,
-            ratio,
-            regressed: ratio > 1.0 + tolerance,
+            name: name.clone(),
+            prev_s,
+            current_s: *current_s,
+            drift,
+            normalized,
+            regressed: normalized && drift > 1.0 + tolerance,
         });
     }
     Ok(out)
@@ -404,6 +489,52 @@ mod tests {
         assert_eq!(verdicts.len(), 1);
         assert_eq!(verdicts[0].name, "probe");
         assert!(!verdicts[0].regressed, "10x tolerance cannot fail on noise");
+    }
+
+    #[test]
+    fn trend_verdicts_normalize_out_machine_speed() {
+        // previous run on a fast machine, current on a 2x slower one:
+        // every raw mean doubled, but relative to its own baseline the
+        // benchmark is unchanged -> drift 1.0, no regression
+        let prev = bench_doc(&[("search_baseline", 0.010), ("search", 0.005)]);
+        let cur = bench_doc(&[("search_baseline", 0.020), ("search", 0.010)]);
+        let v = trend_verdicts(&cur, &prev, 0.2).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].normalized);
+        assert!((v[0].drift - 1.0).abs() < 1e-12);
+        assert!(!v[0].regressed);
+    }
+
+    #[test]
+    fn trend_verdicts_catch_real_relative_drift() {
+        // same machine speed (baselines equal), benchmark got 60% slower
+        let prev = bench_doc(&[("search_baseline", 0.010), ("search", 0.005)]);
+        let cur = bench_doc(&[("search_baseline", 0.010), ("search", 0.008)]);
+        let v = trend_verdicts(&cur, &prev, 0.2).unwrap();
+        assert!(v[0].normalized);
+        assert!((v[0].drift - 1.6).abs() < 1e-12);
+        assert!(v[0].regressed);
+    }
+
+    #[test]
+    fn trend_verdicts_without_baselines_are_advisory() {
+        let prev = bench_doc(&[("observe_100k", 0.002)]);
+        let cur = bench_doc(&[("observe_100k", 0.040)]); // 20x slower host
+        let v = trend_verdicts(&cur, &prev, 0.2).unwrap();
+        assert_eq!(v.len(), 1);
+        assert!(!v[0].normalized);
+        assert!((v[0].drift - 20.0).abs() < 1e-9);
+        assert!(!v[0].regressed, "raw cross-run ratios must never gate");
+    }
+
+    #[test]
+    fn trend_verdicts_skip_unmatched_rows_and_reject_group_mismatch() {
+        let prev = bench_doc(&[("old_only", 1.0)]);
+        let cur = bench_doc(&[("new_only", 1.0)]);
+        assert!(trend_verdicts(&cur, &prev, 0.2).unwrap().is_empty());
+        let mut other = bench_doc(&[]);
+        other.set("group", "sparse".into());
+        assert!(trend_verdicts(&other, &prev, 0.2).is_err());
     }
 
     #[test]

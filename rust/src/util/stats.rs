@@ -9,9 +9,12 @@ pub struct Summary {
     pub min: f64,
     pub max: f64,
     pub median: f64,
-    pub p95: f64,
     /// Nearest-rank tail percentiles ([`percentile_nearest`]) — exact
-    /// order statistics, well-defined even on tiny samples.
+    /// order statistics, well-defined even on tiny samples. All three
+    /// tails use the same estimator so `p95 <= p99 <= p999` always
+    /// holds (an interpolated p95 could exceed a nearest-rank p99 on
+    /// small samples).
+    pub p95: f64,
     pub p99: f64,
     pub p999: f64,
 }
@@ -35,7 +38,7 @@ impl Summary {
             min: sorted[0],
             max: sorted[n - 1],
             median: percentile_sorted(&sorted, 50.0),
-            p95: percentile_sorted(&sorted, 95.0),
+            p95: percentile_nearest(&sorted, 95.0),
             p99: percentile_nearest(&sorted, 99.0),
             p999: percentile_nearest(&sorted, 99.9),
         }
@@ -118,6 +121,7 @@ mod tests {
         assert_eq!(percentile_nearest(&v, 99.9), 999.0);
         assert_eq!(percentile_nearest(&v, 100.0), 1000.0);
         let s = Summary::of(&v);
+        assert_eq!(s.p95, 950.0);
         assert_eq!(s.p99, 990.0);
         assert_eq!(s.p999, 999.0);
         // tiny samples: always an observed value, never extrapolated
@@ -152,5 +156,15 @@ mod tests {
     fn cv_constant_sample() {
         let s = Summary::of(&[3.0, 3.0, 3.0]);
         assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn tails_are_monotone_on_small_samples() {
+        // p95 <= p99 <= p999 must hold on any sample — guaranteed only
+        // because all three tails use the same (nearest-rank) estimator
+        for samples in [vec![1.0, 10.0], vec![1.0, 2.0, 100.0], vec![5.0; 7]] {
+            let s = Summary::of(&samples);
+            assert!(s.p95 <= s.p99 && s.p99 <= s.p999, "{samples:?}: {s:?}");
+        }
     }
 }

@@ -131,6 +131,159 @@ fn bench_check_gates_regressions() {
 }
 
 #[test]
+fn serve_metrics_out_writes_prometheus_and_json() {
+    let prom_path = std::env::temp_dir().join("ipumm_cli_metrics.prom");
+    let prom_arg = prom_path.to_str().unwrap();
+    let json_path = format!("{prom_arg}.json");
+    let (out, err, ok) = run(&[
+        "serve", "--jobs", "40", "--workers", "2", "--seed", "3",
+        "--metrics-out", prom_arg, "--window", "10", "--slo", "p99<600s@99%",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("SLO p99<600s@99%"), "stdout: {out}");
+    assert!(out.contains("metrics ->"), "stdout: {out}");
+
+    let prom = std::fs::read_to_string(&prom_path).unwrap();
+    assert!(prom.contains("# TYPE ipumm_serve_requests_total counter"));
+    assert!(prom.contains("ipumm_serve_latency_seconds{"), "missing summary family");
+    assert!(prom.contains("quantile=\"0.99\""));
+    assert!(prom.contains("ipumm_slo_compliance"));
+
+    // the snapshot must round-trip through the crate's own JSON parser
+    // and carry the per-window timeline
+    use ipumm::util::json::Json;
+    let text = std::fs::read_to_string(&json_path).unwrap();
+    let doc = Json::parse(&text).expect("snapshot parses");
+    let timeline = doc.get("timeline").and_then(Json::items).expect("timeline array");
+    assert!(!timeline.is_empty(), "no windows in snapshot");
+    let w0 = &timeline[0];
+    let classes = w0.get("classes").and_then(Json::items).expect("classes array");
+    assert!(classes.iter().all(|c| c.get("p50").is_some() && c.get("p99").is_some()));
+    let slos = doc.get("slos").and_then(Json::items).expect("slos array");
+    assert_eq!(slos.len(), 1);
+
+    let _ = std::fs::remove_file(&prom_path);
+    let _ = std::fs::remove_file(&json_path);
+}
+
+#[test]
+fn serve_slo_violation_exits_nonzero_but_still_exports() {
+    let prom_path = std::env::temp_dir().join("ipumm_cli_metrics_violated.prom");
+    let prom_arg = prom_path.to_str().unwrap();
+    let json_path = format!("{prom_arg}.json");
+    // no serve completes in under a nanosecond: guaranteed violation
+    let (out, err, ok) = run(&[
+        "serve", "--jobs", "20", "--seed", "3",
+        "--metrics-out", prom_arg, "--slo", "p50<1ns@50%",
+    ]);
+    assert!(!ok, "an impossible SLO must fail the serve run");
+    assert!(err.contains("SLO violated"), "stderr: {err}");
+    assert!(out.contains("VIOLATED") || out.contains("violated"), "stdout: {out}");
+
+    // the export happened before the gate tripped, so the snapshot can
+    // feed `slo-check --snapshot` on its own
+    let (out2, err2, ok2) = run(&["slo-check", "--snapshot", &json_path]);
+    assert!(!ok2, "violated snapshot must fail slo-check");
+    assert!(out2.contains("FAIL"), "stdout: {out2}");
+    assert!(err2.contains("violated"), "stderr: {err2}");
+
+    let _ = std::fs::remove_file(&prom_path);
+    let _ = std::fs::remove_file(&json_path);
+}
+
+#[test]
+fn slo_check_gates_the_demo_trace() {
+    let (out, err, ok) = run(&[
+        "slo-check", "--slo", "p99<600s@99%", "--jobs", "40", "--workers", "2",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("slo-check: all 1 SLO(s) met"), "stdout: {out}");
+
+    let (_, err, ok) = run(&[
+        "slo-check", "--slo", "p50<1ns@50%", "--jobs", "40", "--workers", "2",
+    ]);
+    assert!(!ok, "impossible SLO must exit nonzero");
+    assert!(err.contains("SLO violated"), "stderr: {err}");
+
+    // a passing snapshot gates clean through --snapshot too
+    let prom_path = std::env::temp_dir().join("ipumm_cli_slo_ok.prom");
+    let prom_arg = prom_path.to_str().unwrap();
+    let (_, err, ok) = run(&[
+        "serve", "--jobs", "20", "--seed", "3",
+        "--metrics-out", prom_arg, "--slo", "p99<600s@99%",
+    ]);
+    assert!(ok, "stderr: {err}");
+    let json_path = format!("{prom_arg}.json");
+    let (out, err, ok) = run(&["slo-check", "--snapshot", &json_path]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("ok"), "stdout: {out}");
+    let _ = std::fs::remove_file(&prom_path);
+    let _ = std::fs::remove_file(&json_path);
+}
+
+#[test]
+fn bench_check_against_gates_cross_run_drift() {
+    let cur = std::env::temp_dir().join("ipumm_trend_cur");
+    let prev = std::env::temp_dir().join("ipumm_trend_prev");
+    for d in [&cur, &prev] {
+        let _ = std::fs::remove_dir_all(d);
+        std::fs::create_dir_all(d).unwrap();
+    }
+    let cur_arg = cur.to_str().unwrap();
+    let prev_arg = prev.to_str().unwrap();
+
+    // previous run: baseline 10ms, search 5ms (0.5x of baseline)
+    std::fs::write(
+        prev.join("BENCH_planner.json"),
+        r#"{"group": "planner", "results": [
+            {"name": "search_baseline", "mean_s": 0.01},
+            {"name": "search", "mean_s": 0.005}
+        ]}"#,
+    )
+    .unwrap();
+
+    // current run on a 2x slower machine, same normalized ratio: the
+    // raw 2x drift must NOT gate — only baseline-normalized drift does
+    std::fs::write(
+        cur.join("BENCH_planner.json"),
+        r#"{"group": "planner", "results": [
+            {"name": "search_baseline", "mean_s": 0.02},
+            {"name": "search", "mean_s": 0.010}
+        ]}"#,
+    )
+    .unwrap();
+    let (out, err, ok) = run(&["bench-check", "--dir", cur_arg, "--against", prev_arg]);
+    assert!(ok, "machine-speed drift must not gate; stderr: {err}");
+    assert!(out.contains("baseline-normalized"), "stdout: {out}");
+    assert!(out.contains("0 cross-run regressions"), "stdout: {out}");
+
+    // genuine regression: baseline parity with prev but search 1.6x
+    // slower relative to it -> the trend gate fails
+    std::fs::write(
+        cur.join("BENCH_planner.json"),
+        r#"{"group": "planner", "results": [
+            {"name": "search_baseline", "mean_s": 0.01},
+            {"name": "search", "mean_s": 0.008}
+        ]}"#,
+    )
+    .unwrap();
+    let (out, err, ok) = run(&["bench-check", "--dir", cur_arg, "--against", prev_arg]);
+    assert!(!ok, "1.6x normalized drift must fail the 20% trend gate");
+    assert!(out.contains("FAIL"), "stdout: {out}");
+    assert!(err.contains("drifted"), "stderr: {err}");
+
+    // a looser tolerance admits the same pair
+    let (_, _, ok) = run(&[
+        "bench-check", "--dir", cur_arg, "--against", prev_arg, "--tolerance", "80",
+    ]);
+    assert!(ok);
+
+    for d in [&cur, &prev] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
 fn profile_writes_json() {
     let json_path = std::env::temp_dir().join("ipumm_cli_profile.json");
     let json_arg = json_path.to_str().unwrap();

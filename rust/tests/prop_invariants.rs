@@ -11,11 +11,14 @@ use ipumm::arch::GpuArch;
 use ipumm::memory::mapping::{grid_2d_mapping, linear_balanced_mapping};
 use ipumm::graph::tensor::{DType, Tensor, TensorId};
 use ipumm::coordinator::runner::ThreadBudget;
+use ipumm::coordinator::trace::TraceSpec;
+use ipumm::obs::window::{windowed, MetricEvent, WindowSpec};
+use ipumm::obs::{QuantileSketch, Recorder};
 use ipumm::planner::cost::{CostConfig, CostModel, PlanCost};
 use ipumm::planner::partition::{MmShape, Partition};
 use ipumm::planner::search::{for_each_candidate, search, search_fits, search_with_workers};
 use ipumm::prop_assert;
-use ipumm::serve::{BucketLadder, PlanCache};
+use ipumm::serve::{BucketLadder, MmService, PlanCache, ServiceConfig};
 use ipumm::sim::engine::SimEngine;
 use ipumm::sparse::csr::BlockCsr;
 use ipumm::sparse::pattern::{BlockPattern, PatternKind, SparsitySpec, BLOCK_SIZES};
@@ -25,6 +28,14 @@ use ipumm::sparse::planner::{
 };
 use ipumm::util::prop::{check, check_default, PropConfig, Size};
 use ipumm::util::rng::Rng;
+use ipumm::util::stats::Summary;
+use std::sync::Mutex;
+
+/// Serializes every test that toggles the process-global trace recorder
+/// (`ipumm::obs::enable`/`disable`/`take`). Cargo runs this binary's
+/// tests on parallel threads; without the gate two toggling tests could
+/// interleave enable/disable/drain and read each other's data.
+static OBS_GATE: Mutex<()> = Mutex::new(());
 
 fn random_shape(rng: &mut Rng, size: Size) -> MmShape {
     let hi = size.scale(64, 4096);
@@ -787,9 +798,11 @@ fn prop_search_bit_identical_with_recorder_enabled() {
     // dense staged search and the sparse past-the-wall search must
     // return bit-identical plans (or identical OOM statistics) with the
     // global trace recorder enabled vs disabled, at workers {1, 4}.
-    // This test owns the process-global toggle: lib unit tests only ever
+    // This test shares the process-global toggle with the serve
+    // neutrality test below through OBS_GATE: lib unit tests only ever
     // exercise the disabled path, and this binary's other tests are
     // neutrality-safe by the very property proven here.
+    let _gate = OBS_GATE.lock().unwrap_or_else(|e| e.into_inner());
     let arch = IpuArch::gc200();
     let config = CostConfig::default();
     let mut rng = Rng::new(0x0B5E);
@@ -931,5 +944,193 @@ fn prop_sparse_past_wall_workers_bit_identical_incl_budget_exhausted() {
                 _ => panic!("sparse verdicts diverge for {shape:?} variant {vi}"),
             }
         }
+    }
+}
+
+#[test]
+fn prop_served_trace_bit_identical_with_metrics_enabled() {
+    // streaming-metrics acceptance: the sketch/window/export pipeline is
+    // write-only end to end — a served trace returns identical
+    // service-visible outcomes (request ids, buckets, backends, OOM
+    // verdicts, model device seconds, plan-cache population) with the
+    // global recorder enabled vs disabled, at workers 1 and 4.
+    // Wall-clock fields (queue_seconds, batch composition) are
+    // timing-dependent at workers > 1 and excluded by design.
+    let _gate = OBS_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let shapes: Vec<MmShape> = TraceSpec::paper_mix(48, 7)
+        .jobs
+        .into_iter()
+        .map(|(_, s)| s)
+        .collect();
+    for workers in [1usize, 4] {
+        let config = ServiceConfig { workers: Some(workers), ..ServiceConfig::default() };
+        ipumm::obs::disable();
+        let _ = ipumm::obs::take();
+        let plain_svc = MmService::new(config.clone());
+        let plain = plain_svc.serve_trace(&shapes);
+        ipumm::obs::enable();
+        let traced_svc = MmService::new(config);
+        let traced = traced_svc.serve_trace(&shapes);
+        ipumm::obs::disable();
+        let data = ipumm::obs::take();
+        assert_eq!(plain.requests.len(), traced.requests.len(), "workers {workers}");
+        for (p, t) in plain.requests.iter().zip(&traced.requests) {
+            assert_eq!(p.id, t.id, "workers {workers}");
+            assert_eq!(p.bucket, t.bucket, "req {} workers {workers}", p.id);
+            assert_eq!(p.backend, t.backend, "req {} workers {workers}", p.id);
+            assert_eq!(p.oom, t.oom, "req {} workers {workers}", p.id);
+            assert_eq!(
+                p.device_seconds.to_bits(),
+                t.device_seconds.to_bits(),
+                "req {} workers {workers}",
+                p.id
+            );
+        }
+        assert_eq!(
+            plain_svc.cache().len(),
+            traced_svc.cache().len(),
+            "cache population diverges at workers {workers}"
+        );
+        // the traced run really streamed into the global sketches: every
+        // served request folded one latency sample into the merged
+        // per-worker sketches
+        let streamed = data
+            .histograms
+            .get("serve.latency_seconds")
+            .map(|s| s.count())
+            .unwrap_or(0);
+        assert_eq!(
+            streamed,
+            traced.requests.len() as u64,
+            "global latency sketch short at workers {workers}"
+        );
+    }
+    // leave the global recorder off and drained for any test that follows
+    ipumm::obs::disable();
+    let _ = ipumm::obs::take();
+}
+
+#[test]
+fn prop_recorder_histogram_memory_is_bounded_by_buckets() {
+    // acceptance: recorder histogram memory is O(buckets), not
+    // O(samples) — a 120k-sample stream spanning nine decades folds into
+    // a few tens of KiB of sketch, and the overhead report counts every
+    // sample. Uses a local Recorder, so no global-toggle gate is needed.
+    let rec = Recorder::new();
+    let mut rng = Rng::new(0x51C7);
+    let samples = 120_000usize;
+    for _ in 0..samples {
+        // log-uniform across 1ns..1s — worst case for bucket spread
+        rec.observe("lat", 1e-9 * (20.7 * rng.next_f64()).exp());
+    }
+    let data = rec.take();
+    let sketch = &data.histograms["lat"];
+    assert_eq!(sketch.count(), samples as u64);
+    let overhead = data.overhead();
+    assert_eq!(overhead.histogram_samples, samples as u64);
+    assert_eq!(overhead.sketch_bytes, sketch.memory_bytes());
+    // raw retention would be 8 B x 120k = 960 KB; the sketch stays under
+    // 64 KiB no matter how long the stream runs (bucket count depends on
+    // the value range, never on the sample count)
+    assert!(
+        sketch.memory_bytes() < 64 * 1024,
+        "sketch grew to {} B for {samples} samples",
+        sketch.memory_bytes()
+    );
+    let buckets_before = sketch.buckets();
+    let mut more = sketch.clone();
+    let mut rng = Rng::new(0x51C8);
+    for _ in 0..samples {
+        more.observe(1e-9 * (20.7 * rng.next_f64()).exp());
+    }
+    assert_eq!(
+        more.buckets(),
+        buckets_before,
+        "bucket count must saturate once the value range is covered"
+    );
+}
+
+#[test]
+fn prop_windowed_sketches_recombine_to_the_exact_summary() {
+    // satellite cross-check: per-window sketches merged back over every
+    // window must (1) agree bit-for-bit with a single sketch fed the
+    // whole stream — merge is bucket-count addition, and quantiles
+    // depend only on counts/min/max — and (2) agree with the exact
+    // sorted-sample `Summary` within the sketch's documented relative
+    // error. Constant, bimodal, and seeded log-uniform streams cover
+    // degenerate, clustered, and spread distributions.
+    let streams: [(&str, Vec<f64>); 3] = [
+        ("constant", vec![0.5; 10_000]),
+        (
+            "bimodal",
+            (0..10_000)
+                .map(|i| if i % 5 == 0 { 1.0 } else { 1e-3 })
+                .collect(),
+        ),
+        ("log-uniform", {
+            let mut rng = Rng::new(0xD15C);
+            (0..10_000).map(|_| 1e-6 * (13.8 * rng.next_f64()).exp()).collect()
+        }),
+    ];
+    for (label, latencies) in &streams {
+        let events: Vec<MetricEvent> = latencies
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| MetricEvent {
+                pos: i as u64,
+                class: if i % 2 == 0 { "a" } else { "b" }.to_string(),
+                latency_s: v,
+                cache_lookup: false,
+                cache_hit: false,
+                queue_depth: 0,
+                oom: false,
+            })
+            .collect();
+        // width 997 does not divide 10_000: the last window is ragged
+        let windows = windowed(&events, WindowSpec::tumbling(997));
+        assert_eq!(windows.len(), 11, "{label}");
+        let mut merged = QuantileSketch::new();
+        for w in &windows {
+            merged.merge(&w.merged_latency());
+        }
+        let mut direct = QuantileSketch::new();
+        for &v in latencies.iter() {
+            direct.observe(v);
+        }
+        // (1) recombination is lossless on everything quantiles read
+        assert_eq!(merged.count(), direct.count(), "{label}");
+        assert_eq!(merged.min().to_bits(), direct.min().to_bits(), "{label}");
+        assert_eq!(merged.max().to_bits(), direct.max().to_bits(), "{label}");
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 0.999, 1.0] {
+            assert_eq!(
+                merged.quantile(q).to_bits(),
+                direct.quantile(q).to_bits(),
+                "{label} q={q}"
+            );
+        }
+        // (2) the sketch tracks the exact whole-run Summary within its
+        // documented relative error (1.05 slack covers the bucket
+        // representative sitting anywhere inside the bucket)
+        let exact = Summary::of(latencies);
+        let tol = |v: f64| merged.relative_error() * 1.05 * v.abs() + 1e-12;
+        for (q, want) in [
+            (0.5, exact.median),
+            (0.95, exact.p95),
+            (0.99, exact.p99),
+            (0.999, exact.p999),
+        ] {
+            let got = merged.quantile(q);
+            assert!(
+                (got - want).abs() <= tol(want),
+                "{label} q={q}: sketch {got} vs exact {want}"
+            );
+        }
+        assert_eq!(merged.count(), exact.n as u64, "{label}");
+        assert!(
+            (merged.mean() - exact.mean).abs() <= 1e-9 * exact.mean.abs() + 1e-15,
+            "{label}: sketch mean {} vs exact {}",
+            merged.mean(),
+            exact.mean
+        );
     }
 }
