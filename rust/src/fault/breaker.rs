@@ -1,0 +1,314 @@
+//! Per-backend circuit breaker: closed → open → half-open.
+//!
+//! The breaker protects a failing backend from retry storms and gives
+//! the dispatch layer a cheap "is this device worth trying" answer. To
+//! keep the serve path deterministic across worker counts, the breaker
+//! is driven by the *request-id clock*, not the wall clock: `tick` is
+//! the id of the request being resolved, and resolution happens in id
+//! order (see `MmService::resolve_requests`), so every run replays the
+//! same closed→open→half-open trajectory bit-identically.
+
+/// Breaker automaton states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: all requests pass through.
+    Closed,
+    /// Tripped: requests are rejected until the cooldown elapses.
+    Open,
+    /// Cooled down: a bounded number of probe requests pass; one
+    /// success re-closes, one failure re-opens.
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// Trip thresholds and recovery pacing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Master switch: a disabled breaker always allows and never trips.
+    pub enabled: bool,
+    /// Trip after this many consecutive failures.
+    pub consecutive_failures: u32,
+    /// Trip when the failure rate over the sliding outcome window
+    /// reaches this permille (evaluated only once the window is full).
+    pub failure_rate_permille: u32,
+    /// Sliding outcome-window length for the rate threshold.
+    pub window: usize,
+    /// Request-id ticks an open breaker waits before half-opening.
+    pub cooldown_ticks: u64,
+    /// Probe requests allowed through in half-open.
+    pub half_open_probes: u32,
+}
+
+impl BreakerConfig {
+    /// Never trips; [`CircuitBreaker::allows`] is always true.
+    pub fn disabled() -> BreakerConfig {
+        BreakerConfig {
+            enabled: false,
+            consecutive_failures: u32::MAX,
+            failure_rate_permille: 1000,
+            window: 1,
+            cooldown_ticks: 0,
+            half_open_probes: 1,
+        }
+    }
+
+    /// The default serving policy: 3 consecutive failures or a 50%
+    /// failure rate over the last 16 outcomes trips; 25 ticks of
+    /// cooldown; one probe re-closes.
+    pub fn standard() -> BreakerConfig {
+        BreakerConfig {
+            enabled: true,
+            consecutive_failures: 3,
+            failure_rate_permille: 500,
+            window: 16,
+            cooldown_ticks: 25,
+            half_open_probes: 1,
+        }
+    }
+}
+
+/// One recorded state transition, on the request-id clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BreakerTransition {
+    pub tick: u64,
+    pub from: BreakerState,
+    pub to: BreakerState,
+}
+
+/// The breaker itself. Single-threaded by design: the fault pipeline
+/// resolves requests in id order before workers fan out, which is what
+/// makes the trajectory reproducible.
+#[derive(Clone, Debug)]
+pub struct CircuitBreaker {
+    config: BreakerConfig,
+    state: BreakerState,
+    consecutive: u32,
+    /// Recent outcomes, `true` = failure, newest last.
+    window: std::collections::VecDeque<bool>,
+    opened_at: u64,
+    probes_left: u32,
+    transitions: Vec<BreakerTransition>,
+}
+
+impl CircuitBreaker {
+    pub fn new(config: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            config,
+            state: BreakerState::Closed,
+            consecutive: 0,
+            window: std::collections::VecDeque::new(),
+            opened_at: 0,
+            probes_left: 0,
+            transitions: Vec::new(),
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Every state change this breaker went through, in tick order.
+    pub fn transitions(&self) -> &[BreakerTransition] {
+        &self.transitions
+    }
+
+    fn transition(&mut self, tick: u64, to: BreakerState) {
+        let from = self.state;
+        self.state = to;
+        self.transitions.push(BreakerTransition { tick, from, to });
+    }
+
+    /// May request `tick` go to this backend? Open breakers half-open
+    /// here once the cooldown has elapsed; half-open breakers meter out
+    /// their probe budget.
+    pub fn allows(&mut self, tick: u64) -> bool {
+        if !self.config.enabled {
+            return true;
+        }
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if tick >= self.opened_at.saturating_add(self.config.cooldown_ticks) {
+                    self.transition(tick, BreakerState::HalfOpen);
+                    self.probes_left = self.config.half_open_probes;
+                    self.probes_left -= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                if self.probes_left > 0 {
+                    self.probes_left -= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful attempt at `tick`.
+    pub fn on_success(&mut self, tick: u64) {
+        if !self.config.enabled {
+            return;
+        }
+        match self.state {
+            BreakerState::HalfOpen => {
+                // probe succeeded: full reset
+                self.transition(tick, BreakerState::Closed);
+                self.consecutive = 0;
+                self.window.clear();
+            }
+            BreakerState::Closed => {
+                self.consecutive = 0;
+                self.push_outcome(false);
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Record a failed attempt at `tick`; may trip the breaker.
+    pub fn on_failure(&mut self, tick: u64) {
+        if !self.config.enabled {
+            return;
+        }
+        match self.state {
+            BreakerState::HalfOpen => {
+                // probe failed: back to open, restart the cooldown
+                self.transition(tick, BreakerState::Open);
+                self.opened_at = tick;
+            }
+            BreakerState::Closed => {
+                self.consecutive += 1;
+                self.push_outcome(true);
+                let rate_tripped = self.window.len() >= self.config.window && {
+                    let failures = self.window.iter().filter(|&&f| f).count();
+                    failures * 1000
+                        >= self.config.failure_rate_permille as usize * self.window.len()
+                };
+                if self.consecutive >= self.config.consecutive_failures || rate_tripped {
+                    self.transition(tick, BreakerState::Open);
+                    self.opened_at = tick;
+                }
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    fn push_outcome(&mut self, failed: bool) {
+        self.window.push_back(failed);
+        while self.window.len() > self.config.window {
+            self.window.pop_front();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_breaker_never_trips() {
+        let mut b = CircuitBreaker::new(BreakerConfig::disabled());
+        for tick in 0..100 {
+            assert!(b.allows(tick));
+            b.on_failure(tick);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.transitions().is_empty());
+    }
+
+    #[test]
+    fn consecutive_failures_trip_then_cooldown_then_probe_recloses() {
+        let mut b = CircuitBreaker::new(BreakerConfig::standard());
+        // three consecutive failures at tick 40 trip the breaker
+        for _ in 0..3 {
+            assert!(b.allows(40));
+            b.on_failure(40);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        // rejected until the cooldown has elapsed
+        assert!(!b.allows(41));
+        assert!(!b.allows(64));
+        // tick 65 = 40 + 25: half-open, one probe allowed
+        assert!(b.allows(65));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allows(65), "probe budget is one");
+        b.on_success(65);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allows(66));
+        let kinds: Vec<(BreakerState, BreakerState)> =
+            b.transitions().iter().map(|t| (t.from, t.to)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (BreakerState::Closed, BreakerState::Open),
+                (BreakerState::Open, BreakerState::HalfOpen),
+                (BreakerState::HalfOpen, BreakerState::Closed),
+            ]
+        );
+        assert_eq!(b.transitions()[0].tick, 40);
+        assert_eq!(b.transitions()[1].tick, 65);
+    }
+
+    #[test]
+    fn failed_probe_reopens_and_restarts_cooldown() {
+        let mut b = CircuitBreaker::new(BreakerConfig::standard());
+        for _ in 0..3 {
+            b.allows(0);
+            b.on_failure(0);
+        }
+        assert!(b.allows(25), "cooldown elapsed at tick 25");
+        b.on_failure(25);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allows(49), "cooldown restarted from tick 25");
+        assert!(b.allows(50));
+        b.on_success(50);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn interleaved_successes_reset_the_consecutive_count() {
+        let mut b = CircuitBreaker::new(BreakerConfig::standard());
+        for tick in 0..20 {
+            b.allows(tick);
+            if tick % 3 == 2 {
+                b.on_success(tick);
+            } else {
+                b.on_failure(tick);
+            }
+        }
+        // never three in a row, and 2/3 failure rate only counts once
+        // the 16-wide window is full — it is, so the rate path trips
+        assert_eq!(b.state(), BreakerState::Open, "rate threshold must trip");
+    }
+
+    #[test]
+    fn failure_rate_trips_without_consecutive_runs() {
+        // alternate success/failure: 50% rate, never 3 consecutive
+        let mut b = CircuitBreaker::new(BreakerConfig::standard());
+        for tick in 0..40 {
+            if b.allows(tick) {
+                if tick % 2 == 0 {
+                    b.on_failure(tick);
+                } else {
+                    b.on_success(tick);
+                }
+            }
+        }
+        assert!(
+            b.transitions().iter().any(|t| t.to == BreakerState::Open),
+            "50% failure rate over a full window must trip"
+        );
+    }
+}

@@ -1,0 +1,447 @@
+//! Chaos harness: run a scenario matrix (fault profile × retry/breaker
+//! policy) over a seeded trace and report how the serving layer
+//! recovered — plus the ddmin-style shrinker that reduces a failing
+//! chaos invariant to a minimal (request, fault) pair (the ROADMAP §5
+//! down payment).
+//!
+//! Everything here is deterministic: the trace comes from
+//! `TraceSpec::paper_mix(seed)`, the faults from [`FaultPlan::seeded`],
+//! and the breaker from the request-id clock — so a chaos report is a
+//! regression artifact, not a flaky observation.
+
+use crate::arch::{GpuArch, IpuArch};
+use crate::coordinator::trace::TraceSpec;
+use crate::fault::plan::{BackendKind, FaultPlan, FaultProfile};
+use crate::fault::retry::{FaultPolicy, RetryPolicy};
+use crate::fault::{BreakerEvent, RequestOutcome};
+use crate::planner::partition::MmShape;
+use crate::serve::service::{MmService, ServiceConfig};
+use crate::serve::telemetry::ServeReport;
+use crate::sparse::pattern::SparsitySpec;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// One cell of the chaos matrix: a named fault profile plus the policy
+/// meant to survive it.
+#[derive(Clone, Debug)]
+pub struct ChaosScenario {
+    pub name: String,
+    pub profile: FaultProfile,
+    pub policy: FaultPolicy,
+}
+
+/// Build a scenario from a profile name (see [`FaultProfile::names`]).
+/// The `slow` profile gets a 5ms default deadline when none is given —
+/// a 1000x latency spike with no deadline would never shed, which is
+/// the behavior the scenario exists to exercise.
+pub fn scenario(
+    name: &str,
+    deadline_s: Option<f64>,
+    retries: u32,
+) -> Result<ChaosScenario, String> {
+    let profile = FaultProfile::by_name(name).ok_or_else(|| {
+        format!(
+            "unknown fault profile '{name}' (known: {})",
+            FaultProfile::names().join(", ")
+        )
+    })?;
+    let deadline_s = deadline_s.or(if name == "slow" { Some(5e-3) } else { None });
+    Ok(ChaosScenario {
+        name: name.to_string(),
+        profile,
+        policy: FaultPolicy {
+            deadline_s,
+            retry: RetryPolicy::standard(retries),
+            breaker: crate::fault::breaker::BreakerConfig::standard(),
+        },
+    })
+}
+
+/// Recovery accounting for one scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub name: String,
+    /// Requests submitted.
+    pub requests: usize,
+    pub served: usize,
+    pub degraded: usize,
+    pub shed: usize,
+    pub panicked: usize,
+    /// Requests that vanished without a record — the invariant says 0.
+    pub lost: usize,
+    /// Device re-attempts across the trace (attempts beyond the first).
+    pub retries: u64,
+    /// Faults the plan injected.
+    pub injected: u64,
+    pub breaker: Vec<BreakerEvent>,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub wall_seconds: f64,
+}
+
+impl ScenarioReport {
+    /// Fold a serve report into recovery accounting. `submitted` is the
+    /// trace length — anything the report does not account for is lost.
+    pub fn from_serve(name: &str, submitted: usize, report: &ServeReport) -> ScenarioReport {
+        let stats = report.fault_stats();
+        ScenarioReport {
+            name: name.to_string(),
+            requests: submitted,
+            served: stats.served,
+            degraded: stats.degraded,
+            shed: stats.shed,
+            panicked: stats.panicked,
+            lost: submitted.saturating_sub(report.requests.len()),
+            retries: stats.retries,
+            injected: report.injected_faults,
+            breaker: report.breaker_transitions.clone(),
+            p50_ms: report.latency_sketch.quantile(0.5) * 1e3,
+            p99_ms: report.latency_sketch.quantile(0.99) * 1e3,
+            wall_seconds: report.wall_seconds,
+        }
+    }
+}
+
+/// The whole matrix run.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub jobs: usize,
+    pub seed: u64,
+    pub scenarios: Vec<ScenarioReport>,
+}
+
+/// Run every scenario over the same seeded paper-mix trace, one fresh
+/// service per scenario (a shared plan cache would leak warm state
+/// between cells and muddy the comparison).
+pub fn run_matrix(
+    ipu: &IpuArch,
+    gpu: &GpuArch,
+    jobs: usize,
+    seed: u64,
+    workers: Option<usize>,
+    scenarios: &[ChaosScenario],
+) -> ChaosReport {
+    let spec = TraceSpec::paper_mix(jobs, seed);
+    let shapes: Vec<MmShape> = spec.jobs.iter().map(|(_, s)| *s).collect();
+    let mut out = Vec::with_capacity(scenarios.len());
+    for sc in scenarios {
+        let svc = MmService::new(ServiceConfig {
+            arch: ipu.clone(),
+            gpu: gpu.clone(),
+            workers,
+            faults: FaultPlan::seeded(seed, sc.profile.clone()),
+            fault_policy: sc.policy.clone(),
+            ..ServiceConfig::default()
+        });
+        let report = svc.serve_trace(&shapes);
+        out.push(ScenarioReport::from_serve(&sc.name, shapes.len(), &report));
+    }
+    ChaosReport { jobs, seed, scenarios: out }
+}
+
+/// The chaos invariants a scenario must satisfy, independent of profile:
+///
+/// 1. **accounting** — served + degraded + shed + panicked = requests;
+/// 2. **zero lost** — every submitted request produced a record;
+/// 3. **deadline respected** — no served/degraded record's model-time
+///    ledger (retry + device seconds) exceeds the policy's deadline.
+///
+/// Returns human-readable violations (empty = healthy). The serve-layer
+/// variant over raw records is [`record_violations`].
+pub fn invariant_violations(sc: &ScenarioReport) -> Vec<String> {
+    let mut v = Vec::new();
+    let accounted = sc.served + sc.degraded + sc.shed + sc.panicked;
+    if accounted != sc.requests {
+        v.push(format!(
+            "{}: accounting broken: {accounted} outcomes for {} requests",
+            sc.name, sc.requests
+        ));
+    }
+    if sc.lost != 0 {
+        v.push(format!("{}: {} requests lost without a record", sc.name, sc.lost));
+    }
+    v
+}
+
+/// Per-record deadline check for one serve report (the accounting
+/// identity lives in [`invariant_violations`]; this one needs the raw
+/// records, which the folded [`ScenarioReport`] no longer carries).
+pub fn record_violations(report: &ServeReport, policy: &FaultPolicy) -> Vec<String> {
+    let mut v = Vec::new();
+    if let Some(deadline) = policy.deadline_s {
+        for r in &report.requests {
+            let answered = matches!(
+                r.outcome,
+                RequestOutcome::Served | RequestOutcome::Degraded(_)
+            );
+            let ledger = r.retry_seconds + r.device_seconds;
+            if answered && ledger > deadline {
+                v.push(format!(
+                    "request {}: answered {:.3e}s past a {:.3e}s deadline",
+                    r.id, ledger, deadline
+                ));
+            }
+        }
+    }
+    v
+}
+
+impl ChaosReport {
+    /// Violations across every scenario (empty = the matrix is healthy).
+    pub fn violations(&self) -> Vec<String> {
+        self.scenarios.iter().flat_map(invariant_violations).collect()
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Chaos matrix: {} requests, seed {} (outcomes per scenario)",
+                self.jobs, self.seed
+            ),
+            &[
+                "scenario", "served", "degraded", "shed", "panicked", "lost", "retries",
+                "injected", "breaker", "p50", "p99",
+            ],
+        );
+        for s in &self.scenarios {
+            t.row(&[
+                s.name.clone(),
+                s.served.to_string(),
+                s.degraded.to_string(),
+                s.shed.to_string(),
+                s.panicked.to_string(),
+                s.lost.to_string(),
+                s.retries.to_string(),
+                s.injected.to_string(),
+                s.breaker.len().to_string(),
+                format!("{:.3} ms", s.p50_ms),
+                format!("{:.3} ms", s.p99_ms),
+            ]);
+        }
+        t
+    }
+
+    /// The JSON recovery report `ipumm chaos --json` writes (and CI
+    /// validates): deterministic key order, one object per scenario.
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("jobs", Json::Int(self.jobs as i64));
+        doc.set("seed", Json::Int(self.seed as i64));
+        let mut arr = Json::Arr(Vec::new());
+        for s in &self.scenarios {
+            let mut o = Json::obj();
+            o.set("name", Json::Str(s.name.clone()));
+            o.set("requests", Json::Int(s.requests as i64));
+            o.set("served", Json::Int(s.served as i64));
+            o.set("degraded", Json::Int(s.degraded as i64));
+            o.set("shed", Json::Int(s.shed as i64));
+            o.set("panicked", Json::Int(s.panicked as i64));
+            o.set("lost", Json::Int(s.lost as i64));
+            o.set("retries", Json::Int(s.retries as i64));
+            o.set("injected", Json::Int(s.injected as i64));
+            o.set("p50_ms", Json::Num(s.p50_ms));
+            o.set("p99_ms", Json::Num(s.p99_ms));
+            o.set("wall_seconds", Json::Num(s.wall_seconds));
+            let mut tr = Json::Arr(Vec::new());
+            for b in &s.breaker {
+                let mut bt = Json::obj();
+                bt.set("backend", Json::Str(b.backend.clone()));
+                bt.set("tick", Json::Int(b.tick as i64));
+                bt.set("from", Json::Str(b.from.name().to_string()));
+                bt.set("to", Json::Str(b.to.name().to_string()));
+                tr.push(bt);
+            }
+            o.set("breaker", tr);
+            arr.push(o);
+        }
+        doc.set("scenarios", arr);
+        doc
+    }
+}
+
+/// A chaos-trace request with an **explicit** id. The fault plan keys on
+/// ids, and every id's draw is an independent hash — so removing
+/// requests from a trace never changes the faults the survivors see,
+/// which is exactly what makes shrinking sound.
+pub type ChaosRequest = (u64, MmShape, Option<SparsitySpec>);
+
+/// Shrink a failing chaos trace to a (locally) minimal one: `fails`
+/// must return true on `requests` (the invariant is broken); the result
+/// is a subset, original ids preserved, on which `fails` still returns
+/// true and from which no single request can be removed without the
+/// failure disappearing. ddmin-style: halve-sized chunks first, then
+/// ever-smaller ones down to single requests.
+pub fn shrink_failing<F>(requests: &[ChaosRequest], fails: F) -> Vec<ChaosRequest>
+where
+    F: Fn(&[ChaosRequest]) -> bool,
+{
+    let mut cur: Vec<ChaosRequest> = requests.to_vec();
+    if cur.is_empty() || !fails(&cur) {
+        return cur;
+    }
+    let mut chunk = cur.len().div_ceil(2);
+    loop {
+        let mut i = 0;
+        while i < cur.len() && cur.len() > 1 {
+            let mut candidate = cur.clone();
+            let end = (i + chunk).min(candidate.len());
+            candidate.drain(i..end);
+            if !candidate.is_empty() && fails(&candidate) {
+                cur = candidate; // keep the smaller failing trace; retry at i
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 {
+            break;
+        }
+        chunk = chunk.div_ceil(2).max(1);
+    }
+    cur
+}
+
+/// Name the (request, fault) pair a minimal trace points at: the first
+/// fault the plan injects into the request's first attempts on either
+/// backend, or the panic draw.
+pub fn describe_minimal(plan: &FaultPlan, req: &ChaosRequest) -> String {
+    let (id, shape, _) = req;
+    let shape = format!("{}x{}x{}", shape.m, shape.n, shape.k);
+    if plan.injects_panic(*id) {
+        return format!("request {id} ({shape}): worker-panic");
+    }
+    for backend in [BackendKind::Ipu, BackendKind::Gpu] {
+        for attempt in 0..4 {
+            if let Some(kind) = plan.inject(*id, backend, attempt) {
+                return format!(
+                    "request {id} ({shape}): {} on {backend:?} attempt {attempt}",
+                    kind.name()
+                );
+            }
+        }
+    }
+    format!("request {id} ({shape}): no injected fault (policy-only failure)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_parses_known_profiles_and_rejects_unknown() {
+        let sc = scenario("transient-heavy", None, 3).unwrap();
+        assert_eq!(sc.profile.transient_permille, 250);
+        assert_eq!(sc.policy.retry.max_retries, 3);
+        assert!(sc.policy.deadline_s.is_none());
+        let slow = scenario("slow", None, 3).unwrap();
+        assert_eq!(slow.policy.deadline_s, Some(5e-3), "slow defaults a deadline");
+        let explicit = scenario("slow", Some(1e-2), 3).unwrap();
+        assert_eq!(explicit.policy.deadline_s, Some(1e-2));
+        assert!(scenario("meteor-strike", None, 3).is_err());
+    }
+
+    #[test]
+    fn accounting_violations_are_detected() {
+        let mut sc = ScenarioReport {
+            name: "t".into(),
+            requests: 10,
+            served: 9,
+            degraded: 0,
+            shed: 0,
+            panicked: 0,
+            lost: 1,
+            retries: 0,
+            injected: 0,
+            breaker: Vec::new(),
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            wall_seconds: 0.0,
+        };
+        assert_eq!(invariant_violations(&sc).len(), 2, "accounting + lost");
+        sc.served = 10;
+        sc.lost = 0;
+        assert!(invariant_violations(&sc).is_empty());
+    }
+
+    #[test]
+    fn shrinker_reduces_to_the_single_culprit_with_ids_preserved() {
+        // ids 0..48; the "invariant" fails whenever id 7 is present —
+        // the shape of a real chaos failure keyed by the fault plan
+        let trace: Vec<ChaosRequest> = (0..48u64)
+            .map(|id| (id, MmShape::square(512 + (id as usize % 4) * 128), None))
+            .collect();
+        let minimal = shrink_failing(&trace, |subset| subset.iter().any(|(id, ..)| *id == 7));
+        assert_eq!(minimal.len(), 1, "minimal failing trace is one request");
+        assert_eq!(minimal[0].0, 7, "original id survives shrinking");
+    }
+
+    #[test]
+    fn shrinker_returns_input_when_nothing_fails() {
+        let trace: Vec<ChaosRequest> = (0..8u64).map(|id| (id, MmShape::square(512), None)).collect();
+        let out = shrink_failing(&trace, |_| false);
+        assert_eq!(out.len(), 8, "no failure -> nothing to shrink");
+    }
+
+    #[test]
+    fn describe_minimal_names_the_fault() {
+        let plan = FaultPlan::seeded(
+            1,
+            FaultProfile { ipu_outages: vec![(7, 8)], ..FaultProfile::none() },
+        );
+        let desc = describe_minimal(&plan, &(7, MmShape::square(512), None));
+        assert!(desc.contains("request 7"), "{desc}");
+        assert!(desc.contains("unavailable"), "{desc}");
+        let clean = describe_minimal(&plan, &(6, MmShape::square(512), None));
+        assert!(clean.contains("policy-only"), "{clean}");
+    }
+
+    #[test]
+    fn report_json_round_trips_counts() {
+        let rep = ChaosReport {
+            jobs: 12,
+            seed: 3,
+            scenarios: vec![ScenarioReport {
+                name: "transient".into(),
+                requests: 12,
+                served: 10,
+                degraded: 2,
+                shed: 0,
+                panicked: 0,
+                lost: 0,
+                retries: 4,
+                injected: 5,
+                breaker: vec![BreakerEvent {
+                    backend: "ipu".into(),
+                    tick: 40,
+                    from: crate::fault::BreakerState::Closed,
+                    to: crate::fault::BreakerState::Open,
+                }],
+                p50_ms: 0.5,
+                p99_ms: 2.0,
+                wall_seconds: 0.1,
+            }],
+        };
+        let doc = Json::parse(&rep.to_json().render()).unwrap();
+        match &doc {
+            Json::Obj(m) => {
+                assert_eq!(m.get("jobs"), Some(&Json::Int(12)));
+                match m.get("scenarios") {
+                    Some(Json::Arr(scs)) => match &scs[0] {
+                        Json::Obj(s) => {
+                            assert_eq!(s.get("served"), Some(&Json::Int(10)));
+                            assert_eq!(s.get("lost"), Some(&Json::Int(0)));
+                            match s.get("breaker") {
+                                Some(Json::Arr(b)) => assert_eq!(b.len(), 1),
+                                other => panic!("breaker: {other:?}"),
+                            }
+                        }
+                        other => panic!("scenario: {other:?}"),
+                    },
+                    other => panic!("scenarios: {other:?}"),
+                }
+            }
+            other => panic!("doc: {other:?}"),
+        }
+        assert!(rep.violations().is_empty());
+        assert!(rep.to_table().n_rows() >= 1);
+    }
+}

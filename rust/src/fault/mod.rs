@@ -1,0 +1,690 @@
+//! Fault tolerance for the serving layer — deterministic fault
+//! injection, deadlines/retries/backoff, circuit breakers, and the
+//! chaos-testing harness.
+//!
+//! The paper's serving story (skewed matmuls routed to the IPU, squares
+//! past the §2.4 wall to the GPU) only holds up in production if the
+//! pipeline survives the failures a fleet actually sees. Because every
+//! backend here is a *deterministic model*, failures can be injected as
+//! a pure function of `(seed, request id, backend, attempt)` — so every
+//! fault scenario replays bit-identically, which real hardware can never
+//! offer (see [`plan`]).
+//!
+//! Layout:
+//!
+//! * [`plan`] — the seeded [`FaultPlan`]: fault taxonomy
+//!   (exchange-link drop, tile-OOM flake, slow device, unavailability
+//!   windows, worker panic) and named [`FaultProfile`]s.
+//! * [`retry`] — [`RetryPolicy`] (capped exponential backoff,
+//!   deterministic jitter) and the per-request [`FaultPolicy`]
+//!   (deadline + retry + breaker knobs).
+//! * [`breaker`] — the per-backend [`CircuitBreaker`]
+//!   (closed → open → half-open on the request-id clock).
+//! * this module — the **resolution engine**: [`resolve_one`] runs one
+//!   request through breaker admission, the IPU attempt/retry loop, the
+//!   deadline ledger, and GPU degradation, producing a [`Resolution`].
+//!   `MmService::resolve_requests` drives it in request-id order
+//!   *before* batch workers fan out, which is what keeps outcomes
+//!   bit-identical across runs and worker counts.
+//! * [`chaos`] — the `ipumm chaos` scenario matrix, the recovery
+//!   report, and the ddmin-style shrinker for failing fault scenarios.
+
+pub mod breaker;
+pub mod chaos;
+pub mod plan;
+pub mod retry;
+
+pub use breaker::{BreakerConfig, BreakerState, BreakerTransition, CircuitBreaker};
+pub use chaos::{ChaosReport, ChaosScenario, ScenarioReport};
+pub use plan::{BackendKind, FaultKind, FaultPlan, FaultProfile};
+pub use retry::{FaultPolicy, RetryPolicy};
+
+use crate::coordinator::device::RunOutcome;
+
+/// How a request ultimately left the service.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Answered on the preferred path (includes the legacy memory-wall
+    /// GPU fallback, which is a verdict-driven route, not a fault).
+    Served,
+    /// Answered, but on the GPU model because faults took the IPU out.
+    /// Skewed batches are priced dense-equivalent on the GPU — the
+    /// graceful-degradation cost the recovery report surfaces.
+    Degraded(DegradeReason),
+    /// Not answered: dropped with an explicit verdict instead of
+    /// blocking its batch.
+    Shed(ShedReason),
+    /// Not answered: the batch worker panicked dispatching it. The
+    /// panic was isolated (`catch_unwind`) — only this request failed.
+    Panicked,
+}
+
+/// Why a request was degraded to the fallback backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradeReason {
+    /// The IPU breaker was open when the request arrived.
+    BreakerOpen,
+    /// Every allowed IPU attempt failed.
+    RetriesExhausted,
+}
+
+/// Why a request was shed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The model-time ledger (wasted attempts + backoff + device time)
+    /// blew the per-request deadline.
+    DeadlineExceeded,
+    /// No backend could take the request (outage / breaker open / final
+    /// fallback failed) within the policy.
+    Unavailable,
+}
+
+impl RequestOutcome {
+    pub fn label(self) -> &'static str {
+        match self {
+            RequestOutcome::Served => "served",
+            RequestOutcome::Degraded(_) => "degraded",
+            RequestOutcome::Shed(_) => "shed",
+            RequestOutcome::Panicked => "panicked",
+        }
+    }
+
+    pub fn is_served(self) -> bool {
+        self == RequestOutcome::Served
+    }
+
+    pub fn is_degraded(self) -> bool {
+        matches!(self, RequestOutcome::Degraded(_))
+    }
+
+    pub fn is_shed(self) -> bool {
+        matches!(self, RequestOutcome::Shed(_))
+    }
+}
+
+/// One backend's answer for a request, computed fault-free: the cached
+/// plan's priced outcome (or OOM verdict) plus the cache bookkeeping
+/// that produced it. The resolution engine decides what actually
+/// happens to it under the fault plan.
+#[derive(Clone, Debug)]
+pub struct BackendLeg {
+    pub run: RunOutcome,
+    /// Coordinator backend naming (`Backend::name`).
+    pub backend: String,
+    /// Plan-cache verdict; `None` when the leg never consulted it.
+    pub cache_hit: Option<bool>,
+    /// Cold-planning wall seconds charged to this leg.
+    pub plan_seconds: f64,
+}
+
+/// One breaker state change, labelled with the backend it guards.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BreakerEvent {
+    pub backend: String,
+    pub tick: u64,
+    pub from: BreakerState,
+    pub to: BreakerState,
+}
+
+/// The fault pipeline's verdict for one request, fixed before batch
+/// workers run. Everything here is a deterministic function of the
+/// request id, the legs, the fault plan, and the policy.
+#[derive(Clone, Debug)]
+pub struct Resolution {
+    pub id: u64,
+    pub outcome: RequestOutcome,
+    /// The priced run behind a served/degraded outcome (`None` for
+    /// shed requests — nothing ran to completion on their behalf).
+    pub run: Option<RunOutcome>,
+    /// Backend charged with the final verdict.
+    pub backend: String,
+    /// Device attempts made across both legs (0 = shed before any).
+    pub attempts: u32,
+    /// Model seconds lost to wasted attempts and backoff.
+    pub retry_seconds: f64,
+    /// Model seconds of the final (successful) attempt; 0 otherwise.
+    pub device_seconds: f64,
+    /// The §2.4 memory-wall verdict (never fault-caused).
+    pub oom: bool,
+    /// Faults the plan injected into this request's attempts.
+    pub injected: u32,
+    pub cache_hit: Option<bool>,
+    pub plan_seconds: f64,
+}
+
+fn base_seconds(leg: &BackendLeg) -> f64 {
+    match &leg.run {
+        RunOutcome::Ok { seconds, .. } => *seconds,
+        RunOutcome::OutOfMemory => 0.0,
+    }
+}
+
+/// A slow-device spike: same result, `factor`x the latency (and the
+/// throughput/efficiency scaled down to match).
+fn slowed(run: &RunOutcome, factor: f64) -> (RunOutcome, f64) {
+    match run {
+        RunOutcome::Ok { seconds, tflops, efficiency, vertices, max_tile_bytes } => {
+            let secs = seconds * factor;
+            (
+                RunOutcome::Ok {
+                    seconds: secs,
+                    tflops: tflops / factor,
+                    efficiency: efficiency / factor,
+                    vertices: *vertices,
+                    max_tile_bytes: *max_tile_bytes,
+                },
+                secs,
+            )
+        }
+        RunOutcome::OutOfMemory => (RunOutcome::OutOfMemory, 0.0),
+    }
+}
+
+/// Mutable per-request bookkeeping threaded through the attempt loop.
+struct Ledger {
+    attempts: u32,
+    injected: u32,
+    /// Model-time spent so far that is *not* the final answer: wasted
+    /// attempts + backoff. Compared against the deadline.
+    elapsed: f64,
+}
+
+impl Ledger {
+    fn resolution(
+        &self,
+        id: u64,
+        outcome: RequestOutcome,
+        run: Option<RunOutcome>,
+        backend: String,
+        device_seconds: f64,
+        cache: (Option<bool>, f64),
+    ) -> Resolution {
+        let oom = matches!(run, Some(RunOutcome::OutOfMemory));
+        Resolution {
+            id,
+            outcome,
+            run,
+            backend,
+            attempts: self.attempts,
+            retry_seconds: self.elapsed,
+            device_seconds,
+            oom,
+            injected: self.injected,
+            cache_hit: cache.0,
+            plan_seconds: cache.1,
+        }
+    }
+}
+
+/// Resolve one request against the fault plan and policy.
+///
+/// `ipu`/`gpu` are the policy's legs (`None` when the dispatch policy
+/// excludes that backend); breakers are the caller's long-lived
+/// per-backend state, ticked by request id. The engine:
+///
+/// 1. asks the IPU breaker for admission (open → degrade to GPU);
+/// 2. runs the IPU attempt loop: injected transient faults waste the
+///    attempt's model time and feed the breaker; backoff (seeded
+///    jitter) is charged to the ledger; the retry budget bounds the
+///    loop; the deadline sheds the request whenever the ledger blows
+///    the budget;
+/// 3. a memory-wall OOM verdict is *not* a fault: it falls back to the
+///    GPU as a served outcome (status quo) and never feeds the breaker;
+/// 4. exhausted retries or an open breaker degrade to the GPU leg,
+///    which gets one attempt under its own breaker and fault draws.
+pub fn resolve_one(
+    id: u64,
+    ipu: Option<&BackendLeg>,
+    gpu: Option<&BackendLeg>,
+    plan: &FaultPlan,
+    policy: &FaultPolicy,
+    ipu_breaker: &mut CircuitBreaker,
+    gpu_breaker: &mut CircuitBreaker,
+) -> Resolution {
+    let mut ledger = Ledger { attempts: 0, injected: 0, elapsed: 0.0 };
+    let Some(ipu_leg) = ipu else {
+        // GPU-only policy: the GPU is the primary, not a degradation
+        return gpu_resolve(id, gpu, None, None, plan, policy, gpu_breaker, &mut ledger);
+    };
+    let cache = (ipu_leg.cache_hit, ipu_leg.plan_seconds);
+    loop {
+        if !ipu_breaker.allows(id) {
+            return gpu_resolve(
+                id,
+                gpu,
+                Some(DegradeReason::BreakerOpen),
+                Some(ipu_leg),
+                plan,
+                policy,
+                gpu_breaker,
+                &mut ledger,
+            );
+        }
+        ledger.attempts += 1;
+        let attempt = ledger.attempts - 1;
+        match plan.inject(id, BackendKind::Ipu, attempt) {
+            fault @ (None | Some(FaultKind::SlowDevice)) => {
+                let slow = fault.is_some();
+                if slow {
+                    ledger.injected += 1;
+                    crate::obs::count("serve.faults.injected", 1);
+                }
+                if ipu_leg.run.is_oom() {
+                    // the §2.4 wall is a verdict, not a fault: the
+                    // legacy GPU fallback stays a *served* outcome and
+                    // the breaker never hears about it
+                    if gpu.is_some() {
+                        return gpu_resolve(
+                            id, gpu, None, Some(ipu_leg), plan, policy, gpu_breaker,
+                            &mut ledger,
+                        );
+                    }
+                    return ledger.resolution(
+                        id,
+                        RequestOutcome::Served,
+                        Some(RunOutcome::OutOfMemory),
+                        ipu_leg.backend.clone(),
+                        0.0,
+                        cache,
+                    );
+                }
+                // the device answered (possibly slowly): a success for
+                // the breaker either way
+                ipu_breaker.on_success(id);
+                let (run, secs) = if slow {
+                    slowed(&ipu_leg.run, plan.profile.slow_factor)
+                } else {
+                    (ipu_leg.run.clone(), base_seconds(ipu_leg))
+                };
+                if policy.past_deadline(ledger.elapsed + secs) {
+                    crate::obs::count("serve.deadline.exceeded", 1);
+                    return ledger.resolution(
+                        id,
+                        RequestOutcome::Shed(ShedReason::DeadlineExceeded),
+                        None,
+                        ipu_leg.backend.clone(),
+                        0.0,
+                        cache,
+                    );
+                }
+                return ledger.resolution(
+                    id,
+                    RequestOutcome::Served,
+                    Some(run),
+                    ipu_leg.backend.clone(),
+                    secs,
+                    cache,
+                );
+            }
+            Some(fault) => {
+                // transient (link drop / tile flake) or outage window
+                ledger.injected += 1;
+                crate::obs::count("serve.faults.injected", 1);
+                ipu_breaker.on_failure(id);
+                // a transient fault wastes the attempt's device time; an
+                // unavailable backend fails instantly
+                if fault.is_transient() {
+                    ledger.elapsed += base_seconds(ipu_leg);
+                }
+                if policy.past_deadline(ledger.elapsed) {
+                    crate::obs::count("serve.deadline.exceeded", 1);
+                    return ledger.resolution(
+                        id,
+                        RequestOutcome::Shed(ShedReason::DeadlineExceeded),
+                        None,
+                        ipu_leg.backend.clone(),
+                        0.0,
+                        cache,
+                    );
+                }
+                if ledger.attempts > policy.retry.max_retries {
+                    return gpu_resolve(
+                        id,
+                        gpu,
+                        Some(DegradeReason::RetriesExhausted),
+                        Some(ipu_leg),
+                        plan,
+                        policy,
+                        gpu_breaker,
+                        &mut ledger,
+                    );
+                }
+                let backoff = policy.retry.backoff_seconds(plan.seed, id, attempt);
+                crate::obs::count("serve.retries", 1);
+                crate::obs::observe("serve.retry_backoff_seconds", backoff);
+                ledger.elapsed += backoff;
+                if policy.past_deadline(ledger.elapsed) {
+                    crate::obs::count("serve.deadline.exceeded", 1);
+                    return ledger.resolution(
+                        id,
+                        RequestOutcome::Shed(ShedReason::DeadlineExceeded),
+                        None,
+                        ipu_leg.backend.clone(),
+                        0.0,
+                        cache,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Finish a request on the GPU leg. `reason` is `None` when the GPU is
+/// the legitimate route (GPU-only policy, or the legacy memory-wall
+/// fallback — a served outcome) and `Some` when faults degraded the
+/// request here. One attempt: the GPU is already the last resort.
+#[allow(clippy::too_many_arguments)]
+fn gpu_resolve(
+    id: u64,
+    gpu: Option<&BackendLeg>,
+    reason: Option<DegradeReason>,
+    ipu_leg: Option<&BackendLeg>,
+    plan: &FaultPlan,
+    policy: &FaultPolicy,
+    gpu_breaker: &mut CircuitBreaker,
+    ledger: &mut Ledger,
+) -> Resolution {
+    // the cache verdict follows the leg that consulted it (legacy
+    // semantics: the GPU fallback keeps the IPU lookup's verdict)
+    let cache = match ipu_leg {
+        Some(leg) => (leg.cache_hit, leg.plan_seconds),
+        None => gpu.map_or((None, 0.0), |leg| (leg.cache_hit, leg.plan_seconds)),
+    };
+    let shed_backend = |gpu: Option<&BackendLeg>| {
+        gpu.map(|l| l.backend.clone())
+            .or_else(|| ipu_leg.map(|l| l.backend.clone()))
+            .unwrap_or_else(|| "none".to_string())
+    };
+    let Some(leg) = gpu else {
+        // nowhere left to go (e.g. IPU-only policy with a dead IPU)
+        return ledger.resolution(
+            id,
+            RequestOutcome::Shed(ShedReason::Unavailable),
+            None,
+            shed_backend(None),
+            0.0,
+            cache,
+        );
+    };
+    if !gpu_breaker.allows(id) {
+        return ledger.resolution(
+            id,
+            RequestOutcome::Shed(ShedReason::Unavailable),
+            None,
+            leg.backend.clone(),
+            0.0,
+            cache,
+        );
+    }
+    ledger.attempts += 1;
+    match plan.inject(id, BackendKind::Gpu, 0) {
+        Some(FaultKind::Unavailable) => {
+            ledger.injected += 1;
+            crate::obs::count("serve.faults.injected", 1);
+            gpu_breaker.on_failure(id);
+            ledger.resolution(
+                id,
+                RequestOutcome::Shed(ShedReason::Unavailable),
+                None,
+                leg.backend.clone(),
+                0.0,
+                cache,
+            )
+        }
+        fault @ (None | Some(_)) => {
+            // None or SlowDevice (the only kinds the GPU can draw)
+            let slow = matches!(fault, Some(FaultKind::SlowDevice));
+            if slow {
+                ledger.injected += 1;
+                crate::obs::count("serve.faults.injected", 1);
+            }
+            gpu_breaker.on_success(id);
+            let (run, secs) = if slow {
+                slowed(&leg.run, plan.profile.slow_factor)
+            } else {
+                (leg.run.clone(), base_seconds(leg))
+            };
+            if policy.past_deadline(ledger.elapsed + secs) {
+                crate::obs::count("serve.deadline.exceeded", 1);
+                return ledger.resolution(
+                    id,
+                    RequestOutcome::Shed(ShedReason::DeadlineExceeded),
+                    None,
+                    leg.backend.clone(),
+                    0.0,
+                    cache,
+                );
+            }
+            let outcome = match reason {
+                None => RequestOutcome::Served,
+                Some(r) => RequestOutcome::Degraded(r),
+            };
+            ledger.resolution(id, outcome, Some(run), leg.backend.clone(), secs, cache)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok_leg(secs: f64, backend: &str) -> BackendLeg {
+        BackendLeg {
+            run: RunOutcome::Ok {
+                seconds: secs,
+                tflops: 10.0,
+                efficiency: 0.5,
+                vertices: Some(100),
+                max_tile_bytes: Some(1 << 16),
+            },
+            backend: backend.to_string(),
+            cache_hit: Some(true),
+            plan_seconds: 0.0,
+        }
+    }
+
+    fn oom_leg(backend: &str) -> BackendLeg {
+        BackendLeg {
+            run: RunOutcome::OutOfMemory,
+            backend: backend.to_string(),
+            cache_hit: Some(false),
+            plan_seconds: 1e-3,
+        }
+    }
+
+    fn breakers() -> (CircuitBreaker, CircuitBreaker) {
+        (
+            CircuitBreaker::new(BreakerConfig::standard()),
+            CircuitBreaker::new(BreakerConfig::standard()),
+        )
+    }
+
+    #[test]
+    fn fault_free_request_serves_on_ipu_bit_identically() {
+        let ipu = ok_leg(3.25e-4, "ipu-sim/GC200");
+        let gpu = ok_leg(9e-4, "gpu-model/A30");
+        let (mut ib, mut gb) = breakers();
+        let r = resolve_one(
+            7,
+            Some(&ipu),
+            Some(&gpu),
+            &FaultPlan::none(),
+            &FaultPolicy::standard(),
+            &mut ib,
+            &mut gb,
+        );
+        assert_eq!(r.outcome, RequestOutcome::Served);
+        assert_eq!(r.backend, "ipu-sim/GC200");
+        assert_eq!(r.attempts, 1);
+        assert_eq!(r.retry_seconds, 0.0);
+        assert_eq!(r.device_seconds.to_bits(), 3.25e-4f64.to_bits());
+        assert_eq!(r.injected, 0);
+        assert!(!r.oom);
+    }
+
+    #[test]
+    fn always_failing_ipu_exhausts_retries_and_degrades_to_gpu() {
+        let ipu = ok_leg(1e-4, "ipu");
+        let gpu = ok_leg(5e-4, "gpu");
+        let plan = FaultPlan::seeded(1, FaultProfile::transient(1000));
+        let policy = FaultPolicy {
+            deadline_s: None,
+            retry: RetryPolicy::standard(2),
+            breaker: BreakerConfig::disabled(),
+        };
+        let mut ib = CircuitBreaker::new(policy.breaker);
+        let mut gb = CircuitBreaker::new(policy.breaker);
+        let r = resolve_one(0, Some(&ipu), Some(&gpu), &plan, &policy, &mut ib, &mut gb);
+        assert_eq!(r.outcome, RequestOutcome::Degraded(DegradeReason::RetriesExhausted));
+        assert_eq!(r.backend, "gpu");
+        assert_eq!(r.attempts, 4, "3 IPU attempts + 1 GPU attempt");
+        assert_eq!(r.injected, 3);
+        assert!(r.retry_seconds > 3e-4, "3 wasted attempts + 2 backoffs");
+        assert_eq!(r.device_seconds, 5e-4);
+    }
+
+    #[test]
+    fn outage_with_no_fallback_sheds_unavailable() {
+        let ipu = ok_leg(1e-4, "ipu");
+        let plan = FaultPlan::seeded(
+            1,
+            FaultProfile { ipu_outages: vec![(0, 10)], ..FaultProfile::none() },
+        );
+        let policy = FaultPolicy {
+            deadline_s: None,
+            retry: RetryPolicy::none(),
+            breaker: BreakerConfig::disabled(),
+        };
+        let (mut ib, mut gb) = breakers();
+        let r = resolve_one(5, Some(&ipu), None, &plan, &policy, &mut ib, &mut gb);
+        assert_eq!(r.outcome, RequestOutcome::Shed(ShedReason::Unavailable));
+        assert!(r.run.is_none());
+        assert_eq!(r.device_seconds, 0.0);
+        // outage attempts waste no device time (nothing launched)
+        assert_eq!(r.retry_seconds, 0.0);
+    }
+
+    #[test]
+    fn slow_device_over_deadline_sheds_under_deadline_serves_scaled() {
+        let ipu = ok_leg(1e-4, "ipu");
+        let plan = FaultPlan::seeded(1, FaultProfile::slow(1000, 100.0));
+        let (mut ib, mut gb) = breakers();
+        // 1e-4 * 100 = 1e-2 > 5e-3: shed
+        let tight = FaultPolicy::standard().with_deadline(5e-3);
+        let r = resolve_one(0, Some(&ipu), None, &plan, &tight, &mut ib, &mut gb);
+        assert_eq!(r.outcome, RequestOutcome::Shed(ShedReason::DeadlineExceeded));
+        // generous deadline: served, with the run slowed 100x
+        let loose = FaultPolicy::standard().with_deadline(1.0);
+        let (mut ib, mut gb) = breakers();
+        let r = resolve_one(0, Some(&ipu), None, &plan, &loose, &mut ib, &mut gb);
+        assert_eq!(r.outcome, RequestOutcome::Served);
+        assert_eq!(r.device_seconds, 1e-2);
+        match r.run.unwrap() {
+            RunOutcome::Ok { seconds, tflops, .. } => {
+                assert_eq!(seconds, 1e-2);
+                assert!((tflops - 0.1).abs() < 1e-12, "throughput scaled down");
+            }
+            RunOutcome::OutOfMemory => panic!("slow device still answers"),
+        }
+    }
+
+    #[test]
+    fn memory_wall_fallback_stays_served_and_never_feeds_the_breaker() {
+        let ipu = oom_leg("ipu");
+        let gpu = ok_leg(2e-3, "gpu");
+        let (mut ib, mut gb) = breakers();
+        let r = resolve_one(
+            3,
+            Some(&ipu),
+            Some(&gpu),
+            &FaultPlan::none(),
+            &FaultPolicy::standard(),
+            &mut ib,
+            &mut gb,
+        );
+        assert_eq!(r.outcome, RequestOutcome::Served, "the wall is a verdict, not a fault");
+        assert_eq!(r.backend, "gpu");
+        assert!(!r.oom, "the GPU answered");
+        assert_eq!(r.cache_hit, Some(false), "the IPU lookup's verdict is kept");
+        assert!(ib.transitions().is_empty(), "breaker never hears about the wall");
+        // without a GPU the OOM verdict itself is served (IPU-only)
+        let (mut ib, mut gb) = breakers();
+        let r = resolve_one(
+            3,
+            Some(&ipu),
+            None,
+            &FaultPlan::none(),
+            &FaultPolicy::standard(),
+            &mut ib,
+            &mut gb,
+        );
+        assert_eq!(r.outcome, RequestOutcome::Served);
+        assert!(r.oom);
+        assert_eq!(r.backend, "ipu");
+    }
+
+    #[test]
+    fn retried_success_returns_the_same_bits_as_first_try() {
+        let ipu = ok_leg(7.75e-4, "ipu");
+        let plan = FaultPlan::seeded(11, FaultProfile::transient(500));
+        // find an id that faults on attempt 0 but recovers on attempt 1
+        let id = (0..500u64)
+            .find(|&id| {
+                plan.inject(id, BackendKind::Ipu, 0).map(FaultKind::is_transient)
+                    == Some(true)
+                    && plan.inject(id, BackendKind::Ipu, 1).is_none()
+            })
+            .expect("a recovering id exists at 50%");
+        let policy = FaultPolicy {
+            deadline_s: None,
+            retry: RetryPolicy::standard(3),
+            breaker: BreakerConfig::disabled(),
+        };
+        let mut ib = CircuitBreaker::new(policy.breaker);
+        let mut gb = CircuitBreaker::new(policy.breaker);
+        let retried = resolve_one(id, Some(&ipu), None, &plan, &policy, &mut ib, &mut gb);
+        let clean = resolve_one(
+            id,
+            Some(&ipu),
+            None,
+            &FaultPlan::none(),
+            &policy,
+            &mut CircuitBreaker::new(policy.breaker),
+            &mut CircuitBreaker::new(policy.breaker),
+        );
+        assert_eq!(retried.outcome, RequestOutcome::Served);
+        assert_eq!(retried.attempts, 2);
+        assert_eq!(
+            retried.device_seconds.to_bits(),
+            clean.device_seconds.to_bits(),
+            "the retried answer is the first-try answer, bit for bit"
+        );
+        assert!(retried.retry_seconds > clean.retry_seconds);
+    }
+
+    #[test]
+    fn breaker_open_degrades_without_attempting_the_ipu() {
+        let ipu = ok_leg(1e-4, "ipu");
+        let gpu = ok_leg(5e-4, "gpu");
+        let policy = FaultPolicy::standard();
+        let mut ib = CircuitBreaker::new(policy.breaker);
+        let mut gb = CircuitBreaker::new(policy.breaker);
+        // trip the IPU breaker by hand at tick 0
+        for _ in 0..3 {
+            ib.allows(0);
+            ib.on_failure(0);
+        }
+        let r = resolve_one(
+            1,
+            Some(&ipu),
+            Some(&gpu),
+            &FaultPlan::none(),
+            &policy,
+            &mut ib,
+            &mut gb,
+        );
+        assert_eq!(r.outcome, RequestOutcome::Degraded(DegradeReason::BreakerOpen));
+        assert_eq!(r.attempts, 1, "only the GPU attempt ran");
+        assert_eq!(r.backend, "gpu");
+    }
+}

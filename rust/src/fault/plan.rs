@@ -1,0 +1,382 @@
+//! Seeded, deterministic fault plans.
+//!
+//! A [`FaultPlan`] decides — purely as a function of `(seed, request id,
+//! backend, attempt)` — whether a dispatch attempt fails, runs slow, or
+//! panics its worker. No wall clock, no shared state: the same seed and
+//! profile reproduce the same fault sequence bit-identically on any
+//! machine, worker count, or run. That is what the simulator buys us
+//! over real hardware (Jia et al. document the exchange-fabric and
+//! tile-memory failure surfaces; here they are *replayable*).
+//!
+//! Fault draws use a splitmix64-finalizer hash chain, not the stateful
+//! `util::rng::Rng`: every `(id, backend, attempt)` coordinate is hashed
+//! independently, so injecting a fault for request 40 never perturbs the
+//! draw for request 41 — the property the shrinking harness
+//! (`fault::chaos::shrink_failing`) relies on to remove requests from a
+//! trace without changing the faults the survivors see.
+
+/// Which simulated device a dispatch attempt targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The IPU simulator (`Backend::IpuSim`).
+    Ipu,
+    /// The analytical GPU model (`Backend::GpuModel`).
+    Gpu,
+}
+
+impl BackendKind {
+    fn tag(self) -> u64 {
+        match self {
+            BackendKind::Ipu => 0x1F0,
+            BackendKind::Gpu => 0x6F0,
+        }
+    }
+}
+
+/// The failure taxonomy the plan can inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Transient IPU-sim fault: an exchange-fabric link dropped the
+    /// spread phase mid-superstep. The attempt's device time is wasted;
+    /// a retry may succeed.
+    ExchangeLinkDrop,
+    /// Transient IPU-sim fault: a tile ran out of SRAM under a racing
+    /// co-tenant (distinct from the deterministic §2.4 memory wall,
+    /// which is a *verdict*, not a fault). Wasted attempt; retryable.
+    TileOomFlake,
+    /// The device answered, but slower by the profile's `slow_factor`
+    /// (congested exchange / downclocked device). Not a failure — the
+    /// result is valid — but it can blow a deadline.
+    SlowDevice,
+    /// Hard unavailability window: the backend is down for a range of
+    /// request ids. The attempt costs no device time and always fails.
+    Unavailable,
+    /// The batch worker panics mid-dispatch (poisoned lock territory).
+    WorkerPanic,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::ExchangeLinkDrop => "exchange-link-drop",
+            FaultKind::TileOomFlake => "tile-oom-flake",
+            FaultKind::SlowDevice => "slow-device",
+            FaultKind::Unavailable => "unavailable",
+            FaultKind::WorkerPanic => "worker-panic",
+        }
+    }
+
+    /// Transient faults waste the attempt's device time and are worth
+    /// retrying; `SlowDevice` is not a failure at all.
+    pub fn is_transient(self) -> bool {
+        matches!(self, FaultKind::ExchangeLinkDrop | FaultKind::TileOomFlake)
+    }
+}
+
+/// Fault rates and windows, independent of the seed. Rates are permille
+/// (0..=1000) so profiles stay exact integers — no float thresholds in
+/// the determinism-critical path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultProfile {
+    /// Per-attempt probability (permille) of a transient IPU fault
+    /// (exchange-link drop or tile-OOM flake, split evenly by a hash
+    /// bit). IPU-sim only: the GPU model has no exchange fabric.
+    pub transient_permille: u32,
+    /// Per-attempt probability (permille) of a slow-device spike, on
+    /// either backend. Evaluated after the transient band, so
+    /// `transient + slow` must stay <= 1000.
+    pub slow_permille: u32,
+    /// Latency multiplier a slow-device spike applies.
+    pub slow_factor: f64,
+    /// Per-request probability (permille) that the batch worker panics
+    /// while dispatching this request.
+    pub panic_permille: u32,
+    /// Hard IPU unavailability windows as `[start, end)` request-id
+    /// ranges — deterministic by construction.
+    pub ipu_outages: Vec<(u64, u64)>,
+    /// Hard GPU-model unavailability windows, same convention.
+    pub gpu_outages: Vec<(u64, u64)>,
+}
+
+impl FaultProfile {
+    /// No faults at all.
+    pub fn none() -> FaultProfile {
+        FaultProfile {
+            transient_permille: 0,
+            slow_permille: 0,
+            slow_factor: 1.0,
+            panic_permille: 0,
+            ipu_outages: Vec::new(),
+            gpu_outages: Vec::new(),
+        }
+    }
+
+    /// Transient IPU faults at `permille`/1000 per attempt.
+    pub fn transient(permille: u32) -> FaultProfile {
+        assert!(permille <= 1000, "permille rate out of range");
+        FaultProfile { transient_permille: permille, ..FaultProfile::none() }
+    }
+
+    /// Slow-device spikes at `permille`/1000 per attempt, `factor`x.
+    pub fn slow(permille: u32, factor: f64) -> FaultProfile {
+        assert!(permille <= 1000 && factor >= 1.0, "bad slow profile");
+        FaultProfile { slow_permille: permille, slow_factor: factor, ..FaultProfile::none() }
+    }
+
+    /// True when the profile can never inject anything.
+    pub fn is_zero(&self) -> bool {
+        self.transient_permille == 0
+            && self.slow_permille == 0
+            && self.panic_permille == 0
+            && self.ipu_outages.is_empty()
+            && self.gpu_outages.is_empty()
+    }
+
+    /// Named profiles for the CLI (`ipumm chaos --profiles ...`,
+    /// `ipumm serve --fault-profile ...`).
+    ///
+    /// `breaker-trip` is deterministic *by construction*: a pure IPU
+    /// outage over ids `[40, 60)` with no probabilistic faults, so under
+    /// the standard policy (3 consecutive failures, 25-tick cooldown,
+    /// one half-open probe) the IPU breaker opens at tick 40, half-opens
+    /// at 65, and re-closes on the id-65 probe — exactly 25 requests
+    /// degrade to the GPU, independent of the seed.
+    pub fn by_name(name: &str) -> Option<FaultProfile> {
+        Some(match name {
+            "none" => FaultProfile::none(),
+            "transient" => FaultProfile::transient(100),
+            "transient-heavy" => FaultProfile::transient(250),
+            "slow" => FaultProfile::slow(150, 1000.0),
+            "breaker-trip" => {
+                FaultProfile { ipu_outages: vec![(40, 60)], ..FaultProfile::none() }
+            }
+            "gpu-outage" => {
+                FaultProfile { gpu_outages: vec![(30, 50)], ..FaultProfile::none() }
+            }
+            "panic" => FaultProfile { panic_permille: 30, ..FaultProfile::none() },
+            "mixed" => FaultProfile {
+                transient_permille: 100,
+                slow_permille: 50,
+                slow_factor: 200.0,
+                panic_permille: 10,
+                ipu_outages: vec![(60, 75)],
+                gpu_outages: Vec::new(),
+            },
+            _ => return None,
+        })
+    }
+
+    /// Every name [`Self::by_name`] accepts, for usage/error text.
+    pub fn names() -> &'static [&'static str] {
+        &[
+            "none", "transient", "transient-heavy", "slow", "breaker-trip", "gpu-outage",
+            "panic", "mixed",
+        ]
+    }
+}
+
+/// A seeded fault plan: profile + seed, queried per dispatch attempt.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub profile: FaultProfile,
+}
+
+const SALT_FAULT: u64 = 0xFA17;
+const SALT_SPLIT: u64 = 0x5711;
+const SALT_PANIC: u64 = 0xBAD;
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// The identity plan: injects nothing, ever. With this plan the
+    /// serve path is bit-identical to a fault-layer-free build (the
+    /// repo's crown-jewel invariant, property-tested).
+    pub fn none() -> FaultPlan {
+        FaultPlan { seed: 0, profile: FaultProfile::none() }
+    }
+
+    pub fn seeded(seed: u64, profile: FaultProfile) -> FaultPlan {
+        assert!(
+            profile.transient_permille + profile.slow_permille <= 1000,
+            "transient + slow permille bands overflow the draw"
+        );
+        FaultPlan { seed, profile }
+    }
+
+    /// True when this plan can inject at least one fault kind.
+    pub fn is_active(&self) -> bool {
+        !self.profile.is_zero()
+    }
+
+    fn draw(&self, id: u64, backend: BackendKind, attempt: u32, salt: u64) -> u64 {
+        let mut h = splitmix64(self.seed ^ salt);
+        h = splitmix64(h ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        h = splitmix64(h ^ backend.tag());
+        splitmix64(h ^ attempt as u64)
+    }
+
+    fn in_window(windows: &[(u64, u64)], id: u64) -> bool {
+        windows.iter().any(|&(start, end)| id >= start && id < end)
+    }
+
+    /// The fault (if any) this plan injects into one dispatch attempt.
+    /// Pure: same `(id, backend, attempt)` always answers the same.
+    /// Outage windows dominate the probabilistic bands — a down device
+    /// is down regardless of what the dice say.
+    pub fn inject(&self, id: u64, backend: BackendKind, attempt: u32) -> Option<FaultKind> {
+        let p = &self.profile;
+        let outages = match backend {
+            BackendKind::Ipu => &p.ipu_outages,
+            BackendKind::Gpu => &p.gpu_outages,
+        };
+        if Self::in_window(outages, id) {
+            return Some(FaultKind::Unavailable);
+        }
+        if p.transient_permille == 0 && p.slow_permille == 0 {
+            return None;
+        }
+        let roll = (self.draw(id, backend, attempt, SALT_FAULT) % 1000) as u32;
+        match backend {
+            BackendKind::Ipu => {
+                if roll < p.transient_permille {
+                    // split the transient band into the two concrete
+                    // IPU failure modes by an independent hash bit
+                    if self.draw(id, backend, attempt, SALT_SPLIT) & 1 == 0 {
+                        Some(FaultKind::ExchangeLinkDrop)
+                    } else {
+                        Some(FaultKind::TileOomFlake)
+                    }
+                } else if roll < p.transient_permille + p.slow_permille {
+                    Some(FaultKind::SlowDevice)
+                } else {
+                    None
+                }
+            }
+            // the GPU model has no exchange fabric or tile SRAM: only
+            // slow spikes and outage windows apply
+            BackendKind::Gpu => (roll < p.slow_permille).then_some(FaultKind::SlowDevice),
+        }
+    }
+
+    /// Whether the batch worker panics while dispatching request `id`.
+    /// Keyed by id only (not attempt): the panic kills the dispatch
+    /// before any retry machinery runs.
+    pub fn injects_panic(&self, id: u64) -> bool {
+        self.profile.panic_permille > 0
+            && (self.draw(id, BackendKind::Ipu, 0, SALT_PANIC) % 1000) as u32
+                < self.profile.panic_permille
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_injects_nothing() {
+        let plan = FaultPlan::none();
+        assert!(!plan.is_active());
+        for id in 0..500u64 {
+            for attempt in 0..4 {
+                assert_eq!(plan.inject(id, BackendKind::Ipu, attempt), None);
+                assert_eq!(plan.inject(id, BackendKind::Gpu, attempt), None);
+            }
+            assert!(!plan.injects_panic(id));
+        }
+    }
+
+    #[test]
+    fn injections_are_a_pure_function_of_coordinates() {
+        let plan = FaultPlan::seeded(42, FaultProfile::by_name("mixed").unwrap());
+        let again = FaultPlan::seeded(42, FaultProfile::by_name("mixed").unwrap());
+        for id in 0..300u64 {
+            for attempt in 0..4 {
+                for backend in [BackendKind::Ipu, BackendKind::Gpu] {
+                    assert_eq!(
+                        plan.inject(id, backend, attempt),
+                        again.inject(id, backend, attempt),
+                        "id {id} attempt {attempt} {backend:?}"
+                    );
+                }
+            }
+            assert_eq!(plan.injects_panic(id), again.injects_panic(id));
+        }
+    }
+
+    #[test]
+    fn different_seeds_draw_different_fault_sets() {
+        let a = FaultPlan::seeded(1, FaultProfile::transient(250));
+        let b = FaultPlan::seeded(2, FaultProfile::transient(250));
+        let faults = |p: &FaultPlan| {
+            (0..400u64)
+                .filter(|&id| p.inject(id, BackendKind::Ipu, 0).is_some())
+                .collect::<Vec<_>>()
+        };
+        assert_ne!(faults(&a), faults(&b), "seeds must decorrelate");
+    }
+
+    #[test]
+    fn transient_rate_lands_near_the_configured_permille() {
+        let plan = FaultPlan::seeded(7, FaultProfile::transient(250));
+        let n = 4000u64;
+        let hits = (0..n)
+            .filter(|&id| {
+                matches!(
+                    plan.inject(id, BackendKind::Ipu, 0),
+                    Some(k) if k.is_transient()
+                )
+            })
+            .count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.03, "rate {rate} far from 250 permille");
+        // transient faults never hit the GPU model
+        assert!((0..n).all(|id| {
+            !matches!(plan.inject(id, BackendKind::Gpu, 0), Some(k) if k.is_transient())
+        }));
+    }
+
+    #[test]
+    fn outage_windows_dominate_and_bound_exactly() {
+        let plan = FaultPlan::seeded(
+            3,
+            FaultProfile { ipu_outages: vec![(40, 60)], ..FaultProfile::none() },
+        );
+        for id in 0..100u64 {
+            let fault = plan.inject(id, BackendKind::Ipu, 2);
+            if (40..60).contains(&id) {
+                assert_eq!(fault, Some(FaultKind::Unavailable), "id {id}");
+            } else {
+                assert_eq!(fault, None, "id {id}");
+            }
+            assert_eq!(plan.inject(id, BackendKind::Gpu, 0), None, "GPU unaffected");
+        }
+    }
+
+    #[test]
+    fn attempts_draw_independently_so_retries_can_succeed() {
+        // with a 50% transient rate, some faulted first attempts must
+        // see a clean second attempt — otherwise retrying is pointless
+        let plan = FaultPlan::seeded(11, FaultProfile::transient(500));
+        let recovered = (0..200u64).any(|id| {
+            plan.inject(id, BackendKind::Ipu, 0).is_some()
+                && plan.inject(id, BackendKind::Ipu, 1).is_none()
+        });
+        assert!(recovered, "no faulted request recovers on attempt 1");
+    }
+
+    #[test]
+    fn named_profiles_parse_and_unknown_names_do_not() {
+        for name in FaultProfile::names() {
+            assert!(FaultProfile::by_name(name).is_some(), "{name}");
+        }
+        assert!(FaultProfile::by_name("meteor-strike").is_none());
+        assert!(FaultProfile::by_name("none").unwrap().is_zero());
+        assert!(!FaultProfile::by_name("breaker-trip").unwrap().is_zero());
+    }
+}

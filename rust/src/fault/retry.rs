@@ -1,0 +1,167 @@
+//! Retry budgets, capped exponential backoff with deterministic jitter,
+//! and the per-request deadline knob.
+//!
+//! All time here is **model time** (the same clock `RunOutcome::seconds`
+//! reports): wasted attempts, backoff and the deadline ledger are summed
+//! in seconds the cost model predicts, never wall-clock — so the retry
+//! layer stays bit-deterministic across machines and worker counts.
+
+use crate::fault::breaker::BreakerConfig;
+
+/// Capped exponential backoff with seeded jitter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = try once).
+    pub max_retries: u32,
+    /// Backoff before retry 1 (doubles per retry).
+    pub base_backoff_s: f64,
+    /// Backoff cap.
+    pub max_backoff_s: f64,
+    /// Jitter amplitude as permille of the backoff: the drawn backoff is
+    /// `b * (1 + jitter * u)` for a seeded `u` in [-1, 1).
+    pub jitter_permille: u32,
+}
+
+impl RetryPolicy {
+    /// Never retry.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            base_backoff_s: 0.0,
+            max_backoff_s: 0.0,
+            jitter_permille: 0,
+        }
+    }
+
+    /// The serving default: `max_retries` retries, 0.2ms base backoff
+    /// doubling to a 2ms cap, 25% jitter. Scaled to the model clock,
+    /// where device times are 1us..10ms.
+    pub fn standard(max_retries: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_retries,
+            base_backoff_s: 2e-4,
+            max_backoff_s: 2e-3,
+            jitter_permille: 250,
+        }
+    }
+
+    /// Backoff charged before retry `attempt` (0-based: the backoff
+    /// between attempt `attempt` and `attempt + 1`). Deterministic in
+    /// `(seed, id, attempt)` — the jitter is hashed, not sampled.
+    pub fn backoff_seconds(&self, seed: u64, id: u64, attempt: u32) -> f64 {
+        if self.base_backoff_s <= 0.0 {
+            return 0.0;
+        }
+        let exp = self.base_backoff_s * 2f64.powi(attempt.min(30) as i32);
+        let capped = exp.min(self.max_backoff_s);
+        if self.jitter_permille == 0 {
+            return capped;
+        }
+        // u in [-1, 1) from a splitmix64-style finalizer over the jitter
+        // coordinates; same chain as FaultPlan so runs replay exactly
+        let mut z = (seed ^ 0x0FF5E7)
+            .wrapping_add(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(id.wrapping_mul(0xD129_0215_04A3_59DB))
+            .wrapping_add(attempt as u64);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0;
+        let jitter = self.jitter_permille as f64 / 1000.0;
+        capped * (1.0 + jitter * u)
+    }
+}
+
+/// The whole per-request fault policy: deadline + retry + breaker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPolicy {
+    /// Model-time latency budget per request (waste + backoff + device
+    /// seconds). `None` = no deadline, nothing is shed for lateness.
+    pub deadline_s: Option<f64>,
+    pub retry: RetryPolicy,
+    pub breaker: BreakerConfig,
+}
+
+impl FaultPolicy {
+    /// The do-nothing policy: no deadline, no retries, breaker disabled.
+    /// With a passthrough policy *and* `FaultPlan::none()` the service
+    /// takes the legacy dispatch path verbatim.
+    pub fn passthrough() -> FaultPolicy {
+        FaultPolicy {
+            deadline_s: None,
+            retry: RetryPolicy::none(),
+            breaker: BreakerConfig::disabled(),
+        }
+    }
+
+    /// The serving default: no deadline unless set, 3 retries, standard
+    /// breaker.
+    pub fn standard() -> FaultPolicy {
+        FaultPolicy {
+            deadline_s: None,
+            retry: RetryPolicy::standard(3),
+            breaker: BreakerConfig::standard(),
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline_s: f64) -> FaultPolicy {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    pub fn is_passthrough(&self) -> bool {
+        self == &FaultPolicy::passthrough()
+    }
+
+    /// True when `elapsed` model seconds blow the deadline.
+    pub fn past_deadline(&self, elapsed: f64) -> bool {
+        matches!(self.deadline_s, Some(d) if elapsed > d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy {
+            max_retries: 8,
+            base_backoff_s: 1e-4,
+            max_backoff_s: 8e-4,
+            jitter_permille: 0,
+        };
+        assert_eq!(p.backoff_seconds(0, 0, 0), 1e-4);
+        assert_eq!(p.backoff_seconds(0, 0, 1), 2e-4);
+        assert_eq!(p.backoff_seconds(0, 0, 2), 4e-4);
+        assert_eq!(p.backoff_seconds(0, 0, 3), 8e-4);
+        assert_eq!(p.backoff_seconds(0, 0, 7), 8e-4, "capped");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_bounded_and_id_dependent() {
+        let p = RetryPolicy::standard(3);
+        let b0 = p.backoff_seconds(42, 7, 0);
+        assert_eq!(b0, p.backoff_seconds(42, 7, 0), "replays bit-identically");
+        // +-25% around the 2e-4 base
+        assert!(b0 >= 2e-4 * 0.75 && b0 < 2e-4 * 1.25, "b0 {b0}");
+        let different = (0..50u64).any(|id| p.backoff_seconds(42, id, 0) != b0);
+        assert!(different, "jitter must decorrelate ids");
+    }
+
+    #[test]
+    fn none_policy_backs_off_zero() {
+        assert_eq!(RetryPolicy::none().backoff_seconds(1, 2, 3), 0.0);
+    }
+
+    #[test]
+    fn passthrough_detection_and_deadline() {
+        assert!(FaultPolicy::passthrough().is_passthrough());
+        assert!(!FaultPolicy::standard().is_passthrough());
+        let p = FaultPolicy::passthrough().with_deadline(1e-3);
+        assert!(!p.is_passthrough(), "a deadline is an active policy");
+        assert!(!p.past_deadline(1e-3), "budget is inclusive");
+        assert!(p.past_deadline(1.001e-3));
+        assert!(!FaultPolicy::standard().past_deadline(f64::MAX), "no deadline");
+    }
+}

@@ -3,7 +3,7 @@
 //! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
 //! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
 //!
-//! The crate has nine roles (see DESIGN.md):
+//! The crate has ten roles (see DESIGN.md):
 //!
 //! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
 //!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
@@ -104,6 +104,28 @@
 //!    --metrics-out`, gated by `ipumm slo-check`). Cross-run perf drift
 //!    is gated by `ipumm bench-check --against` over baseline-normalized
 //!    bench means (`util::bench::trend_verdicts`).
+//! 10. **Fault tolerance & chaos testing** — [`fault`] makes the serving
+//!    layer degrade instead of fall over, without giving up determinism:
+//!    a seeded `FaultPlan` injects transient IPU faults (exchange-link
+//!    drops, tile-OOM flakes), slow-device spikes, hard unavailability
+//!    windows, and worker panics, each draw a pure hash of
+//!    `(request id, backend, attempt)` so every run and worker count sees
+//!    the same faults; a per-request `FaultPolicy` adds model-time
+//!    deadlines, capped-exponential retry with seeded jitter
+//!    (`fault::retry`), and a per-backend closed→open→half-open circuit
+//!    breaker (`fault::breaker`) that degrades IPU traffic to the GPU
+//!    baseline while open; serve workers run under `catch_unwind` so an
+//!    injected panic fails only its own request (`RequestOutcome::
+//!    Panicked`) and poisoned cache/queue locks recover instead of
+//!    cascading. Every request ends in an explicit
+//!    `fault::RequestOutcome` (served / degraded / shed / panicked — no
+//!    request is ever silently lost), counters and retry-latency
+//!    histograms flow through the role-9 metrics pipeline, and `ipumm
+//!    chaos` runs a scenario matrix over a seeded trace into a JSON
+//!    recovery report (`fault::chaos`, with ddmin-style shrinking of
+//!    failing scenarios to a minimal (request, fault) pair). With faults
+//!    disabled the served trace is bit-identical to the passthrough path
+//!    (property-tested).
 //!
 //! [`coordinator`] orchestrates benchmark jobs across these backends, and
 //! [`experiments`] regenerates each of the paper's tables and figures.
@@ -117,6 +139,7 @@ pub mod bsp;
 pub mod exchange;
 pub mod coordinator;
 pub mod experiments;
+pub mod fault;
 pub mod gpu;
 pub mod graph;
 pub mod ipu;

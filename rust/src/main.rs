@@ -24,6 +24,8 @@
 //! ipumm serve [--jobs N] [--cache N] [--batch N] [--warmup N]
 //!             [--trace-out FILE] [--metrics-out FILE]
 //!             [--slo "p99<5ms@99%[;...]"] [--window N]
+//!             [--deadline-ms MS] [--retries N] [--fault-seed N]
+//!             [--fault-profile NAME]
 //!                              matmul-as-a-service demo (plan cache,
 //!                              shape bucketing, coalescing dispatch;
 //!                              --artifacts DIR + --features xla anchors
@@ -35,7 +37,27 @@
 //!                              JSON snapshot at FILE.json with the
 //!                              per-window timeline; --slo evaluates
 //!                              ';'-separated SLO specs and exits
-//!                              nonzero when one is violated)
+//!                              nonzero when one is violated;
+//!                              --fault-seed/--fault-profile turn on
+//!                              seeded fault injection and
+//!                              --deadline-ms/--retries configure the
+//!                              per-request deadline + retry + circuit
+//!                              breaker policy — every request then ends
+//!                              in an explicit served/degraded/shed/
+//!                              panicked outcome)
+//! ipumm chaos [--jobs N] [--seed N] [--profiles a,b,...] [--json FILE]
+//!             [--deadline-ms MS] [--retries N] [--workers N]
+//!                              fault-injection scenario matrix over the
+//!                              seeded paper-mix trace: runs each named
+//!                              fault profile (none|transient|
+//!                              transient-heavy|slow|breaker-trip|
+//!                              gpu-outage|panic|mixed) through the
+//!                              serving layer and prints a recovery
+//!                              report (outcome accounting, retries,
+//!                              breaker transitions, latency quantiles);
+//!                              exits nonzero if any request is lost or
+//!                              outcome accounting does not balance;
+//!                              --json dumps the report
 //! ipumm slo-check --slo SPEC [--jobs N] [--seed N] [--window N]
 //!           | --snapshot FILE  SLO gate: serve the demo trace (or read
 //!                              a --metrics-out JSON snapshot) and exit
@@ -77,6 +99,7 @@ use ipumm::experiments::{
     table1, vertices,
 };
 use ipumm::coordinator::runner::ThreadBudget;
+use ipumm::fault::{FaultPlan, FaultPolicy, FaultProfile};
 use ipumm::planner::cost::CostConfig;
 use ipumm::planner::partition::MmShape;
 use ipumm::planner::search::{search_with_workers, search_workers};
@@ -95,6 +118,7 @@ const OPTIONS: &[&str] = &[
     "arch", "gpu", "csv", "json", "workers", "max-size", "ks", "artifacts", "block", "chips",
     "jobs", "seed", "cache", "batch", "warmup", "k", "kind", "densities", "dir", "tolerance",
     "trace-out", "chrome", "metrics-out", "slo", "window", "against", "snapshot",
+    "deadline-ms", "retries", "fault-seed", "fault-profile", "profiles",
 ];
 const FLAGS: &[&str] = &["real", "verbose"];
 
@@ -116,7 +140,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|sparse|bench-check|slo-check|streaming|multiipu|e2e|all> [args]"
+        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|chaos|sparse|bench-check|slo-check|streaming|multiipu|e2e|all> [args]"
     );
     eprintln!("see rust/src/main.rs header for per-command options");
 }
@@ -146,6 +170,18 @@ fn shape_from(args: &Args) -> Result<MmShape> {
         args.pos_usize(1, "n")?,
         args.pos_usize(2, "k")?,
     ))
+}
+
+/// `--deadline-ms` as model-time seconds; `None` when the flag is absent.
+fn deadline_seconds(args: &Args) -> Result<Option<f64>> {
+    match args.opt("deadline-ms") {
+        Some(_) => {
+            let ms = args.opt_f64("deadline-ms", 0.0)?;
+            anyhow::ensure!(ms > 0.0, "--deadline-ms must be > 0");
+            Ok(Some(ms / 1e3))
+        }
+        None => Ok(None),
+    }
 }
 
 /// The effective worker budget for perf-reproducible runs: every
@@ -348,6 +384,49 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
             anyhow::ensure!(cache_capacity >= 1, "--cache must be >= 1");
             let max_batch = args.opt_usize("batch", 32)?;
             anyhow::ensure!(max_batch >= 1, "--batch must be >= 1");
+            // fault-tolerance knobs: any of them switches dispatch onto
+            // the deterministic resolve-then-serve path (lib.rs role 10)
+            let deadline_s = deadline_seconds(&args)?;
+            let retries = args.opt_usize_opt("retries")?;
+            let fault_seed = args.opt_usize_opt("fault-seed")?.map(|s| s as u64);
+            let profile = match args.opt("fault-profile") {
+                Some(name) => FaultProfile::by_name(name).with_context(|| {
+                    format!(
+                        "unknown fault profile '{name}' (known: {})",
+                        FaultProfile::names().join(", ")
+                    )
+                })?,
+                // a bare --fault-seed means "inject the default mix"
+                None if fault_seed.is_some() => {
+                    FaultProfile::by_name("transient").expect("transient is a known profile")
+                }
+                None => FaultProfile::none(),
+            };
+            let faults = if profile.is_zero() {
+                FaultPlan::none()
+            } else {
+                FaultPlan::seeded(fault_seed.unwrap_or(seed), profile)
+            };
+            let fault_policy = if faults.is_active() || deadline_s.is_some() || retries.is_some()
+            {
+                let mut p = FaultPolicy::standard();
+                p.deadline_s = deadline_s;
+                if let Some(r) = retries {
+                    p.retry = ipumm::fault::RetryPolicy::standard(r as u32);
+                }
+                p
+            } else {
+                FaultPolicy::passthrough()
+            };
+            if faults.is_active() {
+                println!(
+                    "fault injection: seed {} over {} requests (deadline {}, {} retries)",
+                    fault_seed.unwrap_or(seed),
+                    n_jobs,
+                    deadline_s.map_or_else(|| "off".into(), |d| format!("{:.1}ms", d * 1e3)),
+                    fault_policy.retry.max_retries,
+                );
+            }
             let config = ServiceConfig {
                 arch,
                 gpu,
@@ -356,6 +435,8 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                 max_batch,
                 // real-PJRT anchor when built with --features xla
                 artifacts: args.opt("artifacts").map(std::path::PathBuf::from),
+                faults,
+                fault_policy,
                 ..ServiceConfig::default()
             };
             let trace_path = args.opt("trace-out");
@@ -440,6 +521,48 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                     "SLO violated over the served trace (see verdict lines above)"
                 );
             }
+        }
+        "chaos" => {
+            let (args, arch, gpu, workers) = parse_common(raw)?;
+            let n_jobs = args.opt_usize("jobs", 200)?;
+            let seed = args.opt_usize("seed", 42)? as u64;
+            let deadline_s = deadline_seconds(&args)?;
+            let retries = args.opt_usize("retries", 3)? as u32;
+            let names = args.opt_or(
+                "profiles",
+                "transient,transient-heavy,slow,breaker-trip,panic,mixed",
+            );
+            let mut scenarios = Vec::new();
+            for name in names.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                scenarios.push(
+                    ipumm::fault::chaos::scenario(name, deadline_s, retries)
+                        .map_err(|e| anyhow::anyhow!(e))?,
+                );
+            }
+            anyhow::ensure!(!scenarios.is_empty(), "--profiles named no scenarios");
+            println!("{}", budget_line(workers));
+            let report =
+                ipumm::fault::chaos::run_matrix(&arch, &gpu, n_jobs, seed, workers, &scenarios);
+            println!("{}", report.to_table().to_ascii());
+            if let Some(path) = args.opt("json") {
+                std::fs::write(path, report.to_json().render())
+                    .with_context(|| format!("writing {path}"))?;
+                println!("(json -> {path})");
+            }
+            let violations = report.violations();
+            for v in &violations {
+                eprintln!("chaos violation: {v}");
+            }
+            anyhow::ensure!(
+                violations.is_empty(),
+                "{} recovery invariant(s) violated over the chaos matrix",
+                violations.len()
+            );
+            println!(
+                "chaos: {} scenario(s) x {} requests — zero lost, outcome accounting exact",
+                report.scenarios.len(),
+                n_jobs
+            );
         }
         "slo-check" => {
             let (args, arch, gpu, workers) = parse_common(raw)?;

@@ -390,7 +390,11 @@ impl PlanCache {
     }
 
     fn lock<'a>(&self, shard: &'a Mutex<Inner>) -> std::sync::MutexGuard<'a, Inner> {
-        shard.lock().expect("plan cache poisoned")
+        // a worker that panicked mid-lookup poisons the shard, but every
+        // write under this lock is a complete entry insertion or LRU
+        // touch — the map is valid after an unwind, so recover instead
+        // of cascading the panic into every later serve call
+        shard.lock().unwrap_or_else(|e| e.into_inner())
     }
 }
 
@@ -398,6 +402,32 @@ impl PlanCache {
 mod tests {
     use super::*;
     use std::sync::Arc;
+
+    #[test]
+    fn poisoned_shards_recover_after_a_worker_panic() {
+        let arch = IpuArch::gc200();
+        let cache = PlanCache::new(8);
+        let shape = MmShape::square(768);
+        cache.get_or_plan(&arch, shape).unwrap();
+        // a panicking worker unwinds while holding each shard lock
+        for shard in &cache.shards {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _guard = shard.lock().unwrap_or_else(|e| e.into_inner());
+                panic!("worker died mid-lookup");
+            }));
+        }
+        assert!(
+            cache.shards.iter().all(|s| s.lock().is_err()),
+            "every shard mutex must actually be poisoned"
+        );
+        // per-entry writes are atomic: the state is valid, so later
+        // lookups recover instead of cascading the dead worker's panic
+        let warm = cache.get_or_plan(&arch, shape).unwrap();
+        assert!(warm.cost.total_cycles > 0);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1), "pre-panic entry intact");
+        assert_eq!(cache.len(), 1);
+    }
 
     #[test]
     fn hit_returns_identical_plan() {

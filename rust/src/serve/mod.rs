@@ -31,6 +31,15 @@
 //! * [`telemetry`] — per-`(bucket, sparsity)` latency/throughput/cache
 //!   records that reuse [`crate::coordinator::metrics`] for rendering.
 //!
+//! Dispatch is fault-aware: when a [`crate::fault::FaultPlan`] or an
+//! active [`crate::fault::FaultPolicy`] is configured on
+//! [`ServiceConfig`], every request is resolved through the seeded
+//! injection / retry / circuit-breaker layer in [`crate::fault`] before
+//! workers run, each request ends with an explicit
+//! [`crate::fault::RequestOutcome`], and workers are panic-isolated via
+//! `catch_unwind`. With faults disabled the served trace is bit-identical
+//! to the passthrough path (property-tested).
+//!
 //! The demo driver is `examples/serve_demo.rs`; `benches/bench_serve.rs`
 //! measures cached-vs-cold planning throughput.
 
@@ -44,4 +53,4 @@ pub use bucket::BucketLadder;
 pub use cache::{CacheStats, PlanCache};
 pub use queue::{AdmissionError, Batch, MmRequest, QueueStats, RequestQueue};
 pub use service::{DispatchPolicy, MmService, ServiceConfig};
-pub use telemetry::{RequestRecord, ServeReport};
+pub use telemetry::{FaultStats, RequestRecord, ServeReport};

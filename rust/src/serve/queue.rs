@@ -184,7 +184,7 @@ impl RequestQueue {
             inner = self
                 .not_full
                 .wait(inner)
-                .expect("request queue poisoned");
+                .unwrap_or_else(|e| e.into_inner());
         }
         if inner.closed {
             return Err(AdmissionError::Closed);
@@ -249,7 +249,7 @@ impl RequestQueue {
             inner = self
                 .not_empty
                 .wait(inner)
-                .expect("request queue poisoned");
+                .unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -260,7 +260,10 @@ impl RequestQueue {
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, QueueInner> {
-        self.inner.lock().expect("request queue poisoned")
+        // per-entry pushes/pops are atomic under this lock, so the queue
+        // is valid even after a panicking worker poisoned it — recover
+        // rather than take down every subsequent submit/drain
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 }
 
@@ -271,6 +274,30 @@ mod tests {
 
     fn req(id: u64, s: usize) -> MmRequest {
         MmRequest::new(id, MmShape::square(s), MmShape::square(s))
+    }
+
+    #[test]
+    fn poisoned_queue_recovers_after_a_worker_panic() {
+        let q = RequestQueue::new(8);
+        q.submit(req(0, 512)).unwrap();
+        // a panicking worker unwinds while holding the queue lock
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = q.inner.lock().unwrap();
+            panic!("worker died mid-drain");
+        }));
+        assert!(q.inner.lock().is_err(), "queue mutex must actually be poisoned");
+        // submissions and drains recover: the queue's state was valid
+        // when the worker died, so nothing cascades
+        q.submit(req(1, 512)).unwrap();
+        q.submit_blocking(req(2, 512)).unwrap();
+        let batch = q.next_batch(8).unwrap();
+        assert_eq!(
+            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "pre-panic request drains alongside post-panic ones"
+        );
+        assert_eq!(q.stats().submitted, 3);
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //!   verified against the oracle, so the serving path stays anchored to
 //!   actually-performed multiplications.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -27,6 +28,10 @@ use crate::obs::sketch::QuantileSketch;
 use crate::coordinator::device::{run_shape, Backend, RunOutcome};
 use crate::coordinator::metrics::{MetricsRecord, MetricsTable};
 use crate::coordinator::runner::default_workers;
+use crate::fault::{
+    resolve_one, BackendLeg, BreakerEvent, CircuitBreaker, FaultPlan, FaultPolicy,
+    RequestOutcome, Resolution,
+};
 use crate::planner::partition::MmShape;
 use crate::planner::search::Plan;
 use crate::serve::bucket::BucketLadder;
@@ -67,6 +72,13 @@ pub struct ServiceConfig {
     /// AOT artifact directory for the real PJRT path (used only when the
     /// `xla` feature is enabled and the directory holds a manifest).
     pub artifacts: Option<std::path::PathBuf>,
+    /// Seeded fault plan. [`FaultPlan::none`] (the default) injects
+    /// nothing and — together with a passthrough policy — keeps the
+    /// serve path bit-identical to a fault-layer-free build.
+    pub faults: FaultPlan,
+    /// Deadline / retry / breaker policy. [`FaultPolicy::passthrough`]
+    /// (the default) disables all of it.
+    pub fault_policy: FaultPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -81,6 +93,8 @@ impl Default for ServiceConfig {
             max_batch: 32,
             workers: None,
             artifacts: None,
+            faults: FaultPlan::none(),
+            fault_policy: FaultPolicy::passthrough(),
         }
     }
 }
@@ -160,6 +174,8 @@ impl MmService {
     /// fingerprint (see `serve::cache`).
     pub fn serve_trace_mixed(&self, reqs: &[(MmShape, Option<SparsitySpec>)]) -> ServeReport {
         let queue = RequestQueue::new(self.config.queue_capacity);
+        let fault_mode =
+            self.config.faults.is_active() || !self.config.fault_policy.is_passthrough();
         // the configured count is a request against the process-wide
         // thread budget: a service embedded in a sweep (or several
         // services in one process) cannot oversubscribe the machine, and
@@ -196,6 +212,24 @@ impl MmService {
 
         let t_trace = crate::obs::now();
         let t0 = Instant::now();
+        let mut breaker_events: Vec<BreakerEvent> = Vec::new();
+        // Fault pipeline pre-pass: resolve every request's outcome in
+        // request-id order *before* workers fan out. The breaker ticks
+        // on request ids and every fault draw is a pure hash, so the
+        // resolved outcomes — and hence the whole served trace — are
+        // identical across runs and worker counts. Workers then only
+        // emit what was already decided. `None` on the legacy path.
+        let resolutions: Option<Vec<Resolution>> = fault_mode.then(|| {
+            let indexed: Vec<(u64, MmShape, Option<SparsitySpec>)> = reqs
+                .iter()
+                .enumerate()
+                .map(|(i, &(shape, sparsity))| (i as u64, shape, sparsity))
+                .collect();
+            let (res, events) = self.resolve_requests(&indexed);
+            breaker_events = events;
+            res
+        });
+        let resolutions = resolutions.as_deref();
         std::thread::scope(|scope| {
             for w in 0..workers {
                 let queue = &queue;
@@ -207,12 +241,32 @@ impl MmService {
                     let mut lat = QuantileSketch::new();
                     let mut qwait = QuantileSketch::new();
                     while let Some(batch) = queue.next_batch(self.config.max_batch) {
-                        self.process_batch(w, batch, records, batch_records, &mut lat, &mut qwait);
+                        // riders the plan panics are peeled into solo
+                        // batches so the unwind takes out exactly one
+                        // request, not its batchmates
+                        for sub in self.split_for_panics(batch, fault_mode) {
+                            // panic isolation: a panicking plan/dispatch
+                            // (injected or genuine) marks this batch
+                            // Panicked and the worker keeps draining
+                            let unwound = catch_unwind(AssertUnwindSafe(|| {
+                                self.process_batch(
+                                    w, &sub, resolutions, records, batch_records, &mut lat,
+                                    &mut qwait,
+                                );
+                            }))
+                            .is_err();
+                            if unwound {
+                                self.record_panicked(&sub, records);
+                            }
+                        }
                     }
                     // one global-recorder merge per worker, not per sample
                     crate::obs::merge_sketch("serve.latency_seconds", &lat);
                     crate::obs::merge_sketch("serve.queue_seconds", &qwait);
-                    worker_sketches.lock().expect("sketches poisoned").push((w, lat));
+                    worker_sketches
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .push((w, lat));
                 });
             }
             for (i, &(shape, sparsity)) in reqs.iter().enumerate() {
@@ -240,15 +294,17 @@ impl MmService {
             );
         }
 
-        let mut requests = records.into_inner().expect("records poisoned");
+        // a panicked worker may have poisoned these; per-entry writes
+        // are atomic, so the state is valid — recover, don't cascade
+        let mut requests = records.into_inner().unwrap_or_else(|e| e.into_inner());
         requests.sort_by_key(|r| r.id);
-        let mut batch_recs = batch_records.into_inner().expect("metrics poisoned");
+        let mut batch_recs = batch_records.into_inner().unwrap_or_else(|e| e.into_inner());
         batch_recs.sort_by_key(|(first_id, _)| *first_id);
         let mut metrics = MetricsTable::default();
         for (_, rec) in batch_recs {
             metrics.push(rec);
         }
-        let mut shards = worker_sketches.into_inner().expect("sketches poisoned");
+        let mut shards = worker_sketches.into_inner().unwrap_or_else(|e| e.into_inner());
         shards.sort_by_key(|(w, _)| *w);
         let mut latency_sketch = QuantileSketch::new();
         for (_, s) in &shards {
@@ -271,20 +327,174 @@ impl MmService {
             requests,
             metrics,
             wall_seconds,
+            breaker_transitions: breaker_events,
+            injected_faults: resolutions
+                .map(|res| res.iter().map(|r| u64::from(r.injected)).sum())
+                .unwrap_or(0),
+        }
+    }
+
+    /// Resolve a whole trace through the fault pipeline, in request-id
+    /// order, with one long-lived breaker per backend. Ids are explicit
+    /// (not positional) so the chaos shrinker can remove requests while
+    /// the survivors keep their original fault draws. Legs are built
+    /// fault-free (per-request cache lookups); [`resolve_one`] decides
+    /// what the faults and policy make of them.
+    pub fn resolve_requests(
+        &self,
+        reqs: &[(u64, MmShape, Option<SparsitySpec>)],
+    ) -> (Vec<Resolution>, Vec<BreakerEvent>) {
+        let plan = &self.config.faults;
+        let policy = &self.config.fault_policy;
+        let ipu_name = Backend::IpuSim(self.config.arch.clone()).name();
+        let gpu_backend = Backend::GpuModel(self.config.gpu.clone());
+        let gpu_name = gpu_backend.name();
+        let mut ipu_breaker = CircuitBreaker::new(policy.breaker);
+        let mut gpu_breaker = CircuitBreaker::new(policy.breaker);
+        let mut out = Vec::with_capacity(reqs.len());
+        for &(id, shape, sparsity) in reqs {
+            let bucket = self.config.ladder.bucket(shape);
+            let ipu_leg = (self.config.policy != DispatchPolicy::GpuOnly).then(|| {
+                let (result, hit, plan_seconds) = match sparsity {
+                    None => {
+                        let (r, h, s) = self.cache.get_or_plan_timed(&self.config.arch, bucket);
+                        (r.map(|p| self.outcome_from_plan(&p)), h, s)
+                    }
+                    Some(spec) => {
+                        let (r, h, s) =
+                            self.cache.get_or_plan_sparse_timed(&self.config.arch, bucket, spec);
+                        (r.map(|p| self.outcome_from_sparse_plan(&p)), h, s)
+                    }
+                };
+                BackendLeg {
+                    // a planner error is the §2.4 wall: an OOM verdict
+                    run: result.unwrap_or(RunOutcome::OutOfMemory),
+                    backend: ipu_name.clone(),
+                    cache_hit: Some(hit),
+                    plan_seconds,
+                }
+            });
+            let gpu_leg = (self.config.policy != DispatchPolicy::IpuOnly).then(|| BackendLeg {
+                run: run_shape(&gpu_backend, bucket),
+                backend: gpu_name.clone(),
+                cache_hit: None,
+                plan_seconds: 0.0,
+            });
+            out.push(resolve_one(
+                id,
+                ipu_leg.as_ref(),
+                gpu_leg.as_ref(),
+                plan,
+                policy,
+                &mut ipu_breaker,
+                &mut gpu_breaker,
+            ));
+        }
+        let label = |backend: &str, t: &crate::fault::BreakerTransition| BreakerEvent {
+            backend: backend.to_string(),
+            tick: t.tick,
+            from: t.from,
+            to: t.to,
+        };
+        let mut events: Vec<BreakerEvent> = ipu_breaker
+            .transitions()
+            .iter()
+            .map(|t| label(&ipu_name, t))
+            .chain(gpu_breaker.transitions().iter().map(|t| label(&gpu_name, t)))
+            .collect();
+        // stable: same-tick events keep IPU-before-GPU order
+        events.sort_by_key(|e| e.tick);
+        (out, events)
+    }
+
+    /// Peel riders the fault plan panics into solo batches, so the
+    /// unwind is scoped to exactly one request. A no-op (one untouched
+    /// batch) outside fault mode or when the profile never panics.
+    fn split_for_panics(&self, batch: Batch, fault_mode: bool) -> Vec<Batch> {
+        if !fault_mode || self.config.faults.profile.panic_permille == 0 {
+            return vec![batch];
+        }
+        let (doomed, clean): (Vec<MmRequest>, Vec<MmRequest>) = batch
+            .requests
+            .into_iter()
+            .partition(|r| self.config.faults.injects_panic(r.id));
+        let mut out = Vec::with_capacity(doomed.len() + 1);
+        if !clean.is_empty() {
+            out.push(Batch {
+                bucket: batch.bucket,
+                sparsity: batch.sparsity,
+                requests: clean,
+                queued_behind: batch.queued_behind,
+            });
+        }
+        for rider in doomed {
+            out.push(Batch {
+                bucket: batch.bucket,
+                sparsity: batch.sparsity,
+                requests: vec![rider],
+                queued_behind: batch.queued_behind,
+            });
+        }
+        out
+    }
+
+    /// Post-unwind accounting: every rider of a panicked batch gets a
+    /// `Panicked` record (and nothing else — no metrics row, no latency
+    /// sample: the batch never produced an answer to time).
+    fn record_panicked(&self, batch: &Batch, records: &Mutex<Vec<RequestRecord>>) {
+        let backend = if self.config.policy == DispatchPolicy::GpuOnly {
+            Backend::GpuModel(self.config.gpu.clone()).name()
+        } else {
+            Backend::IpuSim(self.config.arch.clone()).name()
+        };
+        let drained_at = Instant::now();
+        let first_id = batch.requests.iter().map(|r| r.id).min().unwrap_or(0);
+        let n = batch.len().max(1);
+        let mut recs = records.lock().unwrap_or_else(|e| e.into_inner());
+        for req in &batch.requests {
+            crate::obs::count("serve.panicked", 1);
+            recs.push(RequestRecord {
+                id: req.id,
+                shape: req.shape,
+                bucket: batch.bucket,
+                sparsity: req.sparsity,
+                backend: backend.clone(),
+                batch_id: first_id,
+                batch_size: n,
+                cache_hit: None,
+                queue_seconds: drained_at
+                    .saturating_duration_since(req.submitted)
+                    .as_secs_f64(),
+                queue_depth: batch.queued_behind,
+                plan_seconds: 0.0,
+                device_seconds: 0.0,
+                real_seconds: None,
+                oom: false,
+                outcome: RequestOutcome::Panicked,
+                attempts: 1,
+                retry_seconds: 0.0,
+            });
         }
     }
 
     /// Serve one batch: one plan lookup, one dispatch, one telemetry
-    /// record per rider.
+    /// record per rider. In fault mode the dispatch verdicts were fixed
+    /// by the resolution pre-pass; this emits them (and panics first on
+    /// an injected worker panic — the peeled solo batch guarantees the
+    /// blast radius is one request).
     fn process_batch(
         &self,
         worker: usize,
-        batch: Batch,
+        batch: &Batch,
+        resolutions: Option<&[Resolution]>,
         records: &Mutex<Vec<RequestRecord>>,
         batch_records: &Mutex<Vec<(u64, MetricsRecord)>>,
         lat: &mut QuantileSketch,
         qwait: &mut QuantileSketch,
     ) {
+        if let Some(res) = resolutions {
+            return self.process_batch_resolved(worker, batch, res, records, batch_records, lat, qwait);
+        }
         let t_batch = crate::obs::now();
         let drained_at = Instant::now();
         let bucket = batch.bucket;
@@ -309,7 +519,7 @@ impl MmService {
         let oom = outcome.is_oom();
 
         {
-            let mut recs = records.lock().expect("records poisoned");
+            let mut recs = records.lock().unwrap_or_else(|e| e.into_inner());
             for req in &batch.requests {
                 let queue_seconds = drained_at
                     .saturating_duration_since(req.submitted)
@@ -332,6 +542,9 @@ impl MmService {
                     device_seconds,
                     real_seconds,
                     oom,
+                    outcome: RequestOutcome::Served,
+                    attempts: 1,
+                    retry_seconds: 0.0,
                 });
             }
         }
@@ -353,9 +566,105 @@ impl MmService {
             Some(spec) => format!("{} {}", BucketLadder::label(bucket), spec.label()),
             None => BucketLadder::label(bucket),
         };
-        batch_records.lock().expect("metrics poisoned").push((
+        batch_records.lock().unwrap_or_else(|e| e.into_inner()).push((
             first_id,
             MetricsRecord { backend, label, shape: bucket, outcome },
+        ));
+    }
+
+    /// Fault-mode twin of [`Self::process_batch`]: emit the pre-resolved
+    /// verdicts for every rider. Request ids are positional (0..n) in
+    /// the serve path, so `resolutions[id]` is the rider's resolution.
+    #[allow(clippy::too_many_arguments)]
+    fn process_batch_resolved(
+        &self,
+        worker: usize,
+        batch: &Batch,
+        resolutions: &[Resolution],
+        records: &Mutex<Vec<RequestRecord>>,
+        batch_records: &Mutex<Vec<(u64, MetricsRecord)>>,
+        lat: &mut QuantileSketch,
+        qwait: &mut QuantileSketch,
+    ) {
+        // injected worker panic: unwind before any bookkeeping, so the
+        // catch_unwind wrapper sees exactly what a genuine panic does
+        if batch.requests.iter().any(|r| self.config.faults.injects_panic(r.id)) {
+            panic!("injected worker panic (fault plan)");
+        }
+        let t_batch = crate::obs::now();
+        let drained_at = Instant::now();
+        let bucket = batch.bucket;
+        let first_id = batch.requests.iter().map(|r| r.id).min().unwrap_or(0);
+        let n = batch.len().max(1);
+        {
+            let mut recs = records.lock().unwrap_or_else(|e| e.into_inner());
+            for req in &batch.requests {
+                let r = &resolutions[req.id as usize];
+                debug_assert_eq!(r.id, req.id, "resolutions must be id-indexed");
+                match r.outcome {
+                    RequestOutcome::Shed(_) => crate::obs::count("serve.shed", 1),
+                    RequestOutcome::Degraded(_) => crate::obs::count("serve.degraded", 1),
+                    _ => {}
+                }
+                let queue_seconds = drained_at
+                    .saturating_duration_since(req.submitted)
+                    .as_secs_f64();
+                qwait.observe(queue_seconds);
+                lat.observe(
+                    queue_seconds + r.plan_seconds + r.retry_seconds + r.device_seconds,
+                );
+                recs.push(RequestRecord {
+                    id: req.id,
+                    shape: req.shape,
+                    bucket,
+                    sparsity: req.sparsity,
+                    backend: r.backend.clone(),
+                    batch_id: first_id,
+                    batch_size: n,
+                    cache_hit: r.cache_hit,
+                    queue_seconds,
+                    queue_depth: batch.queued_behind,
+                    // per-request lookups in fault mode: the cold cost
+                    // lands on the request that planned, not amortized
+                    plan_seconds: r.plan_seconds,
+                    device_seconds: r.device_seconds,
+                    real_seconds: None,
+                    oom: r.oom,
+                    outcome: r.outcome,
+                    attempts: r.attempts,
+                    retry_seconds: r.retry_seconds,
+                });
+            }
+        }
+        let head = &resolutions[first_id as usize];
+        if t_batch.is_some() {
+            crate::obs::wall_span_since(
+                t_batch,
+                &format!("serve/worker-{worker}"),
+                &format!("batch {}", BucketLadder::label(bucket)),
+                "serve",
+                &[
+                    ("riders", n.to_string()),
+                    ("batch_id", first_id.to_string()),
+                    ("outcome", head.outcome.label().to_string()),
+                    ("attempts", head.attempts.to_string()),
+                ],
+            );
+        }
+        let label = match &batch.sparsity {
+            Some(spec) => format!("{} {}", BucketLadder::label(bucket), spec.label()),
+            None => BucketLadder::label(bucket),
+        };
+        batch_records.lock().unwrap_or_else(|e| e.into_inner()).push((
+            first_id,
+            MetricsRecord {
+                backend: head.backend.clone(),
+                label,
+                shape: bucket,
+                // a shed head rider ran nothing to completion; the
+                // metrics row reports the no-result case as OOM-shaped
+                outcome: head.run.clone().unwrap_or(RunOutcome::OutOfMemory),
+            },
         ));
     }
 
@@ -680,5 +989,209 @@ mod tests {
             service(DispatchPolicy::IpuWithGpuFallback).backends().len(),
             2
         );
+    }
+
+    // ---- fault layer -------------------------------------------------
+
+    use crate::fault::{
+        BreakerState, DegradeReason, FaultProfile, RetryPolicy, ShedReason,
+    };
+
+    fn fault_service(profile: FaultProfile, seed: u64, policy: FaultPolicy) -> MmService {
+        MmService::new(ServiceConfig {
+            workers: Some(4),
+            faults: FaultPlan::seeded(seed, profile),
+            fault_policy: policy,
+            ..ServiceConfig::default()
+        })
+    }
+
+    #[test]
+    fn transient_faults_lose_no_requests_and_account_exactly() {
+        let svc = fault_service(
+            FaultProfile::transient(100),
+            42,
+            FaultPolicy::standard(),
+        );
+        let shapes = vec![MmShape::new(1000, 500, 250); 60];
+        let report = svc.serve_trace(&shapes);
+        assert_eq!(report.requests.len(), 60, "zero lost");
+        let f = report.fault_stats();
+        assert_eq!(
+            f.served + f.degraded + f.shed + f.panicked,
+            60,
+            "every request resolves to exactly one outcome"
+        );
+        assert_eq!(f.shed, 0, "no deadline -> nothing sheds");
+        assert_eq!(f.panicked, 0, "profile injects no panics");
+        // self-consistency: the plan's own draws predict the injection
+        // count for first attempts at least
+        let any_injected = (0..60u64).any(|id| {
+            svc.config().faults.inject(id, crate::fault::BackendKind::Ipu, 0).is_some()
+        });
+        assert_eq!(any_injected, report.injected_faults > 0);
+        // retried requests pay retry latency; served ones carry a run
+        for r in &report.requests {
+            match r.outcome {
+                RequestOutcome::Served | RequestOutcome::Degraded(_) => {
+                    assert!(r.device_seconds > 0.0, "request {} has an answer", r.id)
+                }
+                other => panic!("unexpected outcome {other:?} for request {}", r.id),
+            }
+            if r.attempts > 1 {
+                assert!(r.retry_seconds > 0.0, "request {} retried for free", r.id);
+            }
+        }
+    }
+
+    #[test]
+    fn breaker_trip_profile_degrades_exactly_the_cooldown_window() {
+        let svc = fault_service(
+            FaultProfile::by_name("breaker-trip").unwrap(),
+            7,
+            FaultPolicy::standard(),
+        );
+        let shapes = vec![MmShape::square(512); 100];
+        let report = svc.serve_trace(&shapes);
+        assert_eq!(report.requests.len(), 100);
+        let degraded: Vec<u64> = report
+            .requests
+            .iter()
+            .filter(|r| r.outcome.is_degraded())
+            .map(|r| r.id)
+            .collect();
+        // outage [40,60): id 40's own retries trip the breaker at tick
+        // 40; ids 40..=64 ride the cooldown to the GPU; the id-65
+        // half-open probe succeeds and re-closes — exactly 25 degraded,
+        // deterministically, whatever the seed
+        assert_eq!(degraded, (40..=64).collect::<Vec<u64>>());
+        for r in &report.requests {
+            if r.outcome.is_degraded() {
+                assert!(r.backend.contains("gpu-model"), "request {}", r.id);
+                assert_eq!(r.outcome, RequestOutcome::Degraded(DegradeReason::BreakerOpen));
+            } else {
+                assert_eq!(r.outcome, RequestOutcome::Served);
+                assert!(r.backend.contains("ipu-sim"), "request {}", r.id);
+            }
+        }
+        let kinds: Vec<(BreakerState, BreakerState)> = report
+            .breaker_transitions
+            .iter()
+            .map(|t| (t.from, t.to))
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (BreakerState::Closed, BreakerState::Open),
+                (BreakerState::Open, BreakerState::HalfOpen),
+                (BreakerState::HalfOpen, BreakerState::Closed),
+            ]
+        );
+        assert_eq!(report.breaker_transitions[0].tick, 40);
+        assert_eq!(report.breaker_transitions[1].tick, 65);
+        assert!(report.breaker_transitions[0].backend.contains("ipu-sim"));
+    }
+
+    #[test]
+    fn always_failing_ipu_degrades_everything_to_gpu() {
+        let svc = fault_service(
+            FaultProfile::transient(1000),
+            3,
+            FaultPolicy::standard(),
+        );
+        let report = svc.serve_trace(&[MmShape::square(512); 20]);
+        let f = report.fault_stats();
+        assert_eq!(f.degraded, 20, "no IPU attempt can ever succeed");
+        assert!(report.requests.iter().all(|r| r.backend.contains("gpu-model")));
+        // request 0 exhausts its own breaker: 3 IPU attempts + 1 GPU
+        assert_eq!(report.requests[0].attempts, 4);
+        assert_eq!(report.requests[0].outcome, RequestOutcome::Degraded(DegradeReason::BreakerOpen));
+    }
+
+    #[test]
+    fn slow_spikes_past_the_deadline_shed_with_a_distinct_outcome() {
+        let svc = fault_service(
+            FaultProfile::slow(1000, 1e6),
+            5,
+            FaultPolicy::standard().with_deadline(1e-6),
+        );
+        let report = svc.serve_trace(&[MmShape::square(512); 12]);
+        assert_eq!(report.requests.len(), 12, "shed requests still get records");
+        for r in &report.requests {
+            assert_eq!(
+                r.outcome,
+                RequestOutcome::Shed(ShedReason::DeadlineExceeded),
+                "request {}",
+                r.id
+            );
+            assert_eq!(r.device_seconds, 0.0, "nothing ran to completion");
+            assert!(!r.oom, "shedding is not an OOM verdict");
+        }
+        assert_eq!(report.fault_stats().shed, 12);
+    }
+
+    #[test]
+    fn injected_panics_take_out_only_their_own_request() {
+        let profile = FaultProfile { panic_permille: 300, ..FaultProfile::none() };
+        let svc = fault_service(profile, 9, FaultPolicy::standard());
+        let n = 40u64;
+        let doomed: Vec<u64> =
+            (0..n).filter(|&id| svc.config().faults.injects_panic(id)).collect();
+        assert!(!doomed.is_empty(), "300 permille must hit some of 40 ids");
+        assert!((doomed.len() as u64) < n, "and must miss some");
+        let report = svc.serve_trace(&vec![MmShape::square(512); n as usize]);
+        assert_eq!(report.requests.len(), n as usize, "panic loses no records");
+        for r in &report.requests {
+            if doomed.contains(&r.id) {
+                assert_eq!(r.outcome, RequestOutcome::Panicked, "request {}", r.id);
+                assert_eq!(r.device_seconds, 0.0);
+            } else {
+                assert_eq!(r.outcome, RequestOutcome::Served, "request {}", r.id);
+                assert!(r.device_seconds > 0.0);
+                assert!(!r.oom);
+            }
+        }
+        assert_eq!(report.fault_stats().panicked, doomed.len());
+        // the service survives: a fresh trace on the same instance works
+        // (panicked workers recovered, locks unpoisoned or recovered)
+        let again = svc.serve_trace(&[MmShape::square(512); 4]);
+        assert_eq!(again.requests.len(), 4);
+    }
+
+    #[test]
+    fn retry_and_deadline_flags_without_faults_change_no_verdicts() {
+        // an active policy with the identity fault plan routes through
+        // the resolver, but every verdict must match the legacy path
+        let faulty = MmService::new(ServiceConfig {
+            workers: Some(2),
+            faults: FaultPlan::none(),
+            fault_policy: FaultPolicy {
+                deadline_s: Some(60.0),
+                retry: RetryPolicy::standard(3),
+                breaker: crate::fault::BreakerConfig::standard(),
+            },
+            ..ServiceConfig::default()
+        });
+        let legacy = service(DispatchPolicy::IpuWithGpuFallback);
+        let shapes = mixed_trace();
+        let a = faulty.serve_trace(&shapes);
+        let b = legacy.serve_trace(&shapes);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.bucket, y.bucket);
+            assert_eq!(x.backend, y.backend);
+            assert_eq!(x.oom, y.oom);
+            assert_eq!(
+                x.device_seconds.to_bits(),
+                y.device_seconds.to_bits(),
+                "request {} device bits drifted",
+                x.id
+            );
+            assert_eq!(x.outcome, RequestOutcome::Served);
+            assert_eq!(x.attempts, 1);
+        }
+        assert!(a.breaker_transitions.is_empty());
+        assert_eq!(a.injected_faults, 0);
     }
 }

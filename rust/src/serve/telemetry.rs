@@ -11,6 +11,7 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::metrics::MetricsTable;
+use crate::fault::{BreakerEvent, RequestOutcome};
 use crate::obs::export::MetricsSnapshot;
 use crate::obs::sketch::QuantileSketch;
 use crate::obs::slo::SloSpec;
@@ -59,13 +60,21 @@ pub struct RequestRecord {
     pub real_seconds: Option<f64>,
     /// Request could not be served on any configured backend.
     pub oom: bool,
+    /// How the fault layer resolved the request. Always `Served` on the
+    /// legacy (fault-free) path.
+    pub outcome: RequestOutcome,
+    /// Device attempts across both legs (1 on the fault-free path).
+    pub attempts: u32,
+    /// Model seconds lost to wasted attempts and retry backoff (0 on
+    /// the fault-free path).
+    pub retry_seconds: f64,
 }
 
 impl RequestRecord {
     /// End-to-end request latency the serving model reports: queue wait
-    /// plus amortized planning plus device time.
+    /// plus amortized planning plus retry waste plus device time.
     pub fn latency_seconds(&self) -> f64 {
-        self.queue_seconds + self.plan_seconds + self.device_seconds
+        self.queue_seconds + self.plan_seconds + self.retry_seconds + self.device_seconds
     }
 
     /// Padded-work factor paid for bucketing this request.
@@ -116,6 +125,24 @@ pub struct ServeReport {
     /// worker folds its requests into a local sketch and the service
     /// merges them (deterministically, in worker order) at join time.
     pub latency_sketch: QuantileSketch,
+    /// Circuit-breaker state changes during the run, merged across
+    /// backends, in request-id (tick) order. Empty on the legacy path.
+    pub breaker_transitions: Vec<BreakerEvent>,
+    /// Faults the plan injected across every attempt of the run.
+    pub injected_faults: u64,
+}
+
+/// Fault-layer accounting folded from per-request records.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub served: usize,
+    pub degraded: usize,
+    pub shed: usize,
+    pub panicked: usize,
+    /// Device re-attempts (attempts beyond each request's first).
+    pub retries: u64,
+    /// Injected-fault total (mirrors `ServeReport::injected_faults`).
+    pub injected: u64,
 }
 
 impl ServeReport {
@@ -140,6 +167,22 @@ impl ServeReport {
         } else {
             hits as f64 / total as f64
         }
+    }
+
+    /// Fold per-request outcomes into fault-layer accounting. On the
+    /// legacy path this is all-served, zero everything else.
+    pub fn fault_stats(&self) -> FaultStats {
+        let mut s = FaultStats { injected: self.injected_faults, ..FaultStats::default() };
+        for r in &self.requests {
+            match r.outcome {
+                RequestOutcome::Served => s.served += 1,
+                RequestOutcome::Degraded(_) => s.degraded += 1,
+                RequestOutcome::Shed(_) => s.shed += 1,
+                RequestOutcome::Panicked => s.panicked += 1,
+            }
+            s.retries += u64::from(r.attempts.saturating_sub(1));
+        }
+        s
     }
 
     /// Served requests per wall second.
@@ -254,6 +297,22 @@ impl ServeReport {
                 self.queue.rejected,
             )
         };
+        let f = self.fault_stats();
+        if f.injected > 0
+            || f.degraded + f.shed + f.panicked > 0
+            || !self.breaker_transitions.is_empty()
+        {
+            let line4 = format!(
+                "faults: {} injected, {} retries; {} degraded / {} shed / {} panicked; {} breaker transitions",
+                f.injected,
+                f.retries,
+                f.degraded,
+                f.shed,
+                f.panicked,
+                self.breaker_transitions.len(),
+            );
+            return format!("{line1}\n{line2}\n{line3}\n{line4}");
+        }
         format!("{line1}\n{line2}\n{line3}")
     }
 
@@ -308,6 +367,18 @@ impl ServeReport {
             "ipumm_serve_oom_total".to_string(),
             self.requests.iter().filter(|r| r.oom).count() as u64,
         );
+        // fault-layer counters: always present (zero on the legacy
+        // path) so dashboards and CI can assert on the family names
+        let f = self.fault_stats();
+        counters.insert("ipumm_serve_retries_total".to_string(), f.retries);
+        counters.insert("ipumm_serve_shed_total".to_string(), f.shed as u64);
+        counters.insert("ipumm_serve_degraded_total".to_string(), f.degraded as u64);
+        counters.insert("ipumm_serve_panicked_total".to_string(), f.panicked as u64);
+        counters.insert("ipumm_serve_faults_injected_total".to_string(), f.injected);
+        counters.insert(
+            "ipumm_serve_breaker_transitions_total".to_string(),
+            self.breaker_transitions.len() as u64,
+        );
         let mut gauges = BTreeMap::new();
         gauges.insert("ipumm_serve_wall_seconds".to_string(), self.wall_seconds);
         gauges.insert("ipumm_serve_throughput_rps".to_string(), self.throughput_rps());
@@ -341,6 +412,9 @@ mod tests {
             device_seconds: 1e-3,
             real_seconds: None,
             oom: false,
+            outcome: RequestOutcome::Served,
+            attempts: 1,
+            retry_seconds: 0.0,
         }
     }
 
@@ -363,6 +437,8 @@ mod tests {
             batches,
             wall_seconds: 0.5,
             latency_sketch,
+            breaker_transitions: Vec::new(),
+            injected_faults: 0,
         }
     }
 
@@ -542,5 +618,77 @@ mod tests {
         let text = snap.prometheus_text();
         assert!(text.contains("ipumm_serve_requests_total 3"));
         assert!(text.contains("ipumm_serve_latency_seconds{class=\"256x256x256\",quantile=\"0.5\"}"));
+    }
+
+    #[test]
+    fn fault_stats_fold_outcomes_and_retries() {
+        use crate::fault::{DegradeReason, ShedReason};
+        let mut degraded = rec(1, 256, true, 1);
+        degraded.outcome = RequestOutcome::Degraded(DegradeReason::RetriesExhausted);
+        degraded.attempts = 4;
+        degraded.retry_seconds = 3e-4;
+        let mut shed = rec(2, 256, true, 1);
+        shed.outcome = RequestOutcome::Shed(ShedReason::DeadlineExceeded);
+        shed.attempts = 2;
+        let mut panicked = rec(3, 256, true, 1);
+        panicked.outcome = RequestOutcome::Panicked;
+        let mut r = report(vec![rec(0, 256, true, 1), degraded, shed, panicked]);
+        r.injected_faults = 5;
+        let f = r.fault_stats();
+        assert_eq!(
+            (f.served, f.degraded, f.shed, f.panicked),
+            (1, 1, 1, 1),
+            "one of each outcome"
+        );
+        assert_eq!(f.retries, 4, "3 from the degraded + 1 from the shed");
+        assert_eq!(f.injected, 5);
+        let s = r.summary();
+        assert!(s.contains("faults: 5 injected"), "{s}");
+        assert!(s.contains("1 degraded / 1 shed / 1 panicked"), "{s}");
+    }
+
+    #[test]
+    fn legacy_reports_keep_zeroed_fault_counters_and_no_fault_line() {
+        let r = report(vec![rec(0, 256, true, 1)]);
+        let f = r.fault_stats();
+        assert_eq!(f, FaultStats { served: 1, ..FaultStats::default() });
+        assert!(!r.summary().contains("faults:"), "legacy summary unchanged");
+        let snap = r.metrics_snapshot(10, &[]);
+        for name in [
+            "ipumm_serve_retries_total",
+            "ipumm_serve_shed_total",
+            "ipumm_serve_degraded_total",
+            "ipumm_serve_panicked_total",
+            "ipumm_serve_faults_injected_total",
+            "ipumm_serve_breaker_transitions_total",
+        ] {
+            assert_eq!(snap.counters[name], 0, "{name} present and zero");
+        }
+    }
+
+    #[test]
+    fn retry_seconds_count_into_latency_and_snapshot_counters() {
+        let mut retried = rec(0, 256, true, 1);
+        retried.attempts = 3;
+        retried.retry_seconds = 2e-3;
+        let base = rec(1, 256, true, 1);
+        assert!(
+            retried.latency_seconds() > base.latency_seconds() + 1.9e-3,
+            "retry waste is part of end-to-end latency"
+        );
+        let mut r = report(vec![retried, base]);
+        r.injected_faults = 2;
+        r.breaker_transitions.push(BreakerEvent {
+            backend: "ipu-sim/GC200".into(),
+            tick: 4,
+            from: crate::fault::BreakerState::Closed,
+            to: crate::fault::BreakerState::Open,
+        });
+        let snap = r.metrics_snapshot(10, &[]);
+        assert_eq!(snap.counters["ipumm_serve_retries_total"], 2);
+        assert_eq!(snap.counters["ipumm_serve_faults_injected_total"], 2);
+        assert_eq!(snap.counters["ipumm_serve_breaker_transitions_total"], 1);
+        let text = snap.prometheus_text();
+        assert!(text.contains("ipumm_serve_retries_total 2"), "{text}");
     }
 }

@@ -327,6 +327,68 @@ fn serve_reports_cache_and_buckets() {
 }
 
 #[test]
+fn serve_with_fault_seed_reports_fault_accounting() {
+    let (out, err, ok) = run(&[
+        "serve", "--jobs", "60", "--workers", "2", "--seed", "3",
+        "--fault-seed", "11", "--deadline-ms", "500", "--retries", "3",
+    ]);
+    assert!(ok, "a 10%-transient profile must still serve cleanly; stderr: {err}");
+    assert!(out.contains("fault injection: seed 11"), "stdout: {out}");
+    assert!(out.contains("faults:"), "summary must carry the fault line; stdout: {out}");
+    assert!(out.contains("hit rate"));
+}
+
+#[test]
+fn chaos_matrix_reports_recovery_and_writes_json() {
+    let json_path = std::env::temp_dir().join("ipumm_cli_chaos.json");
+    let json_arg = json_path.to_str().unwrap();
+    let (out, err, ok) = run(&[
+        "chaos", "--jobs", "80", "--seed", "42", "--workers", "2",
+        "--profiles", "transient,breaker-trip", "--json", json_arg,
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("Chaos matrix"), "stdout: {out}");
+    assert!(out.contains("zero lost"), "stdout: {out}");
+
+    // the report must round-trip through the crate's own JSON parser
+    use ipumm::util::json::Json;
+    let text = std::fs::read_to_string(&json_path).unwrap();
+    let doc = Json::parse(&text).expect("chaos report parses");
+    let scenarios = doc.get("scenarios").and_then(Json::items).expect("scenarios array");
+    assert_eq!(scenarios.len(), 2);
+    for s in scenarios {
+        assert_eq!(
+            s.get("lost").and_then(Json::as_f64),
+            Some(0.0),
+            "no scenario may lose requests"
+        );
+    }
+    // the breaker-trip scenario records an open->closed recovery cycle
+    let trip = scenarios
+        .iter()
+        .find(|s| s.get("name").and_then(Json::as_str) == Some("breaker-trip"))
+        .expect("breaker-trip scenario present");
+    let events = trip.get("breaker").and_then(Json::items).expect("breaker events");
+    assert!(
+        events.iter().any(|e| e.get("to").and_then(Json::as_str) == Some("open")),
+        "breaker must open during the outage"
+    );
+    assert_eq!(
+        events.last().and_then(|e| e.get("to")).and_then(Json::as_str),
+        Some("closed"),
+        "breaker must re-close after the outage"
+    );
+    let _ = std::fs::remove_file(&json_path);
+}
+
+#[test]
+fn chaos_rejects_unknown_profile() {
+    let (_, err, ok) = run(&["chaos", "--jobs", "10", "--profiles", "glitchstorm"]);
+    assert!(!ok);
+    assert!(err.contains("unknown fault profile"), "stderr: {err}");
+}
+
+#[test]
 fn sparse_prints_both_throughput_conventions() {
     let csv_path = std::env::temp_dir().join("ipumm_cli_sparse.csv");
     let csv_arg = csv_path.to_str().unwrap();

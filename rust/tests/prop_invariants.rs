@@ -12,13 +12,17 @@ use ipumm::memory::mapping::{grid_2d_mapping, linear_balanced_mapping};
 use ipumm::graph::tensor::{DType, Tensor, TensorId};
 use ipumm::coordinator::runner::ThreadBudget;
 use ipumm::coordinator::trace::TraceSpec;
+use ipumm::fault::chaos::{describe_minimal, shrink_failing, ChaosRequest};
+use ipumm::fault::{
+    BreakerConfig, FaultPlan, FaultPolicy, FaultProfile, RequestOutcome, RetryPolicy,
+};
 use ipumm::obs::window::{windowed, MetricEvent, WindowSpec};
 use ipumm::obs::{QuantileSketch, Recorder};
 use ipumm::planner::cost::{CostConfig, CostModel, PlanCost};
 use ipumm::planner::partition::{MmShape, Partition};
 use ipumm::planner::search::{for_each_candidate, search, search_fits, search_with_workers};
 use ipumm::prop_assert;
-use ipumm::serve::{BucketLadder, MmService, PlanCache, ServiceConfig};
+use ipumm::serve::{BucketLadder, DispatchPolicy, MmService, PlanCache, ServiceConfig};
 use ipumm::sim::engine::SimEngine;
 use ipumm::sparse::csr::BlockCsr;
 use ipumm::sparse::pattern::{BlockPattern, PatternKind, SparsitySpec, BLOCK_SIZES};
@@ -1133,4 +1137,251 @@ fn prop_windowed_sketches_recombine_to_the_exact_summary() {
             exact.mean
         );
     }
+}
+
+fn paper_shapes() -> Vec<MmShape> {
+    TraceSpec::paper_mix(48, 7).jobs.into_iter().map(|(_, s)| s).collect()
+}
+
+#[test]
+fn prop_fault_layer_off_is_bit_identical_to_passthrough() {
+    // fault-tolerance acceptance (crown jewel): `FaultPlan::none()` plus
+    // an *active* policy (deadline, retries, breaker armed) must leave
+    // the served trace bit-identical to the passthrough path — same ids,
+    // buckets, backends, OOM verdicts, device-second bits, and plan-cache
+    // population — at workers 1 and 4. The guard rails only change
+    // behavior when a fault actually fires.
+    let shapes = paper_shapes();
+    for workers in [1usize, 4] {
+        let plain_svc =
+            MmService::new(ServiceConfig { workers: Some(workers), ..ServiceConfig::default() });
+        let plain = plain_svc.serve_trace(&shapes);
+        let guarded_svc = MmService::new(ServiceConfig {
+            workers: Some(workers),
+            faults: FaultPlan::none(),
+            fault_policy: FaultPolicy {
+                deadline_s: Some(600.0),
+                retry: RetryPolicy::standard(3),
+                breaker: BreakerConfig::standard(),
+            },
+            ..ServiceConfig::default()
+        });
+        let guarded = guarded_svc.serve_trace(&shapes);
+        assert_eq!(plain.requests.len(), guarded.requests.len(), "workers {workers}");
+        for (p, g) in plain.requests.iter().zip(&guarded.requests) {
+            assert_eq!(p.id, g.id, "workers {workers}");
+            assert_eq!(p.bucket, g.bucket, "req {} workers {workers}", p.id);
+            assert_eq!(p.backend, g.backend, "req {} workers {workers}", p.id);
+            assert_eq!(p.oom, g.oom, "req {} workers {workers}", p.id);
+            assert_eq!(
+                p.device_seconds.to_bits(),
+                g.device_seconds.to_bits(),
+                "req {} workers {workers}",
+                p.id
+            );
+            assert!(g.outcome.is_served(), "req {} workers {workers}", p.id);
+            assert_eq!(g.attempts, 1, "req {} workers {workers}", p.id);
+            assert_eq!(g.retry_seconds.to_bits(), 0.0f64.to_bits(), "req {}", p.id);
+        }
+        assert_eq!(
+            plain_svc.cache().len(),
+            guarded_svc.cache().len(),
+            "cache population diverges at workers {workers}"
+        );
+        assert!(guarded.breaker_transitions.is_empty(), "workers {workers}");
+        assert_eq!(guarded.injected_faults, 0, "workers {workers}");
+    }
+}
+
+#[test]
+fn prop_fault_outcomes_identical_across_runs_and_worker_counts() {
+    // determinism under faults: the same seed + profile produces the
+    // same outcome, backend, attempt count, and retry/device-second bits
+    // for every request — across repeated runs AND across worker counts.
+    // Faults are resolved in request-id order before workers fan out, so
+    // thread scheduling cannot reach them.
+    let shapes = paper_shapes();
+    let profile = FaultProfile::by_name("mixed").expect("known profile");
+    let mut baseline: Option<Vec<(u64, RequestOutcome, String, u32, u64, u64, bool)>> = None;
+    for workers in [1usize, 4] {
+        for rep in 0..2 {
+            let svc = MmService::new(ServiceConfig {
+                workers: Some(workers),
+                faults: FaultPlan::seeded(0xC0FFEE, profile.clone()),
+                fault_policy: FaultPolicy::standard().with_deadline(0.5),
+                ..ServiceConfig::default()
+            });
+            let report = svc.serve_trace(&shapes);
+            let stats = report.fault_stats();
+            assert_eq!(
+                stats.served + stats.degraded + stats.shed + stats.panicked,
+                shapes.len(),
+                "outcome accounting must balance (workers {workers} rep {rep})"
+            );
+            let got: Vec<_> = report
+                .requests
+                .iter()
+                .map(|r| {
+                    (
+                        r.id,
+                        r.outcome,
+                        r.backend.clone(),
+                        r.attempts,
+                        r.retry_seconds.to_bits(),
+                        r.device_seconds.to_bits(),
+                        r.oom,
+                    )
+                })
+                .collect();
+            match &baseline {
+                None => baseline = Some(got),
+                Some(want) => {
+                    assert_eq!(want, &got, "outcomes diverged at workers {workers} rep {rep}")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_retried_successes_carry_first_try_bits() {
+    // a request that fails transiently and then succeeds must return the
+    // exact answer bits of a fault-free run: retries re-run the same
+    // deterministic model, they never perturb the result.
+    let reqs: Vec<ChaosRequest> = TraceSpec::paper_mix(48, 7)
+        .jobs
+        .into_iter()
+        .enumerate()
+        .map(|(i, (_, s))| (i as u64, s, None))
+        .collect();
+    let clean_svc = MmService::new(ServiceConfig {
+        workers: Some(1),
+        faults: FaultPlan::none(),
+        fault_policy: FaultPolicy::standard(),
+        ..ServiceConfig::default()
+    });
+    let (clean, _) = clean_svc.resolve_requests(&reqs);
+    let faulty_svc = MmService::new(ServiceConfig {
+        workers: Some(1),
+        faults: FaultPlan::seeded(5, FaultProfile::transient(300)),
+        fault_policy: FaultPolicy::standard(),
+        ..ServiceConfig::default()
+    });
+    let (faulty, _) = faulty_svc.resolve_requests(&reqs);
+    assert_eq!(clean.len(), faulty.len());
+    let tflops_bits = |run: &Option<ipumm::coordinator::device::RunOutcome>| {
+        run.as_ref().and_then(|r| r.tflops()).map(f64::to_bits)
+    };
+    let mut retried_successes = 0usize;
+    for (c, f) in clean.iter().zip(&faulty) {
+        assert_eq!(c.id, f.id);
+        if f.outcome.is_served() && f.backend == c.backend {
+            assert_eq!(
+                c.device_seconds.to_bits(),
+                f.device_seconds.to_bits(),
+                "req {}: a retried success must carry first-try seconds",
+                c.id
+            );
+            assert_eq!(tflops_bits(&c.run), tflops_bits(&f.run), "req {}", c.id);
+            assert_eq!(c.oom, f.oom, "req {}", c.id);
+            retried_successes += (f.attempts > 1) as usize;
+        }
+    }
+    assert!(
+        retried_successes > 0,
+        "a 30% transient profile over 48 requests must retry-and-recover at least once"
+    );
+}
+
+#[test]
+fn prop_fault_counters_are_write_only_and_zero_cost_when_off() {
+    // the role-8/9 neutrality invariant extended to the fault layer: the
+    // retry/shed/degraded counters and the retry-backoff histogram are
+    // write-only — a faulted trace returns identical outcome bits with
+    // the global recorder on or off, and the counters only materialize
+    // while it is on.
+    let _gate = OBS_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let shapes = paper_shapes();
+    let config = || ServiceConfig {
+        workers: Some(2),
+        faults: FaultPlan::seeded(11, FaultProfile::transient(250)),
+        fault_policy: FaultPolicy::standard().with_deadline(600.0),
+        ..ServiceConfig::default()
+    };
+    ipumm::obs::disable();
+    let _ = ipumm::obs::take();
+    let plain = MmService::new(config()).serve_trace(&shapes);
+    ipumm::obs::enable();
+    let traced = MmService::new(config()).serve_trace(&shapes);
+    ipumm::obs::disable();
+    let data = ipumm::obs::take();
+    assert_eq!(plain.requests.len(), traced.requests.len());
+    for (p, t) in plain.requests.iter().zip(&traced.requests) {
+        assert_eq!(p.id, t.id);
+        assert_eq!(p.outcome, t.outcome, "req {}", p.id);
+        assert_eq!(p.attempts, t.attempts, "req {}", p.id);
+        assert_eq!(p.retry_seconds.to_bits(), t.retry_seconds.to_bits(), "req {}", p.id);
+        assert_eq!(p.device_seconds.to_bits(), t.device_seconds.to_bits(), "req {}", p.id);
+    }
+    let stats = traced.fault_stats();
+    assert!(stats.retries > 0, "a 25% transient profile must retry");
+    // the traced run streamed the fault counters: one `serve.retries`
+    // tick and one backoff histogram sample per backoff taken (a
+    // degraded request's final failed attempt backs off nowhere, so the
+    // counter is bounded by — not equal to — total extra attempts)
+    let retry_counter = data.counters.get("serve.retries").copied().unwrap_or(0);
+    assert!(retry_counter > 0, "retries must stream into the global counter");
+    assert!(retry_counter <= stats.retries, "backoffs cannot exceed extra attempts");
+    let backoffs = data
+        .histograms
+        .get("serve.retry_backoff_seconds")
+        .map(|s| s.count())
+        .unwrap_or(0);
+    assert_eq!(backoffs, retry_counter, "every counted retry observed one backoff sample");
+    // leave the global recorder off and drained for any test that follows
+    ipumm::obs::disable();
+    let _ = ipumm::obs::take();
+}
+
+#[test]
+fn prop_shrinker_reduces_a_failing_trace_to_the_culprit_request() {
+    // seeded fault-scenario generation + shrinking (ROADMAP §5): the IPU
+    // is dark exactly for request id 7; an IPU-only policy with no
+    // retries must shed it. The ddmin shrinker has to reduce the
+    // 48-request trace to exactly that (request, fault) pair — original
+    // id and shape preserved, because fault draws are id-keyed and
+    // independent, so removing requests never perturbs the survivors.
+    let reqs: Vec<ChaosRequest> = TraceSpec::paper_mix(48, 7)
+        .jobs
+        .into_iter()
+        .enumerate()
+        .map(|(i, (_, s))| (i as u64, s, None))
+        .collect();
+    let profile = FaultProfile { ipu_outages: vec![(7, 8)], ..FaultProfile::none() };
+    let plan = FaultPlan::seeded(3, profile);
+    let svc = MmService::new(ServiceConfig {
+        workers: Some(1),
+        policy: DispatchPolicy::IpuOnly,
+        faults: plan.clone(),
+        fault_policy: FaultPolicy {
+            deadline_s: None,
+            retry: RetryPolicy::none(),
+            breaker: BreakerConfig::disabled(),
+        },
+        ..ServiceConfig::default()
+    });
+    let fails = |subset: &[ChaosRequest]| {
+        let (res, _) = svc.resolve_requests(subset);
+        res.iter().any(|r| r.outcome.is_shed())
+    };
+    assert!(fails(&reqs), "the full trace must exhibit the failure");
+    let minimal = shrink_failing(&reqs, &fails);
+    assert_eq!(minimal.len(), 1, "exactly one culprit request");
+    assert_eq!(minimal[0].0, 7, "the culprit keeps its original id through shrinking");
+    assert_eq!(minimal[0].1, reqs[7].1, "the culprit keeps its original shape");
+    let label = describe_minimal(&plan, &minimal[0]);
+    assert!(
+        label.contains("request 7") && label.contains("unavailable"),
+        "describe_minimal must name the (request, fault) pair: {label}"
+    );
 }
