@@ -1,0 +1,68 @@
+//! Static-analysis bench: what the `ipumm check` gate costs per graph
+//! and per source file, so the CI gate's budget stays visible.
+//!
+//! The verifier is a pure reader — its cost is dominated by the
+//! per-superstep access-pair scan (quadratic in records per compute
+//! set, but planner graphs replicate one record per (kind, span)
+//! class, so the populations are tiny) and the per-tile balance walk
+//! (linear in tiles). The lint is one stripper pass plus substring
+//! scans per line. No `_baseline` twins: rows are advisory in-run,
+//! cross-run drift shows in `ipumm bench-check --against`.
+
+use ipumm::analysis::lint::lint_source;
+use ipumm::analysis::verify::{verify_dense, verify_graph};
+use ipumm::arch::IpuArch;
+use ipumm::planner::partition::MmShape;
+use ipumm::planner::search::search;
+use ipumm::sim::engine::SimEngine;
+use ipumm::util::bench::{black_box, Bench};
+
+/// A synthetic planner-shaped source file: enough lines, strings,
+/// comments, and near-miss needles to exercise every lint rule's scan
+/// without matching any (the bench must measure the clean path).
+fn synthetic_source() -> String {
+    let mut s = String::with_capacity(64 * 1024);
+    s.push_str("//! Synthetic planner module for lint benching.\n");
+    for i in 0..400 {
+        s.push_str(&format!(
+            "fn candidate_{i}(pm: usize, pn: usize) -> usize {{\n    \
+             // \"Instant::now(\" in a comment never fires\n    \
+             let label = \"stripe {i}: .lock().unwrap() is just text here\";\n    \
+             let cost = pm * {i} + pn;\n    \
+             let _ = label.len();\n    \
+             cost\n}}\n"
+        ));
+    }
+    s
+}
+
+fn main() {
+    let mut b = Bench::new("analysis");
+    let arch = IpuArch::gc200();
+    let engine = SimEngine::new(arch.clone());
+
+    let shape = MmShape::square(1024);
+    let plan = search(&arch, shape).expect("1024^2 plans");
+    let graph = engine.build_graph(shape, &plan);
+    b.run("verify_graph_1024", || {
+        black_box(verify_graph(&arch, &graph).len())
+    });
+    b.run("verify_dense_1024", || {
+        black_box(verify_dense(&arch, shape, &plan, &graph).len())
+    });
+
+    // the pn>1 split-reduction shape: more supersteps, a gather epilogue
+    let skew = MmShape::new(512, 16384, 2048);
+    let skew_plan = search(&arch, skew).expect("split-reduction shape plans");
+    let skew_graph = engine.build_graph(skew, &skew_plan);
+    b.run("verify_dense_split_reduction", || {
+        black_box(verify_dense(&arch, skew, &skew_plan, &skew_graph).len())
+    });
+
+    let src = synthetic_source();
+    b.run("lint_source_synthetic", || {
+        black_box(lint_source("planner/synthetic.rs", &src).len())
+    });
+
+    b.dump_csv();
+}

@@ -1,0 +1,666 @@
+//! Repo-invariant lint: a hermetic source scanner (no deps, like
+//! `util::json`) that enforces the determinism contracts the rest of the
+//! crate relies on, as named rules over `rust/src/`:
+//!
+//! - `no-wall-clock-in-deterministic-paths` — `Instant::now(` /
+//!   `SystemTime::now(` call sites outside the observability whitelist
+//!   (`obs/`, `serve/`, `runtime/`, `util/bench.rs`). Planner, graph,
+//!   BSP, and fault paths must be pure functions of their seeds.
+//! - `no-lock-unwrap` — `.lock().unwrap()` / `.lock().expect(` anywhere;
+//!   the crate's idiom is poison recovery via
+//!   `.lock().unwrap_or_else(|e| e.into_inner())` so one panicked worker
+//!   cannot cascade.
+//! - `no-float-in-seeded-draws` — float tokens or literals inside the
+//!   integer-only draw functions of `fault/plan.rs` and `util/rng.rs`,
+//!   where platform-dependent float rounding would break bit-identical
+//!   injection/draw sequences.
+//! - `no-unordered-iteration-in-planner` — iteration over
+//!   `HashMap`-bound names in `planner/` / `sparse/`; plan selection must
+//!   not depend on hash order (keyed lookups and `.entry()` are fine).
+//!
+//! Scanning is line-based over a tokenizer pass that blanks comments
+//! (line + nested block), string/raw-string/char literals — so needles
+//! inside strings (including this file's own) never match — while
+//! preserving line numbers. `// lint:allow(rule)` on a line suppresses
+//! that rule on the same line and the next.
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::Diagnostic;
+
+/// Stable rule ids the lint emits.
+pub mod rules {
+    pub const NO_WALL_CLOCK: &str = "no-wall-clock-in-deterministic-paths";
+    pub const NO_LOCK_UNWRAP: &str = "no-lock-unwrap";
+    pub const NO_FLOAT_IN_SEEDED_DRAWS: &str = "no-float-in-seeded-draws";
+    pub const NO_UNORDERED_ITERATION: &str = "no-unordered-iteration-in-planner";
+}
+
+/// Paths (relative, `/`-separated) where wall-clock reads are the point:
+/// observability, serving latency, the real runtime, and the bench timer.
+const WALL_CLOCK_WHITELIST: &[&str] = &["obs/", "serve/", "runtime/", "util/bench.rs"];
+
+/// The seeded-draw scopes: (file, integer-only fn names). The float
+/// helpers (`next_f64`, `gen_bool`, ...) are deliberately outside.
+const DRAW_SCOPES: &[(&str, &[&str])] = &[
+    ("fault/plan.rs", &["draw", "inject", "injects_panic", "in_window", "splitmix64"]),
+    ("util/rng.rs", &["new", "next_u64", "gen_range", "gen_usize", "choose"]),
+];
+
+/// Lint every `.rs` file under `root` (recursively, in sorted order).
+/// File paths in diagnostics are relative to `root`.
+pub fn lint_dir(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut ds = Vec::new();
+    for path in files {
+        let text = fs::read_to_string(&path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        ds.extend(lint_source(&rel, &text));
+    }
+    Ok(ds)
+}
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, files)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            files.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file's source text. `rel_path` selects per-path rule scopes
+/// and appears in diagnostics.
+pub fn lint_source(rel_path: &str, text: &str) -> Vec<Diagnostic> {
+    let suppressed = pragmas(text);
+    let stripped = strip(text);
+    let lines: Vec<&str> = stripped.lines().collect();
+    let mut ds = Vec::new();
+    check_wall_clock(rel_path, &lines, &suppressed, &mut ds);
+    check_lock_unwrap(rel_path, &lines, &suppressed, &mut ds);
+    check_float_in_draws(rel_path, &lines, &suppressed, &mut ds);
+    check_unordered_iteration(rel_path, &lines, &suppressed, &mut ds);
+    ds
+}
+
+// ---- suppression pragmas --------------------------------------------------
+
+/// `// lint:allow(rule-a, rule-b)` suppresses those rules on its own
+/// line and the next one (so the pragma can sit above the flagged line).
+fn pragmas(text: &str) -> BTreeSet<(String, usize)> {
+    let mut out = BTreeSet::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let Some(pos) = raw.find("lint:allow(") else { continue };
+        let rest = &raw[pos + "lint:allow(".len()..];
+        let Some(end) = rest.find(')') else { continue };
+        for rule in rest[..end].split(',') {
+            let rule = rule.trim().to_string();
+            if rule.is_empty() {
+                continue;
+            }
+            out.insert((rule.clone(), line_no));
+            out.insert((rule, line_no + 1));
+        }
+    }
+    out
+}
+
+fn emit(
+    ds: &mut Vec<Diagnostic>,
+    suppressed: &BTreeSet<(String, usize)>,
+    rule: &'static str,
+    rel_path: &str,
+    line_no: usize,
+    message: String,
+) {
+    if suppressed.contains(&(rule.to_string(), line_no)) {
+        return;
+    }
+    ds.push(Diagnostic::error(rule, message).at_file(rel_path, line_no));
+}
+
+// ---- tokenizer pass -------------------------------------------------------
+
+/// Blank out comments (line + nested block), string literals (plain,
+/// raw, byte), and char literals, preserving newlines so line numbers
+/// survive. Lifetimes (`'a`) are kept; char literals (`'x'`, `'\n'`)
+/// are blanked.
+fn strip(text: &str) -> String {
+    let b: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        // line comment
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // nested block comment
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string r"..." / r#"..."# (optionally byte: br)
+        if c == 'r' || (c == 'b' && b.get(i + 1) == Some(&'r')) {
+            let prev_ident = i > 0 && is_ident(b[i - 1]);
+            let r_at = if c == 'b' { i + 1 } else { i };
+            if !prev_ident && (c == 'r' || b.get(r_at) == Some(&'r')) {
+                let mut j = r_at + 1;
+                let mut hashes = 0usize;
+                while b.get(j) == Some(&'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if b.get(j) == Some(&'"') {
+                    for _ in i..=j {
+                        out.push(' ');
+                    }
+                    i = j + 1;
+                    while i < b.len() {
+                        if b[i] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && b.get(i + 1 + h) == Some(&'#') {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                for _ in 0..=hashes {
+                                    out.push(' ');
+                                }
+                                i += 1 + hashes;
+                                break;
+                            }
+                        }
+                        out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        // plain string (handles escapes; a `\`-newline continuation must
+        // keep its newline so later line numbers survive)
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' {
+                    out.push(' ');
+                    i += 1;
+                    if i < b.len() {
+                        out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                        i += 1;
+                    }
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                out.push(if b[i] == '\n' { '\n' } else { ' ' });
+                i += 1;
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                // escaped char literal (incl. '\'' and '\u{..}'): blank
+                // through the closing quote, skipping escaped chars
+                out.push(' ');
+                i += 1;
+                while i < b.len() && b[i] != '\'' {
+                    if b[i] == '\\' {
+                        out.push(' ');
+                        i += 1;
+                        if i < b.len() {
+                            out.push(' ');
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    out.push(' ');
+                    i += 1;
+                }
+                if i < b.len() {
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if b.get(i + 1).is_some() && b.get(i + 2) == Some(&'\'') {
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            // a lifetime: keep the tick, scanning continues normally
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets where `needle` occurs in `line` with identifier
+/// boundaries on both sides.
+fn ident_occurrences(line: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(needle) {
+        let p = start + pos;
+        let before_ok = p == 0 || !line[..p].chars().next_back().is_some_and(is_ident);
+        let after = p + needle.len();
+        let after_ok = after >= line.len() || !line[after..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            out.push(p);
+        }
+        start = p + needle.len().max(1);
+    }
+    out
+}
+
+// ---- rule: no-wall-clock-in-deterministic-paths ---------------------------
+
+fn check_wall_clock(
+    rel_path: &str,
+    lines: &[&str],
+    suppressed: &BTreeSet<(String, usize)>,
+    ds: &mut Vec<Diagnostic>,
+) {
+    if WALL_CLOCK_WHITELIST.iter().any(|w| rel_path.starts_with(w)) {
+        return;
+    }
+    // call sites only: a type-position `Instant` (e.g. an Option field
+    // that obs code fills in later) is not a clock read
+    let needles = ["Instant::now(", "SystemTime::now(", "SystemTime::UNIX_EPOCH"];
+    for (idx, line) in lines.iter().enumerate() {
+        for needle in needles {
+            if line.contains(needle) {
+                emit(
+                    ds,
+                    suppressed,
+                    rules::NO_WALL_CLOCK,
+                    rel_path,
+                    idx + 1,
+                    format!("wall-clock read `{needle}..` in a deterministic path"),
+                );
+            }
+        }
+    }
+}
+
+// ---- rule: no-lock-unwrap -------------------------------------------------
+
+fn check_lock_unwrap(
+    rel_path: &str,
+    lines: &[&str],
+    suppressed: &BTreeSet<(String, usize)>,
+    ds: &mut Vec<Diagnostic>,
+) {
+    for (idx, line) in lines.iter().enumerate() {
+        if line.contains(".lock().unwrap()") || line.contains(".lock().expect(") {
+            emit(
+                ds,
+                suppressed,
+                rules::NO_LOCK_UNWRAP,
+                rel_path,
+                idx + 1,
+                "lock acquisition panics on poison; use \
+                 `.lock().unwrap_or_else(|e| e.into_inner())`"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---- rule: no-float-in-seeded-draws ---------------------------------------
+
+fn check_float_in_draws(
+    rel_path: &str,
+    lines: &[&str],
+    suppressed: &BTreeSet<(String, usize)>,
+    ds: &mut Vec<Diagnostic>,
+) {
+    let Some((_, fns)) = DRAW_SCOPES.iter().find(|(f, _)| *f == rel_path) else {
+        return;
+    };
+    for (start, end) in fn_regions(lines, fns) {
+        for line_no in start..=end {
+            let line = lines[line_no - 1];
+            if has_float_token(line) {
+                emit(
+                    ds,
+                    suppressed,
+                    rules::NO_FLOAT_IN_SEEDED_DRAWS,
+                    rel_path,
+                    line_no,
+                    "float arithmetic inside an integer-only seeded draw function".to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// 1-indexed inclusive line ranges of the bodies (signature through
+/// closing brace) of the named functions, found by brace counting.
+fn fn_regions(lines: &[&str], names: &[&str]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        if let Some(name) = fn_name_on(lines[i]) {
+            if names.contains(&name.as_str()) {
+                let end = body_end(lines, i);
+                regions.push((i + 1, end + 1));
+                i = end + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    regions
+}
+
+/// The identifier after a boundary `fn ` token on this line, if any.
+fn fn_name_on(line: &str) -> Option<String> {
+    for p in ident_occurrences(line, "fn") {
+        let rest = line[p + 2..].trim_start();
+        let name: String = rest.chars().take_while(|c| is_ident(*c)).collect();
+        if !name.is_empty() {
+            return Some(name);
+        }
+    }
+    None
+}
+
+/// Line index (0-based) of the closing brace matching the first `{` at
+/// or after `start` — the end of a fn body in brace-balanced source.
+fn body_end(lines: &[&str], start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (idx, line) in lines.iter().enumerate().skip(start) {
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return idx;
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+/// `f64`/`f32` tokens (identifier boundaries) or a float literal
+/// (digit '.' digit — `0..n` ranges and tuple indexes don't match).
+fn has_float_token(line: &str) -> bool {
+    if !ident_occurrences(line, "f64").is_empty() || !ident_occurrences(line, "f32").is_empty() {
+        return true;
+    }
+    let cs: Vec<char> = line.chars().collect();
+    cs.windows(3)
+        .any(|w| w[0].is_ascii_digit() && w[1] == '.' && w[2].is_ascii_digit())
+}
+
+// ---- rule: no-unordered-iteration-in-planner ------------------------------
+
+fn check_unordered_iteration(
+    rel_path: &str,
+    lines: &[&str],
+    suppressed: &BTreeSet<(String, usize)>,
+    ds: &mut Vec<Diagnostic>,
+) {
+    if !(rel_path.starts_with("planner/") || rel_path.starts_with("sparse/")) {
+        return;
+    }
+    // pass 1: names bound to a HashMap (let bindings, fields, params)
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for line in lines {
+        if line.contains("HashMap::") {
+            if let Some(name) = let_binding_name(line) {
+                names.insert(name);
+            }
+        }
+        for marker in [": HashMap<", ": RefCell<HashMap", ": &mut HashMap<", ": &HashMap<"] {
+            if let Some(pos) = line.find(marker) {
+                let name: String = line[..pos]
+                    .chars()
+                    .rev()
+                    .take_while(|c| is_ident(*c))
+                    .collect::<String>()
+                    .chars()
+                    .rev()
+                    .collect();
+                if !name.is_empty() {
+                    names.insert(name);
+                }
+            }
+        }
+    }
+    // pass 2: order-dependent consumption of those names
+    let iter_suffixes = [".iter()", ".keys()", ".values()", ".drain(", ".into_iter()"];
+    for (idx, line) in lines.iter().enumerate() {
+        for name in &names {
+            for p in ident_occurrences(line, name) {
+                let after = &line[p + name.len()..];
+                let for_loop = {
+                    let before = line[..p].trim_end().trim_end_matches('&').trim_end();
+                    before.ends_with(" in") || before == "in"
+                };
+                if iter_suffixes.iter().any(|s| after.starts_with(s)) || for_loop {
+                    emit(
+                        ds,
+                        suppressed,
+                        rules::NO_UNORDERED_ITERATION,
+                        rel_path,
+                        idx + 1,
+                        format!(
+                            "iteration over HashMap-bound `{name}` feeds plan selection; \
+                             sort keys or use a BTreeMap"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `let [mut] name` binding identifier on this line, if any.
+fn let_binding_name(line: &str) -> Option<String> {
+    let p = *ident_occurrences(line, "let").first()?;
+    let rest = line[p + 3..].trim_start();
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let name: String = rest.chars().take_while(|c| is_ident(*c)).collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_at(ds: &[Diagnostic]) -> Vec<(&'static str, usize)> {
+        ds.iter().map(|d| (d.rule, d.line.unwrap())).collect()
+    }
+
+    #[test]
+    fn wall_clock_call_site_flagged_outside_whitelist() {
+        let src = "fn f() {\n    let t = Instant::now();\n}\n";
+        let ds = lint_source("planner/search.rs", src);
+        assert_eq!(rules_at(&ds), vec![(rules::NO_WALL_CLOCK, 2)]);
+        // same text under a whitelisted path is fine
+        assert!(lint_source("obs/recorder.rs", src).is_empty());
+        assert!(lint_source("util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn type_position_instant_is_not_flagged() {
+        let src = "struct S {\n    t: Option<std::time::Instant>,\n}\n";
+        assert!(lint_source("sim/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn needle_inside_string_or_comment_is_not_flagged() {
+        let src = "fn f() {\n    // Instant::now( in a comment\n    \
+                   let s = \"Instant::now(\";\n    /* SystemTime::now( */\n}\n";
+        assert!(lint_source("planner/search.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_and_expect_flagged_recovery_not() {
+        let src = "fn f() {\n    let a = m.lock().unwrap();\n    \
+                   let b = m.lock().expect(\"poisoned\");\n    \
+                   let c = m.lock().unwrap_or_else(|e| e.into_inner());\n    \
+                   assert!(m.lock().is_err());\n}\n";
+        let ds = lint_source("serve/queue.rs", src);
+        assert_eq!(
+            rules_at(&ds),
+            vec![(rules::NO_LOCK_UNWRAP, 2), (rules::NO_LOCK_UNWRAP, 3)]
+        );
+    }
+
+    #[test]
+    fn allow_pragma_suppresses_same_and_next_line() {
+        let src = "fn f() {\n    // lint:allow(no-lock-unwrap)\n    \
+                   let a = m.lock().unwrap();\n    let b = m.lock().unwrap();\n}\n";
+        let ds = lint_source("serve/queue.rs", src);
+        // line 3 is covered by the pragma on line 2; line 4 is not
+        assert_eq!(rules_at(&ds), vec![(rules::NO_LOCK_UNWRAP, 4)]);
+    }
+
+    #[test]
+    fn pragma_only_suppresses_its_named_rule() {
+        let src = "fn f() {\n    // lint:allow(no-wall-clock-in-deterministic-paths)\n    \
+                   let a = m.lock().unwrap();\n}\n";
+        let ds = lint_source("serve/queue.rs", src);
+        assert_eq!(rules_at(&ds), vec![(rules::NO_LOCK_UNWRAP, 3)]);
+    }
+
+    #[test]
+    fn float_flagged_only_inside_scoped_draw_fns() {
+        let src = "impl Rng {\n    pub fn next_u64(&mut self) -> u64 {\n        \
+                   let x = 0.5;\n        x as u64\n    }\n    \
+                   pub fn next_f64(&mut self) -> f64 {\n        \
+                   (self.next_u64() >> 11) as f64 / 9007199254740992.0\n    }\n}\n";
+        let ds = lint_source("util/rng.rs", src);
+        // next_u64 is in scope and has a float literal; next_f64 is the
+        // deliberate float helper, outside the scope list
+        assert_eq!(rules_at(&ds), vec![(rules::NO_FLOAT_IN_SEEDED_DRAWS, 3)]);
+    }
+
+    #[test]
+    fn integer_ranges_and_hex_are_not_floats() {
+        let src = "fn splitmix64(x: u64) -> u64 {\n    \
+                   let mut z = x.wrapping_add(0x9E3779B97F4A7C15);\n    \
+                   for _ in 0..10 { z ^= z >> 27; }\n    z\n}\n";
+        assert!(lint_source("fault/plan.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hashmap_iteration_flagged_in_planner_scope() {
+        let src = "fn pick() {\n    let mut cand = HashMap::new();\n    \
+                   cand.insert(1, 2);\n    for (k, v) in &cand {\n        \
+                   use_it(k, v);\n    }\n    \
+                   let best = cand.iter().max();\n}\n";
+        let ds = lint_source("planner/search.rs", src);
+        assert_eq!(
+            rules_at(&ds),
+            vec![
+                (rules::NO_UNORDERED_ITERATION, 4),
+                (rules::NO_UNORDERED_ITERATION, 7)
+            ]
+        );
+        // the same source outside planner/sparse is out of scope
+        assert!(lint_source("serve/service.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hashmap_field_and_param_names_are_tracked() {
+        let src = "struct S {\n    memo: RefCell<HashMap<u64, bool>>,\n}\n\
+                   fn f(cells: &mut HashMap<u64, f64>) {\n    \
+                   for k in cells.keys() {\n        go(k);\n    }\n}\n";
+        let ds = lint_source("sparse/planner.rs", src);
+        assert_eq!(rules_at(&ds), vec![(rules::NO_UNORDERED_ITERATION, 5)]);
+    }
+
+    #[test]
+    fn keyed_lookup_and_entry_are_fine() {
+        let src = "fn pick() {\n    let mut cand = HashMap::new();\n    \
+                   cand.entry(3).or_insert(1);\n    \
+                   let xs = cand[&3].iter().sum();\n}\n";
+        assert!(lint_source("planner/search.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_stripped() {
+        let src = "fn f() {\n    let s = r#\"m.lock().unwrap()\"#;\n    \
+                   let c = '\"';\n    let t = m.lock().unwrap();\n}\n";
+        let ds = lint_source("planner/search.rs", src);
+        assert_eq!(rules_at(&ds), vec![(rules::NO_LOCK_UNWRAP, 4)]);
+    }
+
+    #[test]
+    fn lifetimes_do_not_derail_the_stripper() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str {\n    \
+                   let t = Instant::now();\n    x\n}\n";
+        let ds = lint_source("planner/search.rs", src);
+        assert_eq!(rules_at(&ds), vec![(rules::NO_WALL_CLOCK, 2)]);
+    }
+
+    #[test]
+    fn repo_source_tree_gates_clean() {
+        // the whole point: rust/src must be lint-clean. CARGO_MANIFEST_DIR
+        // is the workspace root (Cargo.toml lives there, src under rust/)
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src");
+        let ds = lint_dir(&root).unwrap();
+        assert!(ds.is_empty(), "{}", crate::analysis::report_text(&ds));
+    }
+}

@@ -1,0 +1,237 @@
+//! Static verification (lib.rs role 11): prove the repo's invariants
+//! *before* anything runs, instead of sampling them dynamically.
+//!
+//! Two independent passes share one diagnostic vocabulary and one CLI
+//! (`ipumm check`):
+//!
+//! - [`verify`] — an IR verifier over built graphs and their BSP
+//!   schedules: superstep race detection over `TileSpan`/tensor overlap,
+//!   Sync-barrier ordering, dead exchange phases, def-before-use liveness
+//!   across exchange deliveries, per-tile SRAM capacity, and a
+//!   memory-bill cross-check that the planner's [`TileBill`] components
+//!   equal what the materialized graph actually holds per tile (dense
+//!   balanced mappings and the sparse block-CSR residency alike).
+//!   [`mutate`] carries the seeded mutation corpus — four ways to break a
+//!   correct graph, each caught by a known rule id — that the tests and
+//!   the CI trip-wire (`ipumm check --mutate CLASS`) drive.
+//! - [`lint`] — a hermetic source scanner (no deps, like `util::json`)
+//!   enforcing repo invariants over `rust/src/`: no wall clocks in
+//!   deterministic paths, no non-poison-recovering lock acquisition, no
+//!   float arithmetic in seeded draw paths, no unordered `HashMap`
+//!   iteration feeding plan selection. `// lint:allow(rule)` suppresses
+//!   one finding on the same or next line.
+//!
+//! Both passes are pure readers — zero behavior change to planning or
+//! serving — and every finding is a structured [`Diagnostic`] (rule id,
+//! severity, location) so callers gate on the full list instead of the
+//! first bail.
+//!
+//! [`TileBill`]: crate::planner::cost::TileBill
+
+pub mod lint;
+pub mod mutate;
+pub mod verify;
+
+use crate::util::json::Json;
+
+/// How bad a finding is. Today every shipped rule emits `Error` (the
+/// `check` gate is binary); `Warning` exists so future advisory rules
+/// don't need a schema change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One structured finding: a stable rule id, a severity, a human
+/// message, and whatever location coordinates the emitting pass has —
+/// source file/line for lint, tile/superstep/tensor for the IR verifier.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Stable kebab-case rule id (`race-write-write`, `no-lock-unwrap`).
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub message: String,
+    /// Source location, for lint findings.
+    pub file: Option<String>,
+    pub line: Option<usize>,
+    /// IR location, for verifier findings.
+    pub tile: Option<usize>,
+    pub superstep: Option<usize>,
+    pub tensor: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn error(rule: &'static str, message: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            rule,
+            severity: Severity::Error,
+            message: message.into(),
+            file: None,
+            line: None,
+            tile: None,
+            superstep: None,
+            tensor: None,
+        }
+    }
+
+    pub fn at_file(mut self, file: impl Into<String>, line: usize) -> Diagnostic {
+        self.file = Some(file.into());
+        self.line = Some(line);
+        self
+    }
+
+    pub fn at_tile(mut self, tile: usize) -> Diagnostic {
+        self.tile = Some(tile);
+        self
+    }
+
+    pub fn at_superstep(mut self, superstep: usize) -> Diagnostic {
+        self.superstep = Some(superstep);
+        self
+    }
+
+    pub fn on_tensor(mut self, tensor: impl Into<String>) -> Diagnostic {
+        self.tensor = Some(tensor.into());
+        self
+    }
+
+    /// One human-readable report line:
+    /// `error[rule] file:line: message (tile 3, superstep 2, tensor 'C')`.
+    pub fn render(&self) -> String {
+        let mut s = format!("{}[{}] ", self.severity.name(), self.rule);
+        if let Some(file) = &self.file {
+            s.push_str(file);
+            if let Some(line) = self.line {
+                s.push_str(&format!(":{line}"));
+            }
+            s.push_str(": ");
+        }
+        s.push_str(&self.message);
+        let mut loc = Vec::new();
+        if let Some(t) = self.tile {
+            loc.push(format!("tile {t}"));
+        }
+        if let Some(ss) = self.superstep {
+            loc.push(format!("superstep {ss}"));
+        }
+        if let Some(tensor) = &self.tensor {
+            loc.push(format!("tensor '{tensor}'"));
+        }
+        if !loc.is_empty() {
+            s.push_str(&format!(" ({})", loc.join(", ")));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("rule", Json::Str(self.rule.to_string()));
+        o.set("severity", Json::Str(self.severity.name().to_string()));
+        o.set("message", Json::Str(self.message.clone()));
+        if let Some(file) = &self.file {
+            o.set("file", Json::Str(file.clone()));
+        }
+        if let Some(line) = self.line {
+            o.set("line", Json::Int(line as i64));
+        }
+        if let Some(tile) = self.tile {
+            o.set("tile", Json::Int(tile as i64));
+        }
+        if let Some(ss) = self.superstep {
+            o.set("superstep", Json::Int(ss as i64));
+        }
+        if let Some(tensor) = &self.tensor {
+            o.set("tensor", Json::Str(tensor.clone()));
+        }
+        o
+    }
+}
+
+/// JSON report over a diagnostic list — the shape `ipumm check --json`
+/// writes and CI validates: `{"diagnostics": [...], "count": N,
+/// "clean": bool}` plus caller-provided context keys.
+pub fn report_json(diagnostics: &[Diagnostic]) -> Json {
+    let mut arr = Json::Arr(Vec::new());
+    for d in diagnostics {
+        arr.push(d.to_json());
+    }
+    let mut o = Json::obj();
+    o.set("count", Json::Int(diagnostics.len() as i64));
+    o.set("clean", Json::Bool(diagnostics.is_empty()));
+    o.set("diagnostics", arr);
+    o
+}
+
+/// Human report: one `render()` line per finding, sorted by rule then
+/// location so output is deterministic regardless of emission order.
+pub fn report_text(diagnostics: &[Diagnostic]) -> String {
+    let mut lines: Vec<String> = diagnostics.iter().map(Diagnostic::render).collect();
+    lines.sort();
+    lines.join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_carries_rule_and_location() {
+        let d = Diagnostic::error("race-write-write", "two writers")
+            .at_tile(3)
+            .at_superstep(2)
+            .on_tensor("C");
+        let line = d.render();
+        assert!(line.starts_with("error[race-write-write]"));
+        assert!(line.contains("tile 3"));
+        assert!(line.contains("superstep 2"));
+        assert!(line.contains("tensor 'C'"));
+    }
+
+    #[test]
+    fn render_lint_shape_uses_file_line() {
+        let d = Diagnostic::error("no-lock-unwrap", "bad lock").at_file("serve/queue.rs", 42);
+        assert_eq!(d.render(), "error[no-lock-unwrap] serve/queue.rs:42: bad lock");
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let ds = vec![Diagnostic::error("memory-capacity", "over").at_tile(7)];
+        let j = report_json(&ds);
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(1.0));
+        assert!(matches!(j.get("clean"), Some(Json::Bool(false))));
+        let items = j.get("diagnostics").and_then(Json::items).unwrap();
+        assert_eq!(items[0].get("rule").and_then(Json::as_str), Some("memory-capacity"));
+        assert_eq!(items[0].get("tile").and_then(Json::as_f64), Some(7.0));
+        // round-trips through the hermetic parser
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(parsed.get("count").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn empty_report_is_clean() {
+        let j = report_json(&[]);
+        assert!(matches!(j.get("clean"), Some(Json::Bool(true))));
+        assert_eq!(report_text(&[]), "");
+    }
+
+    #[test]
+    fn report_text_is_sorted() {
+        let ds = vec![
+            Diagnostic::error("zz-rule", "later"),
+            Diagnostic::error("aa-rule", "earlier"),
+        ];
+        let text = report_text(&ds);
+        let first = text.lines().next().unwrap();
+        assert!(first.contains("aa-rule"));
+    }
+}

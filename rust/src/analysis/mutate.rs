@@ -1,0 +1,272 @@
+//! Seeded mutation corpus for the IR verifier: four ways to break a
+//! correct graph, each caught by a known rule id.
+//!
+//! This is the verifier's own test harness — `ipumm check --mutate CLASS`
+//! applies one mutation to a freshly planned graph and must exit nonzero,
+//! which CI runs as a trip-wire so a silently weakened verifier fails the
+//! build rather than passing vacuously. Each class models a real bug
+//! shape:
+//!
+//! | class               | seeds                                   | caught by                |
+//! |---------------------|-----------------------------------------|--------------------------|
+//! | `overlap-span`      | duplicated worklist record on one span  | `race-write-write`       |
+//! | `drop-exchange`     | planned phase never scheduled           | `exchange-dead-phase`    |
+//! | `skew-residency`    | interval moved between home tiles       | `memory-bill-mismatch`   |
+//! | `reorder-superstep` | Sync barrier removed before a compute   | `bsp-sync-ordering`      |
+//!
+//! Mutations are *adversarially minimal*: `skew-residency` moves an
+//! interval (totals and the partition stay valid, so the structural
+//! validator passes and only the per-tile bill check can catch it), and
+//! `drop-exchange` leaves the plan registered (deliveries may still be
+//! covered by other phases, so only the dead-phase rule is guaranteed).
+
+use crate::graph::builder::Graph;
+use crate::graph::program::Program;
+use crate::graph::vertex::VertexGroupId;
+
+use super::verify::rules;
+
+/// One way to corrupt a correct graph. `seed` picks among the eligible
+/// sites deterministically (no RNG: site index = seed % candidates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MutationClass {
+    /// Duplicate an output-bearing vertex group onto its own span: two
+    /// same-family record populations claim the same output region.
+    OverlapSpan,
+    /// Excise a scheduled exchange phase from the program, leaving the
+    /// plan registered: planned data movement that never happens.
+    DropExchange,
+    /// Move one mapping interval of a home tensor to the next tile:
+    /// the partition stays valid, the per-tile balance breaks.
+    SkewResidency,
+    /// Remove the Sync barrier directly before a compute phase: two BSP
+    /// phases become adjacent with no barrier.
+    ReorderSuperstep,
+}
+
+impl MutationClass {
+    pub const ALL: [MutationClass; 4] = [
+        MutationClass::OverlapSpan,
+        MutationClass::DropExchange,
+        MutationClass::SkewResidency,
+        MutationClass::ReorderSuperstep,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MutationClass::OverlapSpan => "overlap-span",
+            MutationClass::DropExchange => "drop-exchange",
+            MutationClass::SkewResidency => "skew-residency",
+            MutationClass::ReorderSuperstep => "reorder-superstep",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<MutationClass> {
+        MutationClass::ALL.iter().copied().find(|c| c.name() == name)
+    }
+
+    /// The rule id that must appear when the verifier runs over a graph
+    /// this class mutated.
+    pub fn expected_rule(&self) -> &'static str {
+        match self {
+            MutationClass::OverlapSpan => rules::RACE_WRITE_WRITE,
+            MutationClass::DropExchange => rules::EXCHANGE_DEAD_PHASE,
+            MutationClass::SkewResidency => rules::MEMORY_BILL_MISMATCH,
+            MutationClass::ReorderSuperstep => rules::BSP_SYNC_ORDERING,
+        }
+    }
+}
+
+/// Apply one mutation in place. Returns a description of the edit (for
+/// CLI logging), or None if the graph has no eligible site — planner
+/// graphs always have one for every class.
+pub fn apply(g: &mut Graph, class: MutationClass, seed: u64) -> Option<String> {
+    match class {
+        MutationClass::OverlapSpan => overlap_span(g, seed),
+        MutationClass::DropExchange => drop_exchange(g, seed),
+        MutationClass::SkewResidency => skew_residency(g, seed),
+        MutationClass::ReorderSuperstep => reorder_superstep(g),
+    }
+}
+
+fn overlap_span(g: &mut Graph, seed: u64) -> Option<String> {
+    let candidates: Vec<VertexGroupId> = g
+        .groups()
+        .iter()
+        .filter(|gr| !gr.outputs.is_empty() && !gr.span.is_empty())
+        .map(|gr| gr.id)
+        .collect();
+    if candidates.is_empty() {
+        return None;
+    }
+    let victim = candidates[seed as usize % candidates.len()];
+    let owner = g
+        .compute_sets()
+        .iter()
+        .find(|cs| cs.groups.contains(&victim))?
+        .id;
+    let gr = g.group(victim).clone();
+    g.add_vertex_group(owner, gr.kind, gr.span, gr.per_tile, gr.inputs, gr.outputs);
+    Some(format!("duplicated group {victim:?} onto its own span"))
+}
+
+fn drop_exchange(g: &mut Graph, seed: u64) -> Option<String> {
+    // victims are exchanges the program actually schedules — excising
+    // one makes it a registered-but-dead phase
+    let mut referenced: Vec<u32> = g
+        .program
+        .steps()
+        .iter()
+        .filter_map(|s| match s {
+            crate::graph::program::ProgramStep::Exchange(ex) => Some(ex.0),
+            _ => None,
+        })
+        .collect();
+    referenced.sort_unstable();
+    referenced.dedup();
+    if referenced.is_empty() {
+        return None;
+    }
+    let victim = referenced[seed as usize % referenced.len()];
+    let name = g.exchanges()[victim as usize].name.clone();
+    let stripped = strip_exchange(&g.program, victim);
+    g.set_program(stripped);
+    Some(format!("excised exchange '{name}' from the program"))
+}
+
+/// Replace every `Exchange(victim)` node with an empty Sequence (which
+/// flattens to zero steps), preserving the rest of the program tree.
+fn strip_exchange(p: &Program, victim: u32) -> Program {
+    match p {
+        Program::Exchange(ex) if ex.0 == victim => Program::Sequence(vec![]),
+        Program::Sequence(items) => {
+            Program::Sequence(items.iter().map(|c| strip_exchange(c, victim)).collect())
+        }
+        Program::Repeat(n, inner) => Program::Repeat(*n, Box::new(strip_exchange(inner, victim))),
+        other => other.clone(),
+    }
+}
+
+fn skew_residency(g: &mut Graph, seed: u64) -> Option<String> {
+    // home tensors whose per-tile balance (or CSR residency) the bill
+    // cross-check pins down exactly
+    let names = ["A", "B", "A_bsr", "A_csr_col", "A_csr_row"];
+    let candidates: Vec<_> = g
+        .tensors()
+        .iter()
+        .filter(|t| names.contains(&t.name.as_str()))
+        .filter(|t| {
+            t.mapping
+                .as_ref()
+                .is_some_and(|m| m.len() >= 2 && m.iter().any(|ivs| !ivs.is_empty()))
+        })
+        .map(|t| t.id)
+        .collect();
+    if candidates.is_empty() {
+        return None;
+    }
+    let victim = candidates[seed as usize % candidates.len()];
+    let t = g.tensor(victim);
+    let name = t.name.clone();
+    let mut mapping = t.mapping.clone()?;
+    // move the first nonempty tile's last interval onto its neighbor:
+    // same intervals overall (partition still valid), balance broken
+    let from = mapping.iter().position(|ivs| !ivs.is_empty())?;
+    let to = if from + 1 < mapping.len() { from + 1 } else { from.checked_sub(1)? };
+    let iv = mapping[from].pop()?;
+    mapping[to].push(iv);
+    g.set_tile_mapping(victim, mapping);
+    Some(format!("moved a '{name}' interval from tile {from} to tile {to}"))
+}
+
+fn reorder_superstep(g: &mut Graph) -> Option<String> {
+    let mut done = false;
+    let reordered = drop_sync_before_execute(&g.program, &mut done);
+    if !done {
+        return None;
+    }
+    g.set_program(reordered);
+    Some("removed the Sync barrier before the first compute phase".to_string())
+}
+
+/// Remove the first `Sync` that directly precedes an `Execute` inside a
+/// Sequence (recursing through Repeat bodies), leaving two BSP phases
+/// adjacent with no barrier.
+fn drop_sync_before_execute(p: &Program, done: &mut bool) -> Program {
+    match p {
+        Program::Sequence(items) => {
+            let mut out = Vec::new();
+            let mut i = 0;
+            while i < items.len() {
+                if !*done
+                    && matches!(items[i], Program::Sync)
+                    && matches!(items.get(i + 1), Some(Program::Execute(_)))
+                {
+                    *done = true;
+                    i += 1;
+                    continue;
+                }
+                out.push(drop_sync_before_execute(&items[i], done));
+                i += 1;
+            }
+            Program::Sequence(out)
+        }
+        Program::Repeat(n, inner) => {
+            Program::Repeat(*n, Box::new(drop_sync_before_execute(inner, done)))
+        }
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::verify::verify_dense;
+    use crate::arch::IpuArch;
+    use crate::planner::partition::MmShape;
+    use crate::planner::search::search;
+    use crate::sim::engine::SimEngine;
+
+    #[test]
+    fn class_names_round_trip() {
+        for c in MutationClass::ALL {
+            assert_eq!(MutationClass::by_name(c.name()), Some(c));
+        }
+        assert_eq!(MutationClass::by_name("nope"), None);
+    }
+
+    #[test]
+    fn every_class_is_caught_by_its_expected_rule() {
+        let arch = IpuArch::gc200();
+        let shape = MmShape::square(512);
+        let plan = search(&arch, shape).unwrap();
+        let engine = SimEngine::new(arch.clone());
+        for class in MutationClass::ALL {
+            let mut g = engine.build_graph(shape, &plan);
+            let edit = apply(&mut g, class, 0);
+            assert!(edit.is_some(), "{}: no eligible site", class.name());
+            let ds = verify_dense(&arch, shape, &plan, &g);
+            assert!(
+                ds.iter().any(|d| d.rule == class.expected_rule()),
+                "{} not caught by {}: {:?}",
+                class.name(),
+                class.expected_rule(),
+                ds
+            );
+        }
+    }
+
+    #[test]
+    fn mutation_sites_vary_with_seed_but_stay_caught() {
+        let arch = IpuArch::gc200();
+        let shape = MmShape::square(512);
+        let plan = search(&arch, shape).unwrap();
+        let engine = SimEngine::new(arch.clone());
+        for seed in 0..4 {
+            let mut g = engine.build_graph(shape, &plan);
+            apply(&mut g, MutationClass::OverlapSpan, seed).unwrap();
+            let ds = verify_dense(&arch, shape, &plan, &g);
+            assert!(ds.iter().any(|d| d.rule == rules::RACE_WRITE_WRITE), "seed {seed}");
+        }
+    }
+}

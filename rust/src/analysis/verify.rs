@@ -1,0 +1,785 @@
+//! Static IR verifier over built graphs and their BSP schedules.
+//!
+//! The BSP model makes these checks *decidable*: compute supersteps are
+//! delimited by global Syncs, every tensor carries an explicit tile
+//! mapping, and exchange phases are pre-compiled transfer lists — so
+//! races, barrier violations, dead phases, undelivered reads, and
+//! capacity overruns are all visible without executing anything.
+//!
+//! The race rules encode the planner's accumulate idiom: `Zero` and
+//! `AmpMacc` intentionally share the C accumulator within one superstep
+//! (init + accumulate on the same tile is sequenced by the worker, not a
+//! hazard), so write-write conflicts are only flagged between *distinct*
+//! records of the **same** codelet family — two independent `AmpMacc`
+//! populations landing on one tile's C block is exactly the duplicated-
+//! worklist bug class the mutation corpus seeds. Read-write conflicts
+//! skip readers that also write the tensor (`Reduce` consumes and
+//! produces C in place).
+//!
+//! `verify_dense`/`verify_sparse` add the memory-bill cross-check: the
+//! planner's [`TileBill`] components must equal what the materialized
+//! graph actually holds — A/B balanced to within one element per tile
+//! with `home_a = eb*m*n/tiles` exactly, every C grid block within
+//! `c_block`, and (CSR branch) the three sparse tensors byte-for-byte
+//! equal to [`BlockCsr::residency_per_tile`] on every tile.
+//!
+//! [`TileBill`]: crate::planner::cost::TileBill
+
+use std::collections::BTreeSet;
+
+use crate::analysis::Diagnostic;
+use crate::arch::IpuArch;
+use crate::graph::builder::Graph;
+use crate::graph::program::ProgramStep;
+use crate::graph::tensor::TensorId;
+use crate::graph::vertex::{ComputeSetId, TileSpan};
+use crate::memory::accounting::MemoryAccountant;
+use crate::planner::cost::CostModel;
+use crate::planner::partition::MmShape;
+use crate::planner::search::Plan;
+use crate::sparse::csr::BlockCsr;
+use crate::sparse::pattern::BlockPattern;
+use crate::sparse::planner::SparsePlan;
+
+/// Stable rule ids the verifier emits (lint rules live in
+/// [`crate::analysis::lint`]).
+pub mod rules {
+    pub const RACE_WRITE_WRITE: &str = "race-write-write";
+    pub const RACE_READ_WRITE: &str = "race-read-write";
+    pub const BSP_SYNC_ORDERING: &str = "bsp-sync-ordering";
+    pub const EXCHANGE_DEAD_PHASE: &str = "exchange-dead-phase";
+    pub const LIVENESS_DEF_BEFORE_USE: &str = "liveness-def-before-use";
+    pub const MEMORY_CAPACITY: &str = "memory-capacity";
+    pub const MEMORY_BILL_MISMATCH: &str = "memory-bill-mismatch";
+}
+
+/// One compute-superstep access record: an individual vertex (span = its
+/// single tile) or a replicated group, flattened to a common shape.
+struct Access<'g> {
+    family: &'static str,
+    span: TileSpan,
+    reads: &'g [TensorId],
+    writes: &'g [TensorId],
+}
+
+/// First tile two spans share, if any.
+fn overlap_tile(a: &TileSpan, b: &TileSpan) -> Option<usize> {
+    match (a, b) {
+        (TileSpan::Range { start: s1, end: e1 }, TileSpan::Range { start: s2, end: e2 }) => {
+            let lo = *s1.max(s2);
+            if lo < *e1.min(e2) {
+                Some(lo)
+            } else {
+                None
+            }
+        }
+        _ => {
+            let set: BTreeSet<usize> = a.iter().collect();
+            b.iter().find(|t| set.contains(t))
+        }
+    }
+}
+
+/// Verify one built graph + schedule. Returns every finding (empty =
+/// clean). If the graph is structurally broken (dangling references,
+/// invalid mappings — see [`Graph::validate_diagnostics`]) only the
+/// structural findings are returned: the schedule analyses index into
+/// tensor/compute-set tables and are meaningless over a broken graph.
+pub fn verify_graph(arch: &IpuArch, graph: &Graph) -> Vec<Diagnostic> {
+    let structural = graph.validate_diagnostics();
+    if !structural.is_empty() {
+        return structural;
+    }
+    let mut ds = Vec::new();
+    let steps = graph.program.steps();
+
+    // --- bsp-sync-ordering: BSP phases on different tiles may only be
+    // adjacent across a global Sync barrier (scheduler contract: the
+    // engine prices each Execute/Exchange step as a lockstep phase)
+    let mut superstep = 0usize;
+    let mut prev_nonsync: Option<&ProgramStep> = None;
+    for step in &steps {
+        match step {
+            ProgramStep::Sync => {
+                prev_nonsync = None;
+                continue;
+            }
+            ProgramStep::Execute(_) | ProgramStep::Exchange(_) => {
+                if let Some(prev) = prev_nonsync {
+                    ds.push(
+                        Diagnostic::error(
+                            rules::BSP_SYNC_ORDERING,
+                            format!(
+                                "{} follows {} with no Sync barrier between BSP phases",
+                                step_name(graph, step),
+                                step_name(graph, prev),
+                            ),
+                        )
+                        .at_superstep(superstep),
+                    );
+                }
+                prev_nonsync = Some(step);
+            }
+        }
+        if matches!(step, ProgramStep::Execute(_)) {
+            superstep += 1;
+        }
+    }
+
+    // --- exchange-dead-phase: every registered exchange must be run by
+    // the program (a planned-but-never-scheduled phase means some data
+    // movement the rest of the schedule assumes happened, never does)
+    let referenced: BTreeSet<u32> = steps
+        .iter()
+        .filter_map(|s| match s {
+            ProgramStep::Exchange(ex) => Some(ex.0),
+            _ => None,
+        })
+        .collect();
+    for (idx, plan) in graph.exchanges().iter().enumerate() {
+        if !referenced.contains(&(idx as u32)) {
+            ds.push(Diagnostic::error(
+                rules::EXCHANGE_DEAD_PHASE,
+                format!("exchange '{}' is registered but never scheduled by the program", plan.name),
+            ));
+        }
+    }
+
+    // --- per-superstep analyses: race detection within each compute
+    // set, def-before-use liveness against the deliveries of all prior
+    // exchange phases. Repeat unrolls re-run identical compute sets, so
+    // each distinct set is analyzed once, at its first occurrence.
+    let mut delivered: BTreeSet<usize> = BTreeSet::new();
+    let mut seen: BTreeSet<u32> = BTreeSet::new();
+    let mut superstep = 0usize;
+    for step in &steps {
+        match step {
+            ProgramStep::Exchange(ex) => {
+                for t in &graph.exchange(*ex).transfers {
+                    delivered.insert(t.dst_tile);
+                }
+            }
+            ProgramStep::Execute(cs) => {
+                if seen.insert(cs.0) {
+                    check_superstep(graph, *cs, superstep, &delivered, &mut ds);
+                }
+                superstep += 1;
+            }
+            ProgramStep::Sync => {}
+        }
+    }
+
+    // --- memory-capacity: the whole graph must fit per-tile SRAM
+    // (resident tensors + vertex state/code + exchange code and landing
+    // buffers — the accountant's bill, which liveness peaks never exceed)
+    if graph.tiles == arch.tiles {
+        let report = MemoryAccountant::new(arch).account(graph);
+        if !report.fits() {
+            let over = report
+                .per_tile
+                .iter()
+                .filter(|t| t.used() > report.capacity_per_tile)
+                .count();
+            ds.push(
+                Diagnostic::error(
+                    rules::MEMORY_CAPACITY,
+                    format!(
+                        "{} tile(s) exceed SRAM: worst uses {} of {} bytes",
+                        over, report.max_tile_used, report.capacity_per_tile
+                    ),
+                )
+                .at_tile(report.max_tile),
+            );
+        }
+    }
+    ds
+}
+
+fn step_name(graph: &Graph, step: &ProgramStep) -> String {
+    match step {
+        ProgramStep::Execute(cs) => format!("Execute({})", graph.compute_set(*cs).name),
+        ProgramStep::Exchange(ex) => format!("Exchange({})", graph.exchange(*ex).name),
+        ProgramStep::Sync => "Sync".to_string(),
+    }
+}
+
+fn check_superstep(
+    graph: &Graph,
+    cs_id: ComputeSetId,
+    superstep: usize,
+    delivered: &BTreeSet<usize>,
+    ds: &mut Vec<Diagnostic>,
+) {
+    let cs = graph.compute_set(cs_id);
+    let mut accesses: Vec<Access> = Vec::new();
+    for &gid in &cs.groups {
+        let g = graph.group(gid);
+        accesses.push(Access {
+            family: g.kind.family(),
+            span: g.span.clone(),
+            reads: &g.inputs,
+            writes: &g.outputs,
+        });
+    }
+    for &vid in &cs.vertices {
+        let v = graph.vertex(vid);
+        accesses.push(Access {
+            family: v.kind.family(),
+            span: TileSpan::range(v.tile, v.tile + 1),
+            reads: &v.inputs,
+            writes: &v.outputs,
+        });
+    }
+
+    // race detection over all distinct record pairs
+    for i in 0..accesses.len() {
+        for j in (i + 1)..accesses.len() {
+            let (a, b) = (&accesses[i], &accesses[j]);
+            let Some(tile) = overlap_tile(&a.span, &b.span) else { continue };
+            // write-write within one codelet family: two independent
+            // record populations claiming the same output region
+            if a.family == b.family {
+                for t in a.writes.iter().filter(|t| b.writes.contains(t)) {
+                    ds.push(
+                        Diagnostic::error(
+                            rules::RACE_WRITE_WRITE,
+                            format!(
+                                "two {} records in compute set '{}' write the same tensor \
+                                 on overlapping tile spans",
+                                a.family, cs.name
+                            ),
+                        )
+                        .at_tile(tile)
+                        .at_superstep(superstep)
+                        .on_tensor(&graph.tensor(*t).name),
+                    );
+                }
+            }
+            // read-write: a pure reader overlapping a writer of the same
+            // tensor (readers that also write it reduce in place)
+            for (r, w) in [(a, b), (b, a)] {
+                for t in r.reads.iter().filter(|t| w.writes.contains(t) && !r.writes.contains(t))
+                {
+                    ds.push(
+                        Diagnostic::error(
+                            rules::RACE_READ_WRITE,
+                            format!(
+                                "{} reads a tensor that {} writes in the same compute \
+                                 superstep '{}'",
+                                r.family, w.family, cs.name
+                            ),
+                        )
+                        .at_tile(tile)
+                        .at_superstep(superstep)
+                        .on_tensor(&graph.tensor(*t).name),
+                    );
+                }
+            }
+        }
+    }
+
+    // def-before-use liveness: every tile a record reads a tensor on must
+    // either hold mapped bytes of it or have received an exchange
+    // delivery in some earlier phase. One finding per (set, tensor).
+    let mut reported: BTreeSet<u32> = BTreeSet::new();
+    for acc in &accesses {
+        for &tid in acc.reads {
+            if reported.contains(&tid.0) {
+                continue;
+            }
+            let tensor = graph.tensor(tid);
+            for tile in acc.span.iter() {
+                if tensor.bytes_on_tile(tile) == 0 && !delivered.contains(&tile) {
+                    reported.insert(tid.0);
+                    ds.push(
+                        Diagnostic::error(
+                            rules::LIVENESS_DEF_BEFORE_USE,
+                            format!(
+                                "{} in compute set '{}' reads a tensor on a tile that \
+                                 neither maps it nor received any prior exchange",
+                                acc.family, cs.name
+                            ),
+                        )
+                        .at_tile(tile)
+                        .at_superstep(superstep)
+                        .on_tensor(&tensor.name),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// ---- planner-bill cross-checks -------------------------------------------
+
+/// Max per-tile bytes of a named tensor, with its elems-per-tile range.
+fn tensor_by_name<'g>(graph: &'g Graph, name: &str) -> Option<&'g crate::graph::tensor::Tensor> {
+    graph.tensors().iter().find(|t| t.name == name)
+}
+
+/// A linearly-balanced tensor holds `numel/tiles` or `numel/tiles + 1`
+/// elements on every tile (`memory::mapping::linear_balanced_mapping`'s
+/// contract) — the per-tile check that makes a skewed residency entry
+/// detectable even when totals still balance.
+fn check_balanced(graph: &Graph, name: &str, ds: &mut Vec<Diagnostic>) {
+    let Some(t) = tensor_by_name(graph, name) else { return };
+    let eb = t.dtype.size_bytes();
+    let base = t.numel() / graph.tiles;
+    for tile in 0..graph.tiles {
+        let elems = t.bytes_on_tile(tile) / eb;
+        if elems != base && elems != base + 1 {
+            ds.push(
+                Diagnostic::error(
+                    rules::MEMORY_BILL_MISMATCH,
+                    format!(
+                        "balanced home mapping broken: tile holds {elems} elements, \
+                         expected {base} or {}",
+                        base + 1
+                    ),
+                )
+                .at_tile(tile)
+                .on_tensor(name),
+            );
+            return;
+        }
+    }
+}
+
+fn check_totals(graph: &Graph, name: &str, want_bytes: u64, ds: &mut Vec<Diagnostic>) {
+    match tensor_by_name(graph, name) {
+        None => ds.push(
+            Diagnostic::error(
+                rules::MEMORY_BILL_MISMATCH,
+                "graph lacks a tensor the planner bill accounts for".to_string(),
+            )
+            .on_tensor(name),
+        ),
+        Some(t) => {
+            if t.bytes() as u64 != want_bytes {
+                ds.push(
+                    Diagnostic::error(
+                        rules::MEMORY_BILL_MISMATCH,
+                        format!("tensor holds {} bytes, bill expects {}", t.bytes(), want_bytes),
+                    )
+                    .on_tensor(name),
+                );
+            }
+        }
+    }
+}
+
+/// C is grid-mapped one `sm x sk` block per reducer tile; edge blocks are
+/// smaller, so the bill's `c_block` is a one-sided per-tile bound.
+fn check_c_block(graph: &Graph, c_block: u64, ds: &mut Vec<Diagnostic>) {
+    let Some(c) = tensor_by_name(graph, "C") else { return };
+    for tile in 0..graph.tiles {
+        let b = c.bytes_on_tile(tile) as u64;
+        if b > c_block {
+            ds.push(
+                Diagnostic::error(
+                    rules::MEMORY_BILL_MISMATCH,
+                    format!("C grid block holds {b} bytes > the bill's c_block {c_block}"),
+                )
+                .at_tile(tile)
+                .on_tensor("C"),
+            );
+            return;
+        }
+    }
+}
+
+/// Full dense verification: schedule analyses plus the `TileBill`
+/// cross-check against the graph `build_graph` materialized for `plan`.
+pub fn verify_dense(arch: &IpuArch, shape: MmShape, plan: &Plan, graph: &Graph) -> Vec<Diagnostic> {
+    let mut ds = verify_graph(arch, graph);
+    let bill = CostModel::new(arch).tile_bill(shape, plan.partition());
+    let (m, n, k) = (shape.m as u64, shape.n as u64, shape.k as u64);
+    check_totals(graph, "A", 4 * m * n, &mut ds);
+    check_totals(graph, "B", 4 * n * k, &mut ds);
+    check_totals(graph, "C", 4 * m * k, &mut ds);
+    check_balanced(graph, "A", &mut ds);
+    check_balanced(graph, "B", &mut ds);
+    check_c_block(graph, bill.c_block, &mut ds);
+    // the bill's exact home split: A's share is the flat average, B
+    // absorbs the +64 mapping overhead and the division remainder
+    if let Some(a) = tensor_by_name(graph, "A") {
+        let home_a = a.bytes() as u64 / graph.tiles as u64;
+        if bill.home_a != home_a {
+            ds.push(
+                Diagnostic::error(
+                    rules::MEMORY_BILL_MISMATCH,
+                    format!("bill home_a {} != graph A share {}", bill.home_a, home_a),
+                )
+                .on_tensor("A"),
+            );
+        }
+    }
+    let ab = 4 * (m * n + n * k);
+    let want_home = ab / graph.tiles as u64 + 64;
+    if bill.home_a + bill.home_b != want_home {
+        ds.push(Diagnostic::error(
+            rules::MEMORY_BILL_MISMATCH,
+            format!(
+                "bill home share {} != balanced A+B share {}",
+                bill.home_a + bill.home_b,
+                want_home
+            ),
+        ));
+    }
+    ds
+}
+
+/// Sparse twin of [`verify_dense`]: B/C carry the dense checks; A is
+/// checked per tile against the planner's CSR residency when the graph
+/// took the block-CSR layout branch, and as a balanced dense mapping in
+/// the fallback branch.
+pub fn verify_sparse(
+    arch: &IpuArch,
+    shape: MmShape,
+    plan: &SparsePlan,
+    pattern: &BlockPattern,
+    graph: &Graph,
+) -> Vec<Diagnostic> {
+    let mut ds = verify_graph(arch, graph);
+    let (m, n, k) = (shape.m as u64, shape.n as u64, shape.k as u64);
+    check_totals(graph, "B", 4 * n * k, &mut ds);
+    check_totals(graph, "C", 4 * m * k, &mut ds);
+    check_balanced(graph, "B", &mut ds);
+    let part = plan.partition();
+    let (sm, _, sk) = part.sub_block(shape);
+    check_c_block(graph, (sm * sk * 4) as u64, &mut ds);
+    if tensor_by_name(graph, "A_csr_col").is_some() {
+        // CSR branch: the three sparse tensors must hold byte-for-byte
+        // the residency the planner's admission bill charged
+        let csr = BlockCsr::from_pattern(pattern);
+        let expected = csr.residency_per_tile(graph.tiles, 4);
+        let names = ["A_bsr", "A_csr_col", "A_csr_row"];
+        for tile in 0..graph.tiles {
+            let got: u64 = names
+                .iter()
+                .filter_map(|n| tensor_by_name(graph, n))
+                .map(|t| t.bytes_on_tile(tile) as u64)
+                .sum();
+            if got != expected[tile] {
+                ds.push(
+                    Diagnostic::error(
+                        rules::MEMORY_BILL_MISMATCH,
+                        format!(
+                            "CSR tensors hold {got} bytes, planner residency bill \
+                             expects {}",
+                            expected[tile]
+                        ),
+                    )
+                    .at_tile(tile)
+                    .on_tensor("A_bsr"),
+                );
+                break;
+            }
+        }
+    } else {
+        check_totals(graph, "A_bsr", 4 * m * n, &mut ds);
+        check_balanced(graph, "A_bsr", &mut ds);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exchange::plan::{ExchangePattern, ExchangePlan};
+    use crate::graph::program::Program;
+    use crate::graph::tensor::{DType, Interval};
+    use crate::graph::vertex::VertexKind;
+    use crate::planner::search::search;
+    use crate::sim::engine::SimEngine;
+    use crate::sparse::pattern::{PatternKind, SparsitySpec};
+    use crate::sparse::planner::sparse_search;
+
+    fn arch() -> IpuArch {
+        IpuArch::gc200()
+    }
+
+    fn rules_of(ds: &[Diagnostic]) -> Vec<&'static str> {
+        ds.iter().map(|d| d.rule).collect()
+    }
+
+    /// Graph with one tensor `x` spread one element per tile over 0..4.
+    fn base_graph() -> (Graph, TensorId) {
+        let mut g = Graph::new(arch().tiles);
+        let x = g.add_tensor("x", &[4], DType::F32);
+        g.set_tile_mapping(
+            x,
+            (0..4).map(|i| vec![Interval::new(i, i + 1)]).collect(),
+        );
+        (g, x)
+    }
+
+    #[test]
+    fn clean_dense_graph_verifies_empty() {
+        let a = arch();
+        let shape = MmShape::square(1024);
+        let plan = search(&a, shape).unwrap();
+        let g = SimEngine::new(a.clone()).build_graph(shape, &plan);
+        let ds = verify_dense(&a, shape, &plan, &g);
+        assert!(ds.is_empty(), "{}", crate::analysis::report_text(&ds));
+    }
+
+    #[test]
+    fn clean_split_reduction_graph_verifies_empty() {
+        let a = arch();
+        let shape = MmShape::new(512, 16384, 2048);
+        let plan = search(&a, shape).unwrap();
+        assert!(plan.partition().pn > 1);
+        let g = SimEngine::new(a.clone()).build_graph(shape, &plan);
+        let ds = verify_dense(&a, shape, &plan, &g);
+        assert!(ds.is_empty(), "{}", crate::analysis::report_text(&ds));
+    }
+
+    #[test]
+    fn clean_sparse_graph_verifies_empty() {
+        let a = arch();
+        let shape = MmShape::new(1000, 1536, 700);
+        let spec = SparsitySpec::new(PatternKind::Random, 8, 0.3, 11);
+        let pattern = BlockPattern::for_shape(spec, shape);
+        let plan = sparse_search(&a, shape, &pattern).unwrap();
+        let g = SimEngine::new(a.clone()).build_sparse_graph(shape, &plan, &pattern);
+        let ds = verify_sparse(&a, shape, &plan, &pattern, &g);
+        assert!(ds.is_empty(), "{}", crate::analysis::report_text(&ds));
+    }
+
+    #[test]
+    fn same_family_overlapping_writers_race() {
+        let (mut g, x) = base_graph();
+        let cs = g.add_compute_set("dup");
+        for _ in 0..2 {
+            g.add_vertex_group(
+                cs,
+                VertexKind::Zero { elems: 1 },
+                TileSpan::range(0, 2),
+                1,
+                vec![],
+                vec![x],
+            );
+        }
+        g.set_program(Program::Execute(cs));
+        let ds = verify_graph(&arch(), &g);
+        assert_eq!(rules_of(&ds), vec![rules::RACE_WRITE_WRITE]);
+        assert_eq!(ds[0].tensor.as_deref(), Some("x"));
+        assert_eq!(ds[0].superstep, Some(0));
+    }
+
+    #[test]
+    fn init_plus_accumulate_idiom_is_not_a_race() {
+        // Zero and AmpMacc both write x on the same span — the planner's
+        // accumulator idiom, sequenced within the tile, not a hazard
+        let (mut g, x) = base_graph();
+        let cs = g.add_compute_set("mm");
+        g.add_vertex_group(
+            cs,
+            VertexKind::Zero { elems: 1 },
+            TileSpan::range(0, 4),
+            1,
+            vec![],
+            vec![x],
+        );
+        g.add_vertex_group(
+            cs,
+            VertexKind::AmpMacc { rows: 2, cols: 2, acc: 2 },
+            TileSpan::range(0, 4),
+            1,
+            vec![],
+            vec![x],
+        );
+        g.set_program(Program::Execute(cs));
+        assert!(verify_graph(&arch(), &g).is_empty());
+    }
+
+    #[test]
+    fn disjoint_same_family_writers_do_not_race() {
+        let (mut g, x) = base_graph();
+        let cs = g.add_compute_set("cells");
+        g.add_vertex_group(
+            cs,
+            VertexKind::BlockSparseMm { block: 8, nz_blocks: 2 },
+            TileSpan::range(0, 2),
+            1,
+            vec![],
+            vec![x],
+        );
+        g.add_vertex_group(
+            cs,
+            VertexKind::BlockSparseMm { block: 8, nz_blocks: 3 },
+            TileSpan::range(2, 4),
+            1,
+            vec![],
+            vec![x],
+        );
+        g.set_program(Program::Execute(cs));
+        assert!(verify_graph(&arch(), &g).is_empty());
+    }
+
+    #[test]
+    fn pure_reader_overlapping_writer_races() {
+        let (mut g, x) = base_graph();
+        let cs = g.add_compute_set("rw");
+        g.add_vertex_group(
+            cs,
+            VertexKind::Rearrange { bytes: 4 },
+            TileSpan::range(0, 2),
+            1,
+            vec![x],
+            vec![],
+        );
+        g.add_vertex_group(
+            cs,
+            VertexKind::Zero { elems: 1 },
+            TileSpan::range(1, 3),
+            1,
+            vec![],
+            vec![x],
+        );
+        g.set_program(Program::Execute(cs));
+        let ds = verify_graph(&arch(), &g);
+        assert_eq!(rules_of(&ds), vec![rules::RACE_READ_WRITE]);
+        assert_eq!(ds[0].tile, Some(1));
+    }
+
+    #[test]
+    fn in_place_reducer_is_not_a_read_write_race() {
+        let (mut g, x) = base_graph();
+        let cs = g.add_compute_set("reduce");
+        g.add_vertex_group(
+            cs,
+            VertexKind::Reduce { inputs: 2, width: 2 },
+            TileSpan::List(vec![0, 2]),
+            1,
+            vec![x],
+            vec![x],
+        );
+        g.set_program(Program::Execute(cs));
+        assert!(verify_graph(&arch(), &g).is_empty());
+    }
+
+    #[test]
+    fn adjacent_phases_without_sync_flagged() {
+        let (mut g, x) = base_graph();
+        let cs = g.add_compute_set("mm");
+        g.add_vertex_group(
+            cs,
+            VertexKind::Rearrange { bytes: 4 },
+            TileSpan::range(0, 2),
+            1,
+            vec![x],
+            vec![],
+        );
+        let mut plan = ExchangePlan::new("chunk", ExchangePattern::Broadcast);
+        plan.add(2, 0, 16);
+        let ex = g.add_exchange(plan);
+        g.set_program(Program::Sequence(vec![Program::Exchange(ex), Program::Execute(cs)]));
+        let ds = verify_graph(&arch(), &g);
+        assert_eq!(rules_of(&ds), vec![rules::BSP_SYNC_ORDERING]);
+        assert!(ds[0].message.contains("Execute(mm)"));
+        assert!(ds[0].message.contains("Exchange(chunk)"));
+    }
+
+    #[test]
+    fn unscheduled_exchange_is_dead_phase() {
+        let (mut g, _) = base_graph();
+        let mut plan = ExchangePlan::new("orphan", ExchangePattern::Scatter);
+        plan.add(0, 1, 8);
+        g.add_exchange(plan);
+        let ds = verify_graph(&arch(), &g);
+        assert_eq!(rules_of(&ds), vec![rules::EXCHANGE_DEAD_PHASE]);
+        assert!(ds[0].message.contains("orphan"));
+    }
+
+    #[test]
+    fn read_on_unmapped_undelivered_tile_flagged() {
+        let mut g = Graph::new(arch().tiles);
+        // x lives entirely on tile 0
+        let x = g.add_tensor("x", &[4], DType::F32);
+        g.set_tile_mapping(x, vec![vec![Interval::new(0, 4)]]);
+        let cs = g.add_compute_set("use");
+        g.add_vertex_group(
+            cs,
+            VertexKind::Rearrange { bytes: 4 },
+            TileSpan::range(0, 2),
+            1,
+            vec![x],
+            vec![],
+        );
+        g.set_program(Program::Execute(cs));
+        let ds = verify_graph(&arch(), &g);
+        assert_eq!(rules_of(&ds), vec![rules::LIVENESS_DEF_BEFORE_USE]);
+        assert_eq!(ds[0].tile, Some(1));
+    }
+
+    #[test]
+    fn prior_exchange_delivery_satisfies_liveness() {
+        let mut g = Graph::new(arch().tiles);
+        let x = g.add_tensor("x", &[4], DType::F32);
+        g.set_tile_mapping(x, vec![vec![Interval::new(0, 4)]]);
+        let cs = g.add_compute_set("use");
+        g.add_vertex_group(
+            cs,
+            VertexKind::Rearrange { bytes: 4 },
+            TileSpan::range(0, 2),
+            1,
+            vec![x],
+            vec![],
+        );
+        let mut plan = ExchangePlan::new("deliver", ExchangePattern::Scatter);
+        plan.add(0, 1, 16);
+        let ex = g.add_exchange(plan);
+        g.set_program(Program::Sequence(vec![
+            Program::Exchange(ex),
+            Program::Sync,
+            Program::Execute(cs),
+        ]));
+        assert!(verify_graph(&arch(), &g).is_empty());
+    }
+
+    #[test]
+    fn oversized_tensor_fails_capacity() {
+        let a = arch();
+        let mut g = Graph::new(a.tiles);
+        let numel = a.tiles * 180 * 1024; // 720 KiB/tile in f32
+        let x = g.add_tensor("x", &[numel], DType::F32);
+        g.set_tile_mapping(
+            x,
+            crate::memory::mapping::linear_balanced_mapping(numel, a.tiles),
+        );
+        let ds = verify_graph(&a, &g);
+        assert_eq!(rules_of(&ds), vec![rules::MEMORY_CAPACITY]);
+    }
+
+    #[test]
+    fn structurally_broken_graph_reports_structural_only() {
+        let (mut g, _) = base_graph();
+        let cs = g.add_compute_set("bad");
+        g.add_vertex(cs, VertexKind::Zero { elems: 1 }, 0, vec![TensorId(42)], vec![]);
+        g.set_program(Program::Execute(cs));
+        let ds = verify_graph(&arch(), &g);
+        assert!(!ds.is_empty());
+        assert!(ds.iter().all(|d| d.rule.starts_with("graph-")));
+    }
+
+    #[test]
+    fn skewed_balanced_mapping_is_a_bill_mismatch() {
+        let a = arch();
+        let shape = MmShape::square(512);
+        let plan = search(&a, shape).unwrap();
+        let mut g = SimEngine::new(a.clone()).build_graph(shape, &plan);
+        // move tile 0's A interval onto tile 1: totals and the partition
+        // stay valid, the per-tile balance breaks
+        let t = g.tensors().iter().find(|t| t.name == "A").unwrap();
+        let mut mapping = t.mapping.clone().unwrap();
+        let iv = mapping[0].pop().unwrap();
+        mapping[1].push(iv);
+        let id = t.id;
+        g.set_tile_mapping(id, mapping);
+        let ds = verify_dense(&a, shape, &plan, &g);
+        assert!(rules_of(&ds).contains(&rules::MEMORY_BILL_MISMATCH), "{ds:?}");
+    }
+}

@@ -6,6 +6,12 @@
 //! by one supervisor vertex, so overlap applies to non-AMP codelets).
 //! The phase takes the *maximum* over tiles — BSP is lockstep — and the
 //! mean/max ratio is the tile balance the profiler reports.
+//!
+//! The engine prices phases; it does not re-check that the schedule is
+//! *safe* to price (barriers between phases, race-free supersteps, reads
+//! that land on delivered data). Those are static properties of the
+//! program tree and are proven up front by [`crate::analysis::verify`]
+//! (`ipumm check`), so pricing here can assume them.
 
 use crate::arch::IpuArch;
 use crate::bsp::trace::{Phase, PhaseRecord, Trace};

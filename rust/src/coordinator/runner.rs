@@ -192,7 +192,7 @@ where
             let tx = tx.clone();
             let f = &f;
             scope.spawn(move || loop {
-                let item = queue.lock().expect("queue poisoned").pop();
+                let item = queue.lock().unwrap_or_else(|e| e.into_inner()).pop();
                 let Some((idx, item)) = item else { break };
                 if tx.send((idx, f(item))).is_err() {
                     break;

@@ -2,8 +2,9 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use crate::analysis::Diagnostic;
 use crate::exchange::plan::ExchangePlan;
 use crate::graph::program::{ExchangeId, Program, ProgramStep};
 use crate::graph::tensor::{DType, Tensor, TensorId, TileMapping};
@@ -144,8 +145,16 @@ impl Graph {
         &self.compute_sets[id.0 as usize]
     }
 
+    pub fn compute_sets(&self) -> &[ComputeSet] {
+        &self.compute_sets
+    }
+
     pub fn exchange(&self, id: ExchangeId) -> &ExchangePlan {
         &self.exchanges[id.0 as usize]
+    }
+
+    pub fn exchanges(&self) -> &[ExchangePlan] {
+        &self.exchanges
     }
 
     /// Total vertex count, expanding replicated groups.
@@ -174,63 +183,127 @@ impl Graph {
 
     // ---- validation --------------------------------------------------------
 
-    /// Whole-graph consistency: mappings partition tensors, vertices sit on
-    /// real tiles and reference real tensors, program references are valid,
-    /// exchanges validate against the tile count.
-    pub fn validate(&self) -> Result<()> {
+    /// Whole-graph consistency as a *full* structured diagnostic list —
+    /// mappings partition tensors, vertices sit on real tiles and
+    /// reference real tensors, program references are valid, exchanges
+    /// validate against the tile count. Unlike the [`Self::validate`]
+    /// wrapper this never bails early: every violation in the graph is
+    /// reported, each under a stable `graph-*` rule id, so `ipumm check`
+    /// and the IR verifier can gate on the complete picture.
+    pub fn validate_diagnostics(&self) -> Vec<Diagnostic> {
+        let mut ds = Vec::new();
         for t in &self.tensors {
-            t.validate_mapping()
-                .with_context(|| format!("tensor '{}'", t.name))?;
+            if let Err(e) = t.validate_mapping() {
+                ds.push(
+                    Diagnostic::error("graph-tensor-mapping", format!("tensor '{}': {}", t.name, e))
+                        .on_tensor(&t.name),
+                );
+            }
             if let Some(m) = &t.mapping {
                 if m.len() > self.tiles {
-                    bail!("tensor '{}' mapping spans {} tiles > {}", t.name, m.len(), self.tiles);
+                    ds.push(
+                        Diagnostic::error(
+                            "graph-tensor-mapping",
+                            format!(
+                                "tensor '{}' mapping spans {} tiles > {}",
+                                t.name,
+                                m.len(),
+                                self.tiles
+                            ),
+                        )
+                        .on_tensor(&t.name),
+                    );
                 }
             }
         }
         for v in &self.vertices {
             if v.tile >= self.tiles {
-                bail!("vertex {:?} on tile {} >= {}", v.id, v.tile, self.tiles);
+                ds.push(
+                    Diagnostic::error(
+                        "graph-vertex-tile",
+                        format!("vertex {:?} on tile {} >= {}", v.id, v.tile, self.tiles),
+                    )
+                    .at_tile(v.tile),
+                );
             }
             for t in v.inputs.iter().chain(&v.outputs) {
                 if t.0 as usize >= self.tensors.len() {
-                    bail!("vertex {:?} references missing tensor {:?}", v.id, t);
+                    ds.push(Diagnostic::error(
+                        "graph-missing-tensor",
+                        format!("vertex {:?} references missing tensor {:?}", v.id, t),
+                    ));
                 }
             }
         }
         for g in &self.groups {
             if let Some(max) = g.span.max_tile() {
                 if max >= self.tiles {
-                    bail!("group {:?} spans tile {} >= {}", g.id, max, self.tiles);
+                    ds.push(
+                        Diagnostic::error(
+                            "graph-group-span",
+                            format!("group {:?} spans tile {} >= {}", g.id, max, self.tiles),
+                        )
+                        .at_tile(max),
+                    );
                 }
             }
             if g.per_tile == 0 {
-                bail!("group {:?} has zero replication", g.id);
+                ds.push(Diagnostic::error(
+                    "graph-group-replication",
+                    format!("group {:?} has zero replication", g.id),
+                ));
             }
             for t in g.inputs.iter().chain(&g.outputs) {
                 if t.0 as usize >= self.tensors.len() {
-                    bail!("group {:?} references missing tensor {:?}", g.id, t);
+                    ds.push(Diagnostic::error(
+                        "graph-missing-tensor",
+                        format!("group {:?} references missing tensor {:?}", g.id, t),
+                    ));
                 }
             }
         }
         for ex in &self.exchanges {
-            ex.validate(self.tiles)?;
+            if let Err(e) = ex.validate(self.tiles) {
+                ds.push(Diagnostic::error(
+                    "graph-exchange",
+                    format!("exchange '{}': {}", ex.name, e),
+                ));
+            }
         }
         for step in self.program.steps() {
             match step {
                 ProgramStep::Execute(cs) => {
                     if cs.0 as usize >= self.compute_sets.len() {
-                        bail!("program references missing compute set {:?}", cs);
+                        ds.push(Diagnostic::error(
+                            "graph-program-ref",
+                            format!("program references missing compute set {:?}", cs),
+                        ));
                     }
                 }
                 ProgramStep::Exchange(ex) => {
                     if ex.0 as usize >= self.exchanges.len() {
-                        bail!("program references missing exchange {:?}", ex);
+                        ds.push(Diagnostic::error(
+                            "graph-program-ref",
+                            format!("program references missing exchange {:?}", ex),
+                        ));
                     }
                 }
                 ProgramStep::Sync => {}
             }
         }
-        Ok(())
+        ds
+    }
+
+    /// `Result` wrapper over [`Self::validate_diagnostics`] for callers
+    /// that just need pass/fail: Ok iff the graph is clean, otherwise all
+    /// violations joined into one error message.
+    pub fn validate(&self) -> Result<()> {
+        let ds = self.validate_diagnostics();
+        if ds.is_empty() {
+            return Ok(());
+        }
+        let msgs: Vec<&str> = ds.iter().map(|d| d.message.as_str()).collect();
+        bail!("{}", msgs.join("; "));
     }
 }
 
@@ -365,6 +438,22 @@ mod tests {
             vec![],
         );
         assert!(g.validate().unwrap_err().to_string().contains("spans tile 98"));
+    }
+
+    #[test]
+    fn validate_diagnostics_reports_all_violations() {
+        // two independent violations — the diagnostic list carries both,
+        // and the Result wrapper joins both messages
+        let mut g = tiny_graph();
+        let cs = g.add_compute_set("bad");
+        g.add_vertex(cs, VertexKind::Zero { elems: 1 }, 99, vec![], vec![]);
+        g.add_vertex(cs, VertexKind::Zero { elems: 1 }, 0, vec![TensorId(42)], vec![]);
+        let ds = g.validate_diagnostics();
+        let rules: Vec<_> = ds.iter().map(|d| d.rule).collect();
+        assert_eq!(rules, vec!["graph-vertex-tile", "graph-missing-tensor"]);
+        assert_eq!(ds[0].tile, Some(99));
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("tile 99") && err.contains("TensorId(42)"), "{err}");
     }
 
     #[test]

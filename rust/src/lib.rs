@@ -3,7 +3,7 @@
 //! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
 //! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
 //!
-//! The crate has ten roles (see DESIGN.md):
+//! The crate has eleven roles (see DESIGN.md):
 //!
 //! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
 //!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
@@ -126,10 +126,30 @@
 //!    failing scenarios to a minimal (request, fault) pair). With faults
 //!    disabled the served trace is bit-identical to the passthrough path
 //!    (property-tested).
+//! 11. **Static verification** — [`analysis`] proves the invariants the
+//!    roles above defend dynamically, *before* anything runs, behind one
+//!    gate (`ipumm check`): an IR verifier over built graphs and BSP
+//!    schedules (superstep write-write/read-write race detection via
+//!    `TileSpan`/tensor-mapping overlap, Sync-barrier ordering, dead
+//!    exchange phases, def-before-use liveness across exchange
+//!    deliveries, per-tile SRAM capacity, and a memory-bill cross-check
+//!    pinning the planner's `tile_bill` to the materialized graph's
+//!    per-tile residency — dense balance and sparse block-CSR residency
+//!    byte-for-byte), plus a hermetic repo-invariant lint over
+//!    `rust/src/` (no wall clocks in deterministic paths, no
+//!    non-poison-recovering locks, no floats in seeded draws, no
+//!    unordered `HashMap` iteration in plan selection; `// lint:allow`
+//!    pragmas). Every finding is a structured `analysis::Diagnostic`
+//!    (stable rule id + tile/superstep/tensor or file:line location),
+//!    `graph::builder::Graph::validate_diagnostics` feeds the same
+//!    vocabulary, and a seeded mutation corpus (`analysis::mutate`) keeps
+//!    the verifier honest in CI — each way of breaking a graph must be
+//!    caught by its expected rule.
 //!
 //! [`coordinator`] orchestrates benchmark jobs across these backends, and
 //! [`experiments`] regenerates each of the paper's tables and figures.
 
+pub mod analysis;
 pub mod arch;
 pub mod planner;
 pub mod profiler;

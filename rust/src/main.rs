@@ -76,6 +76,23 @@
 //!                              compares baseline-normalized means to a
 //!                              previous run's BENCH_*.json (the CI
 //!                              cross-run trend gate)
+//! ipumm check [--json FILE] [--src DIR] [--mutate CLASS] [--seed N]
+//!                              static verification gate: run the IR
+//!                              verifier (races, Sync ordering, dead
+//!                              exchange phases, liveness, SRAM capacity,
+//!                              planner-bill cross-check) over the Fig. 4
+//!                              dense shapes + a past-the-wall sparse
+//!                              shape, then the repo-invariant lint over
+//!                              --src (default rust/src); exits nonzero
+//!                              on any diagnostic; --json dumps the full
+//!                              report. --mutate CLASS (overlap-span|
+//!                              drop-exchange|skew-residency|
+//!                              reorder-superstep) is the CI trip-wire:
+//!                              apply one seeded mutation and exit
+//!                              nonzero iff the verifier catches it with
+//!                              the expected rule — so CI wraps it in an
+//!                              expect-failure and a blind or misfiring
+//!                              verifier fails the build
 //! ipumm streaming              §6 streaming-memory extension
 //! ipumm multiipu               §6 multi-IPU scaling extension
 //! ipumm e2e [--artifacts DIR]  end-to-end driver with real numerics
@@ -118,7 +135,7 @@ const OPTIONS: &[&str] = &[
     "arch", "gpu", "csv", "json", "workers", "max-size", "ks", "artifacts", "block", "chips",
     "jobs", "seed", "cache", "batch", "warmup", "k", "kind", "densities", "dir", "tolerance",
     "trace-out", "chrome", "metrics-out", "slo", "window", "against", "snapshot",
-    "deadline-ms", "retries", "fault-seed", "fault-profile", "profiles",
+    "deadline-ms", "retries", "fault-seed", "fault-profile", "profiles", "src", "mutate",
 ];
 const FLAGS: &[&str] = &["real", "verbose"];
 
@@ -140,7 +157,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|chaos|sparse|bench-check|slo-check|streaming|multiipu|e2e|all> [args]"
+        "usage: ipumm <table1|fig4|fig5|vertices|memory|phases|profile|plan|run|trace|serve|chaos|sparse|bench-check|slo-check|check|streaming|multiipu|e2e|all> [args]"
     );
     eprintln!("see rust/src/main.rs header for per-command options");
 }
@@ -807,6 +824,110 @@ fn dispatch(cmd: &str, raw: &[String]) -> Result<()> {
                      previous run in {prev_dir}"
                 );
             }
+        }
+        "check" => {
+            use ipumm::analysis::{lint, mutate, report_json, report_text, verify};
+            use ipumm::planner::search::search;
+            use ipumm::sparse::pattern::{BlockPattern, SparsitySpec};
+            use ipumm::sparse::planner::sparse_search;
+
+            let (args, arch, _, _) = parse_common(raw)?;
+            let engine = SimEngine::new(arch.clone());
+
+            // --mutate CLASS: the CI trip-wire. Exit nonzero iff the
+            // verifier catches the seeded mutation with its expected
+            // rule; a blind or misfiring verifier exits zero, which the
+            // expect-failure CI wrapper turns into a build failure.
+            if let Some(class_name) = args.opt("mutate") {
+                let class = mutate::MutationClass::by_name(class_name).with_context(|| {
+                    let all: Vec<&str> =
+                        mutate::MutationClass::ALL.iter().map(|c| c.name()).collect();
+                    format!("unknown mutation class '{class_name}' (one of: {})", all.join("|"))
+                })?;
+                let seed = args.opt_usize("seed", 0)? as u64;
+                let shape = MmShape::square(1024);
+                let plan = search(&arch, shape)?;
+                let mut g = engine.build_graph(shape, &plan);
+                let edit = mutate::apply(&mut g, class, seed)
+                    .context("no eligible mutation site in the planned graph")?;
+                println!("mutation [{}] seed {seed}: {edit}", class.name());
+                let ds = verify::verify_dense(&arch, shape, &plan, &g);
+                println!("{}", report_text(&ds));
+                if ds.iter().any(|d| d.rule == class.expected_rule()) {
+                    bail!(
+                        "verifier caught the mutation with rule '{}' as expected \
+                         ({} diagnostic(s)); trip-wire armed",
+                        class.expected_rule(),
+                        ds.len()
+                    );
+                }
+                eprintln!(
+                    "check --mutate {}: verifier did NOT flag rule '{}' ({} other \
+                     diagnostic(s)) — the gate is blind to this mutation class",
+                    class.name(),
+                    class.expected_rule(),
+                    ds.len()
+                );
+                return Ok(());
+            }
+
+            // clean sweep: IR verification over the paper's Fig. 4 dense
+            // squares and a past-the-dense-wall sparse shape, then the
+            // repo-invariant lint over the source tree
+            let mut all = Vec::new();
+            for size in [512usize, 1024, 2048, 3072, 3584] {
+                let shape = MmShape::square(size);
+                let plan = search(&arch, shape)?;
+                let g = engine.build_graph(shape, &plan);
+                let ds = verify::verify_dense(&arch, shape, &plan, &g);
+                println!(
+                    "check: dense {size}x{size} — {} ({} groups, {} supersteps)",
+                    if ds.is_empty() { "ok" } else { "FAIL" },
+                    g.groups().len(),
+                    g.program.superstep_count(),
+                );
+                all.extend(ds);
+            }
+            {
+                let shape = MmShape::square(4096);
+                let spec = SparsitySpec::new(PatternKind::Random, 8, 0.25, 42);
+                let pattern = BlockPattern::for_shape(spec, shape);
+                let plan = sparse_search(&arch, shape, &pattern)
+                    .context("past-wall sparse shape no longer plans")?;
+                let g = engine.build_sparse_graph(shape, &plan, &pattern);
+                let ds = verify::verify_sparse(&arch, shape, &plan, &pattern, &g);
+                println!(
+                    "check: sparse 4096x4096 @ d=0.25 — {} ({} groups)",
+                    if ds.is_empty() { "ok" } else { "FAIL" },
+                    g.groups().len(),
+                );
+                all.extend(ds);
+            }
+            let src = args.opt_or("src", "rust/src");
+            let lint_ds =
+                lint::lint_dir(std::path::Path::new(src)).with_context(|| format!("linting {src}"))?;
+            println!(
+                "check: lint {src} — {} ({} finding(s))",
+                if lint_ds.is_empty() { "ok" } else { "FAIL" },
+                lint_ds.len(),
+            );
+            all.extend(lint_ds);
+
+            if !all.is_empty() {
+                println!("{}", report_text(&all));
+            }
+            if let Some(path) = args.opt("json") {
+                let mut j = report_json(&all);
+                j.set("src", ipumm::util::json::Json::Str(src.to_string()));
+                std::fs::write(path, j.render()).with_context(|| format!("writing {path}"))?;
+                println!("(json -> {path})");
+            }
+            anyhow::ensure!(
+                all.is_empty(),
+                "{} diagnostic(s) — see report above",
+                all.len()
+            );
+            println!("check: clean");
         }
         "streaming" => {
             let (_, arch, _, _) = parse_common(raw)?;

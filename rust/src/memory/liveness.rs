@@ -2,6 +2,11 @@
 //! BSP program — the PopVision "memory over time" view that underlies the
 //! paper's observation that *transient* state (chunk landings, partial
 //! gathers), not resident tensors, sets the peak.
+//!
+//! This is the *temporal* memory view; the static gate
+//! ([`crate::analysis::verify`], `ipumm check`) cross-checks the same
+//! resident bytes against the planner's `tile_bill` per tile and bounds
+//! them by SRAM capacity before any program is priced.
 
 use crate::graph::builder::Graph;
 use crate::graph::program::ProgramStep;

@@ -748,7 +748,7 @@ impl MmService {
         }
         let a = crate::util::matrix::Matrix::random(bucket.m, bucket.n, bucket.m as u64);
         let b = crate::util::matrix::Matrix::random(bucket.n, bucket.k, bucket.k as u64);
-        let mut ex = ex.lock().expect("real executor poisoned");
+        let mut ex = ex.lock().unwrap_or_else(|e| e.into_inner());
         ex.mm_verified(&a, &b).ok().map(|(_, stats, _)| stats.seconds)
     }
 
