@@ -1,0 +1,639 @@
+//! Seeded, size-bounded generators for the whole-pipeline fuzz scenario
+//! tuple, plus the one-line replay spec that makes every failure a
+//! deterministic repro.
+//!
+//! The design is bigcheck-style (SNIPPETS.md): every axis of a
+//! [`Scenario`] is grown from a seeded [`Rng`] under a size knob in
+//! [0, 1] (early iterations draw small shapes and short traces, later
+//! ones the full range), and shrunk *structurally* — each axis offers a
+//! finite list of strictly-smaller candidate scenarios
+//! ([`shrink_candidates`]) that the harness's ddmin loop re-tests until
+//! no single step still fails. That generalizes PR 8's
+//! `fault::chaos::shrink_failing` from (request, fault) traces to the
+//! full tuple: shape axes shrink toward 1, density toward the failing
+//! boundary, the trace toward one request, workers toward 1, the
+//! perturbed architecture toward the canonical GC200.
+//!
+//! Trace ids are **positional** (0..len): the serve path ids requests by
+//! position, so the shrinker renumbers after every removal and the
+//! failure predicate is re-evaluated on the renumbered candidate — ddmin
+//! stays sound without assuming fault draws survive removal.
+
+use crate::arch::IpuArch;
+use crate::fault::chaos::ChaosRequest;
+use crate::fault::plan::{FaultPlan, FaultProfile};
+use crate::fault::retry::{FaultPolicy, RetryPolicy};
+use crate::planner::partition::MmShape;
+use crate::sparse::pattern::{PatternKind, SparsitySpec, BLOCK_SIZES};
+use crate::util::rng::Rng;
+
+/// Canonical architecture a scenario perturbs from. `IpuArch::name` is a
+/// `&'static str`, so a perturbed variant keeps its base name — the
+/// perturbation seed travels in the replay spec (`arch=gc200~7`) and the
+/// perturbed fields land in `IpuArch::fingerprint`, which is what cache
+/// keys and plan identity actually read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArchBase {
+    Gc200,
+    Gc2,
+    /// Not grown by the generator (the paper's square/skew findings are
+    /// GC200/GC2), but replayable so `ipumm chaos --arch bow --shrink`
+    /// scenarios round-trip through the spec line.
+    Bow,
+}
+
+impl ArchBase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArchBase::Gc200 => "gc200",
+            ArchBase::Gc2 => "gc2",
+            ArchBase::Bow => "bow",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ArchBase> {
+        match name {
+            "gc200" => Some(ArchBase::Gc200),
+            "gc2" => Some(ArchBase::Gc2),
+            "bow" => Some(ArchBase::Bow),
+            _ => None,
+        }
+    }
+
+    pub fn arch(&self) -> IpuArch {
+        match self {
+            ArchBase::Gc200 => IpuArch::gc200(),
+            ArchBase::Gc2 => IpuArch::gc2(),
+            ArchBase::Bow => IpuArch::bow2000(),
+        }
+    }
+}
+
+/// SplitMix64 finalizer — the same integer-only mixer the fault plan
+/// uses for its draws; perturbation draws stay float-free.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The complete generated scenario: everything the pipeline invariants
+/// need, and nothing drawn outside the seed — two scenarios with equal
+/// fields behave identically on any machine and worker count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub arch_base: ArchBase,
+    /// 0 = the canonical device; otherwise a deterministic perturbation
+    /// of tiles / SRAM / sync cost (see [`Scenario::arch`]).
+    pub arch_perturb: u64,
+    /// Worker request for planner searches (compared against 1 by the
+    /// plan-identity invariant).
+    pub plan_workers: usize,
+    /// Worker request for the serve layer (a request against the
+    /// process-wide `ThreadBudget`, like `--workers`).
+    pub serve_workers: usize,
+    /// Fault profile name (see `FaultProfile::names`).
+    pub profile: String,
+    pub fault_seed: u64,
+    /// Model-time deadline in microseconds (`None` = no deadline).
+    pub deadline_us: Option<u64>,
+    pub retries: u32,
+    /// Positional-id trace; each request optionally carries a sparsity
+    /// spec. Ids are always 0..len (see module docs).
+    pub trace: Vec<ChaosRequest>,
+}
+
+impl Scenario {
+    /// Materialize the (possibly perturbed) device. Perturbation is
+    /// integer-only and bounded: tiles shrink by up to 1/8, per-tile
+    /// SRAM by up to 1/4, sync cost grows by up to 64 cycles — enough to
+    /// move plan choices and the memory wall without leaving the space
+    /// of plausible devices.
+    pub fn arch(&self) -> IpuArch {
+        let mut arch = self.arch_base.arch();
+        if self.arch_perturb != 0 {
+            let d0 = splitmix64(self.arch_perturb);
+            let d1 = splitmix64(d0);
+            let d2 = splitmix64(d1);
+            let tile_cut = (d0 % (arch.tiles as u64 / 8 + 1)) as usize;
+            arch.tiles = (arch.tiles - tile_cut).max(4);
+            let sram_cut = d1 % (arch.tile_sram_bytes / 4 + 1);
+            arch.tile_sram_bytes = (arch.tile_sram_bytes - sram_cut).max(64 * 1024);
+            arch.sync_cycles += d2 % 65;
+        }
+        arch
+    }
+
+    pub fn profile(&self) -> FaultProfile {
+        // the generator and parser only emit known names
+        FaultProfile::by_name(&self.profile).expect("scenario carries a known profile name")
+    }
+
+    pub fn fault_plan(&self) -> FaultPlan {
+        if self.profile == "none" {
+            FaultPlan::none()
+        } else {
+            FaultPlan::seeded(self.fault_seed, self.profile())
+        }
+    }
+
+    pub fn policy(&self) -> FaultPolicy {
+        FaultPolicy {
+            deadline_s: self.deadline_us.map(|us| us as f64 / 1e6),
+            retry: RetryPolicy::standard(self.retries),
+            breaker: crate::fault::breaker::BreakerConfig::standard(),
+        }
+    }
+
+    /// The unique `(shape, spec)` pairs in trace order — the working set
+    /// the per-plan invariants (identity, pricing, verify) iterate.
+    pub fn unique_jobs(&self) -> Vec<(MmShape, Option<SparsitySpec>)> {
+        let mut seen: Vec<(MmShape, Option<SparsitySpec>)> = Vec::new();
+        for (_, shape, spec) in &self.trace {
+            if !seen.iter().any(|(s, sp)| s == shape && sp == spec) {
+                seen.push((*shape, *spec));
+            }
+        }
+        seen
+    }
+
+    /// A rough structural size (for shrink-progress reporting).
+    pub fn weight(&self) -> u64 {
+        let dims: u64 = self
+            .trace
+            .iter()
+            .map(|(_, s, sp)| (s.m + s.n + s.k) as u64 + sp.map_or(0, |x| x.density_permille as u64))
+            .sum();
+        dims + self.trace.len() as u64 * 1000
+            + self.plan_workers as u64
+            + self.serve_workers as u64
+            + (self.arch_perturb != 0) as u64
+            + (self.profile != "none") as u64
+            + self.retries as u64
+            + self.deadline_us.is_some() as u64
+    }
+
+    /// Encode as the one-line replay spec `ipumm fuzz --replay` accepts.
+    /// Fixed key order and integer-only values make the line a
+    /// byte-stable artifact: equal scenarios render equal lines.
+    pub fn to_line(&self) -> String {
+        let mut parts = vec![
+            "v1".to_string(),
+            format!("arch={}~{}", self.arch_base.name(), self.arch_perturb),
+            format!("pw={}", self.plan_workers),
+            format!("sw={}", self.serve_workers),
+            format!("prof={}", self.profile),
+            format!("fseed={}", self.fault_seed),
+            match self.deadline_us {
+                Some(us) => format!("dl={us}"),
+                None => "dl=none".to_string(),
+            },
+            format!("retry={}", self.retries),
+        ];
+        let trace: Vec<String> = self
+            .trace
+            .iter()
+            .map(|(id, shape, spec)| {
+                let mut s = format!("{id}:{}x{}x{}", shape.m, shape.n, shape.k);
+                if let Some(sp) = spec {
+                    let kind = match sp.kind {
+                        PatternKind::Random => 'r',
+                        PatternKind::Banded => 'b',
+                        PatternKind::BlockDiagonal => 'd',
+                    };
+                    s.push_str(&format!(
+                        ":{kind}{}.{}.{}",
+                        sp.block, sp.density_permille, sp.seed
+                    ));
+                }
+                s
+            })
+            .collect();
+        parts.push(format!("trace={}", trace.join(",")));
+        parts.join(";")
+    }
+
+    /// Parse a replay line back into a scenario. Inverse of
+    /// [`Scenario::to_line`]: `parse(sc.to_line()) == sc` for every
+    /// scenario the generator can emit.
+    pub fn parse(line: &str) -> Result<Scenario, String> {
+        let mut fields = line.trim().split(';');
+        if fields.next() != Some("v1") {
+            return Err("replay spec must start with 'v1;'".to_string());
+        }
+        let mut arch_base = None;
+        let mut arch_perturb = 0u64;
+        let mut plan_workers = 1usize;
+        let mut serve_workers = 1usize;
+        let mut profile = "none".to_string();
+        let mut fault_seed = 0u64;
+        let mut deadline_us = None;
+        let mut retries = 0u32;
+        let mut trace = Vec::new();
+        for field in fields {
+            let (key, val) = field
+                .split_once('=')
+                .ok_or_else(|| format!("bad replay field '{field}' (want key=value)"))?;
+            match key {
+                "arch" => {
+                    let (base, perturb) = val
+                        .split_once('~')
+                        .ok_or_else(|| format!("bad arch '{val}' (want base~perturb)"))?;
+                    arch_base = Some(
+                        ArchBase::by_name(base)
+                            .ok_or_else(|| format!("unknown arch base '{base}'"))?,
+                    );
+                    arch_perturb =
+                        perturb.parse().map_err(|_| format!("bad arch perturb '{perturb}'"))?;
+                }
+                "pw" => {
+                    plan_workers = val.parse().map_err(|_| format!("bad pw '{val}'"))?;
+                }
+                "sw" => {
+                    serve_workers = val.parse().map_err(|_| format!("bad sw '{val}'"))?;
+                }
+                "prof" => {
+                    if FaultProfile::by_name(val).is_none() {
+                        return Err(format!(
+                            "unknown fault profile '{val}' (known: {})",
+                            FaultProfile::names().join(", ")
+                        ));
+                    }
+                    profile = val.to_string();
+                }
+                "fseed" => {
+                    fault_seed = val.parse().map_err(|_| format!("bad fseed '{val}'"))?;
+                }
+                "dl" => {
+                    deadline_us = if val == "none" {
+                        None
+                    } else {
+                        Some(val.parse().map_err(|_| format!("bad dl '{val}'"))?)
+                    };
+                }
+                "retry" => {
+                    retries = val.parse().map_err(|_| format!("bad retry '{val}'"))?;
+                }
+                "trace" => {
+                    for item in val.split(',').filter(|s| !s.is_empty()) {
+                        trace.push(parse_request(item)?);
+                    }
+                }
+                other => return Err(format!("unknown replay field '{other}'")),
+            }
+        }
+        let arch_base = arch_base.ok_or("replay spec missing 'arch='")?;
+        if trace.is_empty() {
+            return Err("replay spec has an empty trace".to_string());
+        }
+        if plan_workers == 0 || serve_workers == 0 {
+            return Err("worker counts must be >= 1".to_string());
+        }
+        Ok(Scenario {
+            arch_base,
+            arch_perturb,
+            plan_workers,
+            serve_workers,
+            profile,
+            fault_seed,
+            deadline_us,
+            retries,
+            trace,
+        })
+    }
+}
+
+fn parse_request(item: &str) -> Result<ChaosRequest, String> {
+    let mut cols = item.split(':');
+    let id: u64 = cols
+        .next()
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| format!("bad trace item '{item}' (want id:MxNxK[:spec])"))?;
+    let dims = cols.next().ok_or_else(|| format!("trace item '{item}' missing shape"))?;
+    let mut d = dims.split('x');
+    let (m, n, k) = match (d.next(), d.next(), d.next(), d.next()) {
+        (Some(m), Some(n), Some(k), None) => (
+            m.parse().map_err(|_| format!("bad m in '{dims}'"))?,
+            n.parse().map_err(|_| format!("bad n in '{dims}'"))?,
+            k.parse().map_err(|_| format!("bad k in '{dims}'"))?,
+        ),
+        _ => return Err(format!("bad shape '{dims}' (want MxNxK)")),
+    };
+    if m == 0 || n == 0 || k == 0 {
+        return Err(format!("degenerate shape '{dims}' (dims must be >= 1)"));
+    }
+    let spec = match cols.next() {
+        None => None,
+        Some(sp) => Some(parse_spec(sp)?),
+    };
+    if cols.next().is_some() {
+        return Err(format!("trailing columns in trace item '{item}'"));
+    }
+    Ok((id, MmShape::new(m, n, k), spec))
+}
+
+fn parse_spec(sp: &str) -> Result<SparsitySpec, String> {
+    let mut chars = sp.chars();
+    let kind = match chars.next() {
+        Some('r') => PatternKind::Random,
+        Some('b') => PatternKind::Banded,
+        Some('d') => PatternKind::BlockDiagonal,
+        other => return Err(format!("bad spec kind '{other:?}' in '{sp}' (r|b|d)")),
+    };
+    let rest: String = chars.collect();
+    let mut nums = rest.split('.');
+    let (block, permille, seed) = match (nums.next(), nums.next(), nums.next(), nums.next()) {
+        (Some(b), Some(p), Some(s), None) => (
+            b.parse::<usize>().map_err(|_| format!("bad block in '{sp}'"))?,
+            p.parse::<u32>().map_err(|_| format!("bad permille in '{sp}'"))?,
+            s.parse::<u64>().map_err(|_| format!("bad seed in '{sp}'"))?,
+        ),
+        _ => return Err(format!("bad spec '{sp}' (want kB.P.S)")),
+    };
+    if !BLOCK_SIZES.contains(&block) {
+        return Err(format!("block {block} not in supported sizes {BLOCK_SIZES:?}"));
+    }
+    if permille == 0 || permille > 1000 {
+        return Err(format!("density permille {permille} out of [1, 1000]"));
+    }
+    Ok(SparsitySpec { kind, block, density_permille: permille, seed })
+}
+
+/// Largest shape dimension the generator emits at full size. Bounded so
+/// a CI-sized fuzz run prices hundreds of scenarios in seconds — the
+/// determinism invariants are dimension-uniform, so small shapes probe
+/// the same code paths the 4096² mysteries would.
+pub const MAX_DIM: usize = 384;
+
+/// Longest trace at full size.
+pub const MAX_TRACE: usize = 6;
+
+fn grow_dim(rng: &mut Rng, size: f64) -> usize {
+    let hi = 8 + ((MAX_DIM - 8) as f64 * size) as usize;
+    rng.gen_usize(1, hi.max(1))
+}
+
+fn grow_shape(rng: &mut Rng, size: f64) -> MmShape {
+    match rng.gen_usize(0, 9) {
+        // squared (the paper's Fig. 4 axis)
+        0..=3 => MmShape::square(grow_dim(rng, size).max(2)),
+        // skewed (Fig. 5): independent dims
+        4..=7 => MmShape::new(grow_dim(rng, size), grow_dim(rng, size), grow_dim(rng, size)),
+        // degenerate: one axis collapsed to 1 (vector / outer products)
+        _ => {
+            let mut dims = [grow_dim(rng, size), grow_dim(rng, size), grow_dim(rng, size)];
+            dims[rng.gen_usize(0, 2)] = 1;
+            MmShape::new(dims[0], dims[1], dims[2])
+        }
+    }
+}
+
+fn grow_spec(rng: &mut Rng, size: f64) -> Option<SparsitySpec> {
+    if rng.gen_bool(0.6) {
+        return None;
+    }
+    let kind = *rng.choose(&PatternKind::all());
+    let block = *rng.choose(&BLOCK_SIZES);
+    let lo = 1000 - (950.0 * size) as u32; // small sizes stay near-dense
+    let permille = rng.gen_range(lo as u64, 1000) as u32;
+    let seed = rng.gen_range(0, 0xFFFF);
+    Some(SparsitySpec { kind, block, density_permille: permille, seed })
+}
+
+/// Grow one scenario at the given size in [0, 1].
+pub fn grow_scenario(rng: &mut Rng, size: f64) -> Scenario {
+    let size = size.clamp(0.0, 1.0);
+    let arch_base = if rng.gen_bool(0.75) { ArchBase::Gc200 } else { ArchBase::Gc2 };
+    let arch_perturb = if rng.gen_bool(0.3) { rng.gen_range(1, 0xFFFF) } else { 0 };
+    let max_workers = 1 + (3.0 * size) as usize;
+    let plan_workers = rng.gen_usize(1, max_workers);
+    let serve_workers = rng.gen_usize(1, max_workers);
+    let profile = (*rng.choose(FaultProfile::names())).to_string();
+    let fault_seed = rng.gen_range(0, 0xFFFF);
+    let deadline_us = if rng.gen_bool(0.35) {
+        Some(*rng.choose(&[500u64, 1_000, 5_000, 20_000]))
+    } else {
+        None
+    };
+    let retries = rng.gen_range(0, 3) as u32;
+    let len = rng.gen_usize(1, 1 + ((MAX_TRACE - 1) as f64 * size) as usize);
+    let trace = (0..len as u64)
+        .map(|id| (id, grow_shape(rng, size), grow_spec(rng, size)))
+        .collect();
+    Scenario {
+        arch_base,
+        arch_perturb,
+        plan_workers,
+        serve_workers,
+        profile,
+        fault_seed,
+        deadline_us,
+        retries,
+        trace,
+    }
+}
+
+/// Renumber trace ids positionally (the serve path ids by position, so
+/// every shrink candidate is renumbered before re-testing).
+fn renumber(trace: &mut [ChaosRequest]) {
+    for (i, req) in trace.iter_mut().enumerate() {
+        req.0 = i as u64;
+    }
+}
+
+/// Structurally-smaller neighbors of `sc`, biggest reductions first:
+/// trace chunk removals (halves down to single requests, ddmin-style),
+/// then per-request shape halving/decrement toward 1, sparsity-spec
+/// drops and density halving toward the failing boundary, policy axes
+/// (profile → none, deadline → off, retries → 0), worker counts toward
+/// 1, and the perturbed arch toward canonical GC200.
+///
+/// The harness's shrink loop ([`crate::fuzz::harness::shrink_scenario`])
+/// takes the first candidate that still fails and restarts; a scenario
+/// on which *no* candidate fails is 1-minimal by construction.
+pub fn shrink_candidates(sc: &Scenario) -> Vec<Scenario> {
+    let mut out = Vec::new();
+    // 1. trace removals: ddmin chunk ladder, larger chunks first
+    let len = sc.trace.len();
+    if len > 1 {
+        let mut chunk = len.div_ceil(2);
+        loop {
+            let mut start = 0;
+            while start < len {
+                let end = (start + chunk).min(len);
+                if end - start < len {
+                    let mut c = sc.clone();
+                    c.trace.drain(start..end);
+                    renumber(&mut c.trace);
+                    out.push(c);
+                }
+                start += chunk;
+            }
+            if chunk == 1 {
+                break;
+            }
+            chunk = chunk.div_ceil(2).max(1);
+        }
+    }
+    // 2. shape axes: halve, then decrement, toward 1
+    for (i, (_, shape, _)) in sc.trace.iter().enumerate() {
+        for axis in 0..3usize {
+            let dim = [shape.m, shape.n, shape.k][axis];
+            for smaller in [dim / 2, dim - 1] {
+                if smaller >= 1 && smaller < dim {
+                    let mut c = sc.clone();
+                    let s = &mut c.trace[i].1;
+                    match axis {
+                        0 => s.m = smaller,
+                        1 => s.n = smaller,
+                        _ => s.k = smaller,
+                    }
+                    if !out.contains(&c) {
+                        out.push(c);
+                    }
+                }
+            }
+        }
+    }
+    // 3. sparsity: drop the spec, then halve density toward the boundary
+    for (i, (_, _, spec)) in sc.trace.iter().enumerate() {
+        if let Some(sp) = spec {
+            let mut c = sc.clone();
+            c.trace[i].2 = None;
+            out.push(c);
+            if sp.density_permille > 1 {
+                let mut c = sc.clone();
+                c.trace[i].2 =
+                    Some(SparsitySpec { density_permille: sp.density_permille / 2, ..*sp });
+                out.push(c);
+            }
+        }
+    }
+    // 4. fault/policy axes
+    if sc.profile != "none" {
+        let mut c = sc.clone();
+        c.profile = "none".to_string();
+        out.push(c);
+    }
+    if sc.deadline_us.is_some() {
+        let mut c = sc.clone();
+        c.deadline_us = None;
+        out.push(c);
+    }
+    if sc.retries > 0 {
+        let mut c = sc.clone();
+        c.retries = 0;
+        out.push(c);
+    }
+    // 5. workers toward 1
+    if sc.plan_workers > 1 {
+        let mut c = sc.clone();
+        c.plan_workers = 1;
+        out.push(c);
+    }
+    if sc.serve_workers > 1 {
+        let mut c = sc.clone();
+        c.serve_workers = 1;
+        out.push(c);
+    }
+    // 6. arch toward the canonical paper device
+    if sc.arch_perturb != 0 {
+        let mut c = sc.clone();
+        c.arch_perturb = 0;
+        out.push(c);
+    }
+    if sc.arch_base != ArchBase::Gc200 {
+        let mut c = sc.clone();
+        c.arch_base = ArchBase::Gc200;
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_line_round_trips_every_generated_scenario() {
+        let mut rng = Rng::new(0xF022);
+        for case in 0..64 {
+            let size = case as f64 / 63.0;
+            let sc = grow_scenario(&mut rng, size);
+            let line = sc.to_line();
+            let back = Scenario::parse(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(back, sc, "round trip through {line}");
+            assert_eq!(back.to_line(), line, "re-render is byte-identical");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "v2;arch=gc200~0;trace=0:8x8x8",
+            "v1;arch=gc200~0",                              // no trace
+            "v1;arch=gc3~0;trace=0:8x8x8",                  // unknown base
+            "v1;arch=gc200~0;prof=meteor;trace=0:8x8x8",    // unknown profile
+            "v1;arch=gc200~0;trace=0:8x8",                  // 2-d shape
+            "v1;arch=gc200~0;trace=0:0x8x8",                // zero dim
+            "v1;arch=gc200~0;trace=0:8x8x8:z8.100.1",       // bad kind
+            "v1;arch=gc200~0;trace=0:8x8x8:r7.100.1",       // bad block
+            "v1;arch=gc200~0;trace=0:8x8x8:r8.2000.1",      // bad permille
+            "v1;arch=gc200~0;pw=0;trace=0:8x8x8",           // zero workers
+            "v1;bogus=1;arch=gc200~0;trace=0:8x8x8",        // unknown field
+        ] {
+            assert!(Scenario::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn grow_is_deterministic_for_a_seed() {
+        let a = grow_scenario(&mut Rng::new(42), 0.5);
+        let b = grow_scenario(&mut Rng::new(42), 0.5);
+        assert_eq!(a, b);
+        assert_eq!(a.to_line(), b.to_line());
+    }
+
+    #[test]
+    fn grow_respects_size_bounds() {
+        let mut rng = Rng::new(7);
+        for _ in 0..32 {
+            let sc = grow_scenario(&mut rng, 0.0);
+            assert_eq!(sc.trace.len(), 1, "size 0 grows single-request traces");
+            for (_, shape, _) in &sc.trace {
+                assert!(shape.m <= 8 && shape.n <= 8 && shape.k <= 8, "{shape:?}");
+            }
+        }
+        let sc = grow_scenario(&mut rng, 1.0);
+        for (_, shape, _) in &sc.trace {
+            assert!(shape.m <= MAX_DIM && shape.n <= MAX_DIM && shape.k <= MAX_DIM);
+        }
+    }
+
+    #[test]
+    fn shrink_candidates_are_strictly_smaller_and_renumbered() {
+        let mut rng = Rng::new(0x51AB);
+        let sc = grow_scenario(&mut rng, 1.0);
+        for c in shrink_candidates(&sc) {
+            assert!(c.weight() < sc.weight(), "candidate not smaller: {}", c.to_line());
+            for (i, (id, ..)) in c.trace.iter().enumerate() {
+                assert_eq!(*id, i as u64, "ids stay positional");
+            }
+            assert!(!c.trace.is_empty(), "never shrinks to an empty trace");
+        }
+    }
+
+    #[test]
+    fn perturbed_arch_changes_fingerprint_but_keeps_base_name() {
+        let canonical = Scenario::parse("v1;arch=gc200~0;trace=0:8x8x8").unwrap();
+        let perturbed = Scenario::parse("v1;arch=gc200~7;trace=0:8x8x8").unwrap();
+        let (a, b) = (canonical.arch(), perturbed.arch());
+        assert_eq!(a.name, b.name);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert!(b.tiles >= 4 && b.tile_sram_bytes >= 64 * 1024);
+        // same perturbation seed → same device, every time
+        assert_eq!(perturbed.arch().fingerprint(), b.fingerprint());
+    }
+}

@@ -1,0 +1,649 @@
+//! The generative robustness harness: a registered invariant suite over
+//! the whole plan→graph→verify→simulate→serve pipeline, a seeded fuzz
+//! loop that grows scenarios against it, and the full-tuple shrinker
+//! that turns any failure into a one-line deterministic repro.
+//!
+//! Every invariant is a pure function of a [`Scenario`]: it rebuilds the
+//! pipeline state it needs from the scenario fields alone, so a failure
+//! found at iteration 173 of a fuzz run reproduces from its replay line
+//! (`ipumm fuzz --replay <spec>`) on any machine and worker count.
+//!
+//! The `analysis::mutate` corpus doubles as the harness's own trip-wire
+//! ([`HarnessConfig::mutate`]): a seeded graph mutation must be *found*
+//! by the `verify-clean` invariant and *shrunk* to a 1-minimal
+//! counterexample, proving the fuzzer catches what the static verifier
+//! catches — a blind harness exits clean and CI's expect-failure wrapper
+//! fails the build.
+
+use std::sync::Mutex;
+
+use crate::analysis::mutate::MutationClass;
+use crate::analysis::{mutate, verify};
+use crate::arch::GpuArch;
+use crate::fault::chaos;
+use crate::fuzz::generate::{grow_scenario, shrink_candidates, Scenario};
+use crate::planner::cost::{CostConfig, CostModel};
+use crate::planner::partition::MmShape;
+use crate::planner::search::search_with_workers;
+use crate::serve::service::{MmService, ServiceConfig};
+use crate::serve::telemetry::ServeReport;
+use crate::sim::engine::SimEngine;
+use crate::sparse::pattern::{BlockPattern, SparsitySpec};
+use crate::sparse::planner::sparse_search;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Harness-wide knobs. `mutate` arms the trip-wire: the named seeded
+/// mutation is applied to every dense graph before verification, and the
+/// `verify-clean` invariant *fails* exactly when the verifier catches it
+/// with its expected rule — the failure the harness must find and shrink.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HarnessConfig {
+    pub mutate: Option<(MutationClass, u64)>,
+}
+
+/// One registered pipeline invariant.
+pub struct Invariant {
+    pub name: &'static str,
+    /// One-line description (the README invariant table row).
+    pub what: &'static str,
+    pub check: fn(&Scenario, &HarnessConfig) -> Option<String>,
+}
+
+/// The registered suite, in evaluation order (cheap planner-level
+/// invariants first, serve-level ones last).
+pub const INVARIANTS: &[Invariant] = &[
+    Invariant {
+        name: "plan-identity",
+        what: "dense search returns a bit-identical plan for any worker count",
+        check: inv_plan_identity,
+    },
+    Invariant {
+        name: "staged-pricing",
+        what: "staged cycles-only pricing picks the same fully-priced winner as full evaluation",
+        check: inv_staged_pricing,
+    },
+    Invariant {
+        name: "dense-identity",
+        what: "density-1.0 sparse search reproduces the dense plan bit-for-bit",
+        check: inv_dense_identity,
+    },
+    Invariant {
+        name: "verify-clean",
+        what: "analysis::verify is clean on every built graph (trip-wire hook)",
+        check: inv_verify_clean,
+    },
+    Invariant {
+        name: "serve-accounting",
+        what: "served+degraded+shed+panicked == requests, zero lost, deadlines respected",
+        check: inv_serve_accounting,
+    },
+    Invariant {
+        name: "serve-identity",
+        what: "serve outcomes are bit-identical across worker counts",
+        check: inv_serve_identity,
+    },
+    Invariant {
+        name: "obs-identity",
+        what: "serve outcomes are bit-identical with the metrics recorder on vs off",
+        check: inv_obs_identity,
+    },
+];
+
+pub fn invariant_names() -> Vec<&'static str> {
+    INVARIANTS.iter().map(|i| i.name).collect()
+}
+
+/// A scenario that violated an invariant.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+/// Run the suite (or the single `only`-named invariant) over a scenario.
+pub fn check_scenario(
+    sc: &Scenario,
+    cfg: &HarnessConfig,
+    only: Option<&str>,
+) -> Option<Failure> {
+    for inv in INVARIANTS {
+        if only.is_some_and(|name| name != inv.name) {
+            continue;
+        }
+        if let Some(detail) = (inv.check)(sc, cfg) {
+            return Some(Failure { invariant: inv.name, detail });
+        }
+    }
+    None
+}
+
+/// Predicate form of [`check_scenario`] (the shrinker's `fails`).
+pub fn scenario_fails(sc: &Scenario, cfg: &HarnessConfig, only: Option<&str>) -> bool {
+    check_scenario(sc, cfg, only).is_some()
+}
+
+// ---- invariants -----------------------------------------------------------
+
+fn fmt_shape(s: &MmShape) -> String {
+    format!("{}x{}x{}", s.m, s.n, s.k)
+}
+
+fn inv_plan_identity(sc: &Scenario, _cfg: &HarnessConfig) -> Option<String> {
+    let arch = sc.arch();
+    let config = CostConfig::default();
+    for (shape, _) in sc.unique_jobs() {
+        let wide_workers = sc.plan_workers.max(2);
+        let serial = search_with_workers(&arch, shape, config, 1);
+        let wide = search_with_workers(&arch, shape, config, wide_workers);
+        match (serial, wide) {
+            (Ok(a), Ok(b)) => {
+                if a.cost != b.cost || a.candidates_evaluated != b.candidates_evaluated {
+                    return Some(format!(
+                        "plan for {} differs between workers 1 and {wide_workers}: \
+                         {:?} ({} candidates) vs {:?} ({} candidates)",
+                        fmt_shape(&shape),
+                        a.partition(),
+                        a.candidates_evaluated,
+                        b.partition(),
+                        b.candidates_evaluated,
+                    ));
+                }
+            }
+            (Err(a), Err(b)) if a == b => {}
+            (a, b) => {
+                return Some(format!(
+                    "feasibility verdict for {} differs between workers 1 and {wide_workers}: \
+                     {} vs {}",
+                    fmt_shape(&shape),
+                    verdict(&a),
+                    verdict(&b),
+                ));
+            }
+        }
+    }
+    None
+}
+
+fn verdict<T>(r: &Result<T, crate::planner::search::PlannerError>) -> String {
+    match r {
+        Ok(_) => "plans".to_string(),
+        Err(e) => format!("errs ({e})"),
+    }
+}
+
+fn inv_staged_pricing(sc: &Scenario, _cfg: &HarnessConfig) -> Option<String> {
+    let arch = sc.arch();
+    let config = CostConfig::default();
+    for (shape, _) in sc.unique_jobs() {
+        let Ok(plan) = search_with_workers(&arch, shape, config, sc.plan_workers) else {
+            continue; // OOM is a verdict, not a pricing question
+        };
+        let full = CostModel::with_config(&arch, config).evaluate(shape, plan.partition());
+        if full != plan.cost {
+            return Some(format!(
+                "staged winner for {} prices differently under full evaluation: \
+                 staged {} cycles vs full {} cycles at {:?}",
+                fmt_shape(&shape),
+                plan.cost.total_cycles,
+                full.total_cycles,
+                plan.partition(),
+            ));
+        }
+    }
+    None
+}
+
+fn inv_dense_identity(sc: &Scenario, _cfg: &HarnessConfig) -> Option<String> {
+    let arch = sc.arch();
+    let config = CostConfig::default();
+    for (shape, _) in sc.unique_jobs() {
+        let spec = SparsitySpec::dense(8);
+        let pattern = BlockPattern::for_shape(spec, shape);
+        match (search_with_workers(&arch, shape, config, 1), sparse_search(&arch, shape, &pattern)) {
+            (Ok(dense), Ok(sparse)) => {
+                if sparse.partition() != dense.partition() {
+                    return Some(format!(
+                        "density-1.0 sparse plan for {} picks {:?}, dense picks {:?}",
+                        fmt_shape(&shape),
+                        sparse.partition(),
+                        dense.partition(),
+                    ));
+                }
+                if sparse.dense_plan.as_ref().map(|p| p.cost) != Some(dense.cost) {
+                    return Some(format!(
+                        "density-1.0 sparse plan for {} does not carry the dense cost bit-for-bit",
+                        fmt_shape(&shape),
+                    ));
+                }
+            }
+            (Err(_), Err(_)) => {} // both hit the wall: verdicts agree
+            (dense, sparse) => {
+                return Some(format!(
+                    "density-1.0 feasibility for {} differs: dense {} vs sparse {}",
+                    fmt_shape(&shape),
+                    verdict(&dense),
+                    verdict(&sparse),
+                ));
+            }
+        }
+    }
+    None
+}
+
+fn inv_verify_clean(sc: &Scenario, cfg: &HarnessConfig) -> Option<String> {
+    let arch = sc.arch();
+    let config = CostConfig::default();
+    let engine = SimEngine::new(arch.clone());
+    for (shape, spec) in sc.unique_jobs() {
+        match spec {
+            None => {
+                let Ok(plan) = search_with_workers(&arch, shape, config, sc.plan_workers) else {
+                    continue;
+                };
+                let mut g = engine.build_graph(shape, &plan);
+                let mut edit = None;
+                if let Some((class, mseed)) = cfg.mutate {
+                    edit = mutate::apply(&mut g, class, mseed);
+                    if edit.is_none() {
+                        continue; // no eligible mutation site at this shape
+                    }
+                }
+                let ds = verify::verify_dense(&arch, shape, &plan, &g);
+                match cfg.mutate {
+                    Some((class, _)) => {
+                        // trip-wire mode: "failure" = the seeded break was
+                        // caught with its expected rule, which is what the
+                        // harness must find and shrink
+                        if ds.iter().any(|d| d.rule == class.expected_rule()) {
+                            return Some(format!(
+                                "seeded mutation [{}] on dense {} ({}) caught by rule '{}' \
+                                 ({} diagnostic(s))",
+                                class.name(),
+                                fmt_shape(&shape),
+                                edit.unwrap_or_default(),
+                                class.expected_rule(),
+                                ds.len(),
+                            ));
+                        }
+                    }
+                    None => {
+                        if !ds.is_empty() {
+                            return Some(format!(
+                                "verifier found {} diagnostic(s) on clean dense {}: first rule '{}'",
+                                ds.len(),
+                                fmt_shape(&shape),
+                                ds[0].rule,
+                            ));
+                        }
+                    }
+                }
+            }
+            Some(sp) => {
+                if cfg.mutate.is_some() {
+                    continue; // the mutation corpus targets dense graphs
+                }
+                let pattern = BlockPattern::for_shape(sp, shape);
+                let Ok(plan) = sparse_search(&arch, shape, &pattern) else {
+                    continue;
+                };
+                let g = engine.build_sparse_graph(shape, &plan, &pattern);
+                let ds = verify::verify_sparse(&arch, shape, &plan, &pattern, &g);
+                if !ds.is_empty() {
+                    return Some(format!(
+                        "verifier found {} diagnostic(s) on clean sparse {} ({}): first rule '{}'",
+                        ds.len(),
+                        fmt_shape(&shape),
+                        sp.label(),
+                        ds[0].rule,
+                    ));
+                }
+            }
+        }
+    }
+    None
+}
+
+fn service_for(sc: &Scenario, workers: usize) -> MmService {
+    MmService::new(ServiceConfig {
+        arch: sc.arch(),
+        gpu: GpuArch::a30(),
+        workers: Some(workers),
+        faults: sc.fault_plan(),
+        fault_policy: sc.policy(),
+        ..ServiceConfig::default()
+    })
+}
+
+fn serve_jobs(sc: &Scenario) -> Vec<(MmShape, Option<SparsitySpec>)> {
+    sc.trace.iter().map(|(_, s, sp)| (*s, *sp)).collect()
+}
+
+fn inv_serve_accounting(sc: &Scenario, _cfg: &HarnessConfig) -> Option<String> {
+    let jobs = serve_jobs(sc);
+    let report = service_for(sc, sc.serve_workers).serve_trace_mixed(&jobs);
+    let folded = chaos::ScenarioReport::from_serve(&sc.profile, jobs.len(), &report);
+    let mut v = chaos::invariant_violations(&folded);
+    v.extend(chaos::record_violations(&report, &sc.policy()));
+    if v.is_empty() {
+        None
+    } else {
+        Some(v.join("; "))
+    }
+}
+
+/// The per-request outcome signature the identity invariants compare:
+/// only model-time, worker-independent fields (wall-clock fields like
+/// `plan_seconds` and batch composition legitimately vary with workers).
+fn outcome_sig(report: &ServeReport) -> Vec<(u64, &'static str, String, u32, bool, u64, u64)> {
+    let mut rows: Vec<_> = report
+        .requests
+        .iter()
+        .map(|r| {
+            (
+                r.id,
+                r.outcome.label(),
+                r.backend.clone(),
+                r.attempts,
+                r.oom,
+                r.device_seconds.to_bits(),
+                r.retry_seconds.to_bits(),
+            )
+        })
+        .collect();
+    rows.sort();
+    rows
+}
+
+fn first_sig_diff(
+    a: &[(u64, &'static str, String, u32, bool, u64, u64)],
+    b: &[(u64, &'static str, String, u32, bool, u64, u64)],
+) -> String {
+    if a.len() != b.len() {
+        return format!("{} vs {} records", a.len(), b.len());
+    }
+    for (ra, rb) in a.iter().zip(b) {
+        if ra != rb {
+            return format!("request {}: {:?} vs {:?}", ra.0, ra, rb);
+        }
+    }
+    "identical".to_string()
+}
+
+fn inv_serve_identity(sc: &Scenario, _cfg: &HarnessConfig) -> Option<String> {
+    let jobs = serve_jobs(sc);
+    let wide_workers = sc.serve_workers.max(2);
+    let serial = outcome_sig(&service_for(sc, 1).serve_trace_mixed(&jobs));
+    let wide = outcome_sig(&service_for(sc, wide_workers).serve_trace_mixed(&jobs));
+    if serial != wide {
+        return Some(format!(
+            "serve outcomes differ between workers 1 and {wide_workers}: {}",
+            first_sig_diff(&serial, &wide),
+        ));
+    }
+    None
+}
+
+/// Serializes the process-global recorder toggle: the obs invariant is
+/// the only fuzz path that flips it, and concurrent harness runs (e.g.
+/// parallel tests) must not observe each other's enable window.
+static OBS_TOGGLE: Mutex<()> = Mutex::new(());
+
+fn inv_obs_identity(sc: &Scenario, _cfg: &HarnessConfig) -> Option<String> {
+    let _gate = OBS_TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    let jobs = serve_jobs(sc);
+    let was_enabled = crate::obs::enabled();
+    crate::obs::disable();
+    let off = outcome_sig(&service_for(sc, sc.serve_workers).serve_trace_mixed(&jobs));
+    crate::obs::enable();
+    let on = outcome_sig(&service_for(sc, sc.serve_workers).serve_trace_mixed(&jobs));
+    crate::obs::disable();
+    let _ = crate::obs::take(); // drain spans recorded during the window
+    if was_enabled {
+        crate::obs::enable();
+    }
+    if off != on {
+        return Some(format!(
+            "serve outcomes differ with metrics on vs off: {}",
+            first_sig_diff(&off, &on),
+        ));
+    }
+    None
+}
+
+// ---- fuzz loop + shrinker -------------------------------------------------
+
+/// A found-and-shrunk invariant violation.
+#[derive(Clone, Debug)]
+pub struct FuzzFailure {
+    pub invariant: &'static str,
+    /// The scenario the fuzz loop first tripped on.
+    pub original: Scenario,
+    pub original_detail: String,
+    /// The 1-minimal counterexample the shrinker converged to.
+    pub minimal: Scenario,
+    pub minimal_detail: String,
+    /// Successful shrink steps taken (each one a strictly smaller
+    /// still-failing scenario).
+    pub shrink_steps: usize,
+    /// `minimal.to_line()` — the deterministic one-line repro.
+    pub replay: String,
+    /// `describe_minimal`-style culprit report for the minimal scenario.
+    pub culprit: String,
+}
+
+/// Outcome of a fuzz run.
+#[derive(Clone, Debug)]
+pub struct FuzzReport {
+    pub seed: u64,
+    pub iters: usize,
+    /// Iterations that completed clean (== `iters` when no failure).
+    pub completed: usize,
+    pub failure: Option<FuzzFailure>,
+}
+
+impl FuzzReport {
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("seed", Json::Int(self.seed as i64));
+        doc.set("iters", Json::Int(self.iters as i64));
+        doc.set("completed", Json::Int(self.completed as i64));
+        doc.set("clean", Json::Bool(self.failure.is_none()));
+        match &self.failure {
+            None => {
+                doc.set("failure", Json::Null);
+            }
+            Some(f) => {
+                let mut o = Json::obj();
+                o.set("invariant", Json::Str(f.invariant.to_string()));
+                o.set("original", Json::Str(f.original.to_line()));
+                o.set("original_detail", Json::Str(f.original_detail.clone()));
+                o.set("replay", Json::Str(f.replay.clone()));
+                o.set("detail", Json::Str(f.minimal_detail.clone()));
+                o.set("shrink_steps", Json::Int(f.shrink_steps as i64));
+                o.set("culprit", Json::Str(f.culprit.clone()));
+                doc.set("failure", o);
+            }
+        }
+        doc
+    }
+}
+
+/// The canonical trip-wire scenario: the same 1024² dense square `ipumm
+/// check --mutate` uses, so every mutation class has an eligible site.
+/// In mutate mode the fuzz loop tests it at iteration 0, making the
+/// find deterministic; the shrinker then earns its keep reducing it.
+pub fn mutation_probe_scenario() -> Scenario {
+    Scenario::parse("v1;arch=gc200~0;pw=1;sw=1;prof=none;fseed=0;dl=none;retry=0;trace=0:1024x1024x1024")
+        .expect("canonical probe line parses")
+}
+
+/// Shrink a failing scenario to a 1-minimal counterexample: repeatedly
+/// take the first structural shrink candidate that still fails, until
+/// none does. At exit no single candidate (trace-element removal, shape
+/// halve/decrement, spec drop, density halve, policy/worker/arch
+/// simplification) reproduces the failure — the bigcheck/ddmin loop
+/// generalized from `fault::chaos::shrink_failing` to the full tuple.
+pub fn shrink_scenario(
+    sc: &Scenario,
+    cfg: &HarnessConfig,
+    invariant: &str,
+) -> (Scenario, usize) {
+    let mut cur = sc.clone();
+    if !scenario_fails(&cur, cfg, Some(invariant)) {
+        return (cur, 0);
+    }
+    let mut steps = 0usize;
+    loop {
+        let mut progressed = false;
+        for cand in shrink_candidates(&cur) {
+            if scenario_fails(&cand, cfg, Some(invariant)) {
+                cur = cand;
+                steps += 1;
+                progressed = true;
+                break;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    (cur, steps)
+}
+
+/// `describe_minimal`-style culprit report for a (minimal) scenario.
+pub fn culprit_report(sc: &Scenario, invariant: &str, detail: &str) -> String {
+    let mut lines = vec![format!("invariant '{invariant}': {detail}")];
+    let plan = sc.fault_plan();
+    for req in &sc.trace {
+        lines.push(format!("  {}", chaos::describe_minimal(&plan, req)));
+    }
+    lines.push(format!(
+        "  scenario: arch {}~{}, plan workers {}, serve workers {}, profile {}, \
+         retries {}, deadline {}, {} request(s)",
+        sc.arch_base.name(),
+        sc.arch_perturb,
+        sc.plan_workers,
+        sc.serve_workers,
+        sc.profile,
+        sc.retries,
+        sc.deadline_us.map_or("none".to_string(), |us| format!("{us}us")),
+        sc.trace.len(),
+    ));
+    lines.join("\n")
+}
+
+/// The fuzz loop: grow `iters` scenarios from the seed ladder (sizes
+/// ramping 0→1, bigcheck-style), check each against the suite (or the
+/// single `only` invariant), and on the first failure shrink it and
+/// return. In mutate mode iteration 0 tests [`mutation_probe_scenario`]
+/// so the trip-wire find is deterministic for any seed.
+pub fn fuzz(seed: u64, iters: usize, only: Option<&str>, cfg: &HarnessConfig) -> FuzzReport {
+    for i in 0..iters {
+        let sc = if i == 0 && cfg.mutate.is_some() {
+            mutation_probe_scenario()
+        } else {
+            let case_seed = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(i as u64);
+            let size = if iters <= 1 { 1.0 } else { i as f64 / (iters - 1) as f64 };
+            grow_scenario(&mut Rng::new(case_seed), size)
+        };
+        if let Some(f) = check_scenario(&sc, cfg, only) {
+            let (minimal, shrink_steps) = shrink_scenario(&sc, cfg, f.invariant);
+            let minimal_detail = check_scenario(&minimal, cfg, Some(f.invariant))
+                .map(|x| x.detail)
+                .unwrap_or_else(|| f.detail.clone());
+            let replay = minimal.to_line();
+            let culprit = culprit_report(&minimal, f.invariant, &minimal_detail);
+            return FuzzReport {
+                seed,
+                iters,
+                completed: i,
+                failure: Some(FuzzFailure {
+                    invariant: f.invariant,
+                    original: sc,
+                    original_detail: f.detail,
+                    minimal,
+                    minimal_detail,
+                    shrink_steps,
+                    replay,
+                    culprit,
+                }),
+            };
+        }
+    }
+    FuzzReport { seed, iters, completed: iters, failure: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: no lib unit test here runs `obs-identity` — lib unit tests
+    // only ever exercise the disabled-recorder path (the enable/disable
+    // window is exercised by the fuzz_harness integration binary).
+
+    fn tiny_clean_scenario() -> Scenario {
+        Scenario::parse("v1;arch=gc200~0;pw=2;sw=2;prof=transient;fseed=7;dl=none;retry=2;trace=0:64x64x64,1:96x32x48:r8.500.3")
+            .expect("tiny scenario parses")
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_stable() {
+        let names = invariant_names();
+        assert_eq!(names.len(), INVARIANTS.len());
+        let mut sorted = names.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate invariant name");
+        assert!(names.contains(&"verify-clean") && names.contains(&"serve-accounting"));
+    }
+
+    #[test]
+    fn clean_scenario_passes_planner_level_invariants() {
+        let sc = tiny_clean_scenario();
+        let cfg = HarnessConfig::default();
+        for name in ["plan-identity", "staged-pricing", "dense-identity", "verify-clean"] {
+            let f = check_scenario(&sc, &cfg, Some(name));
+            assert!(f.is_none(), "{name}: {:?}", f.map(|x| x.detail));
+        }
+    }
+
+    #[test]
+    fn clean_scenario_passes_serve_accounting_and_identity() {
+        let sc = tiny_clean_scenario();
+        let cfg = HarnessConfig::default();
+        for name in ["serve-accounting", "serve-identity"] {
+            let f = check_scenario(&sc, &cfg, Some(name));
+            assert!(f.is_none(), "{name}: {:?}", f.map(|x| x.detail));
+        }
+    }
+
+    #[test]
+    fn mutation_probe_is_caught_by_verify_clean() {
+        let cfg = HarnessConfig { mutate: Some((MutationClass::OverlapSpan, 1)) };
+        let sc = mutation_probe_scenario();
+        let f = check_scenario(&sc, &cfg, Some("verify-clean"))
+            .expect("seeded overlap-span mutation must be caught");
+        assert_eq!(f.invariant, "verify-clean");
+        assert!(f.detail.contains("overlap-span"), "{}", f.detail);
+        assert!(f.detail.contains("race-write-write"), "{}", f.detail);
+    }
+
+    #[test]
+    fn shrink_returns_input_when_nothing_fails() {
+        let sc = tiny_clean_scenario();
+        let cfg = HarnessConfig::default();
+        let (min, steps) = shrink_scenario(&sc, &cfg, "plan-identity");
+        assert_eq!(steps, 0);
+        assert_eq!(min, sc);
+    }
+
+    #[test]
+    fn fuzz_report_json_shape() {
+        let rep = FuzzReport { seed: 7, iters: 3, completed: 3, failure: None };
+        let doc = Json::parse(&rep.to_json().render()).unwrap();
+        assert_eq!(doc.get("clean"), Some(&Json::Bool(true)));
+        assert_eq!(doc.get("completed"), Some(&Json::Int(3)));
+        assert_eq!(doc.get("failure"), Some(&Json::Null));
+    }
+}

@@ -1,0 +1,24 @@
+//! Generative chaos harness: whole-pipeline fuzzing with automatic
+//! shrinking to minimal counterexamples (crate role 12; ROADMAP §5's
+//! dynamic half).
+//!
+//! [`generate`] grows the complete scenario tuple — perturbed
+//! architecture, square/skewed/degenerate shapes, sparsity specs, a
+//! request trace, fault profile + policy, worker counts — from a seeded
+//! RNG under a bigcheck-style size knob, and offers structural shrink
+//! candidates per axis. [`harness`] registers the pipeline invariant
+//! suite (plan worker-count bit-identity, staged == full pricing,
+//! density-1.0 dense identity, verifier cleanliness, serve accounting
+//! exactness, serve and metrics bit-identity), drives the fuzz loop,
+//! and shrinks any failure to a 1-minimal scenario with a deterministic
+//! one-line replay (`ipumm fuzz --replay <spec>`).
+
+pub mod generate;
+pub mod harness;
+
+pub use generate::{grow_scenario, shrink_candidates, ArchBase, Scenario};
+pub use harness::{
+    check_scenario, culprit_report, fuzz, invariant_names, mutation_probe_scenario,
+    scenario_fails, shrink_scenario, Failure, FuzzFailure, FuzzReport, HarnessConfig, Invariant,
+    INVARIANTS,
+};

@@ -3,7 +3,7 @@
 //! Reproduction of *"On Performance Analysis of Graphcore IPUs: Analyzing
 //! Squared and Skewed Matrix Multiplication"* (OASIcs / CS.DC 2023).
 //!
-//! The crate has eleven roles (see DESIGN.md):
+//! The crate has twelve roles (see DESIGN.md):
 //!
 //! 1. **IPU system under study** — a tile-level model of the GC200/GC2:
 //!    Poplar-like dataflow [`graph`]s, per-tile [`memory`] accounting, the
@@ -145,6 +145,29 @@
 //!    vocabulary, and a seeded mutation corpus (`analysis::mutate`) keeps
 //!    the verifier honest in CI — each way of breaking a graph must be
 //!    caught by its expected rule.
+//! 12. **Generative fuzzing** — [`fuzz`] is the dynamic half of the
+//!    adversarial-correctness story (role 11 is the static half): a
+//!    bigcheck-style generative harness that grows the *complete*
+//!    scenario tuple from a seeded RNG — perturbed GC200/GC2 variants
+//!    (`fuzz::generate::ArchBase` + an integer perturbation seed),
+//!    square/skewed/degenerate `MmShape`s, `SparsitySpec`s, request
+//!    traces, fault profiles + policies, and worker counts — and drives
+//!    the whole plan→graph→verify→simulate→serve pipeline against a
+//!    registered invariant suite (`fuzz::harness::INVARIANTS`):
+//!    worker-count plan bit-identity, staged == full pricing,
+//!    density-1.0 dense identity, verifier cleanliness on every built
+//!    graph, serve accounting exactness and no-lost-requests under
+//!    injected faults, and serve/metrics bit-identity. On failure the
+//!    full-tuple shrinker (`fuzz::harness::shrink_scenario`, the
+//!    generalization of `fault::chaos::shrink_failing`'s ddmin) reduces
+//!    every axis — trace toward one request, shape dims toward 1,
+//!    density toward the failing boundary, workers toward 1, the arch
+//!    toward canonical — to a 1-minimal counterexample with a
+//!    deterministic one-line replay (`ipumm fuzz --replay <spec>`) and a
+//!    `describe_minimal`-style culprit report. The `analysis::mutate`
+//!    corpus doubles as the harness's own trip-wire: `ipumm fuzz
+//!    --mutate CLASS` must find *and shrink* the seeded break, keeping
+//!    the fuzzer as honest as the verifier it subsumes.
 //!
 //! [`coordinator`] orchestrates benchmark jobs across these backends, and
 //! [`experiments`] regenerates each of the paper's tables and figures.
@@ -160,6 +183,7 @@ pub mod exchange;
 pub mod coordinator;
 pub mod experiments;
 pub mod fault;
+pub mod fuzz;
 pub mod gpu;
 pub mod graph;
 pub mod ipu;

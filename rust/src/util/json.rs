@@ -458,6 +458,69 @@ mod tests {
         assert!(Json::parse("\"unterminated").is_err());
     }
 
+    /// Every distinct parse-error path returns a diagnostic (never
+    /// panics) naming what went wrong — `ipumm bench-check` shows these
+    /// verbatim when a `BENCH_*.json` artifact is truncated or corrupt.
+    #[test]
+    fn parse_error_messages_name_the_failure() {
+        let cases: &[(&str, &str)] = &[
+            ("", "unexpected end of input"),
+            ("   \n\t", "unexpected end of input"),
+            ("{\"a\": 1} extra", "trailing data"),
+            ("nulll", "trailing data"),  // parses "null", chokes on the rest
+            ("nul", "expected 'null'"),
+            ("tru", "expected 'true'"),
+            ("falsy", "expected 'false'"),
+            ("[1 2]", "expected ',' or ']'"),
+            ("[1, 2", "expected ',' or ']'"),
+            ("{\"a\": 1 \"b\": 2}", "expected ',' or '}'"),
+            ("{\"a\": 1", "expected ',' or '}'"),
+            ("{\"a\" 1}", "expected ':'"),
+            ("{1: 2}", "expected string"),
+            ("\"unterminated", "unterminated string"),
+            ("\"bad \\u12", "bad \\u escape"),
+            ("\"bad \\uZZZZ\"", "bad \\u escape"),
+            ("\"bad \\q\"", "bad escape"),
+            ("@", "expected a value"),
+            ("-", "bad number '-'"),
+            ("1.2.3", "bad number '1.2.3'"), // number scan is greedy
+        ];
+        for (input, want) in cases {
+            let err = Json::parse(input).expect_err(input);
+            assert!(
+                err.contains(want),
+                "parse({input:?}) -> {err:?}, expected it to mention {want:?}"
+            );
+        }
+    }
+
+    /// A half-written artifact (truncated mid-stream, as a crashed bench
+    /// run leaves behind) errors instead of yielding a partial document.
+    #[test]
+    fn parse_rejects_truncated_artifact() {
+        let full = {
+            let mut doc = Json::obj();
+            doc.set("group", "planner".into());
+            let mut row = Json::obj();
+            row.set("name", "search_3584".into());
+            row.set("mean_s", 0.001625.into());
+            doc.set("results", Json::Arr(vec![row]));
+            doc.render()
+        };
+        // cut at every prefix length that ends on a char boundary: no
+        // prefix except the full document may parse
+        for cut in 1..full.len() {
+            if !full.is_char_boundary(cut) {
+                continue;
+            }
+            assert!(
+                Json::parse(&full[..cut]).is_err(),
+                "truncated prefix of {cut} bytes unexpectedly parsed"
+            );
+        }
+        assert!(Json::parse(&full).is_ok());
+    }
+
     #[test]
     fn parse_numbers() {
         assert_eq!(Json::parse("42").unwrap(), Json::Int(42));

@@ -1,0 +1,203 @@
+//! Integration suite for the generative fuzz harness (crate role 12):
+//! the seeded `analysis::mutate` trip-wire must be found and shrunk to a
+//! 1-minimal counterexample, replay lines must be byte-stable across
+//! runs and worker counts, and the obs-identity invariant (the one fuzz
+//! path that toggles the process-global recorder) is exercised here, in
+//! its own binary, so lib unit tests keep the recorder disabled.
+
+use std::process::Command;
+
+use ipumm::analysis::mutate::MutationClass;
+use ipumm::fuzz::{
+    check_scenario, fuzz, mutation_probe_scenario, scenario_fails, shrink_candidates,
+    HarnessConfig, Scenario,
+};
+
+fn mutate_cfg(class: MutationClass) -> HarnessConfig {
+    HarnessConfig { mutate: Some((class, 1)) }
+}
+
+const ONLY: Option<&str> = Some("verify-clean");
+
+/// For every mutation class: the harness finds the seeded break, shrinks
+/// it, and the result is 1-minimal — no single structural shrink step
+/// (trace removal, shape halve/decrement, spec drop, policy/worker/arch
+/// simplification) still reproduces the failure. Golden structural pins
+/// keep the minimal counterexample's shape class stable, and the replay
+/// line reproduces the failure deterministically.
+#[test]
+fn every_mutate_class_is_found_shrunk_to_one_minimal_and_replayable() {
+    for class in MutationClass::ALL {
+        let cfg = mutate_cfg(class);
+        let report = fuzz(1, 1, ONLY, &cfg);
+        let f = report
+            .failure
+            .unwrap_or_else(|| panic!("[{}] must be found by the probe", class.name()));
+        assert_eq!(f.invariant, "verify-clean", "[{}]", class.name());
+
+        // 1-minimality: every remaining shrink candidate passes
+        assert!(scenario_fails(&f.minimal, &cfg, ONLY), "[{}] minimal must still fail", class.name());
+        for cand in shrink_candidates(&f.minimal) {
+            assert!(
+                !scenario_fails(&cand, &cfg, ONLY),
+                "[{}] not 1-minimal: candidate {} still fails",
+                class.name(),
+                cand.to_line(),
+            );
+        }
+
+        // golden structural pins: a single dense request on the canonical
+        // unperturbed GC200, no faults, no policy, serial workers
+        let m = &f.minimal;
+        assert_eq!(m.trace.len(), 1, "[{}] {}", class.name(), f.replay);
+        assert!(m.trace[0].2.is_none(), "[{}] stays dense", class.name());
+        assert_eq!(m.profile, "none", "[{}]", class.name());
+        assert_eq!((m.plan_workers, m.serve_workers), (1, 1), "[{}]", class.name());
+        assert_eq!(m.arch_perturb, 0, "[{}]", class.name());
+        assert_eq!(m.deadline_us, None, "[{}]", class.name());
+        assert_eq!(m.retries, 0, "[{}]", class.name());
+        let prefix = "v1;arch=gc200~0;pw=1;sw=1;prof=none;fseed=0;dl=none;retry=0;trace=0:";
+        assert!(f.replay.starts_with(prefix), "[{}] replay: {}", class.name(), f.replay);
+        let dims = &f.replay[prefix.len()..];
+        assert_eq!(dims.matches('x').count(), 2, "[{}] replay: {}", class.name(), f.replay);
+        assert!(
+            dims.chars().all(|c| c.is_ascii_digit() || c == 'x'),
+            "[{}] replay: {}",
+            class.name(),
+            f.replay
+        );
+
+        // the culprit report names the class and its expected rule
+        assert!(f.minimal_detail.contains(class.name()), "[{}] {}", class.name(), f.minimal_detail);
+        assert!(
+            f.minimal_detail.contains(class.expected_rule()),
+            "[{}] detail must name rule '{}': {}",
+            class.name(),
+            class.expected_rule(),
+            f.minimal_detail
+        );
+
+        // the replay line alone reproduces the failure
+        let replayed = Scenario::parse(&f.replay).expect("replay line parses");
+        let rf = check_scenario(&replayed, &cfg, ONLY)
+            .unwrap_or_else(|| panic!("[{}] replay must reproduce", class.name()));
+        assert_eq!(rf.detail, f.minimal_detail, "[{}] replay is deterministic", class.name());
+    }
+}
+
+/// Identical `--seed`/`--iters` produce byte-identical replay specs (and
+/// whole JSON reports) across independent runs.
+#[test]
+fn identical_seeds_produce_byte_identical_replay_specs() {
+    let cfg = mutate_cfg(MutationClass::OverlapSpan);
+    let a = fuzz(9, 1, ONLY, &cfg);
+    let b = fuzz(9, 1, ONLY, &cfg);
+    let (fa, fb) = (a.failure.as_ref().unwrap(), b.failure.as_ref().unwrap());
+    assert_eq!(fa.replay, fb.replay);
+    assert_eq!(fa.shrink_steps, fb.shrink_steps);
+    assert_eq!(a.to_json().render(), b.to_json().render(), "whole report is byte-stable");
+}
+
+/// Shrinking converges to the same minimal replay line regardless of the
+/// starting scenario's worker counts: the failure predicate is
+/// worker-independent (that is the plan-identity story), so the shape
+/// trajectory is identical and the worker axes shrink to 1.
+#[test]
+fn shrinking_is_worker_count_independent() {
+    let cfg = mutate_cfg(MutationClass::DropExchange);
+    let serial = mutation_probe_scenario();
+    let mut wide = mutation_probe_scenario();
+    wide.plan_workers = 3;
+    wide.serve_workers = 2;
+    let (min_serial, _) = ipumm::fuzz::shrink_scenario(&serial, &cfg, "verify-clean");
+    let (min_wide, _) = ipumm::fuzz::shrink_scenario(&wide, &cfg, "verify-clean");
+    assert_eq!(min_serial.to_line(), min_wide.to_line());
+}
+
+/// The obs-identity invariant holds on a clean scenario. Runs here (its
+/// own test binary) because it flips the process-global recorder; lib
+/// unit tests only ever exercise the disabled path.
+#[test]
+fn obs_identity_holds_on_clean_scenario() {
+    let sc = Scenario::parse(
+        "v1;arch=gc200~0;pw=2;sw=2;prof=transient;fseed=7;dl=none;retry=2;trace=0:64x64x64,1:96x32x48:r8.500.3",
+    )
+    .unwrap();
+    let f = check_scenario(&sc, &HarnessConfig::default(), Some("obs-identity"));
+    assert!(f.is_none(), "{:?}", f.map(|x| x.detail));
+    assert!(!ipumm::obs::enabled(), "invariant restores the disabled recorder");
+}
+
+// ---- CLI end-to-end -------------------------------------------------------
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_ipumm"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn fuzz_cli_clean_run_exits_zero_and_writes_json() {
+    let json_path = std::env::temp_dir().join("ipumm_fuzz_smoke.json");
+    let _ = std::fs::remove_file(&json_path);
+    let (out, err, ok) = run(&[
+        "fuzz", "--seed", "7", "--iters", "3", "--invariant", "plan-identity",
+        "--json", json_path.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout: {out}\nstderr: {err}");
+    assert!(out.contains("clean"), "stdout: {out}");
+    let doc = ipumm::util::json::Json::parse(&std::fs::read_to_string(&json_path).unwrap())
+        .expect("fuzz JSON parses");
+    assert_eq!(doc.get("clean"), Some(&ipumm::util::json::Json::Bool(true)));
+    assert_eq!(doc.get("completed").and_then(|j| j.as_f64()), Some(3.0));
+    let _ = std::fs::remove_file(&json_path);
+}
+
+#[test]
+fn fuzz_cli_mutate_trips_and_prints_replay_line() {
+    let (out, err, ok) = run(&["fuzz", "--mutate", "overlap-span", "--seed", "1", "--iters", "1"]);
+    assert!(!ok, "trip-wire must exit nonzero when the mutation is found");
+    assert!(out.contains("replay: ipumm fuzz --replay"), "stdout: {out}");
+    assert!(out.contains("race-write-write"), "stdout: {out}");
+    assert!(err.contains("trip-wire armed"), "stderr: {err}");
+
+    // the printed replay line reproduces the failure through the CLI
+    let line = out
+        .lines()
+        .find(|l| l.starts_with("replay: "))
+        .and_then(|l| l.split('\'').nth(1))
+        .expect("replay line present");
+    let (rout, _, rok) =
+        run(&["fuzz", "--replay", line, "--mutate", "overlap-span", "--seed", "1"]);
+    assert!(!rok, "replay must reproduce the violation: {rout}");
+    assert!(rout.contains("race-write-write"), "stdout: {rout}");
+}
+
+#[test]
+fn fuzz_cli_rejects_bad_inputs() {
+    let (_, err, ok) = run(&["fuzz", "--replay", "v1;arch=gc9~0;trace=0:8x8x8"]);
+    assert!(!ok);
+    assert!(err.contains("unknown arch base"), "stderr: {err}");
+
+    let (_, err, ok) = run(&["fuzz", "--invariant", "bogus", "--iters", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown invariant"), "stderr: {err}");
+
+    let (_, err, ok) = run(&["fuzz", "--mutate", "bogus", "--iters", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown mutation class"), "stderr: {err}");
+}
+
+#[test]
+fn fuzz_cli_clean_replay_exits_zero() {
+    let (out, _, ok) = run(&["fuzz", "--replay", "v1;arch=gc200~0;trace=0:64x64x64"]);
+    assert!(ok, "a clean scenario replays clean: {out}");
+    assert!(out.contains("replay clean"), "stdout: {out}");
+}
